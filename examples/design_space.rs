@@ -1,0 +1,54 @@
+//! Design-space exploration walkthrough (paper §III-B, Fig. 6): sweep
+//! the plane configuration, print the latency/energy/density series, the
+//! Pareto frontier, and the selected plane.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use flashpim::circuit::TechParams;
+use flashpim::dse::pareto::pareto_frontier;
+use flashpim::dse::select::{select_plane, SelectionCriteria};
+use flashpim::dse::sweep::sweep_grid;
+use flashpim::util::table::Table;
+use flashpim::util::units::{fmt_energy, fmt_time};
+
+fn main() {
+    let tech = TechParams::default();
+
+    // Fig. 6: the three 1-D sweeps.
+    print!("{}", flashpim::exp::fig6::render());
+
+    // The full 3-D grid and its latency/density Pareto frontier.
+    let grid = sweep_grid((64, 2048), (256, 16384), (32, 512), &tech);
+    println!("full grid: {} configurations", grid.len());
+    let frontier = pareto_frontier(&grid);
+    let mut t = Table::new(&["plane (r×c×s)", "T_PIM", "energy", "Gb/mm²"]);
+    for p in &frontier {
+        t.row(&[
+            format!("{}x{}x{}", p.plane.n_row, p.plane.n_col, p.plane.n_stack),
+            fmt_time(p.t_pim),
+            fmt_energy(p.energy),
+            format!("{:.2}", p.density),
+        ]);
+    }
+    println!("latency/density Pareto frontier ({} points):", frontier.len());
+    t.print();
+
+    // Budget sensitivity: what would other latency budgets select?
+    println!();
+    println!("selection vs latency budget:");
+    for budget_us in [1.0, 1.5, 2.0, 3.0, 5.0] {
+        let crit = SelectionCriteria {
+            max_t_pim: budget_us * 1e-6,
+            ..SelectionCriteria::default()
+        };
+        match select_plane(&crit, &tech) {
+            Some((w, feas)) => println!(
+                "  {budget_us:>4.1} µs → {}x{}x{}  ({:.2} Gb/mm², {} feasible)",
+                w.plane.n_row, w.plane.n_col, w.plane.n_stack, w.density, feas.len()
+            ),
+            None => println!("  {budget_us:>4.1} µs → infeasible"),
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the library in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the core API: load the Table-I system, evaluate the circuit
+//! model on the selected plane, run the design-space selection, execute
+//! one sMVM through the H-tree pipeline, and search the best tiling.
+
+use flashpim::circuit::{cell_density_gb_mm2, PlaneLatency, TechParams};
+use flashpim::config::presets::table1_system;
+use flashpim::dse::select::{select_plane, SelectionCriteria};
+use flashpim::nand::NandTiming;
+use flashpim::pim::op::MvmShape;
+use flashpim::pim::smvm::SmvmPipeline;
+use flashpim::tiling::{search_best, TilingCostModel};
+use flashpim::util::units::{fmt_energy, fmt_time};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The Table-I system configuration (paper §V-A).
+    let sys = table1_system();
+    let tech = TechParams::default();
+    println!("system: {} — {} channels × {} ways × {} dies × {} planes",
+        sys.name, sys.org.channels, sys.org.ways_per_channel,
+        sys.org.dies_per_way, sys.org.planes_per_die);
+
+    // 2. Circuit model of the selected Size-A plane.
+    let lat = PlaneLatency::of(&sys.plane, &tech);
+    println!(
+        "plane {}x{}x{}: T_PIM(8b) = {}  (decWL {} + 8 × cycle {})",
+        sys.plane.n_row, sys.plane.n_col, sys.plane.n_stack,
+        fmt_time(lat.t_pim(8)),
+        fmt_time(lat.t_decwl),
+        fmt_time(lat.pim_cycle()),
+    );
+    println!("cell density: {:.2} Gb/mm²", cell_density_gb_mm2(&sys.plane, &tech));
+
+    // 3. Design-space selection (paper §III-B): re-derive Size A.
+    let (winner, feasible) = select_plane(&SelectionCriteria::default(), &tech).unwrap();
+    println!(
+        "DSE: {} feasible configs under 2 µs; densest = {}x{}x{} at {:.2} Gb/mm²",
+        feasible.len(), winner.plane.n_row, winner.plane.n_col, winner.plane.n_stack, winner.density
+    );
+
+    // 4. One sMVM through the H-tree pipeline (paper Fig. 9 machinery).
+    let timing = NandTiming::of_system(&sys, &tech);
+    let pipe = SmvmPipeline::new(&sys, timing.clone(), 64);
+    let rep = pipe.execute(MvmShape::new(4096, 4096));
+    println!(
+        "sMVM (4K×4K) on 64 planes: inbound {}  pim {}  total {}",
+        rep.inbound_done, rep.pim_done, rep.total
+    );
+    let e = flashpim::circuit::PimEnergy::of(&sys.plane, &tech, 128, 0.5);
+    println!("per-op energy: {}", fmt_energy(e.total_op(8)));
+
+    // 5. Best tiling for the OPT-30B projection (paper Fig. 12).
+    let model = TilingCostModel::new(&sys, timing);
+    let best = &search_best(&model, MvmShape::new(7168, 7168))[0];
+    println!(
+        "best tiling for d_m=7168: {} → total {}",
+        best.scheme.notation_counts(),
+        fmt_time(best.cost.total().secs())
+    );
+    Ok(())
+}

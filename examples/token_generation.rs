@@ -1,0 +1,96 @@
+//! END-TO-END driver: serve real generation requests through the full
+//! three-layer stack and report latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example token_generation
+//! ```
+//!
+//! * **functional path** — the rust coordinator loads the AOT-compiled
+//!   JAX/Pallas decode step (HLO text → PJRT CPU) for the trained
+//!   OPT-toy char-LM and generates actual tokens, batch of requests,
+//!   single-batch device semantics;
+//! * **timing path** — the same token counts run through the flash-PIM
+//!   timing simulator at OPT-30B scale, reporting the simulated TPOT the
+//!   paper's Fig. 14 claims.
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::serve::{simulated_generation_time, Coordinator, Job};
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::schedule::TokenSchedule;
+use flashpim::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
+use flashpim::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactBundle::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // The serving coordinator owns the PJRT executor on its worker thread.
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(move || {
+        DecodeExecutor::load(&dir2).expect("artifacts load cleanly")
+    });
+    let tok = ByteTokenizer;
+
+    let prompts = [
+        "the flash ",
+        "the h tree ",
+        "the slc region ",
+        "token generation ",
+        "a plane reads ",
+        "the controller ",
+    ];
+    let max_new = 48;
+
+    println!("== functional serving over the PJRT runtime ==");
+    let mut walls = Vec::new();
+    let mut ttfts = Vec::new();
+    let mut total_tokens = 0usize;
+    let t0 = std::time::Instant::now();
+    for (i, p) in prompts.iter().enumerate() {
+        let served = coord.run(Job { id: i as u64, prompt: tok.encode(p), max_new })?;
+        println!("  [{}] {:?} -> {:?}", served.id, p, tok.decode(&served.tokens));
+        walls.push(served.wall);
+        ttfts.push(served.ttft);
+        total_tokens += served.tokens.len();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let lat = Summary::of(&walls);
+    let ttft = Summary::of(&ttfts);
+    println!(
+        "served {} requests / {} tokens in {:.2}s  ({:.1} tok/s)",
+        prompts.len(),
+        total_tokens,
+        elapsed,
+        total_tokens as f64 / elapsed
+    );
+    println!(
+        "request latency mean {:.3}s p99 {:.3}s   TTFT mean {:.3}s",
+        lat.mean, lat.p99, ttft.mean
+    );
+
+    println!();
+    println!("== simulated flash-PIM timing at OPT-30B scale ==");
+    let sys = table1_system();
+    let mut sched = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+    let l_in = 1024;
+    let sim = simulated_generation_time(&mut sched, l_in, total_tokens);
+    let tpot = sim.secs() / total_tokens as f64;
+    println!(
+        "generating the same {} tokens at OPT-30B scale on the flash device: {} (TPOT {})",
+        total_tokens,
+        sim,
+        flashpim::util::units::fmt_time(tpot)
+    );
+    let gpu = flashpim::gpu::rtx4090x4_vllm();
+    if let Some(g) = gpu.tpot(&OptModel::Opt30b.shape(), 1.0, l_in) {
+        println!("4xRTX4090 (vLLM) TPOT at the same point: {} → speedup {:.2}x",
+            flashpim::util::units::fmt_time(g), g / tpot);
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""L1 Pallas kernels for the dynamic MVMs (paper Fig. 13): the RPU
+datapath of the SLC region.
+
+* `qk_vvm` -- QK^T as L vector-vector multiplies: q broadcast against
+  the rows of the non-transposed K in the page buffers (Fig. 13a-c);
+* `sv_rowwise` -- SV as the row-wise product: each score scales a row
+  of V (vector-scalar multiply), partials accumulate down the H-tree
+  (Fig. 13d-f).
+
+Operands are INT8-valued (KV cache storage), arithmetic INT16xINT16 ->
+INT32 exactly as the Table-I RPUs (8x INT16 multipliers, INT32 adders).
+Both kernels are bit-exact against plain integer einsums -- the H-tree
+ALU adds are exact INT32, so unlike the sMVM path there is no ADC term.
+
+interpret=True always (CPU PJRT; see pim_mvm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qk_kernel(q_ref, k_ref, o_ref):
+    """One grid step: a block of K rows against the broadcast q."""
+    q = q_ref[...].astype(jnp.int32)      # [d]
+    k = k_ref[...].astype(jnp.int32)      # [Lb, d]
+    # RPU VVM: INT16 multiplies, INT32 accumulate.
+    o_ref[...] = jnp.einsum("ld,d->l", k, q).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def qk_vvm(q, k, block_l: int = 128):
+    """q int32[d] (int8/int16 range) x K int32[L, d] -> scores int32[L]."""
+    q = q.astype(jnp.int32)
+    k = k.astype(jnp.int32)
+    l, d = k.shape
+    pad = (-l) % block_l
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+    lp = l + pad
+    out = pl.pallas_call(
+        _qk_kernel,
+        grid=(lp // block_l,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.int32),
+        interpret=True,
+    )(q, k)
+    return out[:l]
+
+
+def _sv_kernel(s_ref, v_ref, o_ref):
+    """One grid step: a block of scores scales its V rows; the partial
+    d-vectors accumulate (H-tree ALU mode) into the output."""
+    s = s_ref[...].astype(jnp.int32)      # [Lb]
+    v = v_ref[...].astype(jnp.int32)      # [Lb, d]
+    partial = jnp.einsum("l,ld->d", s, v).astype(jnp.int32)
+    # Accumulate across grid steps (sequential grid = running H-tree sum).
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(pl.program_id(0) != 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def sv_rowwise(s, v, block_l: int = 128):
+    """scores int32[L] x V int32[L, d] -> context int32[d] (row-wise)."""
+    s = s.astype(jnp.int32)
+    v = v.astype(jnp.int32)
+    l, d = v.shape
+    pad = (-l) % block_l
+    if pad:
+        s = jnp.pad(s, (0, pad))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    lp = l + pad
+    return pl.pallas_call(
+        _sv_kernel,
+        grid=(lp // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+            pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        interpret=True,
+    )(s, v)
+
+
+def qk_ref(q, k):
+    """Oracle: exact integer QK^T."""
+    return jnp.einsum("ld,d->l", k.astype(jnp.int32), q.astype(jnp.int32))
+
+
+def sv_ref(s, v):
+    """Oracle: exact integer row-wise SV."""
+    return jnp.einsum("l,ld->d", s.astype(jnp.int32), v.astype(jnp.int32))

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: the 3D NAND flash PIM sMVM array model.
+
+One grid step emulates one *plane unit tile column group*: a block of
+`block_n` output bitline pairs processing the whole input vector through
+the bit-serial / nibble-decomposed / ADC-quantized dataflow of paper
+SII-B (see `ref.py` for the numeric definition -- the kernel is bit-exact
+against it).
+
+Hardware adaptation (DESIGN.md SHardware-Adaptation): the paper's plane
+tile is u x (N_col/4) = 128 x 512, so the kernel's BlockSpec uses a
+128-row x 512-column tile -- the same HBM->VMEM schedule a TPU version
+would use, with the MXU contraction running over the 128-row axis.
+
+MUST run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_N = 512  # N_col / col_mux of the Size-A plane
+
+
+def _kernel(x_ref, w_ref, o_ref, *, rows_per_tile, adc_bits, adc_step, input_bits):
+    """One column block: full bit-serial PIM pipeline."""
+    x = x_ref[...]  # [M] int32
+    w = w_ref[...]  # [M, BN] int32
+    m = x.shape[0]
+    n_tiles = m // rows_per_tile
+
+    u_byte = jnp.where(w < 0, w + 256, w)
+    hi = (u_byte >> 4).reshape(n_tiles, rows_per_tile, -1)
+    lo = (u_byte & 0xF).reshape(n_tiles, rows_per_tile, -1)
+    ng = (w < 0).astype(jnp.int32).reshape(n_tiles, rows_per_tile, -1)
+    xu = jnp.where(x < 0, x + 256, x).reshape(n_tiles, rows_per_tile)
+
+    max_code = (1 << adc_bits) - 1
+
+    def adc_q(s):
+        return jnp.minimum(s // adc_step, max_code) * adc_step
+
+    # SPerf: the bit-serial loop is vectorized over a leading bits axis
+    # (one fused contraction instead of `input_bits` sequential passes);
+    # integer adds are exact, so this is bit-identical to the serial
+    # form the hardware executes.
+    shifts = jnp.arange(input_bits, dtype=jnp.int32)
+    bits = (xu[None, :, :] >> shifts[:, None, None]) & 1  # [B, T, u]
+    s_hi = jnp.einsum("btu,tun->btn", bits, hi)
+    s_lo = jnp.einsum("btu,tun->btn", bits, lo)
+    s_ng = jnp.einsum("btu,tun->btn", bits, ng)
+    q = 16 * adc_q(s_hi) + adc_q(s_lo) - 256 * s_ng  # [B, T, BN]
+    # Two's complement: the MSB pass carries weight -2^(bits-1).
+    weights = jnp.where(
+        shifts == input_bits - 1, -(1 << shifts), 1 << shifts
+    ).astype(jnp.int32)
+    o_ref[...] = jnp.einsum("b,btn->n", weights, q.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_per_tile", "adc_bits", "adc_step", "input_bits", "block_n"),
+)
+def pim_mvm(
+    x,
+    w,
+    rows_per_tile: int = ref.ROWS_PER_TILE,
+    adc_bits: int = ref.ADC_BITS,
+    adc_step: int = ref.ADC_STEP,
+    input_bits: int = ref.INPUT_BITS,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """PIM MVM: x int32[M] (int8 range) x w int32[M, N] -> int32[N]."""
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    m, n = w.shape
+
+    # Pad rows to the tile size (extra rows are zero: no current flows).
+    pad_m = (-m) % rows_per_tile
+    if pad_m:
+        x = jnp.pad(x, (0, pad_m))
+        w = jnp.pad(w, ((0, pad_m), (0, 0)))
+    # Pad cols to the block size.
+    bn = min(block_n, n) if n >= 1 else 1
+    pad_n = (-n) % bn
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+    n_padded = n + pad_n
+    m_padded = m + pad_m
+
+    kernel = functools.partial(
+        _kernel,
+        rows_per_tile=rows_per_tile,
+        adc_bits=adc_bits,
+        adc_step=adc_step,
+        input_bits=input_bits,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_padded // bn,),
+        in_specs=[
+            pl.BlockSpec((m_padded,), lambda j: (0,)),
+            pl.BlockSpec((m_padded, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_padded,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+    return out[:n]

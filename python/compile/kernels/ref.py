@@ -1,0 +1,102 @@
+"""Pure-jnp oracle of the 3D NAND flash PIM dot-product (paper SII-B).
+
+This is the numeric ground truth the Pallas kernel must match **bit
+exactly**. It models, in plain vectorized jnp:
+
+* QLC nibble decomposition -- an 8-bit weight occupies two 4-bit cells on
+  two bitlines (hi/lo nibble of the two's-complement byte);
+* the 256-cell-per-bitline reliability limit -- row tiles of u = 128
+  weights (2 cells each) accumulate independently;
+* bit-serial activations -- 8 passes over the unsigned activation bits,
+  recombined with +-2^b weights (bit 7 carries -2^7: two's complement);
+* the 9-bit SAR ADC in the read path -- each analog bitline sum is
+  floor-quantized to `adc_step` and clipped to `2^adc_bits - 1` codes
+  (the 3D-FPIM "quantization-aware ADC");
+* the digital sign-correction column (popcount of negative-weight rows,
+  exact -- no ADC on the digital path).
+
+`pim_mvm_ref(x, w) ~= x @ w` up to the documented ADC quantization error;
+`adc_step=1` makes it exact for in-range sums.
+"""
+
+import jax.numpy as jnp
+
+# Paper parameters.
+ROWS_PER_TILE = 128  # u: 256 cells / 2 cells per weight
+ADC_BITS = 9
+ADC_STEP = 4
+INPUT_BITS = 8
+
+
+def adc(s: jnp.ndarray, adc_bits: int = ADC_BITS, adc_step: int = ADC_STEP) -> jnp.ndarray:
+    """SAR ADC transfer function on a non-negative analog sum (int32)."""
+    code = jnp.minimum(s // adc_step, (1 << adc_bits) - 1)
+    return code * adc_step
+
+
+def _pad_rows(x: jnp.ndarray, w: jnp.ndarray, u: int):
+    m = x.shape[0]
+    pad = (-m) % u
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return x, w
+
+
+def pim_mvm_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    rows_per_tile: int = ROWS_PER_TILE,
+    adc_bits: int = ADC_BITS,
+    adc_step: int = ADC_STEP,
+    input_bits: int = INPUT_BITS,
+) -> jnp.ndarray:
+    """PIM dot product: x int32[M] (int8 range) x w int32[M,N] -> int32[N]."""
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    x, w = _pad_rows(x, w, rows_per_tile)
+    m = x.shape[0]
+    n_tiles = m // rows_per_tile
+
+    # Stored representation: unsigned byte -> nibbles; sign column.
+    u_byte = jnp.where(w < 0, w + 256, w)
+    hi = u_byte >> 4
+    lo = u_byte & 0xF
+    neg = (w < 0).astype(jnp.int32)
+    xu = jnp.where(x < 0, x + 256, x)  # unsigned activation byte
+
+    # [T, u, N] tiles / [T, u] activations.
+    hi_t = hi.reshape(n_tiles, rows_per_tile, -1)
+    lo_t = lo.reshape(n_tiles, rows_per_tile, -1)
+    ng_t = neg.reshape(n_tiles, rows_per_tile, -1)
+    xu_t = xu.reshape(n_tiles, rows_per_tile)
+
+    out = jnp.zeros((w.shape[1],), dtype=jnp.int32)
+    for b in range(input_bits):
+        bit = (xu_t >> b) & 1  # [T, u]
+        # Analog bitline sums per tile (<= u * 15 on the nibble BLs).
+        s_hi = jnp.einsum("tu,tun->tn", bit, hi_t)
+        s_lo = jnp.einsum("tu,tun->tn", bit, lo_t)
+        s_ng = jnp.einsum("tu,tun->tn", bit, ng_t)  # digital, exact
+        q = 16 * adc(s_hi, adc_bits, adc_step) + adc(s_lo, adc_bits, adc_step) - 256 * s_ng
+        weight = -(1 << b) if b == input_bits - 1 else (1 << b)
+        out = out + weight * jnp.sum(q, axis=0)
+    return out
+
+
+def exact_mvm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain integer matmul -- the no-ADC ideal."""
+    return (x.astype(jnp.int32)[None, :] @ w.astype(jnp.int32))[0]
+
+
+def adc_error_bound(m: int, input_bits: int = INPUT_BITS, adc_step: int = ADC_STEP) -> int:
+    """Worst-case |pim_mvm_ref - exact_mvm| from ADC floor quantization.
+
+    Each of the two nibble conversions loses < adc_step per (tile, bit);
+    recombined as 16*hi + lo and summed over bit weights (2^0..2^7) and
+    row tiles.
+    """
+    tiles = -(-m // ROWS_PER_TILE)
+    per_bit = 17 * (adc_step - 1)  # 16*(step-1) + (step-1)
+    bit_weight_sum = (1 << input_bits) - 1  # sum of 2^b magnitudes
+    return tiles * per_bit * bit_weight_sum

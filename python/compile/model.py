@@ -1,0 +1,248 @@
+"""L2 JAX model: an OPT-style decoder ("OPT-toy") whose every linear
+layer runs through the L1 Pallas PIM kernel (W8A8, paper Fig. 10
+mapping). Two entry points:
+
+* `forward_train` -- float, full-sequence, for the quick char-LM
+  training run in `aot.py`;
+* `decode_step` -- the quantized single-token path that is AOT-lowered
+  to HLO text and served by the rust runtime (KV cache in/out, greedy
+  sampling happens on the rust side).
+
+Simplifications vs the paper's full system are documented in DESIGN.md:
+softmax/LN stay f32 here (the controller runs them FP16), and the KV
+cache is carried as f32 (the SLC region stores INT8; the simulator
+models that storage, the functional path keeps full precision).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels.pim_mvm import pim_mvm
+
+
+@dataclasses.dataclass(frozen=True)
+class ToyConfig:
+    vocab: int = 256
+    d_model: int = 128
+    layers: int = 2
+    heads: int = 4
+    max_seq: int = 160
+    d_ffn: int = 512
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+LINEAR_NAMES = ["wq", "wk", "wv", "wo", "w1", "w2"]
+
+
+def init_params(cfg: ToyConfig, key) -> dict:
+    """Float training parameters."""
+    keys = jax.random.split(key, 4 + cfg.layers * 8)
+    k = iter(keys)
+    scale = 0.02
+
+    def dense(kk, m, n):
+        return jax.random.normal(kk, (m, n), jnp.float32) * scale
+
+    params = {
+        "tok_emb": dense(next(k), cfg.vocab, cfg.d_model),
+        "pos_emb": dense(next(k), cfg.max_seq, cfg.d_model),
+        "ln_f_g": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_f_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": dense(next(k), cfg.d_model, cfg.vocab),
+    }
+    for l in range(cfg.layers):
+        params[f"l{l}_ln1_g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[f"l{l}_ln1_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params[f"l{l}_wq"] = dense(next(k), cfg.d_model, cfg.d_model)
+        params[f"l{l}_wk"] = dense(next(k), cfg.d_model, cfg.d_model)
+        params[f"l{l}_wv"] = dense(next(k), cfg.d_model, cfg.d_model)
+        params[f"l{l}_wo"] = dense(next(k), cfg.d_model, cfg.d_model)
+        params[f"l{l}_ln2_g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[f"l{l}_ln2_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params[f"l{l}_w1"] = dense(next(k), cfg.d_model, cfg.d_ffn)
+        params[f"l{l}_w2"] = dense(next(k), cfg.d_ffn, cfg.d_model)
+    return params
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# Float training forward (full sequence, causal)
+# ---------------------------------------------------------------------------
+
+def forward_train(params: dict, cfg: ToyConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens int32[B, T] -> logits f32[B, T, V]."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for l in range(cfg.layers):
+        h = layer_norm(x, params[f"l{l}_ln1_g"], params[f"l{l}_ln1_b"])
+        q = h @ params[f"l{l}_wq"]
+        k = h @ params[f"l{l}_wk"]
+        v = h @ params[f"l{l}_wv"]
+        qh = q.reshape(b, t, cfg.heads, cfg.d_head)
+        kh = k.reshape(b, t, cfg.heads, cfg.d_head)
+        vh = v.reshape(b, t, cfg.heads, cfg.d_head)
+        scores = jnp.einsum("bihd,bjhd->bhij", qh, kh) / jnp.sqrt(float(cfg.d_head))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhij,bjhd->bihd", probs, vh).reshape(b, t, cfg.d_model)
+        x = x + ctx @ params[f"l{l}_wo"]
+        h = layer_norm(x, params[f"l{l}_ln2_g"], params[f"l{l}_ln2_b"])
+        x = x + jax.nn.relu(h @ params[f"l{l}_w1"]) @ params[f"l{l}_w2"]
+    x = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Quantization: float params -> serving weight list (ordered)
+# ---------------------------------------------------------------------------
+
+def quantize_params(params: dict, cfg: ToyConfig) -> list[tuple[str, jnp.ndarray]]:
+    """Ordered (name, array) list for the AOT decode graph.
+
+    Quantized linears are exported as int8-valued f32 matrices plus
+    per-column f32 scales (carried as f32 so every PJRT literal is f32).
+    """
+    out: list[tuple[str, jnp.ndarray]] = [
+        ("tok_emb", params["tok_emb"]),
+        ("pos_emb", params["pos_emb"]),
+    ]
+    for l in range(cfg.layers):
+        out.append((f"l{l}_ln1_g", params[f"l{l}_ln1_g"]))
+        out.append((f"l{l}_ln1_b", params[f"l{l}_ln1_b"]))
+        for name in ["wq", "wk", "wv", "wo"]:
+            q, s = quant.quantize_weight(params[f"l{l}_{name}"])
+            out.append((f"l{l}_{name}_q", q.astype(jnp.float32)))
+            out.append((f"l{l}_{name}_s", s))
+        out.append((f"l{l}_ln2_g", params[f"l{l}_ln2_g"]))
+        out.append((f"l{l}_ln2_b", params[f"l{l}_ln2_b"]))
+        for name in ["w1", "w2"]:
+            q, s = quant.quantize_weight(params[f"l{l}_{name}"])
+            out.append((f"l{l}_{name}_q", q.astype(jnp.float32)))
+            out.append((f"l{l}_{name}_s", s))
+    out.append(("ln_f_g", params["ln_f_g"]))
+    out.append(("ln_f_b", params["ln_f_b"]))
+    q, s = quant.quantize_weight(params["lm_head"])
+    out.append(("lm_head_q", q.astype(jnp.float32)))
+    out.append(("lm_head_s", s))
+    return out
+
+
+def pim_linear(x: jnp.ndarray, w_q: jnp.ndarray, s_w: jnp.ndarray) -> jnp.ndarray:
+    """Quantized linear through the Pallas PIM kernel (W8A8)."""
+    xq, sx = quant.quantize_act(x)
+    acc = pim_mvm(xq, w_q.astype(jnp.int32))
+    return quant.dequantize(acc, sx, s_w)
+
+
+# ---------------------------------------------------------------------------
+# Serving decode step (lowered to HLO)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ToyConfig, token, pos, kv, *weights):
+    """One token step.
+
+    token i32[1], pos i32[1], kv f32[L, 2, S, D]
+    -> (logits f32[V], kv' f32[L, 2, S, D])
+    """
+    w = dict(zip([n for n, _ in _weight_names_cache(cfg)], weights))
+    t = token[0]
+    p = pos[0]
+    x = w["tok_emb"][t] + jax.lax.dynamic_index_in_dim(w["pos_emb"], p, 0, keepdims=False)
+
+    s = cfg.max_seq
+    positions = jnp.arange(s)
+    for l in range(cfg.layers):
+        h = layer_norm(x, w[f"l{l}_ln1_g"], w[f"l{l}_ln1_b"])
+        q = pim_linear(h, w[f"l{l}_wq_q"], w[f"l{l}_wq_s"])
+        k = pim_linear(h, w[f"l{l}_wk_q"], w[f"l{l}_wk_s"])
+        v = pim_linear(h, w[f"l{l}_wv_q"], w[f"l{l}_wv_s"])
+        # Append k, v to the cache at position p (SLC append path).
+        kv = jax.lax.dynamic_update_slice(kv, k.reshape(1, 1, 1, -1), (l, 0, p, 0))
+        kv = jax.lax.dynamic_update_slice(kv, v.reshape(1, 1, 1, -1), (l, 1, p, 0))
+        keys = kv[l, 0].reshape(s, cfg.heads, cfg.d_head)
+        vals = kv[l, 1].reshape(s, cfg.heads, cfg.d_head)
+        qh = q.reshape(cfg.heads, cfg.d_head)
+        # QK^T per head (RPU VVMs in the paper).
+        scores = jnp.einsum("hd,jhd->hj", qh, keys) / jnp.sqrt(float(cfg.d_head))
+        scores = jnp.where(positions[None, :] <= p, scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        # SV with the row-wise product dataflow.
+        ctx = jnp.einsum("hj,jhd->hd", probs, vals).reshape(cfg.d_model)
+        x = x + pim_linear(ctx, w[f"l{l}_wo_q"], w[f"l{l}_wo_s"])
+        h = layer_norm(x, w[f"l{l}_ln2_g"], w[f"l{l}_ln2_b"])
+        f = jax.nn.relu(pim_linear(h, w[f"l{l}_w1_q"], w[f"l{l}_w1_s"]))
+        x = x + pim_linear(f, w[f"l{l}_w2_q"], w[f"l{l}_w2_s"])
+    x = layer_norm(x, w["ln_f_g"], w["ln_f_b"])
+    logits = pim_linear(x, w["lm_head_q"], w["lm_head_s"])
+    return logits, kv
+
+
+@functools.lru_cache(maxsize=8)
+def _weight_names_cache(cfg: ToyConfig) -> tuple:
+    """Weight name order without materializing arrays."""
+    names = [("tok_emb", None), ("pos_emb", None)]
+    for l in range(cfg.layers):
+        names.append((f"l{l}_ln1_g", None))
+        names.append((f"l{l}_ln1_b", None))
+        for name in ["wq", "wk", "wv", "wo"]:
+            names.append((f"l{l}_{name}_q", None))
+            names.append((f"l{l}_{name}_s", None))
+        names.append((f"l{l}_ln2_g", None))
+        names.append((f"l{l}_ln2_b", None))
+        for name in ["w1", "w2"]:
+            names.append((f"l{l}_{name}_q", None))
+            names.append((f"l{l}_{name}_s", None))
+    names.append(("ln_f_g", None))
+    names.append(("ln_f_b", None))
+    names.append(("lm_head_q", None))
+    names.append(("lm_head_s", None))
+    return tuple(names)
+
+
+def weight_names(cfg: ToyConfig) -> list[str]:
+    return [n for n, _ in _weight_names_cache(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Reference decode loop (python-side greedy generation, for tests)
+# ---------------------------------------------------------------------------
+
+def generate_greedy(cfg: ToyConfig, weights: list, prompt: list[int], max_new: int):
+    """Greedy generation mirroring the rust serving loop."""
+    kv = jnp.zeros((cfg.layers, 2, cfg.max_seq, cfg.d_model), jnp.float32)
+    arrays = [a for _, a in weights]
+    logits = None
+    pos = 0
+    for t in prompt:
+        logits, kv = decode_step(
+            cfg, jnp.asarray([t], jnp.int32), jnp.asarray([pos], jnp.int32), kv, *arrays
+        )
+        pos += 1
+    out = []
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits))
+        out.append(nxt)
+        if pos >= cfg.max_seq:
+            break
+        logits, kv = decode_step(
+            cfg, jnp.asarray([nxt], jnp.int32), jnp.asarray([pos], jnp.int32), kv, *arrays
+        )
+        pos += 1
+    return out

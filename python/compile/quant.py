@@ -1,0 +1,41 @@
+"""W8A8 quantization helpers (SmoothQuant-style, paper SIV-A).
+
+Weights: symmetric per-output-channel int8. Activations: symmetric
+per-tensor int8 with a dynamic (runtime) scale, as the flash controller
+would compute from the page-buffer statistics. All quantized values are
+carried as int32 (the Pallas kernel's arithmetic domain).
+"""
+
+import jax.numpy as jnp
+
+INT8_MAX = 127
+
+
+def weight_scales(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-output-column symmetric scale for a [M, N] weight matrix."""
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    return jnp.maximum(absmax, 1e-8) / INT8_MAX
+
+
+def quantize_weight(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8-valued int32 [M, N], per-column scale f32 [N])."""
+    s = weight_scales(w)
+    q = jnp.clip(jnp.round(w / s[None, :]), -INT8_MAX - 1, INT8_MAX)
+    return q.astype(jnp.int32), s.astype(jnp.float32)
+
+
+def act_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor dynamic symmetric scale (scalar)."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / INT8_MAX
+
+
+def quantize_act(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8-valued int32 [M], scalar scale f32)."""
+    s = act_scale(x)
+    q = jnp.clip(jnp.round(x / s), -INT8_MAX - 1, INT8_MAX)
+    return q.astype(jnp.int32), s.astype(jnp.float32)
+
+
+def dequantize(acc: jnp.ndarray, s_x: jnp.ndarray, s_w: jnp.ndarray) -> jnp.ndarray:
+    """int32 accumulator [N] -> f32 via s_x * s_w[j]."""
+    return acc.astype(jnp.float32) * s_x * s_w

@@ -1,0 +1,81 @@
+"""Quick char-LM training for the OPT-toy (build-time only).
+
+A synthetic corpus with enough structure to show a falling loss curve
+and produce recognizable continuations; hand-rolled Adam. The loss log
+is exported next to the artifacts and recorded in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ToyConfig, forward_train, init_params
+
+CORPUS = (
+    "the flash array stores the model weights in qlc cells. "
+    "the h tree adds partial sums on the way out. "
+    "the slc region keeps the kv cache close to the rpus. "
+    "token generation streams bits over the wordlines. "
+    "the controller runs softmax on its arm cores. "
+    "a plane reads a page through the bitlines. "
+) * 64
+
+
+def batches(seq_len: int, batch: int, seed: int):
+    data = np.frombuffer(CORPUS.encode(), dtype=np.uint8).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    while True:
+        idx = rng.integers(0, len(data) - seq_len - 1, size=batch)
+        x = np.stack([data[i : i + seq_len] for i in idx])
+        y = np.stack([data[i + 1 : i + seq_len + 1] for i in idx])
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(params, cfg, x, y):
+    logits = forward_train(params, cfg, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ToyConfig, steps: int = 200, seed: int = 0, batch: int = 16, seq_len: int = 64):
+    """Returns (params, loss_log: list[(step, loss)])."""
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(params)
+    gen = batches(seq_len, batch, seed)
+
+    @jax.jit
+    def step_fn(params, state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y)
+        params, state = adam_update(params, grads, state)
+        return params, state, loss
+
+    log = []
+    for step in range(steps):
+        x, y = next(gen)
+        params, state, loss = step_fn(params, state, x, y)
+        if step % 10 == 0 or step == steps - 1:
+            log.append((step, float(loss)))
+    return params, log

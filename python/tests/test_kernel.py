@@ -1,0 +1,106 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The Pallas kernel must match the pure-jnp PIM oracle bit-exactly for
+every shape/value combination, and the oracle itself must stay within
+the documented ADC error bound of the exact integer matmul.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.pim_mvm import pim_mvm
+
+
+def rand_int8(rng, shape):
+    return rng.integers(-128, 128, size=shape).astype(np.int32)
+
+
+@pytest.mark.parametrize(
+    "m,n",
+    [(1, 1), (7, 3), (128, 512), (128, 513), (129, 64), (256, 1024), (300, 100), (64, 512)],
+)
+def test_kernel_matches_ref_shapes(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = rand_int8(rng, (m,))
+    w = rand_int8(rng, (m, n))
+    got = np.asarray(pim_mvm(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.pim_mvm_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_hypothesis(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m,))
+    w = rand_int8(rng, (m, n))
+    got = np.asarray(pim_mvm(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.pim_mvm_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=256),
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_ref_within_adc_error_bound(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m,))
+    w = rand_int8(rng, (m, n))
+    approx = np.asarray(ref.pim_mvm_ref(jnp.asarray(x), jnp.asarray(w)))
+    exact = np.asarray(ref.exact_mvm(jnp.asarray(x), jnp.asarray(w)))
+    bound = ref.adc_error_bound(m)
+    assert np.max(np.abs(approx - exact)) <= bound
+
+
+def test_ref_exact_when_adc_ideal():
+    # adc_step=1 and sums below the 9-bit range -> no quantization at all.
+    rng = np.random.default_rng(0)
+    m, n = 64, 32
+    x = rng.integers(0, 4, size=(m,)).astype(np.int32)  # small positive
+    w = rng.integers(-8, 8, size=(m, n)).astype(np.int32)
+    approx = np.asarray(ref.pim_mvm_ref(jnp.asarray(x), jnp.asarray(w), adc_step=1))
+    exact = np.asarray(ref.exact_mvm(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(approx, exact)
+
+
+def test_extreme_values():
+    # -128/127 corners exercise the two's-complement paths.
+    x = jnp.asarray([-128, 127, -1, 0, 1] * 26)[:128]
+    w = jnp.asarray(np.tile(np.asarray([[-128, 127, -1, 1]], dtype=np.int32), (128, 1)))
+    got = np.asarray(pim_mvm(x, w))
+    want = np.asarray(ref.pim_mvm_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zero_input_gives_zero():
+    x = jnp.zeros((128,), jnp.int32)
+    w = jnp.asarray(np.random.default_rng(1).integers(-128, 128, (128, 16)), dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(pim_mvm(x, w)), np.zeros(16, np.int32))
+
+
+def test_adc_transfer_function():
+    s = jnp.asarray([0, 1, 3, 4, 5, 2047, 2048, 100000])
+    q = np.asarray(ref.adc(s))
+    # floor to step 4, clip to 511 codes
+    assert list(q) == [0, 0, 0, 4, 4, 2044, 2044, 2044]
+
+
+def test_block_boundary_consistency():
+    # Same input evaluated with different block sizes must agree.
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rand_int8(rng, (130,)))
+    w = jnp.asarray(rand_int8(rng, (130, 70)))
+    a = np.asarray(pim_mvm(x, w, block_n=512))
+    b = np.asarray(pim_mvm(x, w, block_n=16))
+    np.testing.assert_array_equal(a, b)

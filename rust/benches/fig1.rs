@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig. 1 (memory wall + generation/summarization
+//! gap) and time the underlying models.
+
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 1a/1b — memory requirements & latency gap");
+    print!("{}", flashpim::exp::fig1::render());
+
+    section("timing");
+    quick("fig1a rows", flashpim::exp::fig1::fig1a);
+    quick("fig1b roofline", flashpim::exp::fig1::fig1b);
+}

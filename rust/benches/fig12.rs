@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig. 12 (tiling-option latency breakdown) and
+//! time the scheme enumeration + search.
+
+use flashpim::pim::op::MvmShape;
+use flashpim::tiling::search_best;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 12 — sMVM tiling options");
+    print!("{}", flashpim::exp::fig12::render());
+
+    section("timing");
+    let model = flashpim::exp::fig12::model();
+    quick("enumerate+search d_m=7168", || search_best(&model, MvmShape::new(7168, 7168)));
+    quick("enumerate+search FFN 7168x28672", || {
+        search_best(&model, MvmShape::new(7168, 28672))
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig. 14 (TPOT across OPT models vs GPU
+//! baselines; execution-time breakdown vs token lengths) and time the
+//! TPOT estimator.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::schedule::TokenSchedule;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 14a — TPOT across OPT model sizes");
+    let rows = flashpim::exp::fig14::fig14a();
+    print!("{}", flashpim::exp::fig14::render_fig14a(&rows));
+
+    section("Fig 14b — execution-time breakdown (OPT-30B)");
+    print!("{}", flashpim::exp::fig14::render_fig14b(&flashpim::exp::fig14::fig14b()));
+
+    section("timing");
+    let sys = table1_system();
+    quick("TokenSchedule::tpot OPT-30B (cold)", || {
+        let mut s = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+        s.tpot(1024)
+    });
+    let mut warm = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+    warm.tpot(1024);
+    quick("TokenSchedule::tpot OPT-30B (warm cache)", || warm.tpot(1024));
+}

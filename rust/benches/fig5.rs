@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig. 5 (conventional vs proposed PIM TPOT,
+//! OPT-30B) and time the two TPOT models.
+
+use flashpim::llm::model_config::OptModel;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 5 — TPOT: conventional vs proposed 3D NAND PIM (OPT-30B)");
+    print!("{}", flashpim::exp::fig5::render());
+
+    section("timing");
+    quick("conventional TPOT model", || {
+        flashpim::exp::fig5::conventional_tpot(OptModel::Opt30b, 1536)
+    });
+    quick("fig5 full", flashpim::exp::fig5::fig5);
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Fig. 6 (plane-size sweeps: latency, energy,
+//! density) and time the circuit model + DSE.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::size_a_plane;
+use flashpim::dse::select::{select_plane, SelectionCriteria};
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 6 — plane configuration sweeps");
+    print!("{}", flashpim::exp::fig6::render());
+
+    section("timing");
+    let tech = TechParams::default();
+    quick("circuit model, one plane", || {
+        flashpim::circuit::PlaneLatency::of(&size_a_plane(), &tech).t_pim(8)
+    });
+    quick("fig6 sweeps (3 axes)", || flashpim::dse::sweep::fig6_sweeps(&tech));
+    quick("DSE full-grid selection", || select_plane(&SelectionCriteria::default(), &tech));
+}

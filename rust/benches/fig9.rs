@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Fig. 9 (shared bus vs H-tree; Size A vs B)
+//! and time the pipelined sMVM executor.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::nand::NandTiming;
+use flashpim::pim::op::MvmShape;
+use flashpim::pim::smvm::SmvmPipeline;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Fig 9 — intra-die bus architecture");
+    print!("{}", flashpim::exp::fig9::render());
+
+    section("timing");
+    let sys = table1_system();
+    let timing = NandTiming::of_system(&sys, &TechParams::default());
+    let pipe = SmvmPipeline::new(&sys, timing, 64);
+    quick("sMVM pipeline (1K,1K)", || pipe.execute(MvmShape::new(1024, 1024)));
+    quick("sMVM pipeline (4K,4K)", || pipe.execute(MvmShape::new(4096, 4096)));
+    quick("fig9 full (a+b)", || {
+        (flashpim::exp::fig9::fig9a(), flashpim::exp::fig9::fig9b())
+    });
+}

@@ -1,0 +1,95 @@
+//! Perf bench: the L3 hot paths — DES engine event throughput, resource
+//! scheduling, tiling search, TPOT estimation, serving simulation, and
+//! (when artifacts exist) the PJRT decode step. Tracked in
+//! EXPERIMENTS.md §Perf.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{simulate, Workload};
+use flashpim::gpu::rtx4090x4_vllm;
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::schedule::TokenSchedule;
+use flashpim::sim::{Engine, EventQueue, Model, Resource, SimTime};
+use flashpim::util::benchkit::{bench, quick, section, BenchConfig};
+
+/// Self-scheduling event storm for raw queue throughput.
+struct Storm {
+    remaining: u64,
+}
+
+impl Model for Storm {
+    type Event = u32;
+
+    fn handle(&mut self, _now: SimTime, ev: u32, q: &mut EventQueue<u32>) {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            // Fan out to keep the heap busy.
+            q.schedule_in(SimTime(1 + (ev as u64 % 97)), ev.wrapping_mul(31));
+            if ev % 4 == 0 {
+                q.schedule_in(SimTime(5), ev.wrapping_add(7));
+            }
+        }
+    }
+}
+
+fn main() {
+    section("L3 hot paths");
+
+    const EVENTS: u64 = 200_000;
+    let r = bench("DES engine 200k events", &BenchConfig::default(), || {
+        let mut e = Engine::new(Storm { remaining: EVENTS });
+        e.seed(SimTime::ZERO, 1);
+        e.run();
+        e.events_processed()
+    });
+    r.print();
+    println!(
+        "  -> {:.1} M events/s",
+        EVENTS as f64 / r.summary.mean / 1e6
+    );
+
+    let r = bench("resource timeline 1M acquires", &BenchConfig::default(), || {
+        let mut res = Resource::new();
+        for i in 0..1_000_000u64 {
+            res.acquire(SimTime(i), SimTime(3));
+        }
+        res.free_at()
+    });
+    r.print();
+    println!("  -> {:.1} M acquires/s", 1.0 / r.summary.mean);
+
+    quick("tiling search d_m=7168", || {
+        flashpim::tiling::search_best(
+            &flashpim::exp::fig12::model(),
+            flashpim::pim::op::MvmShape::new(7168, 7168),
+        )
+    });
+
+    let sys = table1_system();
+    let mut sched = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+    sched.tpot(1024); // warm the shape cache
+    quick("TPOT estimate (warm)", || sched.tpot(1024));
+
+    quick("serving sim: 64 requests", || {
+        let wl = Workload::synthetic(64, 0.5, 0.4, 256, 64, 3);
+        simulate(&sys, &OptModel::Opt6_7b.shape(), &rtx4090x4_vllm(), &wl)
+    });
+
+    // Functional decode step, only when artifacts are present.
+    if flashpim::runtime::ArtifactBundle::available() {
+        section("PJRT decode step (artifacts found)");
+        let dir = flashpim::runtime::ArtifactBundle::default_dir();
+        let mut exec = flashpim::runtime::DecodeExecutor::load(&dir).expect("load artifacts");
+        let cfg = BenchConfig { warmup_iters: 3, iters: 50, ..Default::default() };
+        let r = bench("decode step (1 token)", &cfg, || {
+            if exec.position() + 1 >= exec.bundle.max_seq {
+                exec.reset();
+            }
+            exec.step(104).unwrap()
+        });
+        r.print();
+        println!("  -> {:.1} tok/s functional", 1.0 / r.summary.mean);
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT decode bench)");
+    }
+}

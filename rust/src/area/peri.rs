@@ -1,0 +1,202 @@
+//! Peripheral-circuit area model (paper §V-C, Table II).
+//!
+//! With the peri-under-array (PUA) structure, the peripherals sit under
+//! the memory array; they fit as long as their area stays below the
+//! plane footprint. Component unit areas are calibrated to Table II:
+//!
+//! | component      | mm² / plane | ratio |
+//! |----------------|-------------|-------|
+//! | HV-peri + cap  | 0.004210    | 21.62 % |
+//! | LV-peri        | 0.004510    | 23.16 % |
+//! | RPU + H-tree   | 0.000077    | 0.39 %  |
+//!
+//! LV-peri = BLS decoder, precharger, mux, ADC, page buffer, shift adder;
+//! HV-peri = WL decoder (+ charge pump). RPUs were synthesized at 65 nm
+//! and scaled to 7 nm; H-tree wiring uses the 7 nm M1 pitch.
+
+use crate::bus::HTree;
+use crate::circuit::{PlaneGeometry, TechParams};
+use crate::config::{PlaneConfig, RpuConfig, SystemConfig};
+
+/// Unit areas at the 7 nm LV node (m² per instance) and HV node.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaUnits {
+    /// One HV WL driver + level shifter (per stack layer).
+    pub hv_wl_driver: f64,
+    /// Charge-pump + HV routing overhead per plane (flat).
+    pub hv_pump: f64,
+    /// One 9-bit SAR ADC at 7 nm.
+    pub adc: f64,
+    /// One page-buffer latch (per bitline).
+    pub pb_latch: f64,
+    /// One precharge transistor + driver slice (per bitline).
+    pub precharge: f64,
+    /// One BLS driver (per row).
+    pub bls_driver: f64,
+    /// One 4:1 column mux slice (per active column).
+    pub mux: f64,
+    /// Shift-adder block per plane (flat).
+    pub shift_adder: f64,
+    /// One RPU at 65 nm (synthesis), scaled by `rpu_scale`.
+    pub rpu_65nm: f64,
+    /// Area scale factor 65 nm → 7 nm ((65/7)² ≈ 86×).
+    pub rpu_scale: f64,
+    /// M1 wire pitch at 7 nm (m) for the H-tree wiring.
+    pub m1_pitch: f64,
+    /// Parallel wires per H-tree link (bus width).
+    pub htree_wires: usize,
+}
+
+impl Default for AreaUnits {
+    fn default() -> Self {
+        AreaUnits {
+            hv_wl_driver: 31.0e-12, // 31 µm² — HV transistors are large
+            hv_pump: 2.42e-10,      // 242 µm² flat
+            adc: 4.0e-12,           // 4 µm² (9-bit SAR at 7 nm)
+            pb_latch: 0.60e-12,
+            precharge: 0.30e-12,
+            bls_driver: 1.50e-12,
+            mux: 0.50e-12,
+            shift_adder: 2.35e-10, // 235 µm² flat
+            rpu_65nm: 4.0e-9,      // 4000 µm² at 65 nm
+            rpu_scale: (65.0f64 / 7.0) * (65.0 / 7.0),
+            m1_pitch: 40e-9,
+            htree_wires: 4, // narrow serialized links
+
+        }
+    }
+}
+
+/// Per-plane area breakdown (m²).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub hv_peri: f64,
+    pub lv_peri: f64,
+    pub rpu_htree: f64,
+    /// Plane footprint (floorplan, staircase shared).
+    pub plane: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_peri(&self) -> f64 {
+        self.hv_peri + self.lv_peri + self.rpu_htree
+    }
+
+    /// Ratio of each component to the plane footprint (Table II row 2).
+    pub fn ratios(&self) -> (f64, f64, f64) {
+        (self.hv_peri / self.plane, self.lv_peri / self.plane, self.rpu_htree / self.plane)
+    }
+
+    /// PUA feasibility: everything fits under the array when the summed
+    /// peri ratio stays below 1 (paper: < 50 %).
+    pub fn fits_under_array(&self) -> bool {
+        self.total_peri() < self.plane
+    }
+}
+
+/// The area model bound to a system.
+pub struct AreaModel {
+    pub units: AreaUnits,
+    pub tech: TechParams,
+}
+
+impl AreaModel {
+    pub fn new(tech: &TechParams) -> AreaModel {
+        AreaModel { units: AreaUnits::default(), tech: tech.clone() }
+    }
+
+    /// Evaluate the per-plane breakdown for a system configuration.
+    pub fn breakdown(&self, sys: &SystemConfig) -> AreaBreakdown {
+        let p = &sys.plane;
+        let u = &self.units;
+        let geom = PlaneGeometry::of(p, &self.tech);
+
+        // HV: one driver per stacked WL layer + the pump.
+        let hv_peri = p.n_stack as f64 * u.hv_wl_driver + u.hv_pump;
+
+        // LV read path: per-BL latches/prechargers, per-row BLS drivers,
+        // ADCs + muxes on the active columns, plus the shift adder.
+        let active_cols = p.n_col / sys.col_mux;
+        let lv_peri = p.n_col as f64 * (u.pb_latch + u.precharge)
+            + p.n_row as f64 * u.bls_driver
+            + active_cols as f64 * (u.adc + u.mux)
+            + u.shift_adder;
+
+        // RPU (scaled from synthesis) + H-tree wiring, normalized per
+        // plane: a die has planes-1 RPUs ≈ 1 per plane.
+        let rpu = u.rpu_65nm / u.rpu_scale;
+        let planes = sys.org.planes_per_die;
+        let die_side = (planes as f64).sqrt() * (geom.area_floorplan(&self.tech)).sqrt();
+        let tree = HTree::new(planes, crate::bus::Rpu::new(RpuConfig::default()), 1.0);
+        let wire_len = tree.wire_length_units() * die_side;
+        let wire_area = wire_len * u.m1_pitch * u.htree_wires as f64;
+        let rpu_htree = rpu + wire_area / planes as f64;
+
+        AreaBreakdown { hv_peri, lv_peri, rpu_htree, plane: geom.area_floorplan(&self.tech) }
+    }
+
+    /// Total array area of one die (mm²) — the §V-C "4.98 mm²" figure.
+    pub fn die_array_mm2(&self, sys: &SystemConfig) -> f64 {
+        let b = self.breakdown(sys);
+        b.plane * sys.org.planes_per_die as f64 * 1e6
+    }
+}
+
+/// Convenience: evaluate one plane standalone.
+pub fn plane_floorplan_mm2(plane: &PlaneConfig, tech: &TechParams) -> f64 {
+    PlaneGeometry::of(plane, tech).area_floorplan(tech) * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+
+    fn breakdown() -> AreaBreakdown {
+        AreaModel::new(&TechParams::default()).breakdown(&table1_system())
+    }
+
+    #[test]
+    fn table2_hv_ratio() {
+        let (hv, _, _) = breakdown().ratios();
+        assert!((hv - 0.2162).abs() < 0.03, "HV ratio {hv:.4} vs paper 0.2162");
+    }
+
+    #[test]
+    fn table2_lv_ratio() {
+        let (_, lv, _) = breakdown().ratios();
+        assert!((lv - 0.2316).abs() < 0.03, "LV ratio {lv:.4} vs paper 0.2316");
+    }
+
+    #[test]
+    fn table2_rpu_htree_ratio() {
+        let (_, _, r) = breakdown().ratios();
+        assert!((r - 0.0039).abs() < 0.002, "RPU+H-tree ratio {r:.5} vs paper 0.0039");
+    }
+
+    #[test]
+    fn peri_fits_under_array() {
+        // Paper: peri + H-tree + RPUs < 50 % of the plane → PUA works.
+        let b = breakdown();
+        assert!(b.fits_under_array());
+        assert!(b.total_peri() / b.plane < 0.50, "peri ratio {:.3}", b.total_peri() / b.plane);
+    }
+
+    #[test]
+    fn die_array_near_4_98_mm2() {
+        // Paper §V-C: 256 Size-A planes total 4.98 mm².
+        let a = AreaModel::new(&TechParams::default()).die_array_mm2(&table1_system());
+        assert!((a - 4.98).abs() / 4.98 < 0.03, "die array = {a:.3} mm²");
+    }
+
+    #[test]
+    fn absolute_areas_match_table2() {
+        let b = breakdown();
+        let hv_mm2 = b.hv_peri * 1e6;
+        let lv_mm2 = b.lv_peri * 1e6;
+        let rpu_mm2 = b.rpu_htree * 1e6;
+        assert!((hv_mm2 - 0.004210).abs() / 0.004210 < 0.10, "HV {hv_mm2:.6}");
+        assert!((lv_mm2 - 0.004510).abs() / 0.004510 < 0.10, "LV {lv_mm2:.6}");
+        assert!((rpu_mm2 - 0.000077).abs() / 0.000077 < 0.40, "RPU {rpu_mm2:.6}");
+    }
+}

@@ -1,0 +1,97 @@
+//! The per-channel flash bus between the SSD controller and the dies of
+//! one channel (Table I: 2 GB/s, 1000 MT/s × 8-bit). Channels operate in
+//! parallel; ways/dies within a channel share the channel bus.
+
+use crate::sim::{Resource, SimTime};
+
+/// One channel's bus.
+#[derive(Debug, Clone)]
+pub struct ChannelBus {
+    pub bw: f64,
+    timeline: Resource,
+}
+
+impl ChannelBus {
+    pub fn new(bw: f64) -> ChannelBus {
+        ChannelBus { bw, timeline: Resource::new() }
+    }
+
+    pub fn transfer_time(&self, bytes: usize) -> SimTime {
+        SimTime::from_secs(bytes as f64 / self.bw)
+    }
+
+    /// Schedule a transfer ready at `ready`; returns (start, end).
+    pub fn transfer(&mut self, ready: SimTime, bytes: usize) -> (SimTime, SimTime) {
+        let dur = self.transfer_time(bytes);
+        let start = self.timeline.acquire(ready, dur);
+        (start, start + dur)
+    }
+
+    pub fn free_at(&self) -> SimTime {
+        self.timeline.free_at()
+    }
+
+    pub fn busy_total(&self) -> SimTime {
+        self.timeline.busy_total()
+    }
+
+    pub fn reset(&mut self) {
+        self.timeline.reset();
+    }
+}
+
+/// All channels of the device.
+#[derive(Debug, Clone)]
+pub struct ChannelSet {
+    pub buses: Vec<ChannelBus>,
+}
+
+impl ChannelSet {
+    pub fn new(channels: usize, bw: f64) -> ChannelSet {
+        ChannelSet { buses: (0..channels).map(|_| ChannelBus::new(bw)).collect() }
+    }
+
+    pub fn bus(&mut self, channel: usize) -> &mut ChannelBus {
+        &mut self.buses[channel]
+    }
+
+    /// Aggregate sequential bandwidth across channels.
+    pub fn total_bw(&self) -> f64 {
+        self.buses.iter().map(|b| b.bw).sum()
+    }
+
+    /// Latest completion across channels.
+    pub fn makespan(&self) -> SimTime {
+        self.buses.iter().map(|b| b.free_at()).max().unwrap_or(SimTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_io_example() {
+        // Paper §III-C: moving 128 × 8-bit data at 2 GB/s takes 64 ns.
+        let b = ChannelBus::new(2.0e9);
+        assert_eq!(b.transfer_time(128), SimTime::from_ns(64.0));
+    }
+
+    #[test]
+    fn channels_are_independent() {
+        let mut s = ChannelSet::new(2, 2.0e9);
+        let (_, e0) = s.bus(0).transfer(SimTime::ZERO, 2048);
+        let (_, e1) = s.bus(1).transfer(SimTime::ZERO, 2048);
+        assert_eq!(e0, e1); // parallel, not serialized
+        assert_eq!(s.total_bw(), 4.0e9);
+    }
+
+    #[test]
+    fn within_channel_serializes() {
+        let mut s = ChannelSet::new(1, 2.0e9);
+        let (_, e0) = s.bus(0).transfer(SimTime::ZERO, 1024);
+        let (s1, e1) = s.bus(0).transfer(SimTime::ZERO, 1024);
+        assert_eq!(s1, e0);
+        assert!(e1 > e0);
+    }
+}

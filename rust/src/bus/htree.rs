@@ -1,0 +1,188 @@
+//! The H-tree network within a die (paper Fig. 7b): a binary tree over
+//! the planes with an RPU at every internal node. PIM outputs are
+//! combined (ALU mode) or forwarded (stream mode) level by level, so an
+//! all-plane reduction reaches the die port after `log2(P)` RPU hops
+//! instead of `P` serialized bus transfers.
+
+use super::rpu::Rpu;
+use crate::sim::SimTime;
+
+/// H-tree over `leaves` planes (power of two).
+#[derive(Debug, Clone)]
+pub struct HTree {
+    pub leaves: usize,
+    pub rpu: Rpu,
+    /// Per-hop link bandwidth within the tree (bytes/s) — sized to the
+    /// die's bus speed.
+    pub link_bw: f64,
+}
+
+impl HTree {
+    pub fn new(leaves: usize, rpu: Rpu, link_bw: f64) -> HTree {
+        assert!(leaves.is_power_of_two(), "H-tree needs a power-of-two leaf count, got {leaves}");
+        HTree { leaves, rpu, link_bw }
+    }
+
+    /// Tree depth (number of RPU levels).
+    pub fn depth(&self) -> usize {
+        self.leaves.trailing_zeros() as usize
+    }
+
+    /// Serialization time of `n` elements of `elem_bytes` over one link.
+    fn link_time(&self, n: usize, elem_bytes: usize) -> SimTime {
+        SimTime::from_secs((n * elem_bytes) as f64 / self.link_bw)
+    }
+
+    /// Latency for a full reduction of one output vector of `n` elements
+    /// (i32 partial sums) from all leaves to the root, given each leaf's
+    /// data-ready time. Internal nodes combine their two children with
+    /// the RPU ALU and forward upward; levels are pipelined (a node
+    /// starts combining as soon as both children delivered).
+    pub fn reduce_ready_time(&self, leaf_ready: &[SimTime], n: usize, elem_bytes: usize) -> SimTime {
+        assert_eq!(leaf_ready.len(), self.leaves, "one ready time per leaf");
+        let hop = self.link_time(n, elem_bytes);
+        let alu = self.rpu.alu_time(n);
+        let mut level: Vec<SimTime> = leaf_ready.iter().map(|t| *t + hop).collect();
+        while level.len() > 1 {
+            level = level
+                .chunks(2)
+                .map(|pair| pair[0].max(pair[1]) + alu + hop)
+                .collect();
+        }
+        level[0]
+    }
+
+    /// Latency for reduction over a subset: only `active` leaves hold
+    /// partial sums; inactive subtrees forward in stream mode (no ALU
+    /// work, negligible against link time). `active` is a ready-time per
+    /// active leaf index.
+    pub fn reduce_subset_ready_time(
+        &self,
+        active: &[(usize, SimTime)],
+        n: usize,
+        elem_bytes: usize,
+    ) -> SimTime {
+        assert!(!active.is_empty());
+        let hop = self.link_time(n, elem_bytes);
+        let alu = self.rpu.alu_time(n);
+        // Walk levels: a map from node index (at current level) to ready time.
+        let mut level: Vec<Option<SimTime>> = vec![None; self.leaves];
+        for (idx, t) in active {
+            assert!(*idx < self.leaves, "leaf {idx} out of range");
+            assert!(level[*idx].is_none(), "duplicate leaf {idx}");
+            level[*idx] = Some(*t + hop);
+        }
+        while level.len() > 1 {
+            level = level
+                .chunks(2)
+                .map(|pair| match (pair[0], pair[1]) {
+                    (Some(a), Some(b)) => Some(a.max(b) + alu + hop),
+                    // One-sided: stream through (cut-through cycle + hop).
+                    (Some(a), None) | (None, Some(a)) => Some(a + self.rpu.cycle() + hop),
+                    (None, None) => None,
+                })
+                .collect();
+        }
+        level[0].expect("at least one active leaf")
+    }
+
+    /// Functional reduction: combine leaf partial-sum vectors with the
+    /// RPU ALU operator, mirroring the timing model's topology exactly.
+    pub fn reduce_values(&self, leaf_values: &[Vec<i32>]) -> Vec<i32> {
+        assert_eq!(leaf_values.len(), self.leaves);
+        let mut level: Vec<Vec<i32>> = leaf_values.to_vec();
+        while level.len() > 1 {
+            level = level.chunks(2).map(|p| Rpu::alu_combine(&p[0], &p[1])).collect();
+        }
+        level.into_iter().next().unwrap()
+    }
+
+    /// Total wire length of the H-tree in units of die side length —
+    /// feeds the Table II area model. For an H-tree spanning a unit
+    /// square with `P` leaves: `L ≈ Σ_level 2^(level/2)`-style recursion;
+    /// we use the closed form `3·sqrt(P)/2 - 2` (standard H-tree result).
+    pub fn wire_length_units(&self) -> f64 {
+        1.5 * (self.leaves as f64).sqrt() - 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RpuConfig;
+
+    fn tree(leaves: usize) -> HTree {
+        HTree::new(leaves, Rpu::new(RpuConfig::default()), 2.0e9)
+    }
+
+    #[test]
+    fn depth_is_log2() {
+        assert_eq!(tree(256).depth(), 8);
+        assert_eq!(tree(64).depth(), 6);
+    }
+
+    #[test]
+    fn reduction_is_correct_sum() {
+        let t = tree(8);
+        let leaves: Vec<Vec<i32>> = (0..8).map(|i| vec![i, 10 * i, -i]).collect();
+        let got = t.reduce_values(&leaves);
+        assert_eq!(got, vec![28, 280, -28]);
+    }
+
+    #[test]
+    fn reduce_latency_scales_with_depth_not_leaves() {
+        // The point of the H-tree: latency ~ log2(P), not P.
+        let n = 512;
+        let t64 = tree(64);
+        let t256 = tree(256);
+        let r64 = t64.reduce_ready_time(&vec![SimTime::ZERO; 64], n, 4);
+        let r256 = t256.reduce_ready_time(&vec![SimTime::ZERO; 256], n, 4);
+        let per_level_64 = r64.secs() / (t64.depth() + 1) as f64;
+        let per_level_256 = r256.secs() / (t256.depth() + 1) as f64;
+        assert!((per_level_64 - per_level_256).abs() / per_level_64 < 0.05);
+    }
+
+    #[test]
+    fn straggler_leaf_delays_root() {
+        let t = tree(4);
+        let mut ready = vec![SimTime::ZERO; 4];
+        let base = t.reduce_ready_time(&ready, 128, 4);
+        ready[3] = SimTime::from_us(5.0);
+        let delayed = t.reduce_ready_time(&ready, 128, 4);
+        assert!(delayed >= SimTime::from_us(5.0));
+        assert!(delayed > base);
+    }
+
+    #[test]
+    fn subset_reduction_matches_full_when_all_active() {
+        let t = tree(8);
+        let ready: Vec<(usize, SimTime)> = (0..8).map(|i| (i, SimTime(i as u64 * 100))).collect();
+        let full: Vec<SimTime> = (0..8).map(|i| SimTime(i as u64 * 100)).collect();
+        assert_eq!(
+            t.reduce_subset_ready_time(&ready, 64, 4),
+            t.reduce_ready_time(&full, 64, 4)
+        );
+    }
+
+    #[test]
+    fn subset_reduction_single_leaf_streams_through() {
+        let t = tree(8);
+        let r = t.reduce_subset_ready_time(&[(5, SimTime::ZERO)], 64, 4);
+        // 3 levels of stream cycles + 4 hops, no ALU time.
+        let hop = SimTime::from_secs(64.0 * 4.0 / 2.0e9);
+        let expect = hop + SimTime::from_ns(4.0) + hop + SimTime::from_ns(4.0) + hop + SimTime::from_ns(4.0) + hop;
+        assert_eq!(r, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        tree(100);
+    }
+
+    #[test]
+    fn wire_length_grows_sublinearly() {
+        assert!(tree(256).wire_length_units() < 256.0 / 4.0);
+        assert!(tree(256).wire_length_units() > tree(64).wire_length_units());
+    }
+}

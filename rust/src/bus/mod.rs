@@ -1,0 +1,13 @@
+//! Intra-die interconnect (paper §III-C, Figs. 7–8): the conventional
+//! shared bus, the proposed H-tree network with reconfigurable processing
+//! units (RPUs) at its internal nodes, and the per-channel flash bus.
+
+pub mod channel_bus;
+pub mod htree;
+pub mod rpu;
+pub mod shared;
+
+pub use channel_bus::ChannelBus;
+pub use htree::HTree;
+pub use rpu::{Rpu, RpuMode};
+pub use shared::SharedBus;

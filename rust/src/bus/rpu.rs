@@ -1,0 +1,135 @@
+//! Reconfigurable processing unit (paper Fig. 8, Table I): 250 MHz,
+//! 8× INT16 multipliers, 9× INT32 adders.
+//!
+//! * **ALU mode** — accumulates the outputs of its two child links on the
+//!   way up the H-tree (sMVM partial sums), or multiplies operand pairs
+//!   for dMVM (VVM/VSM).
+//! * **Stream mode** — passes data through for regular reads/programs.
+
+use crate::config::RpuConfig;
+use crate::sim::SimTime;
+
+/// Operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RpuMode {
+    /// Element-wise combine of two input streams.
+    Alu,
+    /// Cut-through forwarding.
+    Stream,
+}
+
+/// Timing + functional model of one RPU.
+#[derive(Debug, Clone, Copy)]
+pub struct Rpu {
+    pub cfg: RpuConfig,
+}
+
+impl Rpu {
+    pub fn new(cfg: RpuConfig) -> Rpu {
+        Rpu { cfg }
+    }
+
+    /// Cycle time.
+    pub fn cycle(&self) -> SimTime {
+        SimTime::from_secs(1.0 / self.cfg.freq_hz)
+    }
+
+    /// Time to combine `n` element pairs in ALU mode: the adder array
+    /// processes `int32_adders - 1` pairs per cycle (one adder reserved
+    /// for the carry/accumulator path), pipelined.
+    pub fn alu_time(&self, n: usize) -> SimTime {
+        let lanes = (self.cfg.int32_adders - 1).max(1);
+        let cycles = n.div_ceil(lanes) as u64;
+        SimTime::from_secs(cycles as f64 / self.cfg.freq_hz)
+    }
+
+    /// Time to multiply `n` INT16 operand pairs (dMVM inner loop):
+    /// `int16_mults` lanes, pipelined, plus the adder-tree reduction.
+    pub fn mul_time(&self, n: usize) -> SimTime {
+        let cycles = n.div_ceil(self.cfg.int16_mults) as u64 + 1; // +1: reduce
+        SimTime::from_secs(cycles as f64 / self.cfg.freq_hz)
+    }
+
+    /// Stream-mode forwarding latency for `n` elements of `elem_bytes`
+    /// at the given link bandwidth — one cycle of cut-through latency
+    /// plus the serialization time.
+    pub fn stream_time(&self, n: usize, elem_bytes: usize, link_bw: f64) -> SimTime {
+        self.cycle() + SimTime::from_secs((n * elem_bytes) as f64 / link_bw)
+    }
+
+    /// Functional ALU combine: element-wise i32 saturating add of two
+    /// partial-sum vectors (the H-tree reduction operator).
+    pub fn alu_combine(a: &[i32], b: &[i32]) -> Vec<i32> {
+        assert_eq!(a.len(), b.len(), "ALU operand length mismatch");
+        a.iter().zip(b.iter()).map(|(x, y)| x.saturating_add(*y)).collect()
+    }
+
+    /// Functional dMVM multiply-accumulate: i16×i16 → i32 dot product
+    /// (the VVM unit of Fig. 13c). The INT32 accumulator saturates, as
+    /// the hardware adder would.
+    pub fn vvm(a: &[i16], b: &[i16]) -> i32 {
+        assert_eq!(a.len(), b.len());
+        let wide: i64 = a.iter().zip(b.iter()).map(|(x, y)| *x as i64 * *y as i64).sum();
+        wide.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+    }
+
+    /// Functional vector-scalar multiply (the VSM unit of Fig. 13f).
+    pub fn vsm(s: i16, v: &[i16]) -> Vec<i32> {
+        v.iter().map(|x| s as i32 * *x as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RpuConfig;
+
+    fn rpu() -> Rpu {
+        Rpu::new(RpuConfig::default())
+    }
+
+    #[test]
+    fn cycle_is_4ns_at_250mhz() {
+        assert_eq!(rpu().cycle(), SimTime::from_ns(4.0));
+    }
+
+    #[test]
+    fn alu_time_scales_with_lanes() {
+        let r = rpu();
+        // 8 usable lanes -> 512 elements = 64 cycles = 256 ns.
+        assert_eq!(r.alu_time(512), SimTime::from_ns(64.0 * 4.0));
+        assert_eq!(r.alu_time(1), SimTime::from_ns(4.0));
+    }
+
+    #[test]
+    fn alu_combine_is_elementwise_sum() {
+        let s = Rpu::alu_combine(&[1, 2, 3], &[10, 20, 30]);
+        assert_eq!(s, vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn alu_combine_saturates() {
+        let s = Rpu::alu_combine(&[i32::MAX], &[1]);
+        assert_eq!(s, vec![i32::MAX]);
+    }
+
+    #[test]
+    fn vvm_matches_scalar_dot() {
+        let a: Vec<i16> = vec![1, -2, 3, 100];
+        let b: Vec<i16> = vec![5, 6, -7, 100];
+        assert_eq!(Rpu::vvm(&a, &b), 5 - 12 - 21 + 10_000);
+    }
+
+    #[test]
+    fn vsm_scales_vector() {
+        assert_eq!(Rpu::vsm(3, &[1, -2, 0]), vec![3, -6, 0]);
+    }
+
+    #[test]
+    fn stream_time_includes_serialization() {
+        let r = rpu();
+        // 128 × 2 B at 2 GB/s = 128 ns + 4 ns cut-through.
+        let t = r.stream_time(128, 2, 2.0e9);
+        assert_eq!(t, SimTime::from_ns(132.0));
+    }
+}

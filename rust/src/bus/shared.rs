@@ -1,0 +1,82 @@
+//! The conventional shared intra-die bus (paper Fig. 7a): one transfer at
+//! a time; every PIM output vector must individually travel to the die
+//! port, and cross-plane accumulation happens *outside* the die.
+
+use crate::sim::{Resource, SimTime};
+
+/// A single shared bus serializing plane→port transfers.
+#[derive(Debug, Clone)]
+pub struct SharedBus {
+    /// Bus bandwidth (bytes/s); paper: 1.6–2 GB/s die buses.
+    pub bw: f64,
+    timeline: Resource,
+}
+
+impl SharedBus {
+    pub fn new(bw: f64) -> SharedBus {
+        SharedBus { bw, timeline: Resource::new() }
+    }
+
+    /// Serialization time for a payload.
+    pub fn transfer_time(&self, bytes: usize) -> SimTime {
+        SimTime::from_secs(bytes as f64 / self.bw)
+    }
+
+    /// Enqueue a transfer that becomes *available* at `ready`; returns its
+    /// completion time (waits for the bus if busy).
+    pub fn transfer(&mut self, ready: SimTime, bytes: usize) -> SimTime {
+        let dur = self.transfer_time(bytes);
+        let start = self.timeline.acquire(ready, dur);
+        start + dur
+    }
+
+    /// Completion time of draining many transfers, each becoming ready at
+    /// its own time. Transfers are served in ready order (FIFO).
+    pub fn drain(&mut self, mut ready_times: Vec<(SimTime, usize)>) -> SimTime {
+        ready_times.sort();
+        let mut last = SimTime::ZERO;
+        for (ready, bytes) in ready_times {
+            last = self.transfer(ready, bytes);
+        }
+        last
+    }
+
+    pub fn busy_total(&self) -> SimTime {
+        self.timeline.busy_total()
+    }
+
+    pub fn reset(&mut self) {
+        self.timeline.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfers_serialize() {
+        let mut b = SharedBus::new(2.0e9);
+        // 256 B at 2 GB/s = 128 ns each.
+        let t1 = b.transfer(SimTime::ZERO, 256);
+        let t2 = b.transfer(SimTime::ZERO, 256);
+        assert_eq!(t1, SimTime::from_ns(128.0));
+        assert_eq!(t2, SimTime::from_ns(256.0));
+    }
+
+    #[test]
+    fn drain_many_equals_sum_when_all_ready() {
+        let mut b = SharedBus::new(2.0e9);
+        let jobs: Vec<(SimTime, usize)> = (0..64).map(|_| (SimTime::ZERO, 1024)).collect();
+        let end = b.drain(jobs);
+        // 64 × 1024 B at 2 GB/s = 32.768 µs.
+        assert_eq!(end, SimTime::from_secs(64.0 * 1024.0 / 2.0e9));
+    }
+
+    #[test]
+    fn bus_waits_for_late_producers() {
+        let mut b = SharedBus::new(2.0e9);
+        let end = b.drain(vec![(SimTime::from_us(10.0), 256), (SimTime::ZERO, 256)]);
+        assert_eq!(end, SimTime::from_us(10.0) + SimTime::from_ns(128.0));
+    }
+}

@@ -1,0 +1,75 @@
+//! 9-bit SAR ADC model for the PIM read path (paper §III-B: the modified
+//! 3D-FPIM simulator incorporates 4:1 column muxes, 9-bit SAR ADCs, and
+//! shift adders). Latency/energy feed the plane model; area feeds Table II.
+
+use super::tech::TechParams;
+
+/// Successive-approximation ADC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SarAdc {
+    pub bits: usize,
+    pub freq_hz: f64,
+    /// Energy per conversion (J).
+    pub e_conv: f64,
+}
+
+impl SarAdc {
+    pub fn from_tech(t: &TechParams) -> SarAdc {
+        SarAdc { bits: t.adc_bits, freq_hz: t.adc_freq, e_conv: t.e_adc_conv }
+    }
+
+    /// One conversion: one clock per bit decision.
+    pub fn conversion_time(&self) -> f64 {
+        self.bits as f64 / self.freq_hz
+    }
+
+    /// Digitize an analog accumulation value: clip to the signed range the
+    /// resolution supports. This is the quantization the Pallas kernel and
+    /// its jnp oracle replicate bit-exactly (python/compile/kernels).
+    pub fn quantize(&self, acc: i64) -> i64 {
+        let max = (1i64 << (self.bits - 1)) - 1;
+        let min = -(1i64 << (self.bits - 1));
+        acc.clamp(min, max)
+    }
+
+    /// The signed full-scale range `[min, max]`.
+    pub fn range(&self) -> (i64, i64) {
+        ((-(1i64 << (self.bits - 1))), (1i64 << (self.bits - 1)) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adc9() -> SarAdc {
+        SarAdc::from_tech(&TechParams::default())
+    }
+
+    #[test]
+    fn nine_bit_range() {
+        let a = adc9();
+        assert_eq!(a.range(), (-256, 255));
+    }
+
+    #[test]
+    fn quantize_passes_in_range() {
+        let a = adc9();
+        for v in [-256i64, -1, 0, 1, 255] {
+            assert_eq!(a.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn quantize_clips_out_of_range() {
+        let a = adc9();
+        assert_eq!(a.quantize(300), 255);
+        assert_eq!(a.quantize(-300), -256);
+    }
+
+    #[test]
+    fn conversion_time_is_bits_over_freq() {
+        let a = adc9();
+        assert!((a.conversion_time() - 9.0 / 200e6).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,80 @@
+//! Cell density — paper Eq. (4):
+//!
+//! `D_cell = (N_col × N_stack × B_cell) / (L_cell + L_staircase) × N_row / W`
+//!
+//! Since `W ∝ N_row`, density is independent of the row count; it trades
+//! off against PIM latency through `N_col` and `N_stack`.
+
+use super::geometry::PlaneGeometry;
+use super::tech::TechParams;
+use crate::config::PlaneConfig;
+
+/// Cell density in bits/m².
+pub fn cell_density_bits_m2(plane: &PlaneConfig, tech: &TechParams) -> f64 {
+    let g = PlaneGeometry::of(plane, tech);
+    plane.capacity_bits() as f64 / g.area_full()
+}
+
+/// Cell density in Gb/mm² (the unit of Fig. 6c).
+pub fn cell_density_gb_mm2(plane: &PlaneConfig, tech: &TechParams) -> f64 {
+    cell_density_bits_m2(plane, tech) / 1e9 * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{size_a_plane, size_b_plane};
+    use crate::config::{CellKind, PlaneConfig};
+
+    #[test]
+    fn size_a_density_anchor() {
+        // Paper §III-C: 12.84 Gb/mm² for Size A.
+        let d = cell_density_gb_mm2(&size_a_plane(), &TechParams::default());
+        assert!((d - 12.84).abs() / 12.84 < 0.05, "Size A density = {d} Gb/mm²");
+    }
+
+    #[test]
+    fn size_a_is_twice_size_b() {
+        // Paper Fig. 9b: Size A has 2× the density of Size B.
+        let t = TechParams::default();
+        let a = cell_density_gb_mm2(&size_a_plane(), &t);
+        let b = cell_density_gb_mm2(&size_b_plane(), &t);
+        assert!((a / b - 2.0).abs() < 1e-9, "A/B = {}", a / b);
+    }
+
+    #[test]
+    fn density_independent_of_rows() {
+        // Eq. (4): W ∝ N_row cancels the N_row in the numerator.
+        let t = TechParams::default();
+        let a = cell_density_gb_mm2(&size_a_plane(), &t);
+        let b = cell_density_gb_mm2(&PlaneConfig { n_row: 4096, ..size_a_plane() }, &t);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn density_more_sensitive_to_cols_than_stacks_at_base() {
+        // Paper: with the simulated configurations (L_cell < L_stair at the
+        // sweep base N_col=1K, N_stack=128), density is more sensitive to
+        // N_col than N_stack.
+        let t = TechParams::default();
+        let base = PlaneConfig { n_col: 1024, ..size_a_plane() };
+        let d0 = cell_density_gb_mm2(&base, &t);
+        let d_col = cell_density_gb_mm2(&PlaneConfig { n_col: 2048, ..base }, &t);
+        let d_stack = cell_density_gb_mm2(&PlaneConfig { n_stack: 256, ..base }, &t);
+        let gain_col = d_col / d0;
+        let gain_stack = d_stack / d0;
+        assert!(
+            gain_col > gain_stack,
+            "doubling cols gains {gain_col}, doubling stacks gains {gain_stack}"
+        );
+    }
+
+    #[test]
+    fn slc_density_quarter_of_qlc() {
+        let t = TechParams::default();
+        let qlc = size_a_plane();
+        let slc = PlaneConfig { cell: CellKind::Slc, ..qlc };
+        let r = cell_density_gb_mm2(&qlc, &t) / cell_density_gb_mm2(&slc, &t);
+        assert!((r - 4.0).abs() < 1e-9);
+    }
+}

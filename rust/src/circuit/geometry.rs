@@ -1,0 +1,116 @@
+//! Plane geometry: wire lengths, region lengths, areas, and the lumped
+//! R/C values derived from them. Everything downstream (latency, energy,
+//! density, area) reads these.
+
+use super::tech::TechParams;
+use crate::config::PlaneConfig;
+
+/// Derived geometry + lumped electrical values of one plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneGeometry {
+    /// Cell-region length along the WL direction (m): `n_col × pitch_col`.
+    pub l_cell: f64,
+    /// Staircase length (m): `n_stack × pitch_stair`.
+    pub l_stair: f64,
+    /// Plane width (m): `n_row × pitch_row`.
+    pub width: f64,
+    /// Bitline length (m): runs across the rows.
+    pub l_bl: f64,
+    /// BLS line length (m): runs across the columns.
+    pub l_bls: f64,
+
+    /// Lumped BL resistance (Ω).
+    pub r_bl: f64,
+    /// Lumped BL capacitance (F).
+    pub c_bl: f64,
+    /// Lumped BLS resistance (Ω).
+    pub r_bls: f64,
+    /// Lumped BLS capacitance (F).
+    pub c_bls: f64,
+    /// WL capacitance over the cell region (F) — `C_cell` in Eq. 5c.
+    pub c_cell: f64,
+    /// WL capacitance over the staircase (F) — `C_stair` in Eq. 5c.
+    pub c_stair: f64,
+}
+
+impl PlaneGeometry {
+    pub fn of(plane: &PlaneConfig, tech: &TechParams) -> PlaneGeometry {
+        let l_cell = plane.n_col as f64 * tech.pitch_col;
+        let l_stair = plane.n_stack as f64 * tech.pitch_stair;
+        let width = plane.n_row as f64 * tech.pitch_row;
+        let l_bl = width;
+        let l_bls = l_cell;
+        PlaneGeometry {
+            l_cell,
+            l_stair,
+            width,
+            l_bl,
+            l_bls,
+            r_bl: tech.r_bl_per_m * l_bl,
+            c_bl: tech.c_bl_per_m * l_bl,
+            r_bls: tech.r_bls_per_m * l_bls,
+            c_bls: tech.c_bls_per_m * l_bls,
+            c_cell: tech.c_wl_cell_per_m * l_cell,
+            c_stair: tech.c_wl_stair_per_m * l_stair,
+        }
+    }
+
+    /// Full plane footprint (m²) with the complete staircase — the
+    /// denominator of the Eq. (4) density definition.
+    pub fn area_full(&self) -> f64 {
+        (self.l_cell + self.l_stair) * self.width
+    }
+
+    /// Die-floorplan footprint (m²) with staircase sharing between
+    /// mirrored block pairs (paper §V-C die-area accounting).
+    pub fn area_floorplan(&self, tech: &TechParams) -> f64 {
+        (self.l_cell + tech.staircase_share * self.l_stair) * self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{size_a_plane, size_b_plane};
+
+    #[test]
+    fn lengths_scale_with_dims() {
+        let t = TechParams::default();
+        let a = PlaneGeometry::of(&size_a_plane(), &t);
+        let b = PlaneGeometry::of(&size_b_plane(), &t);
+        assert!((a.l_cell / b.l_cell - 2.0).abs() < 1e-12); // 2048 vs 1024 cols
+        assert!((a.l_stair / b.l_stair - 2.0).abs() < 1e-12); // 128 vs 64 stacks
+        assert!((a.width - b.width).abs() < 1e-18); // both 256 rows
+    }
+
+    #[test]
+    fn bl_tau_scales_quadratically_with_rows() {
+        // Paper §III-B: τ_BL ∝ N_row².
+        let t = TechParams::default();
+        let mut p = size_a_plane();
+        let g1 = PlaneGeometry::of(&p, &t);
+        p.n_row *= 4;
+        let g2 = PlaneGeometry::of(&p, &t);
+        let tau1 = g1.r_bl * g1.c_bl;
+        let tau2 = g2.r_bl * g2.c_bl;
+        assert!((tau2 / tau1 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn floorplan_smaller_than_full() {
+        let t = TechParams::default();
+        let g = PlaneGeometry::of(&size_a_plane(), &t);
+        assert!(g.area_floorplan(&t) < g.area_full());
+    }
+
+    #[test]
+    fn stair_cap_comparable_to_cell_cap_at_512_cols() {
+        // Paper: "For N_stack = 128, C_stair is comparable to C_cell with
+        // N_col = 512."
+        let t = TechParams::default();
+        let p = PlaneConfig { n_col: 512, ..size_a_plane() };
+        let g = PlaneGeometry::of(&p, &t);
+        let ratio = g.c_stair / g.c_cell;
+        assert!(ratio > 0.3 && ratio < 3.0, "C_stair/C_cell = {ratio}");
+    }
+}

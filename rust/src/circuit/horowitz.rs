@@ -1,0 +1,98 @@
+//! Horowitz delay model.
+//!
+//! The paper (Eq. 5) uses `h(τ) ∝ τ^1.5` for the RC stages of the PIM read
+//! path. A pure 1.5-power law diverges for the millimetre-length bitlines
+//! of conventional planes, so past `tau_sat` the model continues with the
+//! tangent line (C¹-continuous), recovering the classic linear `~0.69·RC`
+//! regime for strongly-driven long lines.
+
+/// Horowitz delay parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Horowitz {
+    /// Dimensionless gain applied to the power law.
+    pub k: f64,
+    /// Normalization time constant (s) so `h` has time units.
+    pub tau_ref: f64,
+    /// Saturation point (s) beyond which the delay grows linearly.
+    pub tau_sat: f64,
+    /// Linear-regime slope (delay per unit τ) beyond `tau_sat` —
+    /// the distributed-line limit for very long bitlines.
+    pub k_lin: f64,
+}
+
+impl Default for Horowitz {
+    fn default() -> Self {
+        Horowitz { k: 2.2, tau_ref: 10e-9, tau_sat: 100e-9, k_lin: 3.0 }
+    }
+}
+
+impl Horowitz {
+    /// Delay for RC time constant `tau` (seconds).
+    pub fn delay(&self, tau: f64) -> f64 {
+        assert!(tau >= 0.0, "negative tau {tau}");
+        if tau <= self.tau_sat {
+            self.k * tau * (tau / self.tau_ref).sqrt()
+        } else {
+            let h_sat = self.k * self.tau_sat * (self.tau_sat / self.tau_ref).sqrt();
+            h_sat + self.k_lin * (tau - self.tau_sat)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_below_saturation() {
+        let h = Horowitz::default();
+        // h(4τ) = 8 h(τ) in the τ^1.5 regime.
+        let a = h.delay(1e-9);
+        let b = h.delay(4e-9);
+        assert!((b / a - 8.0).abs() < 1e-9, "ratio {}", b / a);
+    }
+
+    #[test]
+    fn continuous_at_saturation() {
+        let h = Horowitz::default();
+        let eps = 1e-15;
+        let below = h.delay(h.tau_sat - eps);
+        let above = h.delay(h.tau_sat + eps);
+        assert!((below - above).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_slope_matches_k_lin() {
+        let h = Horowitz::default();
+        let d1 = h.delay(1e-6);
+        let d2 = h.delay(2e-6);
+        assert!(((d2 - d1) / 1e-6 - h.k_lin).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_beyond_saturation() {
+        let h = Horowitz::default();
+        let d1 = h.delay(h.tau_sat * 10.0);
+        let d2 = h.delay(h.tau_sat * 20.0);
+        let slope1 = d2 - d1;
+        let d3 = h.delay(h.tau_sat * 30.0);
+        let slope2 = d3 - d2;
+        assert!((slope1 - slope2).abs() / slope1 < 1e-9);
+    }
+
+    #[test]
+    fn monotone() {
+        let h = Horowitz::default();
+        let mut prev = 0.0;
+        for i in 1..1000 {
+            let d = h.delay(i as f64 * 1e-9);
+            assert!(d > prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn zero_tau_zero_delay() {
+        assert_eq!(Horowitz::default().delay(0.0), 0.0);
+    }
+}

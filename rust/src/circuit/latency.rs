@@ -1,0 +1,175 @@
+//! Plane latency model — paper Eqs. (1), (3), (5a–c).
+//!
+//! `T_PIM = t_decWL + (max(t_decBLS, t_pre) + t_sense + t_accum + t_dis) × B_input`
+//! `T_read = t_decWL + max(t_decBLS, t_pre) + t_sense + t_dis`
+
+use super::geometry::PlaneGeometry;
+use super::tech::TechParams;
+use crate::config::{CellKind, PlaneConfig};
+
+/// Which read operation a latency query refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadKind {
+    /// Regular page read (Eq. 1). QLC multi-level sensing repeats the
+    /// sense phase `qlc_sense_levels` times.
+    PageRead,
+    /// One PIM dot-product cycle per input bit (Eq. 3 inner term).
+    Pim,
+}
+
+/// Latency breakdown of one plane operation (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlaneLatency {
+    /// WL decode + drive — Eq. (5c), paid once per operation.
+    pub t_decwl: f64,
+    /// BLS decode — Eq. (5b), per input bit.
+    pub t_decbls: f64,
+    /// BL precharge — Eq. (5a), per input bit.
+    pub t_pre: f64,
+    /// Sense + ADC conversion, per input bit.
+    pub t_sense: f64,
+    /// Shift-adder accumulation, per input bit (PIM only).
+    pub t_accum: f64,
+    /// BL/BLS discharge, per input bit.
+    pub t_dis: f64,
+}
+
+impl PlaneLatency {
+    /// Evaluate the breakdown for a plane under the given technology.
+    pub fn of(plane: &PlaneConfig, tech: &TechParams) -> PlaneLatency {
+        let g = PlaneGeometry::of(plane, tech);
+        let h = &tech.horowitz;
+
+        // Eq. (5a): switch drives N_col precharge gates, then the BL wire
+        // charges (distributed line: C/2) plus the string junction load.
+        let tau_switch = tech.r_switch_pre * (plane.n_col as f64 * tech.c_inv);
+        let tau_bl = g.r_bl * (g.c_bl / 2.0 + tech.c_string);
+        let t_pre = h.delay(tau_switch) + h.delay(tau_bl);
+
+        // Eq. (5b): distributed BLS line.
+        let t_decbls = h.delay(g.r_bls * g.c_bls / 2.0);
+
+        // Eq. (5c): HV pass transistor drives the WL comb (cell + staircase).
+        let t_decwl = h.delay(tech.r_switch_wl * (g.c_cell + g.c_stair));
+
+        // Sense: the cell current settles through the vertical string
+        // (longer strings — more stacks — settle slower), then the SAR
+        // converts one bit per ADC clock.
+        let tau_string = tech.r_string_per_stack * plane.n_stack as f64 * (g.c_bl / 2.0);
+        let t_sense = tau_string + tech.adc_bits as f64 / tech.adc_freq;
+
+        // Accumulate: one shift-add pass per column-mux phase.
+        let t_accum = 4.0 / tech.accum_freq;
+
+        let t_dis = tech.t_dis_frac * t_pre;
+
+        PlaneLatency { t_decwl, t_decbls, t_pre, t_sense, t_accum, t_dis }
+    }
+
+    /// Per-input-bit PIM cycle time (the parenthesized term of Eq. 3).
+    pub fn pim_cycle(&self) -> f64 {
+        self.t_decbls.max(self.t_pre) + self.t_sense + self.t_accum + self.t_dis
+    }
+
+    /// Total PIM latency for a `b_input`-bit input — Eq. (3).
+    pub fn t_pim(&self, b_input: usize) -> f64 {
+        self.t_decwl + self.pim_cycle() * b_input as f64
+    }
+
+    /// Regular page-read latency — Eq. (1). QLC pages repeat the sense
+    /// phase for each threshold level.
+    pub fn t_read(&self, cell: CellKind, tech: &TechParams) -> f64 {
+        let senses = match cell {
+            CellKind::Slc => 1.0,
+            CellKind::Qlc => tech.qlc_sense_levels as f64,
+        };
+        self.t_decwl + self.t_decbls.max(self.t_pre) + senses * self.t_sense + self.t_dis
+    }
+}
+
+/// Convenience: `T_PIM` for a plane with default paper inputs (8-bit).
+pub fn t_pim_8b(plane: &PlaneConfig, tech: &TechParams) -> f64 {
+    PlaneLatency::of(plane, tech).t_pim(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{conventional_plane, size_a_plane, size_b_plane};
+
+    #[test]
+    fn size_a_hits_2us_anchor() {
+        // Paper §III-B: ~2 µs PIM latency at 256×2048×128 with 8-bit I/O.
+        let t = TechParams::default();
+        let lat = t_pim_8b(&size_a_plane(), &t);
+        assert!(
+            (1.7e-6..=2.3e-6).contains(&lat),
+            "T_PIM(Size A) = {} outside [1.7, 2.3] µs",
+            crate::util::units::fmt_time(lat)
+        );
+    }
+
+    #[test]
+    fn size_b_is_faster_than_a() {
+        let t = TechParams::default();
+        assert!(t_pim_8b(&size_b_plane(), &t) < t_pim_8b(&size_a_plane(), &t));
+    }
+
+    #[test]
+    fn conventional_read_20_to_50_us() {
+        // Paper §III-A: conventional planes read in 20–50 µs.
+        let t = TechParams::default();
+        let p = conventional_plane();
+        let lat = PlaneLatency::of(&p, &t).t_read(CellKind::Qlc, &t);
+        assert!(
+            (20e-6..=50e-6).contains(&lat),
+            "T_read(conventional) = {} outside [20, 50] µs",
+            crate::util::units::fmt_time(lat)
+        );
+    }
+
+    #[test]
+    fn latency_monotone_in_each_dim() {
+        // Fig. 6a: PIM latency increases with each of N_row, N_col, N_stack.
+        let t = TechParams::default();
+        let base = size_a_plane();
+        let l0 = t_pim_8b(&base, &t);
+        for grow in [
+            PlaneConfig { n_row: base.n_row * 2, ..base },
+            PlaneConfig { n_col: base.n_col * 2, ..base },
+            PlaneConfig { n_stack: base.n_stack * 2, ..base },
+        ] {
+            assert!(t_pim_8b(&grow, &t) > l0, "growing {grow:?} did not increase latency");
+        }
+    }
+
+    #[test]
+    fn decwl_independent_of_rows() {
+        // Paper: "t_decWL remains the same even with increased N_row".
+        let t = TechParams::default();
+        let a = PlaneLatency::of(&size_a_plane(), &t);
+        let b = PlaneLatency::of(&PlaneConfig { n_row: 2048, ..size_a_plane() }, &t);
+        assert!((a.t_decwl - b.t_decwl).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bls_decode_below_precharge_in_sweep_range() {
+        // Paper: t_decBLS is a small portion; max(t_decBLS, t_pre) = t_pre
+        // for the simulated configurations (BLS dominates only at ≥16K cols).
+        let t = TechParams::default();
+        for n_col in [512usize, 1024, 2048, 4096] {
+            let p = PlaneConfig { n_col, ..size_a_plane() };
+            let l = PlaneLatency::of(&p, &t);
+            assert!(l.t_decbls < l.t_pre, "n_col={n_col}: decBLS {} >= pre {}", l.t_decbls, l.t_pre);
+        }
+    }
+
+    #[test]
+    fn pim_scales_linearly_with_input_bits() {
+        let t = TechParams::default();
+        let l = PlaneLatency::of(&size_a_plane(), &t);
+        let d4 = l.t_pim(4) - l.t_decwl;
+        let d8 = l.t_pim(8) - l.t_decwl;
+        assert!((d8 / d4 - 2.0).abs() < 1e-12);
+    }
+}

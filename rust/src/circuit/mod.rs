@@ -1,0 +1,28 @@
+//! Circuit-level model of a 3D NAND flash PIM plane.
+//!
+//! Implements the paper's analytic model directly:
+//! * read / PIM latency — Eqs. (1), (3), (5a–c) via the Horowitz delay
+//!   ([`horowitz`]),
+//! * per-operation energy — Eqs. (6a–c) ([`energy`]),
+//! * cell density — Eq. (4) ([`density`]),
+//! * the 9-bit SAR ADC in the PIM read path ([`adc`]).
+//!
+//! All constants live in [`tech::TechParams`] and are calibrated to the
+//! paper's published operating points (see DESIGN.md "Acceptance anchors"):
+//! `T_PIM(Size A) ≈ 2 µs`, conventional-plane read in 20–50 µs, Size-A
+//! density 12.84 Gb/mm².
+
+pub mod adc;
+pub mod density;
+pub mod energy;
+pub mod geometry;
+pub mod horowitz;
+pub mod latency;
+pub mod tech;
+
+pub use adc::SarAdc;
+pub use density::cell_density_gb_mm2;
+pub use energy::PimEnergy;
+pub use geometry::PlaneGeometry;
+pub use latency::{PlaneLatency, ReadKind};
+pub use tech::TechParams;

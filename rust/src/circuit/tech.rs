@@ -1,0 +1,156 @@
+//! Technology parameters of the modelled 3D NAND process.
+//!
+//! These play the role of the extracted netlist constants the paper pulled
+//! from the modified 3D-FPIM + NeuroSim simulators. Absolute values are
+//! calibrated to the paper's published operating points (DESIGN.md
+//! "Acceptance anchors"); the *functional forms* — which dimension each
+//! R/C scales with — follow Eqs. (4)–(6) exactly, so the Fig. 6 trends are
+//! structural, not fitted.
+
+use super::horowitz::Horowitz;
+
+/// Process/electrical constants for the plane model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TechParams {
+    // ---- geometry pitches ----
+    /// Bitline (column) pitch along the wordline direction (m). Sets
+    /// `L_cell = n_col × pitch_col`.
+    pub pitch_col: f64,
+    /// Staircase length per stacked wordline layer (m). Sets
+    /// `L_stair = n_stack × pitch_stair`.
+    pub pitch_stair: f64,
+    /// Row (BLS) pitch along the bitline direction (m). Sets
+    /// `W = n_row × pitch_row`.
+    pub pitch_row: f64,
+    /// Fraction of the staircase length that contributes to the die
+    /// footprint after comb-style WL sharing between mirrored block pairs.
+    /// Calibrated so 256 Size-A planes total 4.98 mm² (paper §V-C) while
+    /// Eq. (4) density (full staircase) is 12.84 Gb/mm².
+    pub staircase_share: f64,
+
+    // ---- bitline (copper) ----
+    /// BL resistance per metre (Ω/m).
+    pub r_bl_per_m: f64,
+    /// BL capacitance per metre (F/m).
+    pub c_bl_per_m: f64,
+    /// Capacitance of one NAND string hanging off the BL (F).
+    pub c_string: f64,
+
+    // ---- bitline-select line (tungsten) ----
+    /// BLS resistance per metre (Ω/m).
+    pub r_bls_per_m: f64,
+    /// BLS capacitance per metre (F/m).
+    pub c_bls_per_m: f64,
+
+    // ---- wordline ----
+    /// WL capacitance per metre over the cell region (F/m).
+    pub c_wl_cell_per_m: f64,
+    /// WL capacitance per metre over the staircase region (F/m).
+    pub c_wl_stair_per_m: f64,
+
+    // ---- drivers / switches ----
+    /// High-voltage WL pass-transistor resistance (Ω) — `R_s` in Eq. 5c.
+    pub r_switch_wl: f64,
+    /// Low-voltage precharge switch resistance (Ω) — `R_s` in Eq. 5a.
+    pub r_switch_pre: f64,
+    /// Gate capacitance of one precharge transistor (F) — `C_INV` in Eq. 5a.
+    pub c_inv: f64,
+    /// Per-stack-layer string channel resistance (Ω) — more stacks mean a
+    /// longer vertical string, slowing the sense settle.
+    pub r_string_per_stack: f64,
+
+    // ---- voltages ----
+    /// BL precharge voltage (V).
+    pub v_pre: f64,
+    /// Pass voltage applied to unselected WLs / driven BLSs (V).
+    pub v_pass: f64,
+    /// Read voltage on the selected WL (V).
+    pub v_read: f64,
+
+    // ---- sensing / accumulation ----
+    /// SAR ADC resolution in the PIM read path (bits; paper: 9).
+    pub adc_bits: usize,
+    /// SAR ADC conversion clock (Hz).
+    pub adc_freq: f64,
+    /// Shift-adder clock (Hz) — matches the RPU clock domain.
+    pub accum_freq: f64,
+    /// Energy per ADC conversion (J).
+    pub e_adc_conv: f64,
+    /// Accumulation (shift-add + mux drive) energy per active column (J).
+    pub e_accum_per_col: f64,
+    /// Fraction of `t_pre` spent discharging BLs/BLSs after an op.
+    pub t_dis_frac: f64,
+    /// Conventional-read sense levels for QLC (multi-level sensing makes
+    /// a regular QLC page read slower than the single-shot PIM sense).
+    pub qlc_sense_levels: usize,
+
+    /// Horowitz delay parameters.
+    pub horowitz: Horowitz,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        TechParams {
+            // Geometry — calibrated to Eq.(4) density 12.84 Gb/mm² at Size A
+            // and 4.98 mm² for the 256-plane die (see density.rs tests).
+            pitch_col: 40e-9,
+            pitch_stair: 400e-9,
+            pitch_row: 613.5e-9,
+            staircase_share: 0.82,
+
+            // BL: long thin copper line, dominated by wire RC. τ_BL ∝ n_row².
+            r_bl_per_m: 2.0e9,  // 2 kΩ/µm
+            c_bl_per_m: 0.8e-9, // 0.8 fF/µm
+            c_string: 10e-15,
+
+            // BLS: tungsten select line along the columns; lower effective
+            // RC load than the BL in the simulated range (paper §III-B).
+            r_bls_per_m: 0.5e9,  // 0.5 kΩ/µm
+            c_bls_per_m: 0.5e-9, // 0.5 fF/µm
+
+            // WL: the decoder drives the cell region + staircase comb.
+            c_wl_cell_per_m: 4.0e-9, // 4 fF/µm
+            c_wl_stair_per_m: 3.0e-9, // 3 fF/µm (stair contact comb)
+
+            r_switch_wl: 100e3,
+            r_switch_pre: 5e3,
+            c_inv: 0.2e-15,
+            r_string_per_stack: 3e3,
+
+            v_pre: 1.0,
+            v_pass: 6.0,
+            v_read: 1.0,
+
+            adc_bits: 9,
+            adc_freq: 200e6,
+            accum_freq: 250e6,
+            e_adc_conv: 2.0e-12,
+            e_accum_per_col: 0.05e-12,
+            t_dis_frac: 0.4,
+            qlc_sense_levels: 8,
+
+            horowitz: Horowitz::default(),
+        }
+    }
+}
+
+impl TechParams {
+    /// Convenience: the default technology.
+    pub fn paper() -> TechParams {
+        TechParams::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_physical() {
+        let t = TechParams::default();
+        assert!(t.pitch_col > 0.0 && t.pitch_col < 1e-6);
+        assert!(t.staircase_share > 0.0 && t.staircase_share <= 1.0);
+        assert!(t.adc_bits == 9, "paper uses 9-bit SAR ADCs");
+        assert!(t.v_pass > t.v_read, "pass voltage exceeds read voltage");
+    }
+}

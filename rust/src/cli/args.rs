@@ -1,0 +1,122 @@
+//! Minimal argument parser: `repro <command> [--flag value]...`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        out.command = it.next().unwrap_or_else(|| "help".to_string());
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag value` or boolean `--flag`.
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.flags.insert(name.to_string(), value);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional_usize(&self, idx: usize) -> Result<usize> {
+        let v = self
+            .positional
+            .get(idx)
+            .ok_or_else(|| anyhow!("missing positional argument {idx}"))?;
+        v.parse().map_err(|_| anyhow!("positional {idx} expects an integer, got {v:?}"))
+    }
+
+    pub fn require_flag(&self, name: &str) -> Result<&str> {
+        self.flag(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn validate_command(&self, known: &[&str]) -> Result<()> {
+        if !known.contains(&self.command.as_str()) {
+            bail!("unknown command {:?}; try `repro help`", self.command);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("fig14 --model opt-30b --tokens 1024 extra");
+        assert_eq!(a.command, "fig14");
+        assert_eq!(a.flag("model"), Some("opt-30b"));
+        assert_eq!(a.usize_flag("tokens", 0).unwrap(), 1024);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("serve --verbose --n 5");
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.usize_flag("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("fig6");
+        assert_eq!(a.flag_or("axis", "all"), "all");
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(vec![]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_flag("n", 0).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! CLI command dispatch.
+
+use super::args::Args;
+use crate::circuit::TechParams;
+use crate::config::presets::table1_system;
+use crate::coordinator::{simulate, Workload};
+use crate::exp;
+use crate::gpu::rtx4090x4_vllm;
+use crate::kv::lifetime::{lifetime_years, lifetime_years_system};
+use crate::llm::model_config::OptModel;
+use crate::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
+use anyhow::{bail, Context, Result};
+
+const COMMANDS: &[&str] = &[
+    "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "tiling",
+    "lifetime", "serve", "generate", "config", "energy", "all",
+];
+
+const HELP: &str = "\
+repro — 3D NAND flash PIM for single-batch LLM token generation (CS.AR 2025 reproduction)
+
+experiments (regenerate the paper's tables/figures):
+  fig1                 memory wall + generation-vs-summarization gap
+  fig5                 conventional vs proposed PIM TPOT (OPT-30B)
+  fig6                 plane-size sweep: latency / energy / density
+  fig9                 shared bus vs H-tree; Size A vs Size B
+  fig12                sMVM tiling option breakdown
+  fig14                TPOT across OPT models vs GPU baselines + breakdown
+  table2               area breakdown and die budget
+
+tools:
+  dse                  design-space selection (paper §III-B)
+  tiling --m M --n N   search the best tiling for an MVM shape
+  lifetime             SLC KV-region endurance projection
+  energy [--model NAME --tokens L]
+                       per-token energy rollup vs GPU baseline
+  serve [--requests N --gen-frac F --model NAME]
+                       simulated serving trace (router + offload)
+  generate --prompt S [--max-new N]
+                       functional generation via the PJRT runtime
+                       (requires `make artifacts`)
+  config               print the Table I preset
+  all                  run every experiment
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    args.validate_command(COMMANDS)?;
+    match args.command.as_str() {
+        "help" => print!("{HELP}"),
+        "fig1" => print!("{}", exp::fig1::render()),
+        "fig5" => print!("{}", exp::fig5::render()),
+        "fig6" => print!("{}", exp::fig6::render()),
+        "fig9" => print!("{}", exp::fig9::render()),
+        "fig12" => print!("{}", exp::fig12::render()),
+        "fig14" => {
+            let rows = exp::fig14::fig14a();
+            print!("{}", exp::fig14::render_fig14a(&rows));
+            println!();
+            print!("{}", exp::fig14::render_fig14b(&exp::fig14::fig14b()));
+        }
+        "table2" => print!("{}", exp::table2::render()),
+        "dse" => cmd_dse(),
+        "tiling" => cmd_tiling(&args)?,
+        "lifetime" => cmd_lifetime(&args)?,
+        "energy" => cmd_energy(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "generate" => cmd_generate(&args)?,
+        "config" => println!("{:#?}", table1_system()),
+        "all" => {
+            for c in ["fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2"] {
+                println!("==== {c} ====");
+                run(vec![c.to_string()])?;
+                println!();
+            }
+        }
+        other => bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_dse() {
+    let sel = exp::fig6::selection();
+    println!(
+        "selected plane: {} x {} x {} (T_PIM {}, density {:.2} Gb/mm2)",
+        sel.plane.n_row,
+        sel.plane.n_col,
+        sel.plane.n_stack,
+        crate::util::units::fmt_time(sel.t_pim),
+        sel.density
+    );
+}
+
+fn cmd_tiling(args: &Args) -> Result<()> {
+    let m = args.usize_flag("m", 7168)?;
+    let n = args.usize_flag("n", 7168)?;
+    let model = exp::fig12::model();
+    let shape = crate::pim::op::MvmShape::new(m, n);
+    let ranked = crate::tiling::search_best(&model, shape);
+    println!("best tilings for (1,{m}) x ({m},{n}):");
+    for r in ranked.iter().take(8) {
+        let c = r.cost;
+        println!(
+            "  {:<28} inbound {:>10} pim {:>10} outbound {:>10} total {:>10}",
+            r.scheme.notation_counts(),
+            crate::util::units::fmt_time(c.inbound.secs()),
+            crate::util::units::fmt_time(c.pim.secs()),
+            crate::util::units::fmt_time(c.outbound.secs()),
+            crate::util::units::fmt_time(c.total().secs()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_lifetime(args: &Args) -> Result<()> {
+    let model = OptModel::from_name(&args.flag_or("model", "opt-30b"))
+        .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
+    let tpot = args.f64_flag("tpot", 7e-3)?;
+    let shape = model.shape();
+    let paper = lifetime_years(&shape, tpot);
+    let sys = lifetime_years_system(&table1_system(), &shape, tpot);
+    println!(
+        "KV write rate {:.1} MB/s (per-token {} at TPOT {})",
+        paper.write_rate / 1e6,
+        crate::util::units::fmt_bytes(shape.kv_bytes_per_token(1.0)),
+        crate::util::units::fmt_time(tpot)
+    );
+    println!("32 GiB region (paper): {:.1} years", paper.years);
+    println!("Table-I SLC region ({}): {:.1} years", crate::util::units::fmt_bytes(sys.region_bytes), sys.years);
+    println!("5-year warranty satisfied: {}", sys.years > 5.0);
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    use crate::llm::energy::EnergySchedule;
+    let model = OptModel::from_name(&args.flag_or("model", "opt-30b"))
+        .context("unknown model")?;
+    let l = args.usize_flag("tokens", 1536)?;
+    let s = EnergySchedule::new(&table1_system(), &TechParams::default(), model.shape());
+    let e = s.token_energy(l);
+    println!("{} per-token energy at L={l}:", model.shape().name);
+    println!("  PIM arrays : {}", crate::util::units::fmt_energy(e.pim));
+    println!("  buses      : {}", crate::util::units::fmt_energy(e.bus));
+    println!("  RPUs       : {}", crate::util::units::fmt_energy(e.rpu));
+    println!("  ARM cores  : {}", crate::util::units::fmt_energy(e.cores));
+    println!("  total      : {}", crate::util::units::fmt_energy(e.total()));
+    let gpu = s.gpu_energy_per_token(17e-3, 4.0 * 450.0);
+    println!("4xRTX4090 estimate: {} -> flash saves {:.0}x",
+        crate::util::units::fmt_energy(gpu), gpu / e.total());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_flag("requests", 32)?;
+    let gen_frac = args.f64_flag("gen-frac", 0.5)?;
+    let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
+        .context("unknown model")?;
+    let input = args.usize_flag("input-tokens", 256)?;
+    let output = args.usize_flag("output-tokens", 64)?;
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let wl = Workload::synthetic(n, gen_frac, 0.5, input, output, seed);
+    let report = simulate(&table1_system(), &model.shape(), &rtx4090x4_vllm(), &wl);
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let dir = ArtifactBundle::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        bail!("artifacts not found at {} — run `make artifacts` first", dir.display());
+    }
+    let prompt_text = args.require_flag("prompt")?.to_string();
+    let max_new = args.usize_flag("max-new", 64)?;
+    let tok = ByteTokenizer;
+    let mut exec = DecodeExecutor::load(&dir)?;
+    println!("model {} (vocab {}, d_model {}, layers {}, max_seq {})",
+        exec.bundle.name, exec.bundle.vocab, exec.bundle.d_model, exec.bundle.layers, exec.bundle.max_seq);
+    let prompt = tok.encode(&prompt_text);
+    let start = std::time::Instant::now();
+    let out = crate::coordinator::serve::Engine::generate(&mut exec, &prompt, max_new, &mut |_| {})?;
+    let wall = start.elapsed().as_secs_f64();
+    println!("prompt: {prompt_text:?}");
+    println!("output: {:?}", tok.decode(&out));
+    println!("tokens: {} in {:.3}s ({:.1} tok/s wall)", out.len(), wall, out.len() as f64 / wall);
+    // Simulated flash-PIM timing for the same token count on OPT-30B.
+    let mut sched = crate::llm::schedule::TokenSchedule::new(
+        &table1_system(),
+        &TechParams::default(),
+        OptModel::Opt30b.shape(),
+    );
+    let sim = crate::coordinator::serve::simulated_generation_time(&mut sched, prompt.len(), out.len());
+    println!("simulated flash-PIM time (OPT-30B scale): {}", sim);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_runs() {
+        run(vec!["help".into()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn dse_command_runs() {
+        run(vec!["dse".into()]).unwrap();
+    }
+
+    #[test]
+    fn lifetime_command_runs() {
+        run(vec!["lifetime".into()]).unwrap();
+    }
+
+    #[test]
+    fn generate_without_artifacts_errors_cleanly() {
+        if !ArtifactBundle::available() {
+            let err = run(vec!["generate".into(), "--prompt".into(), "hi".into()]);
+            assert!(err.is_err());
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! `repro` CLI — hand-rolled argument parsing (no clap in the offline
+//! registry). One subcommand per experiment plus utility commands.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::run;

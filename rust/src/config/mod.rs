@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-lite parser, typed configuration schema,
+//! and presets mirroring the paper's Table I and the Size A / Size B plane
+//! configurations.
+
+pub mod presets;
+pub mod schema;
+pub mod toml_lite;
+
+pub use presets::{size_a_plane, size_b_plane, table1_system};
+pub use schema::{
+    BusTopology, CellKind, ControllerConfig, FlashOrgConfig, PlaneConfig, RpuConfig, SystemConfig,
+};

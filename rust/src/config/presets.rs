@@ -1,0 +1,87 @@
+//! Named presets: the paper's Table I system and the Size A / Size B plane
+//! configurations from §III-B/C.
+
+use super::schema::*;
+
+/// Size A: `256 × 2048 × 128` QLC — the plane selected in §III-B for
+/// maximum cell density at ~2 µs PIM latency.
+pub fn size_a_plane() -> PlaneConfig {
+    PlaneConfig::new(256, 2048, 128, CellKind::Qlc)
+}
+
+/// Size B: `256 × 1024 × 64` QLC — the smaller, faster, half-density
+/// alternative of Fig. 9b.
+pub fn size_b_plane() -> PlaneConfig {
+    PlaneConfig::new(256, 1024, 64, CellKind::Qlc)
+}
+
+/// A conventional (non-PIM-optimized) plane: large page, many blocks —
+/// the baseline of Fig. 5 with 20–50 µs read latency.
+pub fn conventional_plane() -> PlaneConfig {
+    // 16 KiB page (128 Kb = 16K BLs), 1400 blocks × 4 rows = 4096 rows
+    // (mid-range of "700–2800 blocks/plane, 4 rows/block"), 128 stacks.
+    PlaneConfig::new(4096, 16_384, 128, CellKind::Qlc)
+}
+
+/// The full Table I system.
+///
+/// * Controller: 4× ARM Cortex-A9, PCIe 5.0 ×4
+/// * Flash: 8 channels, 4 ways, 8 dies/way (2 SLC + 6 QLC), 256 planes/die
+/// * Page 256 B, 4 BLS/block, 64 blocks, 128 stacks; bus 2 GB/s
+/// * RPU: 250 MHz, 8× INT16 mult, 9× INT32 add
+pub fn table1_system() -> SystemConfig {
+    SystemConfig {
+        name: "table1".to_string(),
+        plane: size_a_plane(),
+        org: FlashOrgConfig {
+            channels: 8,
+            ways_per_channel: 4,
+            dies_per_way: 8,
+            planes_per_die: 256,
+            slc_dies_per_way: 2,
+        },
+        bus: BusTopology::HTree,
+        rpu: RpuConfig::default(),
+        ctrl: ControllerConfig::default(),
+        input_bits: 8,
+        weight_bits: 8,
+        max_cells_per_bl: 256,
+        col_mux: 4,
+    }
+}
+
+/// Table I system with the shared-bus topology (Fig. 9a baseline).
+pub fn table1_shared_bus() -> SystemConfig {
+    SystemConfig { bus: BusTopology::Shared, name: "table1-shared".into(), ..table1_system() }
+}
+
+/// Table I system with Size B planes (Fig. 9b comparison).
+pub fn table1_size_b() -> SystemConfig {
+    SystemConfig { plane: size_b_plane(), name: "table1-size-b".into(), ..table1_system() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        table1_system().validate().unwrap();
+        table1_shared_bus().validate().unwrap();
+        table1_size_b().validate().unwrap();
+        conventional_plane().validate().unwrap();
+    }
+
+    #[test]
+    fn org_counts_match_table1() {
+        let s = table1_system();
+        assert_eq!(s.org.total_dies(), 8 * 4 * 8);
+        assert_eq!(s.org.total_planes(), 8 * 4 * 8 * 256);
+        assert_eq!(s.org.qlc_dies_per_way(), 6);
+    }
+
+    #[test]
+    fn size_b_is_quarter_capacity_of_a() {
+        assert_eq!(size_a_plane().capacity_bits(), 4 * size_b_plane().capacity_bits());
+    }
+}

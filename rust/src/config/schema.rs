@@ -1,0 +1,322 @@
+//! Typed system configuration — the paper's Table I plus the plane-size
+//! parameters explored in Section III.
+
+use super::toml_lite::Doc;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Cell technology of a die region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// Single-level cell: 1 bit/cell, fast program, high endurance. Used
+    /// for the KV-cache region (non-PIM dies).
+    Slc,
+    /// Quad-level cell: 4 bits/cell. Used for the PIM weight region.
+    Qlc,
+}
+
+impl CellKind {
+    pub fn bits_per_cell(self) -> usize {
+        match self {
+            CellKind::Slc => 1,
+            CellKind::Qlc => 4,
+        }
+    }
+}
+
+/// Geometry of one 3D NAND plane: `N_row × N_col × N_stack` (paper §III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlaneConfig {
+    /// Number of rows (BLS lines). The plane width W is proportional to this.
+    pub n_row: usize,
+    /// Number of bitlines (columns); page size = n_col cells.
+    pub n_col: usize,
+    /// Number of stacked wordline layers.
+    pub n_stack: usize,
+    /// Cell kind of this plane.
+    pub cell: CellKind,
+}
+
+impl PlaneConfig {
+    pub const fn new(n_row: usize, n_col: usize, n_stack: usize, cell: CellKind) -> PlaneConfig {
+        PlaneConfig { n_row, n_col, n_stack, cell }
+    }
+
+    /// Total cell count.
+    pub fn cells(&self) -> usize {
+        self.n_row * self.n_col * self.n_stack
+    }
+
+    /// Total bit capacity.
+    pub fn capacity_bits(&self) -> usize {
+        self.cells() * self.cell.bits_per_cell()
+    }
+
+    /// Validate physical plausibility bounds used by the DSE sweep.
+    pub fn validate(&self) -> Result<()> {
+        if !self.n_row.is_power_of_two() || !self.n_col.is_power_of_two() || !self.n_stack.is_power_of_two() {
+            bail!("plane dims must be powers of two: {self:?}");
+        }
+        if self.n_row < 16 || self.n_row > 16_384 {
+            bail!("n_row out of range: {}", self.n_row);
+        }
+        if self.n_col < 128 || self.n_col > 65_536 {
+            bail!("n_col out of range: {}", self.n_col);
+        }
+        if self.n_stack < 8 || self.n_stack > 1_024 {
+            bail!("n_stack out of range: {}", self.n_stack);
+        }
+        Ok(())
+    }
+}
+
+/// Intra-die interconnect topology (paper §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusTopology {
+    /// Conventional single shared bus; one plane transfers at a time and
+    /// all PIM outputs travel to the die port for accumulation.
+    Shared,
+    /// Binary H-tree with an RPU at each internal node; outputs are
+    /// accumulated on the way to the die port.
+    HTree,
+}
+
+/// Reconfigurable processing unit parameters (Table I).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RpuConfig {
+    /// Clock frequency in Hz (paper: 250 MHz, chosen to match bus BW).
+    pub freq_hz: f64,
+    /// INT16 multipliers per RPU.
+    pub int16_mults: usize,
+    /// INT32 adders per RPU.
+    pub int32_adders: usize,
+}
+
+impl Default for RpuConfig {
+    fn default() -> Self {
+        RpuConfig { freq_hz: 250e6, int16_mults: 8, int32_adders: 9 }
+    }
+}
+
+/// Flash organization: the channel/way/die/plane hierarchy (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlashOrgConfig {
+    pub channels: usize,
+    pub ways_per_channel: usize,
+    pub dies_per_way: usize,
+    pub planes_per_die: usize,
+    /// Dies per way reserved as non-PIM SLC (KV cache); the rest are
+    /// PIM-enabled QLC (weights). Paper: 8 dies = 2 SLC + 6 QLC.
+    pub slc_dies_per_way: usize,
+}
+
+impl FlashOrgConfig {
+    pub fn total_dies(&self) -> usize {
+        self.channels * self.ways_per_channel * self.dies_per_way
+    }
+
+    pub fn total_planes(&self) -> usize {
+        self.total_dies() * self.planes_per_die
+    }
+
+    pub fn qlc_dies_per_way(&self) -> usize {
+        self.dies_per_way - self.slc_dies_per_way
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.slc_dies_per_way >= self.dies_per_way {
+            bail!("SLC dies ({}) must leave at least one QLC die of {}", self.slc_dies_per_way, self.dies_per_way);
+        }
+        if !self.planes_per_die.is_power_of_two() {
+            bail!("planes per die must be a power of two for the H-tree");
+        }
+        Ok(())
+    }
+}
+
+/// SSD controller parameters (Table I).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// ARM cores available for LN/softmax/activation.
+    pub arm_cores: usize,
+    /// Core clock in Hz.
+    pub arm_freq_hz: f64,
+    /// PCIe lanes (gen 5).
+    pub pcie_lanes: usize,
+    /// PCIe per-lane bandwidth, bytes/s (gen5 ≈ 3.938 GB/s/lane).
+    pub pcie_lane_bw: f64,
+    /// Flash channel bus bandwidth, bytes/s (Table I: 2 GB/s = 1000 MT/s × 8-bit... per channel).
+    pub channel_bus_bw: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            arm_cores: 4,
+            arm_freq_hz: 1.0e9,
+            pcie_lanes: 4,
+            pcie_lane_bw: 3.938e9,
+            channel_bus_bw: 2.0e9,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Host-link bandwidth in bytes/s.
+    pub fn pcie_bw(&self) -> f64 {
+        self.pcie_lanes as f64 * self.pcie_lane_bw
+    }
+}
+
+/// The full system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    /// Human-readable preset name.
+    pub name: String,
+    /// PIM (QLC) plane geometry.
+    pub plane: PlaneConfig,
+    pub org: FlashOrgConfig,
+    pub bus: BusTopology,
+    pub rpu: RpuConfig,
+    pub ctrl: ControllerConfig,
+    /// Input (activation) bit width for PIM bit-serial operation.
+    pub input_bits: usize,
+    /// Weight bit width (stored across `weight_bits / bits_per_cell` cells).
+    pub weight_bits: usize,
+    /// Max cells accumulated on one BL per PIM op (reliability limit; paper: 256).
+    pub max_cells_per_bl: usize,
+    /// Column multiplexing ratio in the PIM read path (paper: 4:1).
+    pub col_mux: usize,
+}
+
+impl SystemConfig {
+    /// Rows of an sMVM unit tile: `max_cells_per_bl / cells_per_weight`
+    /// (paper: u = 128 with 256-cell limit and 2 QLC cells per 8-bit weight).
+    pub fn tile_rows(&self) -> usize {
+        let cells_per_weight = self.weight_bits / self.plane.cell.bits_per_cell();
+        self.max_cells_per_bl / cells_per_weight.max(1)
+    }
+
+    /// Output columns of an sMVM unit tile: `n_col / col_mux / cells_per_weight`
+    /// BLs are shared pairwise per 8-bit weight, but mux groups activate
+    /// `n_col / col_mux` BLs concurrently — the paper's unit tile is
+    /// `u × (N_col/4)` weights, i.e. `n_col/col_mux` weight columns.
+    pub fn tile_cols(&self) -> usize {
+        self.plane.n_col / self.col_mux
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.plane.validate()?;
+        self.org.validate()?;
+        if self.input_bits == 0 || self.input_bits > 16 {
+            bail!("input_bits out of range");
+        }
+        if self.weight_bits % self.plane.cell.bits_per_cell() != 0 {
+            bail!("weight bits must be a multiple of bits/cell");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-lite file; missing keys fall back to the Table I preset.
+    pub fn from_file(path: &Path) -> Result<SystemConfig> {
+        let doc = super::toml_lite::parse_file(path)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Build from a parsed document.
+    pub fn from_doc(doc: &Doc) -> Result<SystemConfig> {
+        let base = super::presets::table1_system();
+        let plane = PlaneConfig {
+            n_row: doc.int_or("plane", "n_row", base.plane.n_row as i64)? as usize,
+            n_col: doc.int_or("plane", "n_col", base.plane.n_col as i64)? as usize,
+            n_stack: doc.int_or("plane", "n_stack", base.plane.n_stack as i64)? as usize,
+            cell: match doc.str_or("plane", "cell", "qlc")?.as_str() {
+                "slc" => CellKind::Slc,
+                "qlc" => CellKind::Qlc,
+                other => bail!("unknown cell kind {other:?}"),
+            },
+        };
+        let org = FlashOrgConfig {
+            channels: doc.int_or("org", "channels", base.org.channels as i64)? as usize,
+            ways_per_channel: doc.int_or("org", "ways_per_channel", base.org.ways_per_channel as i64)? as usize,
+            dies_per_way: doc.int_or("org", "dies_per_way", base.org.dies_per_way as i64)? as usize,
+            planes_per_die: doc.int_or("org", "planes_per_die", base.org.planes_per_die as i64)? as usize,
+            slc_dies_per_way: doc.int_or("org", "slc_dies_per_way", base.org.slc_dies_per_way as i64)? as usize,
+        };
+        let bus = match doc.str_or("bus", "topology", "htree")?.as_str() {
+            "shared" => BusTopology::Shared,
+            "htree" => BusTopology::HTree,
+            other => bail!("unknown bus topology {other:?}"),
+        };
+        let rpu = RpuConfig {
+            freq_hz: doc.float_or("rpu", "freq_hz", base.rpu.freq_hz)?,
+            int16_mults: doc.int_or("rpu", "int16_mults", base.rpu.int16_mults as i64)? as usize,
+            int32_adders: doc.int_or("rpu", "int32_adders", base.rpu.int32_adders as i64)? as usize,
+        };
+        let ctrl = ControllerConfig {
+            arm_cores: doc.int_or("controller", "arm_cores", base.ctrl.arm_cores as i64)? as usize,
+            arm_freq_hz: doc.float_or("controller", "arm_freq_hz", base.ctrl.arm_freq_hz)?,
+            pcie_lanes: doc.int_or("controller", "pcie_lanes", base.ctrl.pcie_lanes as i64)? as usize,
+            pcie_lane_bw: doc.float_or("controller", "pcie_lane_bw", base.ctrl.pcie_lane_bw)?,
+            channel_bus_bw: doc.float_or("controller", "channel_bus_bw", base.ctrl.channel_bus_bw)?,
+        };
+        let cfg = SystemConfig {
+            name: doc.str_or("", "name", &base.name)?,
+            plane,
+            org,
+            bus,
+            rpu,
+            ctrl,
+            input_bits: doc.int_or("pim", "input_bits", base.input_bits as i64)? as usize,
+            weight_bits: doc.int_or("pim", "weight_bits", base.weight_bits as i64)? as usize,
+            max_cells_per_bl: doc.int_or("pim", "max_cells_per_bl", base.max_cells_per_bl as i64)? as usize,
+            col_mux: doc.int_or("pim", "col_mux", base.col_mux as i64)? as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn table1_is_valid() {
+        presets::table1_system().validate().unwrap();
+    }
+
+    #[test]
+    fn tile_shape_matches_paper() {
+        // Paper §IV-B: u = 128 rows, unit tile u × (N_col/4) = 128 × 512.
+        let cfg = presets::table1_system();
+        assert_eq!(cfg.tile_rows(), 128);
+        assert_eq!(cfg.tile_cols(), 512);
+    }
+
+    #[test]
+    fn capacity_of_size_a() {
+        let p = presets::size_a_plane();
+        // 256 × 2048 × 128 QLC cells × 4 bits.
+        assert_eq!(p.capacity_bits(), 256 * 2048 * 128 * 4);
+    }
+
+    #[test]
+    fn invalid_plane_rejected() {
+        let p = PlaneConfig::new(300, 2048, 128, CellKind::Qlc); // 300 not pow2
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = crate::config::toml_lite::parse(
+            "[plane]\nn_col = 1024\nn_stack = 64\n[bus]\ntopology = \"shared\"",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.plane.n_col, 1024);
+        assert_eq!(cfg.bus, BusTopology::Shared);
+        assert_eq!(cfg.org.channels, 8); // inherited from Table I
+    }
+}

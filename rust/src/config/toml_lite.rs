@@ -1,0 +1,263 @@
+//! A minimal TOML subset parser (offline registry has no `serde`/`toml`).
+//!
+//! Supported: `[section]` headers, `key = value` with integer, float,
+//! boolean, string, and flat arrays of those; `#` comments; blank lines.
+//! This covers everything in `configs/*.toml`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A scalar or flat-array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => bail!("expected int, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_int()?;
+        if v < 0 {
+            bail!("expected non-negative int, got {v}");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(v) => Ok(v),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`. Keys before any `[section]`
+/// land in the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// Required lookup with a contextual error.
+    pub fn require(&self, section: &str, key: &str) -> Result<&Value> {
+        self.get(section, key).ok_or_else(|| anyhow!("missing [{section}] {key}"))
+    }
+
+    /// Optional integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(section, key) {
+            Some(v) => v.as_int(),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            Some(v) => v.as_float(),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional string with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+}
+
+/// Parse a TOML-lite document from a string.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: malformed section header {line:?}", lineno + 1))?
+                .trim()
+                .to_string();
+            doc.sections.entry(name.clone()).or_default();
+            current = name;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`, got {line:?}", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: value for key {key:?}", lineno + 1))?;
+        doc.sections.get_mut(&current).expect("section exists").insert(key, val);
+    }
+    Ok(doc)
+}
+
+/// Parse a file.
+pub fn parse_file(path: &Path) -> Result<Doc> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(v) = clean.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = clean.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // Arrays are flat, so a comma split with quote-awareness suffices.
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            # top comment
+            global_key = 7
+            [plane]
+            n_row = 256
+            n_col = 2_048
+            pitch = 40.5       # nm
+            enabled = true
+            name = "size-a"
+            dims = [256, 2048, 128]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "global_key").unwrap().as_int().unwrap(), 7);
+        assert_eq!(doc.get("plane", "n_col").unwrap().as_int().unwrap(), 2048);
+        assert!((doc.get("plane", "pitch").unwrap().as_float().unwrap() - 40.5).abs() < 1e-12);
+        assert!(doc.get("plane", "enabled").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("plane", "name").unwrap().as_str().unwrap(), "size-a");
+        match doc.get("plane", "dims").unwrap() {
+            Value::Array(xs) => assert_eq!(xs.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn error_on_missing_equals() {
+        assert!(parse("[s]\njust-a-token").is_err());
+    }
+
+    #[test]
+    fn int_float_promotion() {
+        let doc = parse("x = 3").unwrap();
+        assert!((doc.get("", "x").unwrap().as_float().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_api() {
+        let doc = parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.int_or("a", "x", 9).unwrap(), 1);
+        assert_eq!(doc.int_or("a", "y", 9).unwrap(), 9);
+        assert_eq!(doc.str_or("a", "name", "dflt").unwrap(), "dflt");
+    }
+}

@@ -1,0 +1,119 @@
+//! ARM Cortex-A9 core model for the FP16 operations the flash PIM cannot
+//! do in-array: LayerNorm and softmax (paper Fig. 10: "the cores in the
+//! SSD controller execute the softmax and activation function in FP16;
+//! the LN layer is also handled in SSD cores").
+
+use crate::config::ControllerConfig;
+use crate::sim::{ResourceBank, SimTime};
+
+/// Per-element costs calibrated so OPT-30B TPOT lands near the paper's
+/// ~7 ms with the Fig. 14b breakdown shape (softmax grows with context,
+/// LN does not).
+#[derive(Debug, Clone, Copy)]
+pub struct CoreCosts {
+    /// LayerNorm seconds per element (3 passes: mean, var, normalize —
+    /// NEON FP16 at ~1 GHz).
+    pub ln_per_elem: f64,
+    /// Softmax seconds per element (exp via LUT + sum + divide).
+    pub softmax_per_elem: f64,
+    /// Fixed per-op dispatch overhead (interrupt + DMA setup).
+    pub dispatch: f64,
+}
+
+impl Default for CoreCosts {
+    fn default() -> Self {
+        CoreCosts { ln_per_elem: 1.0e-9, softmax_per_elem: 4.0e-9, dispatch: 1.0e-6 }
+    }
+}
+
+/// The controller's core bank.
+pub struct ArmCores {
+    pub cfg: ControllerConfig,
+    pub costs: CoreCosts,
+    bank: ResourceBank,
+}
+
+impl ArmCores {
+    pub fn new(cfg: ControllerConfig) -> ArmCores {
+        ArmCores { cfg, costs: CoreCosts::default(), bank: ResourceBank::new(cfg.arm_cores) }
+    }
+
+    /// LayerNorm over `d` elements: a single core handles one LN (the
+    /// reduction is not worth splitting at d ≈ 10K).
+    pub fn ln_time(&self, d: usize) -> SimTime {
+        SimTime::from_secs(self.costs.dispatch + d as f64 * self.costs.ln_per_elem)
+    }
+
+    /// Softmax over `heads` rows of `l` scores each, spread across the
+    /// core bank (heads are independent).
+    pub fn softmax_time(&self, heads: usize, l: usize) -> SimTime {
+        let rows_per_core = heads.div_ceil(self.cfg.arm_cores);
+        SimTime::from_secs(
+            self.costs.dispatch + (rows_per_core * l) as f64 * self.costs.softmax_per_elem,
+        )
+    }
+
+    /// Schedule an LN on the bank at `at`; returns completion time.
+    pub fn run_ln(&mut self, at: SimTime, d: usize) -> SimTime {
+        let dur = self.ln_time(d);
+        let (_, start) = self.bank.acquire(at, dur);
+        start + dur
+    }
+
+    /// Schedule a softmax on the bank at `at` (modelled as occupying all
+    /// cores for the balanced duration); returns completion time.
+    pub fn run_softmax(&mut self, at: SimTime, heads: usize, l: usize) -> SimTime {
+        let dur = self.softmax_time(heads, l);
+        // Occupy every core for the duration (they all work on heads).
+        let mut end = at;
+        for _ in 0..self.cfg.arm_cores {
+            let (_, start) = self.bank.acquire(at, dur);
+            end = end.max(start + dur);
+        }
+        end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ControllerConfig;
+
+    fn cores() -> ArmCores {
+        ArmCores::new(ControllerConfig::default())
+    }
+
+    #[test]
+    fn ln_independent_of_context_length() {
+        // Fig. 14b: LN cost depends on d_m, not token counts.
+        let c = cores();
+        assert_eq!(c.ln_time(7168), c.ln_time(7168));
+        assert!(c.ln_time(12288) > c.ln_time(4096));
+    }
+
+    #[test]
+    fn softmax_grows_with_context() {
+        // Fig. 14b: softmax is the component that scales with tokens.
+        let c = cores();
+        let t1 = c.softmax_time(56, 1024).secs();
+        let t2 = c.softmax_time(56, 2048).secs();
+        assert!(t2 > 1.5 * t1);
+    }
+
+    #[test]
+    fn softmax_uses_all_cores() {
+        let c = cores();
+        // 56 heads over 4 cores: 14 rows per core.
+        let t = c.softmax_time(56, 1024).secs();
+        let serial = 56.0 * 1024.0 * c.costs.softmax_per_elem;
+        assert!(t < serial / 3.0, "t={t}, serial={serial}");
+    }
+
+    #[test]
+    fn bank_scheduling_advances() {
+        let mut c = cores();
+        let e1 = c.run_ln(SimTime::ZERO, 7168);
+        let e2 = c.run_softmax(e1, 56, 1024);
+        assert!(e2 > e1);
+    }
+}

@@ -1,0 +1,9 @@
+//! SSD-controller models (Table I): the ARM Cortex-A9 cores that execute
+//! LayerNorm / softmax / activations in FP16, and the PCIe 5.0 ×4 host
+//! link used for the initial KV-cache transfer.
+
+pub mod cores;
+pub mod pcie;
+
+pub use cores::ArmCores;
+pub use pcie::PcieLink;

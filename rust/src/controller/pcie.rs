@@ -1,0 +1,67 @@
+//! PCIe 5.0 ×4 host link (Table I): carries the initial KV cache from GPU
+//! DRAM to the flash device, and tokens/logits during serving.
+
+use crate::config::ControllerConfig;
+use crate::sim::{Resource, SimTime};
+
+/// The host link.
+#[derive(Debug, Clone)]
+pub struct PcieLink {
+    /// Effective bandwidth (bytes/s) after protocol overhead.
+    pub bw: f64,
+    /// One-way latency per transaction.
+    pub latency: SimTime,
+    timeline: Resource,
+}
+
+impl PcieLink {
+    pub fn new(cfg: &ControllerConfig) -> PcieLink {
+        PcieLink {
+            // ~7.9 % encoding/TLP overhead on gen5.
+            bw: cfg.pcie_bw() * 0.92,
+            latency: SimTime::from_ns(800.0),
+            timeline: Resource::new(),
+        }
+    }
+
+    pub fn transfer_time(&self, bytes: f64) -> SimTime {
+        self.latency + SimTime::from_secs(bytes / self.bw)
+    }
+
+    /// Schedule a transfer; returns completion.
+    pub fn transfer(&mut self, at: SimTime, bytes: f64) -> SimTime {
+        let dur = self.transfer_time(bytes);
+        let start = self.timeline.acquire(at, dur);
+        start + dur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ControllerConfig;
+
+    #[test]
+    fn gen5_x4_bandwidth() {
+        let link = PcieLink::new(&ControllerConfig::default());
+        // 4 lanes × ~3.94 GB/s × 0.92 ≈ 14.5 GB/s.
+        assert!((14.0e9..15.0e9).contains(&link.bw), "bw = {}", link.bw);
+    }
+
+    #[test]
+    fn small_transfers_latency_bound() {
+        let link = PcieLink::new(&ControllerConfig::default());
+        let t = link.transfer_time(64.0);
+        assert!(t.secs() < 1e-6);
+        assert!(t >= link.latency);
+    }
+
+    #[test]
+    fn transfers_serialize() {
+        let mut link = PcieLink::new(&ControllerConfig::default());
+        let e1 = link.transfer(SimTime::ZERO, 1e9);
+        let e2 = link.transfer(SimTime::ZERO, 1e9);
+        assert!(e2 > e1);
+        assert!(e2.secs() > 2.0 * 1e9 / link.bw);
+    }
+}

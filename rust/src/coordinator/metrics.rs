@@ -1,0 +1,98 @@
+//! Serving metrics: latency/TPOT summaries and device utilization.
+
+use super::request::RequestOutcome;
+use crate::sim::SimTime;
+use crate::util::stats::Summary;
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub outcomes: Vec<RequestOutcome>,
+    /// End of the simulated horizon.
+    pub makespan: SimTime,
+    /// Busy fraction of the flash device over the horizon.
+    pub flash_utilization: f64,
+    /// Busy fraction of the GPU pool over the horizon.
+    pub gpu_utilization: f64,
+}
+
+impl ServingReport {
+    /// Latency summary over completed requests (seconds).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.outcomes.iter().map(|o| o.latency().secs()).collect::<Vec<_>>())
+    }
+
+    /// TPOT summary over generation requests (seconds/token).
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.outcomes.iter().filter_map(|o| o.tpot()).collect::<Vec<_>>())
+    }
+
+    /// Output tokens per second across the run.
+    pub fn throughput(&self) -> f64 {
+        let tokens: usize = self.outcomes.iter().map(|o| o.tokens_out).sum();
+        if self.makespan == SimTime::ZERO {
+            return 0.0;
+        }
+        tokens as f64 / self.makespan.secs()
+    }
+
+    /// Requests finished on each device.
+    pub fn counts(&self) -> (usize, usize) {
+        let flash = self.outcomes.iter().filter(|o| o.executed_on == "flash").count();
+        let gpu = self.outcomes.iter().filter(|o| o.executed_on == "gpu").count();
+        (flash, gpu)
+    }
+
+    pub fn render(&self) -> String {
+        let lat = self.latency_summary();
+        let tpot = self.tpot_summary();
+        let (flash, gpu) = self.counts();
+        format!(
+            "requests: {} flash / {} gpu   makespan {}\n\
+             latency  mean {} p50 {} p99 {}\n\
+             TPOT     mean {} p50 {} p99 {}\n\
+             throughput {:.1} tok/s   util flash {:.0}% gpu {:.0}%\n",
+            flash,
+            gpu,
+            self.makespan,
+            crate::util::units::fmt_time(lat.mean),
+            crate::util::units::fmt_time(lat.p50),
+            crate::util::units::fmt_time(lat.p99),
+            crate::util::units::fmt_time(tpot.mean),
+            crate::util::units::fmt_time(tpot.p50),
+            crate::util::units::fmt_time(tpot.p99),
+            self.throughput(),
+            self.flash_utilization * 100.0,
+            self.gpu_utilization * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, on: &'static str, tokens: usize) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            arrival: SimTime::ZERO,
+            first_token: Some(SimTime::from_us(10.0)),
+            completed: SimTime::from_us(10.0 + tokens as f64),
+            tokens_out: tokens,
+            executed_on: on,
+        }
+    }
+
+    #[test]
+    fn counts_and_throughput() {
+        let r = ServingReport {
+            outcomes: vec![outcome(1, "flash", 100), outcome(2, "gpu", 0), outcome(3, "flash", 50)],
+            makespan: SimTime::from_secs(1.0),
+            flash_utilization: 0.5,
+            gpu_utilization: 0.25,
+        };
+        assert_eq!(r.counts(), (2, 1));
+        assert!((r.throughput() - 150.0).abs() < 1e-9);
+        assert!(r.render().contains("tok/s"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator — the paper's deployment model (§I, §IV):
+//! GPUs handle multi-batch summarization (prefill); **single-batch token
+//! generation offloads to the flash-PIM device**, paying a one-time
+//! initial-KV transfer over PCIe and freeing the GPUs for further
+//! summarization requests.
+//!
+//! Two execution modes share the same router/scheduler logic:
+//! * [`simulate`] — discrete-event simulation of a request trace
+//!   (latency/throughput reports, utilization);
+//! * the functional path used by `examples/token_generation.rs`, where
+//!   the PJRT runtime actually generates tokens while this module keeps
+//!   the simulated device timing alongside.
+
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod serve;
+pub mod simulate;
+
+pub use metrics::ServingReport;
+pub use request::{Request, RequestKind, RequestOutcome};
+pub use router::{Route, Router};
+pub use serve::Coordinator;
+pub use simulate::{simulate, Workload};

@@ -1,0 +1,98 @@
+//! Serving request/response types.
+
+use crate::sim::SimTime;
+
+/// What the client asked for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Summarize/prefill `input_tokens` of context (stays on the GPUs).
+    Summarize { input_tokens: usize },
+    /// Generate `output_tokens` after an `input_tokens` prompt
+    /// (offloaded to the flash PIM device).
+    Generate { input_tokens: usize, output_tokens: usize },
+}
+
+/// One serving request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub kind: RequestKind,
+    /// Arrival time in the simulated trace.
+    pub arrival: SimTime,
+}
+
+impl Request {
+    pub fn summarize(id: u64, arrival: SimTime, input_tokens: usize) -> Request {
+        Request { id, kind: RequestKind::Summarize { input_tokens }, arrival }
+    }
+
+    pub fn generate(id: u64, arrival: SimTime, input_tokens: usize, output_tokens: usize) -> Request {
+        Request { id, kind: RequestKind::Generate { input_tokens, output_tokens }, arrival }
+    }
+
+    pub fn is_generate(&self) -> bool {
+        matches!(self.kind, RequestKind::Generate { .. })
+    }
+}
+
+/// Completion record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub arrival: SimTime,
+    pub first_token: Option<SimTime>,
+    pub completed: SimTime,
+    pub tokens_out: usize,
+    /// Where it ran ("gpu" / "flash").
+    pub executed_on: &'static str,
+}
+
+impl RequestOutcome {
+    /// End-to-end latency.
+    pub fn latency(&self) -> SimTime {
+        self.completed - self.arrival
+    }
+
+    /// Time to first token (generation requests).
+    pub fn ttft(&self) -> Option<SimTime> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+
+    /// Mean TPOT over the request.
+    pub fn tpot(&self) -> Option<f64> {
+        let first = self.first_token?;
+        if self.tokens_out <= 1 {
+            return None;
+        }
+        Some((self.completed - first).secs() / (self.tokens_out - 1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_metrics() {
+        let o = RequestOutcome {
+            id: 1,
+            arrival: SimTime::from_us(100.0),
+            first_token: Some(SimTime::from_us(300.0)),
+            completed: SimTime::from_us(1300.0),
+            tokens_out: 11,
+            executed_on: "flash",
+        };
+        assert_eq!(o.latency(), SimTime::from_us(1200.0));
+        assert_eq!(o.ttft(), Some(SimTime::from_us(200.0)));
+        let tpot = o.tpot().unwrap();
+        assert!((tpot - 100e-6 / 1.0).abs() < 1e-12); // 1 ms over 10 tokens
+    }
+
+    #[test]
+    fn kind_predicates() {
+        let r = Request::generate(1, SimTime::ZERO, 128, 32);
+        assert!(r.is_generate());
+        let s = Request::summarize(2, SimTime::ZERO, 128);
+        assert!(!s.is_generate());
+    }
+}

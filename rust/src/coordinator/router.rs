@@ -1,0 +1,120 @@
+//! The routing policy (paper §I): "Instead of pressing GPUs to handle
+//! multi-batch summarization and generation, we propose to assign the
+//! single-batch generation task to a flash PIM device so that GPUs are
+//! released for other summarization requests."
+//!
+//! Admission control: a generation request needs SLC KV-region space for
+//! its whole context before it is dispatched; otherwise it queues.
+
+use super::request::{Request, RequestKind};
+use crate::kv::cache::KvCacheManager;
+
+/// Routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Run on the GPU pool (summarization / prefill).
+    Gpu,
+    /// Offload to the flash PIM device (single-batch generation).
+    Flash,
+    /// Hold in the admission queue (KV region full).
+    Queue,
+}
+
+/// Router with KV admission control.
+pub struct Router {
+    pub kv: KvCacheManager,
+}
+
+impl Router {
+    pub fn new(kv: KvCacheManager) -> Router {
+        Router { kv }
+    }
+
+    /// Decide where a request goes right now.
+    pub fn route(&self, req: &Request) -> Route {
+        match req.kind {
+            RequestKind::Summarize { .. } => Route::Gpu,
+            RequestKind::Generate { input_tokens, output_tokens } => {
+                let need = (input_tokens + output_tokens) as u64 * self.kv.per_token;
+                if self.kv.used() + need <= self.kv.capacity {
+                    Route::Flash
+                } else {
+                    Route::Queue
+                }
+            }
+        }
+    }
+
+    /// Admit a generation request (reserve its initial KV).
+    pub fn admit(&mut self, req: &Request) -> anyhow::Result<()> {
+        match req.kind {
+            RequestKind::Generate { input_tokens, .. } => self.kv.admit(req.id, input_tokens),
+            _ => Ok(()),
+        }
+    }
+
+    /// Record one generated token.
+    pub fn on_token(&mut self, req_id: u64) -> anyhow::Result<()> {
+        self.kv.append(req_id)
+    }
+
+    /// Release a finished generation request.
+    pub fn finish(&mut self, req_id: u64) -> anyhow::Result<()> {
+        self.kv.release(req_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+    use crate::sim::SimTime;
+
+    fn router() -> Router {
+        Router::new(KvCacheManager::new(&table1_system(), &OptModel::Opt30b.shape()))
+    }
+
+    #[test]
+    fn summaries_go_to_gpu() {
+        let r = router();
+        assert_eq!(r.route(&Request::summarize(1, SimTime::ZERO, 1024)), Route::Gpu);
+    }
+
+    #[test]
+    fn generation_goes_to_flash() {
+        let r = router();
+        assert_eq!(r.route(&Request::generate(1, SimTime::ZERO, 1024, 1024)), Route::Flash);
+    }
+
+    #[test]
+    fn oversize_generation_queues() {
+        let r = router();
+        let huge = (r.kv.capacity / r.kv.per_token + 1) as usize;
+        assert_eq!(r.route(&Request::generate(1, SimTime::ZERO, huge, 1)), Route::Queue);
+    }
+
+    #[test]
+    fn admission_lifecycle() {
+        let mut r = router();
+        let req = Request::generate(7, SimTime::ZERO, 100, 10);
+        r.admit(&req).unwrap();
+        for _ in 0..10 {
+            r.on_token(7).unwrap();
+        }
+        r.finish(7).unwrap();
+        assert_eq!(r.kv.used(), 0);
+    }
+
+    #[test]
+    fn queue_admits_after_release() {
+        let mut r = router();
+        let max = (r.kv.capacity / r.kv.per_token) as usize;
+        let big = Request::generate(1, SimTime::ZERO, max - 1, 1);
+        r.admit(&big).unwrap();
+        let next = Request::generate(2, SimTime::ZERO, 1024, 128);
+        assert_eq!(r.route(&next), Route::Queue);
+        r.finish(1).unwrap();
+        assert_eq!(r.route(&next), Route::Flash);
+    }
+}

@@ -1,0 +1,238 @@
+//! Discrete-event simulation of the serving system: GPU pool for
+//! summarization, flash PIM for generation, PCIe for the initial KV
+//! transfer. Reproduces the paper's deployment argument (offloading
+//! frees the GPUs; flash TPOT holds under concurrent load — the device
+//! serves one sequence at a time, single-batch by design).
+
+use super::metrics::ServingReport;
+use super::request::{Request, RequestKind, RequestOutcome};
+use super::router::{Route, Router};
+use crate::circuit::TechParams;
+use crate::config::SystemConfig;
+use crate::controller::PcieLink;
+use crate::gpu::GpuSystem;
+use crate::kv::cache::KvCacheManager;
+use crate::kv::write_overhead::initial_kv_write_time;
+use crate::llm::model_config::ModelShape;
+use crate::llm::schedule::TokenSchedule;
+use crate::sim::{Resource, SimTime};
+use std::collections::VecDeque;
+
+/// A request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    /// Synthetic mixed workload: Poisson-ish arrivals of summarization
+    /// and generation requests.
+    pub fn synthetic(
+        n_requests: usize,
+        gen_fraction: f64,
+        mean_interarrival: f64,
+        input_tokens: usize,
+        output_tokens: usize,
+        seed: u64,
+    ) -> Workload {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut t = 0.0;
+        let mut requests = Vec::new();
+        for id in 0..n_requests as u64 {
+            t += -mean_interarrival * (1.0 - rng.f64()).ln(); // exponential gap
+            let arrival = SimTime::from_secs(t);
+            if rng.chance(gen_fraction) {
+                requests.push(Request::generate(id, arrival, input_tokens, output_tokens));
+            } else {
+                requests.push(Request::summarize(id, arrival, input_tokens));
+            }
+        }
+        Workload { requests }
+    }
+}
+
+/// Run the trace to completion; deterministic.
+pub fn simulate(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    gpu: &GpuSystem,
+    workload: &Workload,
+) -> ServingReport {
+    let tech = TechParams::default();
+    let mut sched = TokenSchedule::new(sys, &tech, model.clone());
+    let mut router = Router::new(KvCacheManager::new(sys, model));
+    let mut pcie = PcieLink::new(&sys.ctrl);
+    let mut flash = Resource::new();
+    let mut gpu_pool = Resource::new();
+    let mut outcomes = Vec::new();
+    let mut queue: VecDeque<Request> = VecDeque::new();
+
+    let mut pending: Vec<Request> = workload.requests.clone();
+    pending.sort_by_key(|r| r.arrival);
+
+    // Event-free sequential admission: process arrivals in order; after
+    // each completion, retry the queue. (Single-batch devices make the
+    // timeline a simple resource schedule.)
+    let process = |req: &Request,
+                       router: &mut Router,
+                       sched: &mut TokenSchedule,
+                       flash: &mut Resource,
+                       gpu_pool: &mut Resource,
+                       pcie: &mut PcieLink|
+     -> Option<RequestOutcome> {
+        match req.kind {
+            RequestKind::Summarize { input_tokens } => {
+                let dur = SimTime::from_secs(gpu.prefill(model, input_tokens));
+                let start = gpu_pool.acquire(req.arrival, dur);
+                Some(RequestOutcome {
+                    id: req.id,
+                    arrival: req.arrival,
+                    first_token: None,
+                    completed: start + dur,
+                    tokens_out: 0,
+                    executed_on: "gpu",
+                })
+            }
+            RequestKind::Generate { input_tokens, output_tokens } => {
+                match router.route(req) {
+                    Route::Queue => return None,
+                    _ => {}
+                }
+                router.admit(req).expect("admission after route check");
+                // Prefill on the GPU, then ship the initial KV over PCIe
+                // and the channel buses into SLC.
+                let prefill = SimTime::from_secs(gpu.prefill(model, input_tokens));
+                let pstart = gpu_pool.acquire(req.arrival, prefill);
+                let kv_bytes = model.kv_bytes(input_tokens, 1.0);
+                let pcie_done = pcie.transfer(pstart + prefill, kv_bytes);
+                let kv_write =
+                    SimTime::from_secs(initial_kv_write_time(sys, model, input_tokens));
+                let ready = pcie_done + kv_write;
+                // Token loop on the flash device.
+                let mut now = ready;
+                let mut first_token = None;
+                for step in 0..output_tokens {
+                    let l_ctx = input_tokens + step;
+                    let dur = sched.step_time(l_ctx);
+                    let start = flash.acquire(now, dur);
+                    now = start + dur;
+                    if first_token.is_none() {
+                        first_token = Some(now);
+                    }
+                    router.on_token(req.id).expect("kv append");
+                }
+                router.finish(req.id).expect("kv release");
+                Some(RequestOutcome {
+                    id: req.id,
+                    arrival: req.arrival,
+                    first_token,
+                    completed: now,
+                    tokens_out: output_tokens,
+                    executed_on: "flash",
+                })
+            }
+        }
+    };
+
+    for req in &pending {
+        match process(req, &mut router, &mut sched, &mut flash, &mut gpu_pool, &mut pcie) {
+            Some(o) => outcomes.push(o),
+            None => queue.push_back(req.clone()),
+        }
+        // Retry queued requests greedily after each completion.
+        let mut still_queued = VecDeque::new();
+        while let Some(q) = queue.pop_front() {
+            match process(&q, &mut router, &mut sched, &mut flash, &mut gpu_pool, &mut pcie) {
+                Some(o) => outcomes.push(o),
+                None => still_queued.push_back(q),
+            }
+        }
+        queue = still_queued;
+    }
+    // Final drain: anything still queued is force-processed in order.
+    while let Some(q) = queue.pop_front() {
+        if let Some(o) = process(&q, &mut router, &mut sched, &mut flash, &mut gpu_pool, &mut pcie)
+        {
+            outcomes.push(o);
+        } else {
+            // Whole-trace capacity exceeded: report as dropped by ending
+            // the loop (tests never hit this with sane traces).
+            break;
+        }
+    }
+
+    let makespan = outcomes.iter().map(|o| o.completed).max().unwrap_or(SimTime::ZERO);
+    ServingReport {
+        flash_utilization: flash.utilization(makespan),
+        gpu_utilization: gpu_pool.utilization(makespan),
+        outcomes,
+        makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::gpu::rtx4090x4_vllm;
+    use crate::llm::model_config::OptModel;
+
+    fn run(n: usize, gen_frac: f64) -> ServingReport {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let wl = Workload::synthetic(n, gen_frac, 0.5, 256, 64, 42);
+        simulate(&sys, &model, &rtx4090x4_vllm(), &wl)
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let r = run(20, 0.5);
+        assert_eq!(r.outcomes.len(), 20);
+    }
+
+    #[test]
+    fn generation_runs_on_flash_summaries_on_gpu() {
+        let r = run(30, 0.5);
+        let (flash, gpu) = r.counts();
+        assert!(flash > 0 && gpu > 0);
+        for o in &r.outcomes {
+            if o.tokens_out > 0 {
+                assert_eq!(o.executed_on, "flash");
+            }
+        }
+    }
+
+    #[test]
+    fn tpot_matches_schedule() {
+        // Serving TPOT ≈ the schedule's per-token estimate for the model.
+        let r = run(10, 1.0);
+        let tpot = r.tpot_summary().mean;
+        let sys = table1_system();
+        let mut sched = TokenSchedule::new(
+            &sys,
+            &crate::circuit::TechParams::default(),
+            OptModel::Opt6_7b.shape(),
+        );
+        let expect = sched.tpot(256 + 32);
+        assert!(
+            (tpot - expect).abs() / expect < 0.15,
+            "serving TPOT {tpot} vs schedule {expect}"
+        );
+    }
+
+    #[test]
+    fn offload_frees_gpu_time() {
+        // With generation offloaded, GPU busy time is prefill-only: the
+        // GPU pool utilization stays below the flash device's when the
+        // mix is generation-heavy.
+        let r = run(30, 0.9);
+        assert!(r.flash_utilization > r.gpu_utilization);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(15, 0.5).makespan;
+        let b = run(15, 0.5).makespan;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! Design-space exploration of the 3D NAND plane size (paper §III-B,
+//! Fig. 6): sweep `N_row × N_col × N_stack`, evaluate latency / energy /
+//! density, and select the configuration that maximizes cell density under
+//! the PIM-latency budget.
+
+pub mod pareto;
+pub mod select;
+pub mod sweep;
+
+pub use pareto::pareto_frontier;
+pub use select::{select_plane, SelectionCriteria};
+pub use sweep::{fig6_sweeps, sweep_grid, DsePoint, SweepAxis};

@@ -1,0 +1,56 @@
+//! Pareto analysis of the latency/density trade-off (paper §III-A:
+//! "there is a trade-off between the PIM latency and the cell density").
+
+use super::sweep::DsePoint;
+
+/// The (latency ↓, density ↑) Pareto frontier, sorted by latency.
+/// A point is dominated if another point has both lower-or-equal latency
+/// and higher-or-equal density (strictly better in at least one).
+pub fn pareto_frontier(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut frontier: Vec<DsePoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.t_pim <= p.t_pim && q.density > p.density) || (q.t_pim < p.t_pim && q.density >= p.density)
+        });
+        if !dominated {
+            frontier.push(p.clone());
+        }
+    }
+    frontier.sort_by(|a, b| a.t_pim.partial_cmp(&b.t_pim).unwrap());
+    frontier.dedup_by(|a, b| a.plane == b.plane);
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::TechParams;
+    use crate::dse::sweep::sweep_grid;
+
+    #[test]
+    fn frontier_is_monotone() {
+        let tech = TechParams::default();
+        let grid = sweep_grid((64, 1024), (256, 4096), (32, 256), &tech);
+        let f = pareto_frontier(&grid);
+        assert!(!f.is_empty());
+        // Along the frontier, higher latency must buy higher density.
+        for w in f.windows(2) {
+            assert!(w[1].t_pim >= w[0].t_pim);
+            assert!(w[1].density >= w[0].density, "frontier not monotone in density");
+        }
+    }
+
+    #[test]
+    fn frontier_points_not_dominated() {
+        let tech = TechParams::default();
+        let grid = sweep_grid((64, 512), (512, 2048), (64, 256), &tech);
+        let f = pareto_frontier(&grid);
+        for p in &f {
+            for q in &grid {
+                let strictly_dominates =
+                    q.t_pim < p.t_pim && q.density > p.density;
+                assert!(!strictly_dominates, "frontier point {:?} dominated by {:?}", p.plane, q.plane);
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Plane-size selection (paper §III-B conclusion): among all plane
+//! configurations meeting the PIM-latency budget, pick the densest; break
+//! ties by per-plane capacity (density is row-independent, so the largest
+//! feasible row count wins), then by latency.
+//!
+//! With the default technology this selects the paper's Size A,
+//! `256 × 2048 × 128`.
+
+use super::sweep::{sweep_grid, DsePoint};
+use crate::circuit::TechParams;
+
+/// Selection constraints.
+///
+/// The grid bounds encode the paper's process and architecture envelope:
+/// * `stacks ≤ 128` — the Table-I device is a 128-WL-layer part (the
+///   sweep itself, Fig. 6, explores up to 512 to show the trend).
+/// * `rows ≥ 256` — 64 blocks × 4 BLS per block (Table I) is the minimum
+///   block population for erase-unit management and tile double-buffering
+///   (two independent 128-row PIM groups per plane).
+/// * `cols ≤ 16K` — the largest page size in commercial parts.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectionCriteria {
+    /// Hard budget on the 8-bit T_PIM (s). Paper: ~2 µs.
+    pub max_t_pim: f64,
+    /// Grid bounds (inclusive, powers of two).
+    pub rows: (usize, usize),
+    pub cols: (usize, usize),
+    pub stacks: (usize, usize),
+}
+
+impl Default for SelectionCriteria {
+    fn default() -> Self {
+        SelectionCriteria {
+            max_t_pim: 2.0e-6,
+            rows: (256, 2048),
+            cols: (256, 16384),
+            stacks: (32, 128),
+        }
+    }
+}
+
+/// Run the selection. Returns the winner and all feasible points
+/// (for reporting), or `None` when nothing meets the budget.
+pub fn select_plane(criteria: &SelectionCriteria, tech: &TechParams) -> Option<(DsePoint, Vec<DsePoint>)> {
+    let grid = sweep_grid(criteria.rows, criteria.cols, criteria.stacks, tech);
+    let feasible: Vec<DsePoint> = grid.into_iter().filter(|p| p.t_pim <= criteria.max_t_pim).collect();
+    let winner = feasible
+        .iter()
+        .max_by(|a, b| {
+            (a.density, a.plane.capacity_bits(), -a.t_pim)
+                .partial_cmp(&(b.density, b.plane.capacity_bits(), -b.t_pim))
+                .unwrap()
+        })?
+        .clone();
+    Some((winner, feasible))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::size_a_plane;
+
+    #[test]
+    fn selects_paper_size_a() {
+        // The headline DSE result of §III-B: 256 × 2048 × 128.
+        let tech = TechParams::default();
+        let (winner, feasible) = select_plane(&SelectionCriteria::default(), &tech).unwrap();
+        assert!(!feasible.is_empty());
+        assert_eq!(
+            winner.plane,
+            size_a_plane(),
+            "DSE selected {:?} (density {:.2} Gb/mm², T_PIM {})",
+            winner.plane,
+            winner.density,
+            crate::util::units::fmt_time(winner.t_pim)
+        );
+    }
+
+    #[test]
+    fn all_feasible_meet_budget() {
+        let tech = TechParams::default();
+        let crit = SelectionCriteria::default();
+        let (_, feasible) = select_plane(&crit, &tech).unwrap();
+        for p in &feasible {
+            assert!(p.t_pim <= crit.max_t_pim);
+        }
+    }
+
+    #[test]
+    fn impossible_budget_yields_none() {
+        let tech = TechParams::default();
+        let crit = SelectionCriteria { max_t_pim: 1e-12, ..Default::default() };
+        assert!(select_plane(&crit, &tech).is_none());
+    }
+
+    #[test]
+    fn winner_dominates_feasible_on_density() {
+        let tech = TechParams::default();
+        let (winner, feasible) = select_plane(&SelectionCriteria::default(), &tech).unwrap();
+        for p in &feasible {
+            assert!(p.density <= winner.density + 1e-12);
+        }
+    }
+}

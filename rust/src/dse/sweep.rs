@@ -1,0 +1,194 @@
+//! Sweep the plane configuration space and evaluate each point with the
+//! circuit model. `fig6_sweeps` reproduces the three 1-D sweeps of Fig. 6
+//! (one dimension varied, the others fixed at the paper's base point
+//! `N_row = 256, N_col = 1K, N_stack = 128`).
+
+use crate::circuit::{cell_density_gb_mm2, PimEnergy, PlaneLatency, TechParams};
+use crate::config::{CellKind, PlaneConfig};
+
+/// Rows simultaneously activated per PIM dot product (paper: 128 BLSs).
+pub const PIM_ACTIVE_ROWS: usize = 128;
+/// LLM activation input-bit sparsity (paper: ≈ 0.5).
+pub const INPUT_SPARSITY: f64 = 0.5;
+/// Input bit-width of the Fig. 6 evaluation (8-bit activations).
+pub const INPUT_BITS: usize = 8;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub plane: PlaneConfig,
+    /// T_PIM for an 8-bit input (s) — Fig. 6a.
+    pub t_pim: f64,
+    /// Latency breakdown for reporting.
+    pub latency: PlaneLatency,
+    /// Energy of one full 8-bit PIM op (J) — Fig. 6b.
+    pub energy: f64,
+    /// Energy breakdown for reporting.
+    pub energy_parts: PimEnergy,
+    /// Cell density (Gb/mm²) — Fig. 6c.
+    pub density: f64,
+}
+
+impl DsePoint {
+    pub fn evaluate(plane: PlaneConfig, tech: &TechParams) -> DsePoint {
+        let latency = PlaneLatency::of(&plane, tech);
+        let energy_parts = PimEnergy::of(&plane, tech, PIM_ACTIVE_ROWS, INPUT_SPARSITY);
+        DsePoint {
+            plane,
+            t_pim: latency.t_pim(INPUT_BITS),
+            latency,
+            energy: energy_parts.total_op(INPUT_BITS),
+            energy_parts,
+            density: cell_density_gb_mm2(&plane, tech),
+        }
+    }
+}
+
+/// Which plane dimension a 1-D sweep varies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepAxis {
+    Rows,
+    Cols,
+    Stacks,
+}
+
+impl SweepAxis {
+    pub fn label(self) -> &'static str {
+        match self {
+            SweepAxis::Rows => "N_row",
+            SweepAxis::Cols => "N_col",
+            SweepAxis::Stacks => "N_stack",
+        }
+    }
+}
+
+/// The Fig. 6 base point: `N_row=256, N_col=1K, N_stack=128` QLC.
+pub fn fig6_base() -> PlaneConfig {
+    PlaneConfig::new(256, 1024, 128, CellKind::Qlc)
+}
+
+/// Sweep values used for each axis (powers of two, the paper's plotted range).
+pub fn axis_values(axis: SweepAxis) -> Vec<usize> {
+    match axis {
+        SweepAxis::Rows => vec![64, 128, 256, 512, 1024, 2048],
+        SweepAxis::Cols => vec![256, 512, 1024, 2048, 4096, 8192, 16384],
+        SweepAxis::Stacks => vec![32, 64, 128, 256, 512],
+    }
+}
+
+/// One 1-D sweep of Fig. 6.
+pub fn sweep_axis(axis: SweepAxis, tech: &TechParams) -> Vec<DsePoint> {
+    let base = fig6_base();
+    axis_values(axis)
+        .into_iter()
+        .map(|v| {
+            let plane = match axis {
+                SweepAxis::Rows => PlaneConfig { n_row: v, ..base },
+                SweepAxis::Cols => PlaneConfig { n_col: v, ..base },
+                SweepAxis::Stacks => PlaneConfig { n_stack: v, ..base },
+            };
+            DsePoint::evaluate(plane, tech)
+        })
+        .collect()
+}
+
+/// All three Fig. 6 sweeps.
+pub fn fig6_sweeps(tech: &TechParams) -> Vec<(SweepAxis, Vec<DsePoint>)> {
+    [SweepAxis::Rows, SweepAxis::Cols, SweepAxis::Stacks]
+        .into_iter()
+        .map(|a| (a, sweep_axis(a, tech)))
+        .collect()
+}
+
+/// Full 3-D grid over the given power-of-two ranges (inclusive).
+pub fn sweep_grid(
+    rows: (usize, usize),
+    cols: (usize, usize),
+    stacks: (usize, usize),
+    tech: &TechParams,
+) -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    let mut r = rows.0;
+    while r <= rows.1 {
+        let mut c = cols.0;
+        while c <= cols.1 {
+            let mut s = stacks.0;
+            while s <= stacks.1 {
+                let plane = PlaneConfig::new(r, c, s, CellKind::Qlc);
+                if plane.validate().is_ok() {
+                    out.push(DsePoint::evaluate(plane, tech));
+                }
+                s *= 2;
+            }
+            c *= 2;
+        }
+        r *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_latency_monotone_along_each_axis() {
+        let tech = TechParams::default();
+        for (axis, points) in fig6_sweeps(&tech) {
+            for w in points.windows(2) {
+                assert!(
+                    w[1].t_pim > w[0].t_pim,
+                    "{} sweep not monotone: {:?} -> {:?}",
+                    axis.label(),
+                    w[0].t_pim,
+                    w[1].t_pim
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig6b_energy_monotone_along_each_axis() {
+        let tech = TechParams::default();
+        for (axis, points) in fig6_sweeps(&tech) {
+            for w in points.windows(2) {
+                assert!(w[1].energy > w[0].energy, "{} energy sweep not monotone", axis.label());
+            }
+        }
+    }
+
+    #[test]
+    fn fig6c_density_flat_in_rows_rising_in_cols_stacks() {
+        let tech = TechParams::default();
+        let rows = sweep_axis(SweepAxis::Rows, &tech);
+        for w in rows.windows(2) {
+            assert!((w[1].density - w[0].density).abs() < 1e-9, "density must not depend on rows");
+        }
+        for axis in [SweepAxis::Cols, SweepAxis::Stacks] {
+            let pts = sweep_axis(axis, &tech);
+            for w in pts.windows(2) {
+                assert!(w[1].density > w[0].density, "{} density sweep not rising", axis.label());
+            }
+        }
+    }
+
+    #[test]
+    fn grid_covers_expected_count() {
+        let tech = TechParams::default();
+        let g = sweep_grid((64, 256), (256, 1024), (32, 128), &tech);
+        assert_eq!(g.len(), 3 * 3 * 3);
+    }
+
+    #[test]
+    fn precharge_dominates_row_growth() {
+        // Paper: t_pre sharply increases with N_row (τ_BL ∝ N_row²).
+        let tech = TechParams::default();
+        let pts = sweep_axis(SweepAxis::Rows, &tech);
+        let first = &pts[0];
+        let last = &pts[pts.len() - 1];
+        let pre_growth = last.latency.t_pre / first.latency.t_pre;
+        let wl_growth = last.latency.t_decwl / first.latency.t_decwl;
+        assert!(pre_growth > 10.0, "t_pre grew only {pre_growth}x over the row sweep");
+        assert!(wl_growth < 1.01, "t_decWL should not grow with rows");
+    }
+}

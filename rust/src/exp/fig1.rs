@@ -1,0 +1,73 @@
+//! Fig. 1 — (a) LLM memory requirements vs GPU DRAM capacity;
+//! (b) token-generation latency vs summarization latency (OPT-30B on
+//! 4×RTX4090, 1K tokens each way).
+
+use crate::gpu::rtx4090x4_vllm;
+use crate::llm::model_config::{fig1a_models, OptModel};
+use crate::util::table::Table;
+use crate::util::units::fmt_bytes;
+
+/// Fig. 1a rows: model → FP16 bytes → H100s (80 GiB) needed.
+pub fn fig1a() -> Vec<(String, f64, usize)> {
+    fig1a_models()
+        .into_iter()
+        .map(|(name, params)| {
+            let bytes = params * 2.0;
+            let h100 = (bytes / (80.0 * 1e9)).ceil() as usize;
+            (name, bytes, h100)
+        })
+        .collect()
+}
+
+/// Fig. 1b: (summarization latency, generation latency, ratio) for
+/// OPT-30B FP16 on 4×RTX4090 with 1K input / 1K output tokens.
+pub fn fig1b() -> (f64, f64, f64) {
+    let g = rtx4090x4_vllm();
+    let m = OptModel::Opt30b.shape();
+    let summarize = g.prefill(&m, 1024);
+    let generate = g.generate(&m, 2.0, 1024, 1024).expect("OPT-30B FP16 fits 4x4090 for timing");
+    (summarize, generate, generate / summarize)
+}
+
+pub fn render() -> String {
+    let mut t = Table::new(&["model", "FP16 memory", "H100s (80GB)"]);
+    for (name, bytes, h100) in fig1a() {
+        t.row(&[name, fmt_bytes(bytes), h100.to_string()]);
+    }
+    let (s, g, r) = fig1b();
+    format!(
+        "{}\nFig1b (OPT-30B, 4xRTX4090): summarize 1K = {:.3} s, generate 1K = {:.2} s, ratio = {:.0}x\n",
+        t.render(),
+        s,
+        g,
+        r
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt35_needs_five_h100s() {
+        // Paper §I: 175B → 350 GB → five H100 GPUs.
+        let rows = fig1a();
+        let gpt = rows.iter().find(|(n, _, _)| n.contains("GPT-3.5")).unwrap();
+        assert_eq!(gpt.2, 5);
+    }
+
+    #[test]
+    fn mixtral_exceeds_single_h100() {
+        let rows = fig1a();
+        let mix = rows.iter().find(|(n, _, _)| n.contains("Mixtral")).unwrap();
+        assert!(mix.1 > 80.0 * 1e9);
+        assert_eq!(mix.2, 2);
+    }
+
+    #[test]
+    fn fig1b_ratio_near_46x() {
+        // Paper Fig. 1b: generation is ~46× slower than summarization.
+        let (_, _, r) = fig1b();
+        assert!((30.0..=65.0).contains(&r), "ratio = {r:.1}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Fig. 12 — latency breakdown (inbound I/O, PIM, outbound I/O) of the
+//! three named tiling options for the OPT-30B `d_m × d_m` sMVM, plus the
+//! search-best scheme.
+
+use crate::circuit::TechParams;
+use crate::config::presets::table1_system;
+use crate::nand::NandTiming;
+use crate::pim::op::MvmShape;
+use crate::tiling::cost::{fig12_cases, TilingCost, TilingCostModel};
+use crate::tiling::search_best;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+pub fn model() -> TilingCostModel {
+    let sys = table1_system();
+    let timing = NandTiming::of_system(&sys, &TechParams::default());
+    TilingCostModel::new(&sys, timing)
+}
+
+/// OPT-30B projection shape (d_m = 7168).
+pub fn shape() -> MvmShape {
+    MvmShape::new(7168, 7168)
+}
+
+/// The three named cases with costs.
+pub fn fig12() -> Vec<(String, TilingCost)> {
+    let m = model();
+    fig12_cases(&m, shape())
+        .into_iter()
+        .map(|(name, s)| (format!("{} [{}]", name, s.notation_counts()), m.cost(&s, shape())))
+        .collect()
+}
+
+/// The best scheme: exhaustive search pool plus the named Fig. 12 cases
+/// (whose ceil-covering counts are outside the exact-factor enumeration).
+pub fn best() -> (String, TilingCost) {
+    let m = model();
+    let mut pool: Vec<(String, TilingCost)> = search_best(&m, shape())
+        .into_iter()
+        .map(|r| (r.scheme.notation_counts(), r.cost))
+        .collect();
+    pool.extend(
+        fig12_cases(&m, shape()).into_iter().map(|(_, s)| (s.notation_counts(), m.cost(&s, shape()))),
+    );
+    pool.into_iter()
+        .min_by(|a, b| a.1.total().cmp(&b.1.total()))
+        .expect("non-empty pool")
+}
+
+pub fn render() -> String {
+    let mut t = Table::new(&["tiling (ch/way/die/plane)", "inbound", "PIM", "outbound", "total"]);
+    for (name, c) in fig12() {
+        t.row(&[
+            name,
+            fmt_time(c.inbound.secs()),
+            fmt_time(c.pim.secs()),
+            fmt_time(c.outbound.secs()),
+            fmt_time(c.total().secs()),
+        ]);
+    }
+    let (bname, bc) = best();
+    format!(
+        "Fig 12 — sMVM tiling options (OPT-30B d_m=7168):\n{}search best: {} total {}\n",
+        t.render(),
+        bname,
+        fmt_time(bc.total().secs())
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_cases_reported() {
+        assert_eq!(fig12().len(), 3);
+    }
+
+    #[test]
+    fn best_no_worse_than_named_cases() {
+        let (_, bc) = best();
+        for (name, c) in fig12() {
+            assert!(bc.total() <= c.total(), "search best worse than {name}");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Fig. 14 — (a) TPOT across OPT model sizes: flash PIM vs 4×RTX4090
+//! (vLLM) vs 4×A100 (AttAcc); (b) flash-PIM execution-time breakdown by
+//! input/output token lengths.
+
+use crate::circuit::TechParams;
+use crate::config::presets::table1_system;
+use crate::config::SystemConfig;
+use crate::gpu::{a100x4_attacc, rtx4090x4_vllm};
+use crate::llm::model_config::OptModel;
+use crate::llm::schedule::{TokenBreakdown, TokenSchedule};
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+/// One Fig. 14a row.
+#[derive(Debug, Clone)]
+pub struct Fig14aRow {
+    pub model: String,
+    pub flash: f64,
+    /// `None` = OOM.
+    pub rtx4090: Option<f64>,
+    pub a100: Option<f64>,
+}
+
+/// Flash-PIM mean TPOT for a model at the paper's 1K-in/1K-out setting.
+pub fn flash_tpot(sys: &SystemConfig, model: OptModel, l_in: usize, l_out: usize) -> f64 {
+    let mut sched = TokenSchedule::new(sys, &TechParams::default(), model.shape());
+    sched.mean_tpot(l_in, l_out)
+}
+
+/// Fig. 14a rows (1K input + 1K output tokens, W8A8).
+pub fn fig14a() -> Vec<Fig14aRow> {
+    let sys = table1_system();
+    let g4090 = rtx4090x4_vllm();
+    let ga100 = a100x4_attacc();
+    OptModel::ALL
+        .iter()
+        .map(|m| {
+            let shape = m.shape();
+            let mid_ctx = 1024 + 512;
+            Fig14aRow {
+                model: shape.name.clone(),
+                flash: flash_tpot(&sys, *m, 1024, 1024),
+                rtx4090: g4090.tpot(&shape, 1.0, mid_ctx),
+                a100: ga100.tpot(&shape, 1.0, mid_ctx),
+            }
+        })
+        .collect()
+}
+
+/// Summary stats for the Fig. 14a acceptance anchors.
+pub struct Fig14aSummary {
+    /// Mean speedup of flash over 4×RTX4090 across models that fit.
+    pub mean_speedup_vs_4090: f64,
+    /// Mean latency overhead of flash vs 4×A100 across all models.
+    pub mean_overhead_vs_a100: f64,
+    /// Models that OOM on the 4090 setup.
+    pub oom_models: Vec<String>,
+}
+
+pub fn fig14a_summary(rows: &[Fig14aRow]) -> Fig14aSummary {
+    let speedups: Vec<f64> =
+        rows.iter().filter_map(|r| r.rtx4090.map(|g| g / r.flash)).collect();
+    let overheads: Vec<f64> =
+        rows.iter().filter_map(|r| r.a100.map(|a| r.flash / a - 1.0)).collect();
+    Fig14aSummary {
+        mean_speedup_vs_4090: crate::util::stats::mean(&speedups),
+        mean_overhead_vs_a100: crate::util::stats::mean(&overheads),
+        oom_models: rows
+            .iter()
+            .filter(|r| r.rtx4090.is_none())
+            .map(|r| r.model.clone())
+            .collect(),
+    }
+}
+
+/// Fig. 14b: breakdown at the four (input, output) length combinations.
+pub fn fig14b() -> Vec<((usize, usize), TokenBreakdown)> {
+    let sys = table1_system();
+    let mut sched =
+        TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+    [(1024, 1024), (1024, 2048), (2048, 1024), (2048, 2048)]
+        .into_iter()
+        .map(|(l_in, l_out)| {
+            // Breakdown at the mid-generation context.
+            let b = sched.token_breakdown(l_in + l_out / 2);
+            ((l_in, l_out), b)
+        })
+        .collect()
+}
+
+/// Render Fig. 14a as the paper's table.
+pub fn render_fig14a(rows: &[Fig14aRow]) -> String {
+    let mut t = Table::new(&["model", "flash PIM", "4xRTX4090 (vLLM)", "4xA100 (AttAcc)"]);
+    for r in rows {
+        t.row(&[
+            r.model.clone(),
+            fmt_time(r.flash),
+            r.rtx4090.map(fmt_time).unwrap_or_else(|| "OOM".into()),
+            r.a100.map(fmt_time).unwrap_or_else(|| "OOM".into()),
+        ]);
+    }
+    let s = fig14a_summary(rows);
+    format!(
+        "{}\nmean speedup vs 4xRTX4090: {:.2}x   mean overhead vs 4xA100: {:.1}%   OOM: {:?}\n",
+        t.render(),
+        s.mean_speedup_vs_4090,
+        s.mean_overhead_vs_a100 * 100.0,
+        s.oom_models
+    )
+}
+
+/// Render Fig. 14b.
+pub fn render_fig14b(rows: &[((usize, usize), TokenBreakdown)]) -> String {
+    let mut t = Table::new(&["in/out", "sMVM", "dMVM", "LN", "softmax", "total"]);
+    for ((li, lo), b) in rows {
+        t.row(&[
+            format!("{li}/{lo}"),
+            fmt_time(b.smvm),
+            fmt_time(b.dmvm),
+            fmt_time(b.ln),
+            fmt_time(b.softmax),
+            fmt_time(b.total()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14a_anchors() {
+        // Paper: 2.4× mean speedup over 4×RTX4090; 4.9 % mean overhead
+        // vs 4×A100; OPT-66B/175B OOM on the 4090s.
+        let rows = fig14a();
+        let s = fig14a_summary(&rows);
+        assert!(
+            (1.9..=3.1).contains(&s.mean_speedup_vs_4090),
+            "speedup {:.2} — rows: {}",
+            s.mean_speedup_vs_4090,
+            render_fig14a(&rows)
+        );
+        assert!(
+            (-0.05..=0.15).contains(&s.mean_overhead_vs_a100),
+            "overhead {:.3} — rows: {}",
+            s.mean_overhead_vs_a100,
+            render_fig14a(&rows)
+        );
+        assert_eq!(s.oom_models, vec!["OPT-66B".to_string(), "OPT-175B".to_string()]);
+    }
+
+    #[test]
+    fn fig14a_flash_beats_4090_everywhere_it_fits() {
+        for r in fig14a() {
+            if let Some(g) = r.rtx4090 {
+                assert!(r.flash < g, "{}: flash {} vs 4090 {}", r.model, r.flash, g);
+            }
+        }
+    }
+
+    #[test]
+    fn fig14b_smvm_flat_softmax_grows() {
+        let rows = fig14b();
+        // sMVM identical across all four length combos.
+        let s0 = rows[0].1.smvm;
+        for (_, b) in &rows {
+            assert!((b.smvm - s0).abs() < 1e-9);
+        }
+        // softmax at 2048/2048 > softmax at 1024/1024.
+        assert!(rows[3].1.softmax > rows[0].1.softmax);
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 6 — latency (a), energy (b), and cell density (c) across the
+//! 3D NAND PIM plane configuration sweep, plus the §III-B selection.
+
+use crate::circuit::TechParams;
+use crate::dse::select::{select_plane, SelectionCriteria};
+use crate::dse::sweep::{fig6_sweeps, DsePoint, SweepAxis};
+use crate::util::table::Table;
+use crate::util::units::{fmt_energy, fmt_time};
+
+/// All three sweeps.
+pub fn fig6() -> Vec<(SweepAxis, Vec<DsePoint>)> {
+    fig6_sweeps(&TechParams::default())
+}
+
+/// The §III-B selection result.
+pub fn selection() -> DsePoint {
+    select_plane(&SelectionCriteria::default(), &TechParams::default())
+        .expect("default budget feasible")
+        .0
+}
+
+pub fn render() -> String {
+    let mut out = String::new();
+    for (axis, points) in fig6() {
+        let mut t = Table::new(&[axis.label(), "T_PIM (8b)", "energy/op", "density Gb/mm2"]);
+        for p in &points {
+            let v = match axis {
+                SweepAxis::Rows => p.plane.n_row,
+                SweepAxis::Cols => p.plane.n_col,
+                SweepAxis::Stacks => p.plane.n_stack,
+            };
+            t.row(&[
+                v.to_string(),
+                fmt_time(p.t_pim),
+                fmt_energy(p.energy),
+                format!("{:.2}", p.density),
+            ]);
+        }
+        out.push_str(&format!("Fig 6 — sweep over {}:\n{}\n", axis.label(), t.render()));
+    }
+    let sel = selection();
+    out.push_str(&format!(
+        "selected plane: {}x{}x{}  (T_PIM {}, density {:.2} Gb/mm2)\n",
+        sel.plane.n_row,
+        sel.plane.n_col,
+        sel.plane.n_stack,
+        fmt_time(sel.t_pim),
+        sel.density
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::size_a_plane;
+
+    #[test]
+    fn selection_is_size_a() {
+        assert_eq!(selection().plane, size_a_plane());
+    }
+
+    #[test]
+    fn selected_latency_near_2us() {
+        let s = selection();
+        assert!((1.7e-6..=2.1e-6).contains(&s.t_pim), "{}", s.t_pim);
+    }
+
+    #[test]
+    fn sweeps_have_paper_ranges() {
+        let sweeps = fig6();
+        assert_eq!(sweeps.len(), 3);
+        for (_, pts) in sweeps {
+            assert!(pts.len() >= 5);
+        }
+    }
+}

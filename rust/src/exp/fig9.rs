@@ -1,0 +1,105 @@
+//! Fig. 9 — (a) shared bus vs H-tree execution time on the three MVM
+//! shapes; (b) Size A (64 planes) vs Size B (128 planes, throughput-
+//! matched) with the H-tree.
+
+use crate::circuit::TechParams;
+use crate::config::presets::{table1_shared_bus, table1_size_b, table1_system};
+use crate::config::SystemConfig;
+use crate::nand::NandTiming;
+use crate::pim::op::MvmShape;
+use crate::pim::smvm::{ExecReport, SmvmPipeline};
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+/// The paper's three evaluation shapes `(1,M)×(M,N)`.
+pub fn shapes() -> [MvmShape; 3] {
+    [MvmShape::new(1024, 1024), MvmShape::new(1024, 4096), MvmShape::new(4096, 1024)]
+}
+
+fn pipeline(sys: &SystemConfig, planes: usize) -> SmvmPipeline {
+    let timing = NandTiming::of_system(sys, &TechParams::default());
+    SmvmPipeline::new(sys, timing, planes)
+}
+
+/// Fig. 9a rows: per shape, (shared total, htree total, reduction).
+pub fn fig9a() -> Vec<(MvmShape, ExecReport, ExecReport, f64)> {
+    let shared = pipeline(&table1_shared_bus(), 64);
+    let htree = pipeline(&table1_system(), 64);
+    shapes()
+        .into_iter()
+        .map(|s| {
+            let a = shared.execute(s);
+            let b = htree.execute(s);
+            let red = 1.0 - b.total.secs() / a.total.secs();
+            (s, a, b, red)
+        })
+        .collect()
+}
+
+/// Fig. 9b rows: per shape, (Size B total @128 planes, Size A total @64
+/// planes, overhead of A).
+pub fn fig9b() -> Vec<(MvmShape, ExecReport, ExecReport, f64)> {
+    let a = pipeline(&table1_system(), 64);
+    let b = pipeline(&table1_size_b(), 128);
+    shapes()
+        .into_iter()
+        .map(|s| {
+            let rb = b.execute(s);
+            let ra = a.execute(s);
+            let overhead = ra.total.secs() / rb.total.secs() - 1.0;
+            (s, rb, ra, overhead)
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut t = Table::new(&["MVM (M,N)", "shared bus", "H-tree", "reduction"]);
+    let mut reds = Vec::new();
+    for (s, a, b, r) in fig9a() {
+        reds.push(r);
+        t.row(&[
+            format!("({},{})", s.m, s.n),
+            fmt_time(a.total.secs()),
+            fmt_time(b.total.secs()),
+            format!("{:.0}%", r * 100.0),
+        ]);
+    }
+    let mut t2 = Table::new(&["MVM (M,N)", "Size B (128 pl)", "Size A (64 pl)", "A overhead"]);
+    let mut ovs = Vec::new();
+    for (s, rb, ra, o) in fig9b() {
+        ovs.push(o);
+        t2.row(&[
+            format!("({},{})", s.m, s.n),
+            fmt_time(rb.total.secs()),
+            fmt_time(ra.total.secs()),
+            format!("{:+.0}%", o * 100.0),
+        ]);
+    }
+    format!(
+        "Fig 9a — shared vs H-tree (64 planes, Size A):\n{}mean reduction: {:.1}%\n\nFig 9b — plane size (H-tree, throughput-matched):\n{}mean Size-A overhead: {:+.1}% (2x cell density)\n",
+        t.render(),
+        crate::util::stats::mean(&reds) * 100.0,
+        t2.render(),
+        crate::util::stats::mean(&ovs) * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn htree_wins_every_shape() {
+        for (s, shared, htree, _) in fig9a() {
+            assert!(htree.total < shared.total, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn size_a_slower_but_denser() {
+        // Every shape: Size A costs more time (it buys 2× density).
+        for (s, _b, _a, overhead) in fig9b() {
+            assert!(overhead > -0.05, "{s:?}: overhead {overhead}");
+        }
+    }
+}

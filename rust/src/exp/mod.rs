@@ -1,0 +1,14 @@
+//! Experiment drivers — one per paper table/figure, shared by the CLI
+//! (`repro <exp>`) and the benches (`cargo bench --bench <exp>`).
+//! Each driver returns the same rows/series the paper reports and can
+//! render them as an ASCII table.
+
+pub mod fig1;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod fig12;
+pub mod fig14;
+pub mod table2;
+
+pub use fig14::flash_tpot;

@@ -1,0 +1,56 @@
+//! Table II — per-plane area breakdown of the peripheral circuits and the
+//! H-tree network with RPUs, plus the §V-C die-budget feasibility check.
+
+use crate::area::budget::die_budget_mm2;
+use crate::area::peri::{AreaBreakdown, AreaModel};
+use crate::circuit::TechParams;
+use crate::config::presets::table1_system;
+use crate::util::table::Table;
+
+pub fn breakdown() -> AreaBreakdown {
+    AreaModel::new(&TechParams::default()).breakdown(&table1_system())
+}
+
+pub fn die_array_mm2() -> f64 {
+    AreaModel::new(&TechParams::default()).die_array_mm2(&table1_system())
+}
+
+pub fn render() -> String {
+    let b = breakdown();
+    let (hv, lv, rpu) = b.ratios();
+    let mut t = Table::new(&["component", "area [mm2/plane]", "ratio in plane"]);
+    t.row(&["HV-peri + cap".into(), format!("{:.6}", b.hv_peri * 1e6), format!("{:.2}%", hv * 100.0)]);
+    t.row(&["LV-peri".into(), format!("{:.6}", b.lv_peri * 1e6), format!("{:.2}%", lv * 100.0)]);
+    t.row(&["RPU + H-tree".into(), format!("{:.6}", b.rpu_htree * 1e6), format!("{:.2}%", rpu * 100.0)]);
+    let (lo, hi) = die_budget_mm2();
+    format!(
+        "Table II — area breakdown per plane:\n{}\n256-plane die array: {:.2} mm2 (budget {:.1}-{:.1} mm2) — fits under array: {}\n",
+        t.render(),
+        die_array_mm2(),
+        lo,
+        hi,
+        b.fits_under_array()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = render();
+        assert!(s.contains("HV-peri"));
+        assert!(s.contains("LV-peri"));
+        assert!(s.contains("RPU + H-tree"));
+        assert!(s.contains("fits under array: true"));
+    }
+
+    #[test]
+    fn die_within_budget() {
+        let (lo, hi) = die_budget_mm2();
+        let a = die_array_mm2();
+        assert!(a < hi, "array {a:.2} exceeds budget high {hi:.2}");
+        assert!(a < lo * 1.2, "array should sit near/below the low budget");
+    }
+}

@@ -1,0 +1,8 @@
+//! GPU baseline models (paper §V-B): 4×RTX4090 running vLLM and 4×A100
+//! driven through the AttAcc simulator. Single-batch decode is memory-
+//! bandwidth-bound, so both reduce to calibrated rooflines with
+//! tensor-parallel communication overhead and a VRAM-capacity (OOM) check.
+
+pub mod roofline;
+
+pub use roofline::{a100x4_attacc, rtx4090x4_vllm, GpuSystem};

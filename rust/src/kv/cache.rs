@@ -1,0 +1,166 @@
+//! KV-cache layout and append path in the SLC region (paper Fig. 10d):
+//! the initial KV arrives from the GPU over PCIe, per-token `k`/`v`
+//! vectors append during generation, and reads stripe across the SLC
+//! planes for dMVM.
+
+use crate::config::SystemConfig;
+use crate::llm::model_config::ModelShape;
+use anyhow::{bail, Result};
+
+/// One sequence's cache state.
+#[derive(Debug, Clone)]
+pub struct SequenceCache {
+    pub seq_id: u64,
+    /// Tokens currently cached.
+    pub tokens: usize,
+    /// Bytes consumed in the SLC region.
+    pub bytes: u64,
+}
+
+/// Manager for the SLC KV region.
+pub struct KvCacheManager {
+    /// Usable SLC capacity (bytes).
+    pub capacity: u64,
+    /// KV bytes per token for the bound model.
+    pub per_token: u64,
+    used: u64,
+    sequences: Vec<SequenceCache>,
+    /// Cumulative bytes ever written (endurance accounting).
+    total_written: u64,
+}
+
+impl KvCacheManager {
+    pub fn new(sys: &SystemConfig, model: &ModelShape) -> KvCacheManager {
+        let slc_dies =
+            (sys.org.channels * sys.org.ways_per_channel * sys.org.slc_dies_per_way) as u64;
+        let plane_bytes = (sys.plane.n_row * sys.plane.n_col * sys.plane.n_stack) as u64 / 8; // SLC: 1 bit/cell
+        let capacity = slc_dies * sys.org.planes_per_die as u64 * plane_bytes;
+        KvCacheManager {
+            capacity,
+            per_token: model.kv_bytes_per_token(1.0) as u64,
+            used: 0,
+            sequences: Vec::new(),
+            total_written: 0,
+        }
+    }
+
+    /// Admit a sequence with `initial_tokens` of prefilled KV.
+    pub fn admit(&mut self, seq_id: u64, initial_tokens: usize) -> Result<()> {
+        let bytes = self.per_token * initial_tokens as u64;
+        if self.used + bytes > self.capacity {
+            bail!("KV region full: {} + {} > {}", self.used, bytes, self.capacity);
+        }
+        if self.sequences.iter().any(|s| s.seq_id == seq_id) {
+            bail!("sequence {seq_id} already admitted");
+        }
+        self.used += bytes;
+        self.total_written += bytes;
+        self.sequences.push(SequenceCache { seq_id, tokens: initial_tokens, bytes });
+        Ok(())
+    }
+
+    /// Append one generated token's k/v.
+    pub fn append(&mut self, seq_id: u64) -> Result<()> {
+        let per = self.per_token;
+        if self.used + per > self.capacity {
+            bail!("KV region full on append");
+        }
+        let seq = self
+            .sequences
+            .iter_mut()
+            .find(|s| s.seq_id == seq_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq_id}"))?;
+        seq.tokens += 1;
+        seq.bytes += per;
+        self.used += per;
+        self.total_written += per;
+        Ok(())
+    }
+
+    /// Release a finished sequence, reclaiming its space.
+    pub fn release(&mut self, seq_id: u64) -> Result<()> {
+        let idx = self
+            .sequences
+            .iter()
+            .position(|s| s.seq_id == seq_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq_id}"))?;
+        let seq = self.sequences.swap_remove(idx);
+        self.used -= seq.bytes;
+        Ok(())
+    }
+
+    pub fn context_len(&self, seq_id: u64) -> Option<usize> {
+        self.sequences.iter().find(|s| s.seq_id == seq_id).map(|s| s.tokens)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn total_written(&self) -> u64 {
+        self.total_written
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.sequences.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    fn mgr() -> KvCacheManager {
+        KvCacheManager::new(&table1_system(), &OptModel::Opt30b.shape())
+    }
+
+    #[test]
+    fn admit_append_release_conserves_space() {
+        let mut m = mgr();
+        assert_eq!(m.used(), 0);
+        m.admit(1, 1024).unwrap();
+        let after_admit = m.used();
+        assert_eq!(after_admit, 1024 * m.per_token);
+        for _ in 0..10 {
+            m.append(1).unwrap();
+        }
+        assert_eq!(m.context_len(1), Some(1034));
+        m.release(1).unwrap();
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.active_sequences(), 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut m = mgr();
+        let max_tokens = (m.capacity / m.per_token) as usize;
+        assert!(m.admit(1, max_tokens + 1).is_err());
+        m.admit(2, max_tokens).unwrap();
+        assert!(m.append(2).is_err());
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut m = mgr();
+        m.admit(1, 10).unwrap();
+        assert!(m.admit(1, 10).is_err());
+    }
+
+    #[test]
+    fn written_bytes_accumulate_past_release() {
+        let mut m = mgr();
+        m.admit(1, 100).unwrap();
+        m.release(1).unwrap();
+        m.admit(2, 100).unwrap();
+        assert_eq!(m.total_written(), 200 * m.per_token);
+    }
+
+    #[test]
+    fn slc_capacity_holds_long_contexts() {
+        // The Table-I SLC region holds far more than one 2K-token context.
+        let m = mgr();
+        assert!(m.capacity / m.per_token > 10_000);
+    }
+}

@@ -1,0 +1,13 @@
+//! KV-cache management in the SLC region (paper §IV-B, Fig. 10d): layout
+//! and append path, the initial-KV write-overhead analysis, and the
+//! endurance / lifetime projection under retention-relaxed management.
+
+pub mod cache;
+pub mod lifetime;
+pub mod wear;
+pub mod write_overhead;
+
+pub use cache::KvCacheManager;
+pub use lifetime::{lifetime_years, LifetimeReport};
+pub use wear::WearLeveler;
+pub use write_overhead::{break_even_tokens, initial_kv_write_time};

@@ -1,0 +1,64 @@
+//! Initial KV-cache write overhead and break-even analysis (paper §IV-B):
+//! moving the GPU-computed KV of the input tokens into the SLC region
+//! costs ~120 ms for W8A8 OPT-30B at 1K tokens; generating ≥12 tokens
+//! amortizes it against the per-token win over 4×RTX4090.
+
+use crate::config::SystemConfig;
+use crate::llm::model_config::ModelShape;
+
+/// Sustained SLC sequential-write bandwidth of the device (bytes/s).
+/// Paper [19]: commercial SLC NAND sustains 4.8–6 GB/s.
+pub const SLC_SEQ_WRITE_BW: f64 = 5.87e9;
+
+/// Time to land the initial KV cache of `tokens` input tokens, limited by
+/// the lesser of the channel-aggregate bus and SLC program throughput.
+pub fn initial_kv_write_time(sys: &SystemConfig, model: &ModelShape, tokens: usize) -> f64 {
+    let bytes = model.kv_bytes(tokens, 1.0);
+    let channel_bw = sys.org.channels as f64 * sys.ctrl.channel_bus_bw;
+    let bw = channel_bw.min(SLC_SEQ_WRITE_BW);
+    bytes / bw
+}
+
+/// Tokens needed to amortize the initial write given the per-token
+/// advantage over the GPU baseline.
+pub fn break_even_tokens(write_time: f64, tpot_gpu: f64, tpot_flash: f64) -> usize {
+    assert!(tpot_gpu > tpot_flash, "flash must win per-token to break even");
+    (write_time / (tpot_gpu - tpot_flash)).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    #[test]
+    fn opt30b_1k_write_near_120ms() {
+        // Paper §IV-B: "the initial KV cache write for W8A8 OPT-30B with
+        // 1K input tokens can be completed in 120 ms".
+        let t = initial_kv_write_time(&table1_system(), &OptModel::Opt30b.shape(), 1024);
+        assert!((0.10..=0.14).contains(&t), "write time = {t:.3} s");
+    }
+
+    #[test]
+    fn break_even_near_12_tokens() {
+        // Paper §IV-B: 10 ms per-token win → >12 tokens amortize 120 ms.
+        let n = break_even_tokens(0.120, 17.0e-3, 7.0e-3);
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn write_time_scales_with_tokens() {
+        let sys = table1_system();
+        let m = OptModel::Opt30b.shape();
+        let t1 = initial_kv_write_time(&sys, &m, 1024);
+        let t2 = initial_kv_write_time(&sys, &m, 2048);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "flash must win")]
+    fn break_even_requires_advantage() {
+        break_even_tokens(0.1, 5e-3, 7e-3);
+    }
+}

@@ -1,0 +1,55 @@
+//! # flashpim
+//!
+//! A reproduction of *"Dissecting and Re-architecting 3D NAND Flash PIM
+//! Arrays for Efficient Single-Batch Token Generation in LLMs"* (CS.AR 2025).
+//!
+//! The crate implements, from scratch, every system the paper describes or
+//! depends on:
+//!
+//! * [`circuit`] — the RC/Horowitz circuit model behind the plane-size
+//!   design-space exploration (paper Eqs. 3–6, Fig. 6).
+//! * [`dse`] — the design-space sweep and plane selection (`256×2048×128`).
+//! * [`sim`] — a discrete-event simulation core used by the SSD model.
+//! * [`nand`] — the 3D NAND hierarchy (channel/way/die/plane, SLC/QLC).
+//! * [`bus`] — shared-bus and H-tree intra-die interconnects with RPUs
+//!   (Figs. 7–9).
+//! * [`pim`] — sMVM/dMVM execution pipelines (inbound I/O, PIM, outbound).
+//! * [`tiling`] — the tiling/mapping search across the flash hierarchy
+//!   (Fig. 11–12).
+//! * [`llm`] — OPT-family model shapes and the decoder-block operation
+//!   schedule for token generation (Fig. 10).
+//! * [`kv`] — the SLC KV-cache manager, endurance, and lifetime analysis.
+//! * [`gpu`] — the GPU baselines (4×RTX4090 + vLLM, 4×A100 + AttAcc).
+//! * [`area`] — the peri-under-array area model (Table II).
+//! * [`controller`] — SSD-controller ARM cores (LN/softmax) and PCIe.
+//! * [`coordinator`] — the serving coordinator: request router, offload
+//!   scheduler, generation loop, metrics.
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes the functional model.
+//! * [`exp`] — one driver per paper figure/table, shared by the CLI and the
+//!   benches.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod area;
+pub mod bus;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod dse;
+pub mod exp;
+pub mod gpu;
+pub mod kv;
+pub mod llm;
+pub mod nand;
+pub mod pim;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

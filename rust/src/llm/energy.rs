@@ -1,0 +1,168 @@
+//! Per-token energy rollup — the energy counterpart of
+//! [`super::schedule::TokenSchedule`]. Combines the circuit model's
+//! per-op PIM energy (Eq. 6, Fig. 6b) with bus-transfer and controller
+//! energy to estimate J/token, and compares against a GPU baseline —
+//! the paper's cost argument in energy terms.
+
+use super::layers::{decoder_block_ops, head_ops, BlockOp};
+use super::model_config::ModelShape;
+use crate::circuit::{PimEnergy, TechParams};
+use crate::config::SystemConfig;
+use crate::pim::op::MvmShape;
+
+/// Energy constants beyond the plane model.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyCosts {
+    /// Bus transfer energy per byte (J/B) — on-package flash bus.
+    pub bus_per_byte: f64,
+    /// ARM-core energy per element pass (J) for LN/softmax in FP16.
+    pub core_per_elem: f64,
+    /// RPU energy per INT16 MAC (J).
+    pub rpu_per_mac: f64,
+}
+
+impl Default for EnergyCosts {
+    fn default() -> Self {
+        EnergyCosts { bus_per_byte: 5.0e-12, core_per_elem: 50.0e-12, rpu_per_mac: 0.4e-12 }
+    }
+}
+
+/// Per-token energy breakdown (joules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TokenEnergy {
+    pub pim: f64,
+    pub bus: f64,
+    pub rpu: f64,
+    pub cores: f64,
+}
+
+impl TokenEnergy {
+    pub fn total(&self) -> f64 {
+        self.pim + self.bus + self.rpu + self.cores
+    }
+}
+
+/// Energy estimator.
+pub struct EnergySchedule {
+    pub sys: SystemConfig,
+    pub model: ModelShape,
+    pub costs: EnergyCosts,
+    /// Per-8-bit-op plane energy (memoized once; Eq. 6 at α = 0.5).
+    e_op: f64,
+}
+
+impl EnergySchedule {
+    pub fn new(sys: &SystemConfig, tech: &TechParams, model: ModelShape) -> EnergySchedule {
+        let e_op = PimEnergy::of(&sys.plane, tech, 128, 0.5).total_op(sys.input_bits);
+        EnergySchedule { sys: sys.clone(), model, costs: EnergyCosts::default(), e_op }
+    }
+
+    fn smvm_energy(&self, shape: MvmShape) -> TokenEnergy {
+        let tiles = shape.tiles(self.sys.tile_rows(), self.sys.tile_cols()) as f64;
+        let pim = tiles * self.e_op;
+        // Input broadcast + output vectors over the channel buses.
+        let bytes = shape.m as f64 + 2.0 * shape.n as f64;
+        TokenEnergy { pim, bus: bytes * self.costs.bus_per_byte, ..Default::default() }
+    }
+
+    fn op_energy(&self, op: &BlockOp, l_ctx: usize) -> TokenEnergy {
+        let mut e = TokenEnergy::default();
+        match op {
+            BlockOp::Smvm { shape, .. } => {
+                let s = self.smvm_energy(*shape);
+                e.pim += s.pim;
+                e.bus += s.bus;
+            }
+            BlockOp::DmvmQk { heads, d_head } | BlockOp::DmvmSv { heads, d_head } => {
+                let macs = (*heads * l_ctx * d_head) as f64;
+                e.rpu += macs * self.costs.rpu_per_mac;
+                e.bus += (*heads * l_ctx) as f64 * 2.0 * self.costs.bus_per_byte;
+            }
+            BlockOp::Softmax { heads } => {
+                e.cores += (*heads * l_ctx) as f64 * self.costs.core_per_elem;
+            }
+            BlockOp::LayerNorm { d } => {
+                e.cores += *d as f64 * self.costs.core_per_elem;
+            }
+        }
+        e
+    }
+
+    /// Full-token energy at context length `l_ctx`.
+    pub fn token_energy(&self, l_ctx: usize) -> TokenEnergy {
+        let mut e = TokenEnergy::default();
+        for op in decoder_block_ops(&self.model) {
+            let o = self.op_energy(&op, l_ctx);
+            e.pim += o.pim;
+            e.bus += o.bus;
+            e.rpu += o.rpu;
+            e.cores += o.cores;
+        }
+        let layers = self.model.layers as f64;
+        e.pim *= layers;
+        e.bus *= layers;
+        e.rpu *= layers;
+        e.cores *= layers;
+        for op in head_ops(&self.model) {
+            let o = self.op_energy(&op, l_ctx);
+            e.pim += o.pim;
+            e.bus += o.bus;
+            e.rpu += o.rpu;
+            e.cores += o.cores;
+        }
+        e
+    }
+
+    /// GPU-side energy per token for comparison: HBM traffic at
+    /// ~7 pJ/byte plus baseline board power over the TPOT.
+    pub fn gpu_energy_per_token(&self, tpot: f64, idle_power_w: f64) -> f64 {
+        let traffic = self.model.weight_bytes(1.0);
+        traffic * 7.0e-12 + idle_power_w * tpot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    fn sched(m: OptModel) -> EnergySchedule {
+        EnergySchedule::new(&table1_system(), &TechParams::default(), m.shape())
+    }
+
+    #[test]
+    fn opt30b_token_energy_sub_joule() {
+        // ~58K tiles × ~20 nJ ≈ 1 mJ of PIM energy — orders below a GPU.
+        let e = sched(OptModel::Opt30b).token_energy(1024);
+        assert!(e.total() > 1e-5 && e.total() < 1e-1, "total {:e}", e.total());
+        assert!(e.pim > 0.0 && e.bus > 0.0 && e.rpu > 0.0 && e.cores > 0.0);
+    }
+
+    #[test]
+    fn energy_scales_with_model_size() {
+        let small = sched(OptModel::Opt6_7b).token_energy(1024).total();
+        let big = sched(OptModel::Opt175b).token_energy(1024).total();
+        assert!(big > 4.0 * small);
+    }
+
+    #[test]
+    fn dmvm_and_softmax_energy_grow_with_context() {
+        let s = sched(OptModel::Opt30b);
+        let a = s.token_energy(512);
+        let b = s.token_energy(4096);
+        assert!(b.rpu > a.rpu);
+        assert!(b.cores > a.cores);
+        assert!((b.pim - a.pim).abs() < 1e-12, "sMVM energy is context-free");
+    }
+
+    #[test]
+    fn flash_beats_gpu_energy_per_token() {
+        // The cost argument: flash PIM energy/token ≪ 4×RTX4090
+        // (4 × ~450 W board power over a ~17 ms token).
+        let s = sched(OptModel::Opt30b);
+        let flash = s.token_energy(1536).total();
+        let gpu = s.gpu_energy_per_token(17e-3, 4.0 * 450.0);
+        assert!(flash < gpu / 10.0, "flash {flash:e} vs gpu {gpu:e}");
+    }
+}

@@ -1,0 +1,104 @@
+//! The decoder-block operation graph (paper Fig. 10a–c) and its mapping
+//! onto compute units: sMVMs to the QLC PIM arrays, dMVMs to the SLC
+//! region's RPUs, LN/softmax to the controller cores.
+
+use super::model_config::ModelShape;
+use crate::pim::op::MvmShape;
+
+/// One operation in a decoder block's sequential schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockOp {
+    /// LayerNorm over `d` elements (controller cores, FP16).
+    LayerNorm { d: usize },
+    /// Static MVM on the QLC PIM arrays.
+    Smvm { shape: MvmShape, label: &'static str },
+    /// `QK^T` over all heads (SLC RPUs); `l` is the current context length.
+    DmvmQk { heads: usize, d_head: usize },
+    /// Softmax over each head's `l` scores (controller cores, FP16).
+    Softmax { heads: usize },
+    /// `SV` row-wise product over all heads (SLC RPUs).
+    DmvmSv { heads: usize, d_head: usize },
+}
+
+impl BlockOp {
+    /// Short category used by the Fig. 14b breakdown.
+    pub fn category(&self) -> &'static str {
+        match self {
+            BlockOp::LayerNorm { .. } => "ln",
+            BlockOp::Smvm { .. } => "smvm",
+            BlockOp::DmvmQk { .. } | BlockOp::DmvmSv { .. } => "dmvm",
+            BlockOp::Softmax { .. } => "softmax",
+        }
+    }
+}
+
+/// The sequential op list of one decoder block (pre-LN OPT ordering):
+/// LN → QKV → QK^T → softmax → SV → O-proj → LN → FFN1 → FFN2.
+/// Residual adds ride along with the projections (negligible time on the
+/// cores, absorbed into LN accounting as in the paper's Fig. 14b).
+pub fn decoder_block_ops(m: &ModelShape) -> Vec<BlockOp> {
+    let d = m.d_model;
+    vec![
+        BlockOp::LayerNorm { d },
+        BlockOp::Smvm { shape: MvmShape::new(d, 3 * d), label: "qkv" },
+        BlockOp::DmvmQk { heads: m.heads, d_head: m.d_head() },
+        BlockOp::Softmax { heads: m.heads },
+        BlockOp::DmvmSv { heads: m.heads, d_head: m.d_head() },
+        BlockOp::Smvm { shape: MvmShape::new(d, d), label: "o_proj" },
+        BlockOp::LayerNorm { d },
+        BlockOp::Smvm { shape: MvmShape::new(d, m.d_ffn), label: "ffn1" },
+        BlockOp::Smvm { shape: MvmShape::new(m.d_ffn, d), label: "ffn2" },
+    ]
+}
+
+/// Final ops after the last block: closing LN + LM head projection.
+pub fn head_ops(m: &ModelShape) -> Vec<BlockOp> {
+    vec![
+        BlockOp::LayerNorm { d: m.d_model },
+        BlockOp::Smvm { shape: MvmShape::new(m.d_model, m.vocab), label: "lm_head" },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::model_config::OptModel;
+
+    #[test]
+    fn block_has_four_smvms() {
+        let ops = decoder_block_ops(&OptModel::Opt30b.shape());
+        let smvms = ops.iter().filter(|o| o.category() == "smvm").count();
+        assert_eq!(smvms, 4); // qkv, o, ffn1, ffn2
+    }
+
+    #[test]
+    fn block_weight_total_matches_shape_params() {
+        // Sum of sMVM weights × layers + vocab ≈ params().
+        let m = OptModel::Opt30b.shape();
+        let per_block: usize = decoder_block_ops(&m)
+            .iter()
+            .filter_map(|o| match o {
+                BlockOp::Smvm { shape, .. } => Some(shape.weights()),
+                _ => None,
+            })
+            .sum();
+        let total = per_block as u64 * m.layers as u64
+            + head_ops(&m)
+                .iter()
+                .filter_map(|o| match o {
+                    BlockOp::Smvm { shape, .. } => Some(shape.weights() as u64),
+                    _ => None,
+                })
+                .sum::<u64>();
+        assert_eq!(total, m.params());
+    }
+
+    #[test]
+    fn attention_ops_in_order() {
+        let ops = decoder_block_ops(&OptModel::Opt6_7b.shape());
+        let cats: Vec<&str> = ops.iter().map(|o| o.category()).collect();
+        let qk = cats.iter().position(|c| *c == "dmvm").unwrap();
+        assert_eq!(cats[qk + 1], "softmax");
+        assert_eq!(cats[qk + 2], "dmvm");
+    }
+}

@@ -1,0 +1,15 @@
+//! LLM model shapes and the per-token operation schedule (paper §IV,
+//! Fig. 10): OPT-family configurations, the decoder-block layer graph,
+//! and the W8A8 quantization scheme the PIM arrays assume.
+
+pub mod energy;
+pub mod layers;
+pub mod model_config;
+pub mod quant;
+pub mod schedule;
+
+pub use energy::{EnergySchedule, TokenEnergy};
+pub use layers::{BlockOp, decoder_block_ops};
+pub use model_config::{ModelShape, OptModel};
+pub use quant::QuantSpec;
+pub use schedule::TokenSchedule;

@@ -1,0 +1,163 @@
+//! OPT-family model shapes (paper §V-B benchmarks: OPT-6.7B … OPT-175B)
+//! plus the reference models of Fig. 1a.
+
+/// Architectural shape of a decoder-only LLM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelShape {
+    pub name: String,
+    /// Decoder blocks (`N_B`).
+    pub layers: usize,
+    /// Hidden dimension (`d_m`).
+    pub d_model: usize,
+    /// Attention heads (`N_H`).
+    pub heads: usize,
+    /// FFN inner dimension (4 × d_m for OPT).
+    pub d_ffn: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    /// Head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Total parameter count (decoder blocks + embeddings/LM head).
+    ///
+    /// Per block: QKV (3 d²) + O (d²) + FFN (2 · d · d_ffn) + LN/bias
+    /// (≈ small, ignored); embeddings: vocab × d (tied LM head).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_block = 4 * d * d + 2 * d * self.d_ffn as u64;
+        self.layers as u64 * per_block + self.vocab as u64 * d
+    }
+
+    /// Weight bytes at `bytes_per_param` (2 for FP16, 1 for W8A8).
+    pub fn weight_bytes(&self, bytes_per_param: f64) -> f64 {
+        self.params() as f64 * bytes_per_param
+    }
+
+    /// KV-cache bytes for `tokens` context at `bytes_per_elem`.
+    pub fn kv_bytes(&self, tokens: usize, bytes_per_elem: f64) -> f64 {
+        2.0 * self.layers as f64 * self.d_model as f64 * tokens as f64 * bytes_per_elem
+    }
+
+    /// KV bytes appended per generated token.
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: f64) -> f64 {
+        2.0 * self.layers as f64 * self.d_model as f64 * bytes_per_elem
+    }
+}
+
+/// The OPT family used in Fig. 14a.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptModel {
+    Opt6_7b,
+    Opt13b,
+    Opt30b,
+    Opt66b,
+    Opt175b,
+}
+
+impl OptModel {
+    pub const ALL: [OptModel; 5] =
+        [OptModel::Opt6_7b, OptModel::Opt13b, OptModel::Opt30b, OptModel::Opt66b, OptModel::Opt175b];
+
+    pub fn shape(self) -> ModelShape {
+        // (layers, d_model, heads) from the OPT paper (Zhang et al. 2022).
+        let (name, layers, d_model, heads) = match self {
+            OptModel::Opt6_7b => ("OPT-6.7B", 32, 4096, 32),
+            OptModel::Opt13b => ("OPT-13B", 40, 5120, 40),
+            OptModel::Opt30b => ("OPT-30B", 48, 7168, 56),
+            OptModel::Opt66b => ("OPT-66B", 64, 9216, 72),
+            OptModel::Opt175b => ("OPT-175B", 96, 12288, 96),
+        };
+        ModelShape {
+            name: name.to_string(),
+            layers,
+            d_model,
+            heads,
+            d_ffn: 4 * d_model,
+            vocab: 50272,
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OptModel> {
+        let k = s.to_ascii_lowercase();
+        Some(match k.as_str() {
+            "opt-6.7b" | "6.7b" => OptModel::Opt6_7b,
+            "opt-13b" | "13b" => OptModel::Opt13b,
+            "opt-30b" | "30b" => OptModel::Opt30b,
+            "opt-66b" | "66b" => OptModel::Opt66b,
+            "opt-175b" | "175b" => OptModel::Opt175b,
+            _ => return None,
+        })
+    }
+}
+
+/// Reference (non-OPT) shapes quoted in Fig. 1a / §I.
+pub fn fig1a_models() -> Vec<(String, f64)> {
+    // (name, parameter count)
+    vec![
+        ("Mistral-7B".into(), 7.0e9),
+        ("OPT-30B".into(), OptModel::Opt30b.shape().params() as f64),
+        ("Mixtral-8x7B (47B)".into(), 47.0e9),
+        ("OPT-66B".into(), OptModel::Opt66b.shape().params() as f64),
+        ("GPT-3.5 (175B)".into(), 175.0e9),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt30b_shape_matches_paper() {
+        // Paper §IV-A: N_B = 48, d_m = 7168 for OPT-30B.
+        let s = OptModel::Opt30b.shape();
+        assert_eq!(s.layers, 48);
+        assert_eq!(s.d_model, 7168);
+        assert_eq!(s.heads, 56);
+        assert_eq!(s.d_head(), 128);
+    }
+
+    #[test]
+    fn param_counts_near_nominal() {
+        // Each model's computed parameter count is within 15 % of its name.
+        let nominal = [6.7e9, 13e9, 30e9, 66e9, 175e9];
+        for (m, n) in OptModel::ALL.iter().zip(nominal) {
+            let p = m.shape().params() as f64;
+            let err = (p - n).abs() / n;
+            assert!(err < 0.15, "{}: {p:.3e} vs {n:.1e} ({:.1}%)", m.shape().name, err * 100.0);
+        }
+    }
+
+    #[test]
+    fn fig1a_mixtral_needs_94gib_fp16() {
+        // Paper §I: 47B params × 2 B = 94 GiB-ish (they quote GiB loosely).
+        let bytes = 47.0e9 * 2.0;
+        assert!(bytes > 80e9 && bytes < 100e9);
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let s = OptModel::Opt30b.shape();
+        // Per-token KV (INT8): 2 × 48 × 7168 = 688,128 B.
+        assert_eq!(s.kv_bytes_per_token(1.0) as u64, 688_128);
+        assert_eq!(s.kv_bytes(1024, 1.0) as u64, 688_128 * 1024);
+    }
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(OptModel::from_name("OPT-30B"), Some(OptModel::Opt30b));
+        assert_eq!(OptModel::from_name("175b"), Some(OptModel::Opt175b));
+        assert_eq!(OptModel::from_name("bert"), None);
+    }
+
+    #[test]
+    fn d_head_is_128_for_all() {
+        for m in OptModel::ALL {
+            assert_eq!(m.shape().d_head(), 128, "{}", m.shape().name);
+        }
+    }
+}

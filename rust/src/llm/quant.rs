@@ -1,0 +1,70 @@
+//! W8A8 quantization spec (paper §IV-A adopts SmoothQuant-style W8A8 for
+//! the PIM arrays; RPUs compute `QK^T`/`SV` in INT16; controller cores run
+//! softmax/LN in FP16).
+//!
+//! The functional counterpart (scales, nibble decomposition) lives in
+//! `python/compile/quant.py`; this module carries the storage/bandwidth
+//! accounting the simulators need.
+
+/// Datatype widths used across the system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    /// Weight bits stored in flash (8 → two QLC cells per weight).
+    pub weight_bits: usize,
+    /// Activation bits streamed bit-serially into the arrays.
+    pub act_bits: usize,
+    /// KV-cache element bits stored in SLC.
+    pub kv_bits: usize,
+    /// RPU operand bits (Table I: INT16).
+    pub rpu_bits: usize,
+    /// Controller-core element bits (FP16).
+    pub core_bits: usize,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec { weight_bits: 8, act_bits: 8, kv_bits: 8, rpu_bits: 16, core_bits: 16 }
+    }
+}
+
+impl QuantSpec {
+    pub fn w8a8() -> QuantSpec {
+        QuantSpec::default()
+    }
+
+    /// Bytes per weight.
+    pub fn weight_bytes(&self) -> f64 {
+        self.weight_bits as f64 / 8.0
+    }
+
+    /// QLC cells needed per weight.
+    pub fn cells_per_weight(&self, bits_per_cell: usize) -> usize {
+        self.weight_bits.div_ceil(bits_per_cell)
+    }
+
+    /// Bit-serial input passes per activation.
+    pub fn input_passes(&self) -> usize {
+        self.act_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn w8a8_uses_two_qlc_cells_per_weight() {
+        // Paper §II-B: an 8-bit weight spans two QLC cells (two BLs).
+        assert_eq!(QuantSpec::w8a8().cells_per_weight(4), 2);
+    }
+
+    #[test]
+    fn eight_input_passes() {
+        assert_eq!(QuantSpec::w8a8().input_passes(), 8);
+    }
+
+    #[test]
+    fn weight_byte_accounting() {
+        assert_eq!(QuantSpec::w8a8().weight_bytes(), 1.0);
+    }
+}

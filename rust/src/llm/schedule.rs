@@ -1,0 +1,214 @@
+//! Per-token execution schedule and TPOT estimation on the flash PIM
+//! device (paper Fig. 14). Chains the decoder-block ops through the
+//! per-op cost models:
+//!
+//! * sMVM → best tiling scheme from [`crate::tiling::search_best`]
+//! * dMVM → [`crate::pim::DmvmEngine`] with head-level die parallelism
+//! * LN / softmax → [`crate::controller::ArmCores`]
+//!
+//! Ops within a block are data-dependent and run sequentially; the
+//! breakdown by category reproduces Fig. 14b.
+
+use super::layers::{decoder_block_ops, head_ops, BlockOp};
+use super::model_config::ModelShape;
+use crate::circuit::TechParams;
+use crate::config::SystemConfig;
+use crate::controller::ArmCores;
+use crate::nand::NandTiming;
+use crate::pim::dmvm::DmvmEngine;
+use crate::pim::op::MvmShape;
+use crate::sim::SimTime;
+use crate::tiling::{search_best, TilingCostModel};
+use std::collections::HashMap;
+
+/// Per-category time breakdown of one generated token (Fig. 14b).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TokenBreakdown {
+    pub smvm: f64,
+    pub dmvm: f64,
+    pub ln: f64,
+    pub softmax: f64,
+}
+
+impl TokenBreakdown {
+    pub fn total(&self) -> f64 {
+        self.smvm + self.dmvm + self.ln + self.softmax
+    }
+}
+
+/// TPOT estimator for one model on one system configuration.
+pub struct TokenSchedule {
+    pub sys: SystemConfig,
+    pub model: ModelShape,
+    cost_model: TilingCostModel,
+    dmvm: DmvmEngine,
+    cores: ArmCores,
+    /// Memoized best-scheme total per sMVM shape.
+    smvm_cache: HashMap<MvmShape, f64>,
+    /// Memoized full-token breakdown per context length (§Perf: the
+    /// serving simulator queries step_time per generated token).
+    token_cache: HashMap<usize, TokenBreakdown>,
+    /// SLC dies available for dMVM head parallelism.
+    slc_dies: usize,
+}
+
+impl TokenSchedule {
+    pub fn new(sys: &SystemConfig, tech: &TechParams, model: ModelShape) -> TokenSchedule {
+        let timing = NandTiming::of_system(sys, tech);
+        let slc_timing = timing.clone();
+        TokenSchedule {
+            cost_model: TilingCostModel::new(sys, timing),
+            dmvm: DmvmEngine::new(sys, slc_timing, sys.org.planes_per_die),
+            cores: ArmCores::new(sys.ctrl),
+            smvm_cache: HashMap::new(),
+            token_cache: HashMap::new(),
+            slc_dies: sys.org.channels * sys.org.ways_per_channel * sys.org.slc_dies_per_way,
+            sys: sys.clone(),
+            model,
+        }
+    }
+
+    /// Best-mapping sMVM latency for a shape (memoized).
+    pub fn smvm_time(&mut self, shape: MvmShape) -> f64 {
+        if let Some(t) = self.smvm_cache.get(&shape) {
+            return *t;
+        }
+        let ranked = search_best(&self.cost_model, shape);
+        let t = ranked
+            .first()
+            .map(|r| r.cost.total().secs())
+            .expect("shape must be mappable on the Table-I organization");
+        self.smvm_cache.insert(shape, t);
+        t
+    }
+
+    /// dMVM (QK^T or SV) latency for all heads at context length `l`:
+    /// heads are spread one-or-two-per-die over the SLC dies (paper
+    /// §IV-B) and run in parallel; a die with several heads serializes.
+    fn dmvm_time(&self, heads: usize, d_head: usize, l: usize, is_sv: bool) -> f64 {
+        let heads_per_die = heads.div_ceil(self.slc_dies).max(1);
+        let one = if is_sv { self.dmvm.sv(l, d_head).total } else { self.dmvm.qk(l, d_head).total };
+        heads_per_die as f64 * one.secs()
+    }
+
+    /// Per-token breakdown at context length `l_ctx` (Fig. 14b).
+    /// Memoized: the breakdown is a pure function of `l_ctx`.
+    pub fn token_breakdown(&mut self, l_ctx: usize) -> TokenBreakdown {
+        if let Some(b) = self.token_cache.get(&l_ctx) {
+            return b.clone();
+        }
+        let mut b = TokenBreakdown::default();
+        let model = self.model.clone();
+        let blocks = decoder_block_ops(&model);
+        // One block accumulated once, scaled by the layer count — every
+        // block is identical at a given context length (§Perf).
+        for op in &blocks {
+            self.accumulate(op, l_ctx, &mut b);
+        }
+        b.smvm *= model.layers as f64;
+        b.dmvm *= model.layers as f64;
+        b.ln *= model.layers as f64;
+        b.softmax *= model.layers as f64;
+        for op in head_ops(&model) {
+            self.accumulate(&op, l_ctx, &mut b);
+        }
+        self.token_cache.insert(l_ctx, b.clone());
+        b
+    }
+
+    fn accumulate(&mut self, op: &BlockOp, l_ctx: usize, b: &mut TokenBreakdown) {
+        match op {
+            BlockOp::LayerNorm { d } => b.ln += self.cores.ln_time(*d).secs(),
+            BlockOp::Smvm { shape, .. } => b.smvm += self.smvm_time(*shape),
+            BlockOp::DmvmQk { heads, d_head } => {
+                b.dmvm += self.dmvm_time(*heads, *d_head, l_ctx, false)
+            }
+            BlockOp::DmvmSv { heads, d_head } => {
+                b.dmvm += self.dmvm_time(*heads, *d_head, l_ctx, true)
+            }
+            BlockOp::Softmax { heads } => {
+                b.softmax += self.cores.softmax_time(*heads, l_ctx).secs()
+            }
+        }
+    }
+
+    /// Time-per-output-token at context length `l_ctx`.
+    pub fn tpot(&mut self, l_ctx: usize) -> f64 {
+        self.token_breakdown(l_ctx).total()
+    }
+
+    /// Mean TPOT over a generation run: prefill of `l_in` tokens already
+    /// cached, generating `l_out` tokens (context grows each step).
+    /// Sampled geometrically to stay fast.
+    pub fn mean_tpot(&mut self, l_in: usize, l_out: usize) -> f64 {
+        // Context grows linearly; TPOT is affine in l, so the midpoint is
+        // exact for the mean — sample three points to be safe.
+        let l0 = l_in;
+        let l1 = l_in + l_out / 2;
+        let l2 = l_in + l_out;
+        (self.tpot(l0) + 2.0 * self.tpot(l1) + self.tpot(l2)) / 4.0
+    }
+
+    /// Simulated wall-clock for one decode step (used by the serving
+    /// coordinator).
+    pub fn step_time(&mut self, l_ctx: usize) -> SimTime {
+        SimTime::from_secs(self.tpot(l_ctx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    fn sched(m: OptModel) -> TokenSchedule {
+        TokenSchedule::new(&table1_system(), &TechParams::default(), m.shape())
+    }
+
+    #[test]
+    fn opt30b_tpot_near_7ms() {
+        // Paper Fig. 5: TPOT of OPT-30B ≈ 7 ms on the proposed PIM.
+        let mut s = sched(OptModel::Opt30b);
+        let t = s.tpot(1024);
+        assert!((4.0e-3..=10.0e-3).contains(&t), "TPOT = {}", crate::util::units::fmt_time(t));
+    }
+
+    #[test]
+    fn smvm_component_independent_of_context() {
+        // Fig. 14b: sMVM and LN depend on model dims, not token length.
+        let mut s = sched(OptModel::Opt30b);
+        let b1 = s.token_breakdown(1024);
+        let b2 = s.token_breakdown(2048);
+        assert!((b1.smvm - b2.smvm).abs() < 1e-9);
+        assert!((b1.ln - b2.ln).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dmvm_and_softmax_grow_with_context() {
+        let mut s = sched(OptModel::Opt30b);
+        let b1 = s.token_breakdown(1024);
+        let b2 = s.token_breakdown(4096);
+        assert!(b2.dmvm > b1.dmvm);
+        assert!(b2.softmax > 2.0 * b1.softmax);
+    }
+
+    #[test]
+    fn tpot_monotone_in_model_size() {
+        let mut prev = 0.0;
+        for m in OptModel::ALL {
+            let t = sched(m).tpot(1024);
+            assert!(t > prev, "{}: {t}", m.shape().name);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn mean_tpot_between_endpoints() {
+        let mut s = sched(OptModel::Opt6_7b);
+        let lo = s.tpot(1024);
+        let hi = s.tpot(2048);
+        let mean = s.mean_tpot(1024, 1024);
+        assert!(mean >= lo && mean <= hi);
+    }
+}

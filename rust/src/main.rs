@@ -1,0 +1,4 @@
+//! `repro` CLI — entry point for the flashpim experiments.
+fn main() -> anyhow::Result<()> {
+    flashpim::cli::run(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,94 @@
+//! Addressing across the flash hierarchy: channel / way / die / plane.
+
+use crate::config::FlashOrgConfig;
+
+/// Address of a die.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DieAddr {
+    pub channel: usize,
+    pub way: usize,
+    pub die: usize,
+}
+
+impl DieAddr {
+    /// Linear index in channel-major order.
+    pub fn linear(&self, org: &FlashOrgConfig) -> usize {
+        (self.channel * org.ways_per_channel + self.way) * org.dies_per_way + self.die
+    }
+
+    pub fn from_linear(idx: usize, org: &FlashOrgConfig) -> DieAddr {
+        let die = idx % org.dies_per_way;
+        let rest = idx / org.dies_per_way;
+        let way = rest % org.ways_per_channel;
+        let channel = rest / org.ways_per_channel;
+        DieAddr { channel, way, die }
+    }
+}
+
+/// Address of a plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlaneAddr {
+    pub die: DieAddr,
+    pub plane: usize,
+}
+
+impl PlaneAddr {
+    pub fn new(channel: usize, way: usize, die: usize, plane: usize) -> PlaneAddr {
+        PlaneAddr { die: DieAddr { channel, way, die }, plane }
+    }
+
+    /// Linear index in channel-major order.
+    pub fn linear(&self, org: &FlashOrgConfig) -> usize {
+        self.die.linear(org) * org.planes_per_die + self.plane
+    }
+
+    pub fn from_linear(idx: usize, org: &FlashOrgConfig) -> PlaneAddr {
+        let plane = idx % org.planes_per_die;
+        let die = DieAddr::from_linear(idx / org.planes_per_die, org);
+        PlaneAddr { die, plane }
+    }
+}
+
+/// Iterate all die addresses in linear order.
+pub fn all_dies(org: &FlashOrgConfig) -> impl Iterator<Item = DieAddr> + '_ {
+    (0..org.total_dies()).map(move |i| DieAddr::from_linear(i, org))
+}
+
+/// Iterate all plane addresses in linear order.
+pub fn all_planes(org: &FlashOrgConfig) -> impl Iterator<Item = PlaneAddr> + '_ {
+    (0..org.total_planes()).map(move |i| PlaneAddr::from_linear(i, org))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+
+    #[test]
+    fn linear_roundtrip_dies() {
+        let org = table1_system().org;
+        for i in 0..org.total_dies() {
+            let a = DieAddr::from_linear(i, &org);
+            assert_eq!(a.linear(&org), i);
+            assert!(a.channel < org.channels);
+            assert!(a.way < org.ways_per_channel);
+            assert!(a.die < org.dies_per_way);
+        }
+    }
+
+    #[test]
+    fn linear_roundtrip_planes() {
+        let org = table1_system().org;
+        for i in (0..org.total_planes()).step_by(97) {
+            let a = PlaneAddr::from_linear(i, &org);
+            assert_eq!(a.linear(&org), i);
+        }
+    }
+
+    #[test]
+    fn iteration_counts() {
+        let org = table1_system().org;
+        assert_eq!(all_dies(&org).count(), 256);
+        assert_eq!(all_planes(&org).count(), 256 * 256);
+    }
+}

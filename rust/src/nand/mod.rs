@@ -1,0 +1,15 @@
+//! The 3D NAND flash hierarchy (paper Fig. 2): channels → ways (packages)
+//! → dies → planes, with SLC/QLC die partitioning (Fig. 10d), addressing,
+//! and operation timing derived from the circuit model.
+
+pub mod address;
+pub mod cell;
+pub mod organization;
+pub mod plane;
+pub mod timing;
+
+pub use address::{DieAddr, PlaneAddr};
+pub use cell::CellParams;
+pub use organization::FlashOrganization;
+pub use plane::PlaneState;
+pub use timing::NandTiming;

@@ -1,0 +1,119 @@
+//! The assembled flash device: all dies/planes with the QLC–SLC hybrid
+//! partition of Fig. 10d. Dies `0..slc_dies_per_way` of each way are the
+//! non-PIM SLC region (KV cache); the rest are PIM-enabled QLC (weights).
+
+use super::address::{DieAddr, PlaneAddr};
+use super::plane::PlaneState;
+use crate::config::{CellKind, FlashOrgConfig, PlaneConfig, SystemConfig};
+
+/// The whole flash device's plane states, indexed by linear plane address.
+pub struct FlashOrganization {
+    pub org: FlashOrgConfig,
+    pub qlc_plane: PlaneConfig,
+    pub slc_plane: PlaneConfig,
+    planes: Vec<PlaneState>,
+}
+
+impl FlashOrganization {
+    pub fn new(sys: &SystemConfig) -> FlashOrganization {
+        let org = sys.org;
+        let qlc_plane = sys.plane;
+        let slc_plane = PlaneConfig { cell: CellKind::Slc, ..sys.plane };
+        let planes = (0..org.total_planes())
+            .map(|i| {
+                let addr = PlaneAddr::from_linear(i, &org);
+                let cfg = if Self::die_is_slc(&org, addr.die) { slc_plane } else { qlc_plane };
+                PlaneState::new(cfg)
+            })
+            .collect();
+        FlashOrganization { org, qlc_plane, slc_plane, planes }
+    }
+
+    /// Whether a die belongs to the SLC (KV cache) region.
+    pub fn die_is_slc(org: &FlashOrgConfig, die: DieAddr) -> bool {
+        die.die < org.slc_dies_per_way
+    }
+
+    pub fn is_slc(&self, addr: PlaneAddr) -> bool {
+        Self::die_is_slc(&self.org, addr.die)
+    }
+
+    pub fn plane(&self, addr: PlaneAddr) -> &PlaneState {
+        &self.planes[addr.linear(&self.org)]
+    }
+
+    pub fn plane_mut(&mut self, addr: PlaneAddr) -> &mut PlaneState {
+        &mut self.planes[addr.linear(&self.org)]
+    }
+
+    /// All QLC (PIM) die addresses.
+    pub fn qlc_dies(&self) -> Vec<DieAddr> {
+        super::address::all_dies(&self.org).filter(|d| !Self::die_is_slc(&self.org, *d)).collect()
+    }
+
+    /// All SLC (KV) die addresses.
+    pub fn slc_dies(&self) -> Vec<DieAddr> {
+        super::address::all_dies(&self.org).filter(|d| Self::die_is_slc(&self.org, *d)).collect()
+    }
+
+    /// Total QLC capacity in bytes (weight storage).
+    pub fn qlc_capacity_bytes(&self) -> u64 {
+        self.qlc_dies().len() as u64
+            * self.org.planes_per_die as u64
+            * (self.qlc_plane.capacity_bits() as u64 / 8)
+    }
+
+    /// Total SLC capacity in bytes (KV-cache storage).
+    pub fn slc_capacity_bytes(&self) -> u64 {
+        self.slc_dies().len() as u64
+            * self.org.planes_per_die as u64
+            * (self.slc_plane.capacity_bits() as u64 / 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+
+    #[test]
+    fn table1_partition_counts() {
+        let f = FlashOrganization::new(&table1_system());
+        // 8 ch × 4 way × (2 SLC + 6 QLC) dies.
+        assert_eq!(f.slc_dies().len(), 8 * 4 * 2);
+        assert_eq!(f.qlc_dies().len(), 8 * 4 * 6);
+    }
+
+    #[test]
+    fn slc_planes_are_slc_cells() {
+        let f = FlashOrganization::new(&table1_system());
+        let slc_addr = PlaneAddr::new(0, 0, 0, 0); // die 0 < slc_dies_per_way=2
+        let qlc_addr = PlaneAddr::new(0, 0, 7, 0);
+        assert!(f.is_slc(slc_addr));
+        assert!(!f.is_slc(qlc_addr));
+        assert_eq!(f.plane(slc_addr).config.cell, CellKind::Slc);
+        assert_eq!(f.plane(qlc_addr).config.cell, CellKind::Qlc);
+    }
+
+    #[test]
+    fn capacities() {
+        let f = FlashOrganization::new(&table1_system());
+        // QLC: 192 dies × 256 planes × 256 Mb / 8 = 192 × 8 GiB... per-plane
+        // 2048·128·256·4 bits = 32 MiB.
+        let per_plane = (256usize * 2048 * 128 * 4 / 8) as u64;
+        assert_eq!(f.qlc_capacity_bytes(), 192 * 256 * per_plane);
+        // SLC plane stores 1/4 the bits of a QLC plane.
+        assert_eq!(f.slc_capacity_bytes(), 64 * 256 * per_plane / 4);
+        // Sanity: the device actually fits OPT-175B in W8A8 (175 GB).
+        assert!(f.qlc_capacity_bytes() > 175_000_000_000);
+    }
+
+    #[test]
+    fn slc_kv_region_32gib_order() {
+        // Paper §IV-B sizes the KV region at 32 GiB for the lifetime
+        // estimate; the Table-I SLC region is of that order.
+        let f = FlashOrganization::new(&table1_system());
+        let gib = f.slc_capacity_bytes() as f64 / (1u64 << 30) as f64;
+        assert!(gib >= 32.0 && gib <= 1024.0, "SLC region = {gib} GiB");
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-plane state: the page buffer, resident weight tiles (QLC PIM
+//! region) or KV pages (SLC region), and the busy timeline.
+
+use crate::config::PlaneConfig;
+use crate::sim::{Resource, SimTime};
+
+/// Identifier of a weight tile resident in a plane (set by the sMVM
+/// mapper): which operation and which (row-tile, col-tile) block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileId {
+    pub op: u32,
+    pub row_tile: u32,
+    pub col_tile: u32,
+}
+
+/// Mutable simulation state of one plane.
+#[derive(Debug)]
+pub struct PlaneState {
+    pub config: PlaneConfig,
+    /// Exclusive-use timeline (a plane does one op at a time).
+    pub busy: Resource,
+    /// Contents of the page buffer, if loaded (byte payload id + length).
+    page_buffer: Option<(u64, usize)>,
+    /// Weight tiles programmed into this plane (QLC PIM region).
+    tiles: Vec<TileId>,
+    /// Cumulative program count (endurance accounting, SLC region).
+    programs: u64,
+}
+
+impl PlaneState {
+    pub fn new(config: PlaneConfig) -> PlaneState {
+        PlaneState { config, busy: Resource::new(), page_buffer: None, tiles: Vec::new(), programs: 0 }
+    }
+
+    /// Load a page into the page buffer (completes a read).
+    pub fn latch_page(&mut self, payload_id: u64, len: usize) {
+        self.page_buffer = Some((payload_id, len));
+    }
+
+    pub fn page_buffer(&self) -> Option<(u64, usize)> {
+        self.page_buffer
+    }
+
+    /// Record a programmed tile (weight load).
+    pub fn program_tile(&mut self, tile: TileId) {
+        self.tiles.push(tile);
+        self.programs += 1;
+    }
+
+    pub fn tiles(&self) -> &[TileId] {
+        &self.tiles
+    }
+
+    pub fn programs(&self) -> u64 {
+        self.programs
+    }
+
+    /// Record a KV page program (no tile bookkeeping).
+    pub fn program_page(&mut self) {
+        self.programs += 1;
+    }
+
+    /// Schedule an exclusive op at `at` lasting `dur`; returns start time.
+    pub fn schedule(&mut self, at: SimTime, dur: SimTime) -> SimTime {
+        self.busy.acquire(at, dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::size_a_plane;
+
+    #[test]
+    fn page_buffer_latch() {
+        let mut p = PlaneState::new(size_a_plane());
+        assert!(p.page_buffer().is_none());
+        p.latch_page(42, 1024);
+        assert_eq!(p.page_buffer(), Some((42, 1024)));
+    }
+
+    #[test]
+    fn ops_serialize_on_plane() {
+        let mut p = PlaneState::new(size_a_plane());
+        let s1 = p.schedule(SimTime(0), SimTime(100));
+        let s2 = p.schedule(SimTime(10), SimTime(100));
+        assert_eq!(s1, SimTime(0));
+        assert_eq!(s2, SimTime(100));
+    }
+
+    #[test]
+    fn tile_bookkeeping() {
+        let mut p = PlaneState::new(size_a_plane());
+        p.program_tile(TileId { op: 0, row_tile: 1, col_tile: 2 });
+        p.program_tile(TileId { op: 0, row_tile: 1, col_tile: 3 });
+        assert_eq!(p.tiles().len(), 2);
+        assert_eq!(p.programs(), 2);
+    }
+}

@@ -1,0 +1,90 @@
+//! Flash operation timing for a configured system: bridges the circuit
+//! model (per-plane latencies) and the cell model (program) into the
+//! quantities the pipeline simulators consume.
+
+use super::cell::CellParams;
+use crate::circuit::{PlaneLatency, TechParams};
+use crate::config::{CellKind, PlaneConfig, SystemConfig};
+use crate::sim::SimTime;
+
+/// Pre-computed operation latencies for one plane geometry.
+#[derive(Debug, Clone)]
+pub struct NandTiming {
+    /// PIM dot-product op, full `input_bits` bit-serial pass (Eq. 3).
+    pub t_pim: SimTime,
+    /// Regular page read of the PIM (QLC) plane (Eq. 1).
+    pub t_read_qlc: SimTime,
+    /// Regular page read of an SLC plane with the same geometry.
+    pub t_read_slc: SimTime,
+    /// SLC page program (KV-cache append path).
+    pub t_program_slc: SimTime,
+    /// QLC page program (weight load path, offline).
+    pub t_program_qlc: SimTime,
+    /// Raw breakdown for reporting.
+    pub breakdown: PlaneLatency,
+}
+
+impl NandTiming {
+    /// Derive timing for `plane` under `tech`, with the system's input
+    /// bit-width.
+    pub fn derive(plane: &PlaneConfig, tech: &TechParams, input_bits: usize) -> NandTiming {
+        let lat = PlaneLatency::of(plane, tech);
+        let slc_plane = PlaneConfig { cell: CellKind::Slc, ..*plane };
+        let lat_slc = PlaneLatency::of(&slc_plane, tech);
+        NandTiming {
+            t_pim: SimTime::from_secs(lat.t_pim(input_bits)),
+            t_read_qlc: SimTime::from_secs(lat.t_read(CellKind::Qlc, tech)),
+            t_read_slc: SimTime::from_secs(lat_slc.t_read(CellKind::Slc, tech)),
+            t_program_slc: SimTime::from_secs(CellParams::of(CellKind::Slc).t_program),
+            t_program_qlc: SimTime::from_secs(CellParams::of(CellKind::Qlc).t_program),
+            breakdown: lat,
+        }
+    }
+
+    /// Derive from a full system config.
+    pub fn of_system(sys: &SystemConfig, tech: &TechParams) -> NandTiming {
+        NandTiming::derive(&sys.plane, tech, sys.input_bits)
+    }
+
+    /// Page size in bytes for a plane (one WL × BLS row of cells).
+    /// Table I: page size = 256 B for the Size A plane (2048 cells × 4 bit
+    /// per QLC cell / 8 bits per byte... the *PIM page* is what one BLS
+    /// activation exposes to the bitlines).
+    pub fn page_bytes(plane: &PlaneConfig) -> usize {
+        plane.n_col * plane.cell.bits_per_cell() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{size_a_plane, table1_system};
+
+    #[test]
+    fn size_a_page_is_1kib_qlc() {
+        // 2048 QLC cells × 4 bits = 1 KiB of raw data per page.
+        assert_eq!(NandTiming::page_bytes(&size_a_plane()), 1024);
+    }
+
+    #[test]
+    fn pim_op_near_2us() {
+        let sys = table1_system();
+        let t = NandTiming::of_system(&sys, &TechParams::default());
+        let s = t.t_pim.secs();
+        assert!((1.7e-6..=2.3e-6).contains(&s), "t_pim = {s}");
+    }
+
+    #[test]
+    fn slc_read_faster_than_qlc() {
+        let sys = table1_system();
+        let t = NandTiming::of_system(&sys, &TechParams::default());
+        assert!(t.t_read_slc < t.t_read_qlc);
+    }
+
+    #[test]
+    fn program_far_slower_than_read() {
+        let sys = table1_system();
+        let t = NandTiming::of_system(&sys, &TechParams::default());
+        assert!(t.t_program_slc.secs() > 10.0 * t.t_read_slc.secs());
+    }
+}

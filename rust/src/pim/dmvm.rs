@@ -1,0 +1,179 @@
+//! Dynamic MVM (`QK^T` and `SV`) on the SLC region (paper §IV-B, Fig. 13).
+//!
+//! Per head, `QK^T` is broadcast-`q` against the rows of the non-transposed
+//! `K` (L vector–vector multiplies), and `SV` uses the row-wise product
+//! (each element of `S` scattered for a vector-scalar multiply against a
+//! row of `V`), which keeps the dataflow insensitive to the growing
+//! context length `L`. Operand rows live in SLC page buffers; RPU pairs in
+//! the H-tree do the INT16 arithmetic. The three-stage pipeline replaces
+//! the PIM stage with KV-cache page reads (paper §V-A).
+
+use crate::bus::Rpu;
+use crate::config::SystemConfig;
+use crate::nand::NandTiming;
+use crate::sim::SimTime;
+
+/// One head's dMVM timing report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmvmReport {
+    /// Inbound: deliver q (or S) to the SLC dies.
+    pub inbound: SimTime,
+    /// KV page reads (the "PIM-stage" replacement).
+    pub kv_read: SimTime,
+    /// RPU compute + outbound through the H-tree.
+    pub compute_out: SimTime,
+    /// End-to-end (stages pipelined; inbound overlaps reads).
+    pub total: SimTime,
+}
+
+/// dMVM executor for the SLC region of one die.
+pub struct DmvmEngine {
+    pub sys: SystemConfig,
+    pub timing: NandTiming,
+    /// SLC planes participating per die.
+    pub planes: usize,
+    /// RPUs available in the die's H-tree (internal nodes = planes - 1;
+    /// the engine uses the leaf-adjacent level, planes/2 of them).
+    pub rpus: usize,
+    pub link_bw: f64,
+}
+
+impl DmvmEngine {
+    pub fn new(sys: &SystemConfig, timing: NandTiming, planes: usize) -> DmvmEngine {
+        DmvmEngine {
+            sys: sys.clone(),
+            timing,
+            planes,
+            rpus: (planes / 2).max(1),
+            link_bw: sys.ctrl.channel_bus_bw,
+        }
+    }
+
+    /// SLC page payload bytes (one BLS activation of the SLC plane).
+    fn page_bytes(&self) -> usize {
+        self.sys.plane.n_col / 8 // SLC: 1 bit/cell
+    }
+
+    /// `QK^T` for one head: `q ∈ INT8[d_h]`, `K ∈ INT8[L, d_h]`.
+    /// K rows are striped across the SLC planes' page buffers; every RPU
+    /// computes VVMs for its pair of planes in parallel.
+    pub fn qk(&self, l: usize, d_h: usize) -> DmvmReport {
+        // Inbound: broadcast q (d_h bytes) onto the die link.
+        let inbound = SimTime::from_secs(d_h as f64 / self.link_bw);
+
+        // KV read: K occupies L×d_h bytes; pages striped over planes; a
+        // plane reads its pages sequentially, planes in parallel.
+        let total_bytes = l * d_h;
+        let pages = total_bytes.div_ceil(self.page_bytes());
+        let pages_per_plane = pages.div_ceil(self.planes);
+        let kv_read = SimTime::from_secs(pages_per_plane as f64 * self.timing.t_read_slc.secs());
+
+        // Compute: L VVMs of d_h MACs spread over the RPU bank, each
+        // starting when operands are in page buffers (overlapped with
+        // later reads). All jobs are identical and ready together, so
+        // the bank drain has the closed form `ceil(L / rpus) × t_vvm`
+        // (§Perf: replaces an O(L) resource loop on the TPOT hot path).
+        let rpu = Rpu::new(self.sys.rpu);
+        let vvm = rpu.mul_time(d_h);
+        let first_ready = inbound.max(SimTime::from_secs(self.timing.t_read_slc.secs()));
+        let waves = l.div_ceil(self.rpus) as u64;
+        let bank_makespan = first_ready + SimTime(vvm.0 * waves);
+        // Outbound: L INT16 scores exit the die port.
+        let out = SimTime::from_secs((l * 2) as f64 / self.link_bw);
+        let compute_done = bank_makespan.max(inbound + kv_read);
+        let total = compute_done + out;
+        DmvmReport { inbound, kv_read, compute_out: compute_done + out - first_ready, total }
+    }
+
+    /// `SV` for one head with the row-wise product: `S ∈ INT16[L]`,
+    /// `V ∈ INT8[L, d_h]`; each S element scales a row of V (VSM), the
+    /// partial rows accumulate in the H-tree.
+    pub fn sv(&self, l: usize, d_h: usize) -> DmvmReport {
+        // Inbound: scatter S (2 bytes per element).
+        let inbound = SimTime::from_secs((l * 2) as f64 / self.link_bw);
+
+        let total_bytes = l * d_h;
+        let pages = total_bytes.div_ceil(self.page_bytes());
+        let pages_per_plane = pages.div_ceil(self.planes);
+        let kv_read = SimTime::from_secs(pages_per_plane as f64 * self.timing.t_read_slc.secs());
+
+        let rpu = Rpu::new(self.sys.rpu);
+        let vsm = rpu.mul_time(d_h);
+        let first_ready = inbound.max(SimTime::from_secs(self.timing.t_read_slc.secs()));
+        let waves = l.div_ceil(self.rpus) as u64;
+        let bank_makespan = first_ready + SimTime(vsm.0 * waves);
+        // H-tree accumulation of the scaled rows down to one d_h vector,
+        // then the INT16 result exits.
+        let levels = (self.planes as f64).log2().ceil() as usize;
+        let tree_accum = SimTime::from_secs(levels as f64 * rpu.alu_time(d_h).secs());
+        let out = SimTime::from_secs((d_h * 2) as f64 / self.link_bw);
+        let compute_done = bank_makespan.max(inbound + kv_read) + tree_accum;
+        let total = compute_done + out;
+        DmvmReport { inbound, kv_read, compute_out: compute_done + out - first_ready, total }
+    }
+
+    /// Full attention score+context path for one head: QK^T then SV
+    /// (softmax happens on the controller cores in between and is
+    /// accounted separately).
+    pub fn head_total(&self, l: usize, d_h: usize) -> SimTime {
+        self.qk(l, d_h).total + self.sv(l, d_h).total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::TechParams;
+    use crate::config::presets::table1_system;
+
+    fn engine() -> DmvmEngine {
+        let sys = table1_system();
+        let timing = NandTiming::of_system(&sys, &TechParams::default());
+        DmvmEngine::new(&sys, timing, 256)
+    }
+
+    #[test]
+    fn qk_scales_sublinearly_with_context() {
+        // Paper Fig. 14b: dMVM scales gracefully with token length thanks
+        // to head parallelism + striping. 4× the context should cost
+        // well under 4× the time.
+        let e = engine();
+        let t1 = e.qk(1024, 128).total.secs();
+        let t4 = e.qk(4096, 128).total.secs();
+        assert!(t4 > t1);
+        assert!(t4 / t1 < 4.0, "ratio {}", t4 / t1);
+    }
+
+    #[test]
+    fn sv_total_exceeds_qk_due_to_tree_accum() {
+        let e = engine();
+        let qk = e.qk(1024, 128).total;
+        let sv = e.sv(1024, 128).total;
+        assert!(sv >= qk);
+    }
+
+    #[test]
+    fn longer_context_reads_more_pages() {
+        let e = engine();
+        let a = e.qk(512, 128);
+        let b = e.qk(8192, 128);
+        assert!(b.kv_read >= a.kv_read);
+    }
+
+    #[test]
+    fn head_total_is_sum() {
+        let e = engine();
+        let t = e.head_total(1024, 128);
+        assert_eq!(t, e.qk(1024, 128).total + e.sv(1024, 128).total);
+    }
+
+    #[test]
+    fn dmvm_head_in_tens_of_microseconds() {
+        // Sanity envelope: one head at L=1K should be in the 1–100 µs
+        // range for the TPOT budget (48 blocks × ~2 dies-per-head pipeline
+        // must land near the paper's ~7 ms).
+        let e = engine();
+        let t = e.head_total(1024, 128).secs();
+        assert!((1e-6..=100e-6).contains(&t), "head total = {t}");
+    }
+}

@@ -1,0 +1,15 @@
+//! PIM operation execution models (paper §III-C, §IV-B).
+//!
+//! * [`op`] — MVM operation descriptors (static vs dynamic).
+//! * [`smvm`] — the pipelined static-MVM execution over a die's planes,
+//!   comparing the shared bus against the H-tree (Figs. 7, 9).
+//! * [`dmvm`] — dynamic MVM (`QK^T`, `SV`) on the SLC region's RPUs with
+//!   the row-wise-product dataflow (Fig. 13).
+
+pub mod dmvm;
+pub mod op;
+pub mod smvm;
+
+pub use dmvm::{DmvmEngine, DmvmReport};
+pub use op::{MvmKind, MvmShape};
+pub use smvm::{ExecReport, SmvmPipeline};

@@ -1,0 +1,70 @@
+//! MVM operation descriptors. The paper classifies every LLM layer that
+//! is not handled by the controller cores into static MVMs (weights live
+//! in QLC flash cells) and dynamic MVMs (both operands generated at
+//! runtime: `QK^T`, `SV`).
+
+/// Shape of a matrix-vector multiply `(1, M) × (M, N)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MvmShape {
+    /// Input (contraction) dimension.
+    pub m: usize,
+    /// Output dimension.
+    pub n: usize,
+}
+
+impl MvmShape {
+    pub const fn new(m: usize, n: usize) -> MvmShape {
+        MvmShape { m, n }
+    }
+
+    /// Weight count.
+    pub fn weights(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Row tiles with `u` rows per tile.
+    pub fn row_tiles(&self, u: usize) -> usize {
+        self.m.div_ceil(u)
+    }
+
+    /// Column tiles with `c` output columns per tile.
+    pub fn col_tiles(&self, c: usize) -> usize {
+        self.n.div_ceil(c)
+    }
+
+    /// Total unit tiles.
+    pub fn tiles(&self, u: usize, c: usize) -> usize {
+        self.row_tiles(u) * self.col_tiles(c)
+    }
+}
+
+/// Operation class (paper Fig. 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MvmKind {
+    /// Weights resident in QLC PIM arrays; no writes involved.
+    Static,
+    /// Operands generated per token (`Q`, `K`, `V`); executed in the SLC
+    /// region's RPUs because SLC programs 19× faster than QLC.
+    Dynamic,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt30b_row_tiles_are_56() {
+        // Paper Fig. 12: d_m = 7168, u = 128 → 56 row tiles.
+        let s = MvmShape::new(7168, 7168);
+        assert_eq!(s.row_tiles(128), 56);
+        assert_eq!(s.col_tiles(512), 14);
+        assert_eq!(s.tiles(128, 512), 56 * 14);
+    }
+
+    #[test]
+    fn ceil_division() {
+        let s = MvmShape::new(1000, 1000);
+        assert_eq!(s.row_tiles(128), 8);
+        assert_eq!(s.col_tiles(512), 2);
+    }
+}

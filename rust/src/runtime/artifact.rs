@@ -1,0 +1,140 @@
+//! Artifact bundle layout (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! artifacts/
+//!   manifest.txt          # TOML-lite: model dims + file names
+//!   decode_step.hlo.txt   # HLO text of one decode step
+//!   weights/NNN_name.npy  # ordered weight tensors (f32)
+//!   loss_curve.txt        # optional: training log
+//! ```
+//!
+//! The decode-step argument order is `token, pos, kv, w_0 … w_{n-1}`
+//! with the weights in the sorted order of their file names — the same
+//! order `aot.py` passed them to `jax.jit(...).lower(...)`.
+
+use crate::config::toml_lite;
+use crate::util::npy::{self, NpyArray};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest + loaded weights.
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub decode_hlo: PathBuf,
+    /// (name, tensor) in positional-argument order.
+    pub weights: Vec<(String, NpyArray)>,
+}
+
+impl ArtifactBundle {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactBundle> {
+        let manifest = dir.join("manifest.txt");
+        let doc = toml_lite::parse_file(&manifest)
+            .with_context(|| format!("loading manifest {}", manifest.display()))?;
+        let name = doc.str_or("model", "name", "unknown")?;
+        let vocab = doc.require("model", "vocab")?.as_usize()?;
+        let d_model = doc.require("model", "d_model")?.as_usize()?;
+        let layers = doc.require("model", "layers")?.as_usize()?;
+        let heads = doc.require("model", "heads")?.as_usize()?;
+        let max_seq = doc.require("model", "max_seq")?.as_usize()?;
+        let decode_hlo = dir.join(doc.str_or("artifacts", "decode_hlo", "decode_step.hlo.txt")?);
+        if !decode_hlo.exists() {
+            bail!("decode HLO missing: {}", decode_hlo.display());
+        }
+        let weights_dir = dir.join(doc.str_or("artifacts", "weights_dir", "weights")?);
+        let weights = npy::read_dir(&weights_dir)
+            .with_context(|| format!("loading weights from {}", weights_dir.display()))?;
+        if weights.is_empty() {
+            bail!("no weights in {}", weights_dir.display());
+        }
+        Ok(ArtifactBundle { dir: dir.to_path_buf(), name, vocab, d_model, layers, heads, max_seq, decode_hlo, weights })
+    }
+
+    /// KV cache element count: `[layers, 2, max_seq, d_model]`.
+    pub fn kv_len(&self) -> usize {
+        self.layers * 2 * self.max_seq * self.d_model
+    }
+
+    /// KV cache shape.
+    pub fn kv_shape(&self) -> [usize; 4] {
+        [self.layers, 2, self.max_seq, self.d_model]
+    }
+
+    /// The default artifacts directory (`$REPRO_ARTIFACTS` or `artifacts/`
+    /// next to the workspace root).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Whether a usable bundle exists at the default location.
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.txt").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::npy::NpyArray;
+
+    fn write_fake_bundle(dir: &Path) {
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            r#"
+[model]
+name = "toy"
+vocab = 256
+d_model = 64
+layers = 2
+heads = 4
+max_seq = 32
+[artifacts]
+decode_hlo = "decode_step.hlo.txt"
+weights_dir = "weights"
+"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("decode_step.hlo.txt"), "HloModule fake").unwrap();
+        npy::write(
+            &dir.join("weights/000_emb.npy"),
+            &NpyArray::from_f32(&vec![0.0; 64], &[1, 64]),
+        )
+        .unwrap();
+        npy::write(
+            &dir.join("weights/001_w.npy"),
+            &NpyArray::from_f32(&vec![0.0; 8], &[2, 4]),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_manifest_and_ordered_weights() {
+        let dir = std::env::temp_dir().join("flashpim_artifact_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_fake_bundle(&dir);
+        let b = ArtifactBundle::load(&dir).unwrap();
+        assert_eq!(b.vocab, 256);
+        assert_eq!(b.kv_shape(), [2, 2, 32, 64]);
+        assert_eq!(b.weights.len(), 2);
+        assert_eq!(b.weights[0].0, "000_emb");
+        assert_eq!(b.weights[1].0, "001_w");
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("flashpim_artifact_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ArtifactBundle::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! The decode-step executor: owns the compiled decode HLO, keeps the
+//! weights resident as device buffers (uploaded once — the hot path
+//! re-uploads only the token/pos/KV state), and implements the
+//! [`crate::coordinator::serve::Engine`] trait for the serving loop.
+//!
+//! Decode-step signature (fixed by `python/compile/aot.py`):
+//! `(token i32[1], pos i32[1], kv f32[L,2,S,D], w_0 … w_{n-1}) →
+//!  (logits f32[V], kv' f32[L,2,S,D])` — greedy argmax sampling here.
+
+use super::artifact::ArtifactBundle;
+use super::client::{i32_literal, RuntimeClient};
+use crate::coordinator::serve::Engine;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Compiled, weight-resident decode executor.
+pub struct DecodeExecutor {
+    #[allow(dead_code)]
+    rt: RuntimeClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Host-pinned weight literals in positional order (uploaded per
+    /// execute; the PJRT CPU client aliases host memory).
+    weight_lits: Vec<xla::Literal>,
+    pub bundle: ArtifactBundle,
+    /// Host-side KV state (f32, `[L,2,S,D]` row-major).
+    kv: Vec<f32>,
+    /// Next position to write.
+    pos: usize,
+}
+
+impl DecodeExecutor {
+    /// Load + compile from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<DecodeExecutor> {
+        let bundle = ArtifactBundle::load(dir)?;
+        let rt = RuntimeClient::cpu()?;
+        let exe = rt.compile_hlo_text(&bundle.decode_hlo)?;
+        let mut weight_lits = Vec::with_capacity(bundle.weights.len());
+        for (name, arr) in &bundle.weights {
+            let vals = arr.as_f32().with_context(|| format!("weight {name} must be f32"))?;
+            let dims: Vec<i64> = arr.shape.iter().map(|d| *d as i64).collect();
+            weight_lits.push(super::client::f32_literal(&vals, &dims)?);
+        }
+        let kv = vec![0.0f32; bundle.kv_len()];
+        Ok(DecodeExecutor { rt, exe, weight_lits, bundle, kv, pos: 0 })
+    }
+
+    /// Reset the sequence state.
+    pub fn reset(&mut self) {
+        self.kv.fill(0.0);
+        self.pos = 0;
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Run one decode step for `token`; returns the logits.
+    pub fn step(&mut self, token: u32) -> Result<Vec<f32>> {
+        if self.pos >= self.bundle.max_seq {
+            bail!("sequence exceeds max_seq={}", self.bundle.max_seq);
+        }
+        let [l, two, s, d] = self.bundle.kv_shape();
+        let token_lit = i32_literal(&[token as i32], &[1])?;
+        let pos_lit = i32_literal(&[self.pos as i32], &[1])?;
+        let kv_lit = super::client::f32_literal(
+            &self.kv,
+            &[l as i64, two as i64, s as i64, d as i64],
+        )?;
+        // Literal args: state re-marshalled per step, weights borrowed
+        // from the resident pool.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weight_lits.len());
+        args.push(&token_lit);
+        args.push(&pos_lit);
+        args.push(&kv_lit);
+        for w in &self.weight_lits {
+            args.push(w);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args).context("decode step execute")?;
+        let out = result[0][0].to_literal_sync()?;
+        let (logits_lit, kv_lit_out) = out.to_tuple2()?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        let kv_new = kv_lit_out.to_vec::<f32>()?;
+        if kv_new.len() != self.kv.len() {
+            bail!("kv size mismatch: {} vs {}", kv_new.len(), self.kv.len());
+        }
+        self.kv = kv_new;
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, v) in logits.iter().enumerate() {
+            if *v > best_v {
+                best_v = *v;
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+impl Engine for DecodeExecutor {
+    fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        self.reset();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        // Prefill = sequential decode over the prompt (single AOT graph).
+        let mut logits = Vec::new();
+        for t in prompt {
+            logits = self.step(*t)?;
+        }
+        let mut out = Vec::with_capacity(max_new);
+        let budget = max_new.min(self.bundle.max_seq.saturating_sub(self.pos));
+        let mut next = Self::argmax(&logits);
+        for _ in 0..budget {
+            out.push(next);
+            on_token(next);
+            logits = self.step(next)?;
+            next = Self::argmax(&logits);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(DecodeExecutor::argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(DecodeExecutor::argmax(&[-5.0, -1.0, -3.0]), 1);
+        assert_eq!(DecodeExecutor::argmax(&[2.0]), 0);
+    }
+    // Full executor tests live in rust/tests/runtime_e2e.rs (they need
+    // `make artifacts` to have run).
+}

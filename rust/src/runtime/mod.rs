@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text + npy weights + manifest, see `python/compile/aot.py`) and
+//! executes the functional decode step from the rust serving path.
+//! Python never runs at serving time.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod tokenizer;
+
+pub use artifact::ArtifactBundle;
+pub use client::RuntimeClient;
+pub use executor::DecodeExecutor;
+pub use tokenizer::ByteTokenizer;

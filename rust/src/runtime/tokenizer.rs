@@ -1,0 +1,46 @@
+//! Byte-level tokenizer for the functional OPT-toy model: ids 0–255 are
+//! raw bytes (vocab 256). Keeps the E2E path dependency-free.
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|t| (*t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello flash");
+        assert_eq!(ids.len(), 11);
+        assert_eq!(t.decode(&ids), "hello flash");
+    }
+
+    #[test]
+    fn ids_below_vocab() {
+        let t = ByteTokenizer;
+        for id in t.encode("any UTF-8 ✓ text") {
+            assert!(id < ByteTokenizer::VOCAB as u32);
+        }
+    }
+
+    #[test]
+    fn decode_clamps() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[72, 105]), "Hi");
+    }
+}

@@ -1,0 +1,120 @@
+//! Generic event-driven engine: pops events, hands them to the model,
+//! lets the model schedule more. Used by the serving-level simulations;
+//! the pipeline latency models use [`super::resource`] timelines directly.
+
+use super::event::EventQueue;
+use super::time::SimTime;
+
+/// A simulation model consumed by [`Engine`].
+pub trait Model {
+    /// Event payload type.
+    type Event;
+
+    /// Handle one event; schedule follow-ups through `queue`.
+    fn handle(&mut self, now: SimTime, event: Self::Event, queue: &mut EventQueue<Self::Event>);
+
+    /// Optional termination predicate checked after each event.
+    fn done(&self) -> bool {
+        false
+    }
+}
+
+/// Drives a [`Model`] to completion.
+pub struct Engine<M: Model> {
+    pub model: M,
+    pub queue: EventQueue<M::Event>,
+    /// Safety valve against runaway models.
+    pub max_events: u64,
+    events_processed: u64,
+}
+
+impl<M: Model> Engine<M> {
+    pub fn new(model: M) -> Engine<M> {
+        Engine { model, queue: EventQueue::new(), max_events: 100_000_000, events_processed: 0 }
+    }
+
+    /// Seed an initial event.
+    pub fn seed(&mut self, at: SimTime, ev: M::Event) {
+        self.queue.schedule(at, ev);
+    }
+
+    /// Run until the queue drains, the model reports done, or the event
+    /// cap trips. Returns the final simulation time.
+    pub fn run(&mut self) -> SimTime {
+        while let Some((now, ev)) = self.queue.pop() {
+            self.model.handle(now, ev, &mut self.queue);
+            self.events_processed += 1;
+            if self.model.done() {
+                break;
+            }
+            assert!(
+                self.events_processed < self.max_events,
+                "event cap {} exceeded — runaway model?",
+                self.max_events
+            );
+        }
+        self.queue.now()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A counter that reschedules itself n times.
+    struct Ticker {
+        remaining: u32,
+        fired_at: Vec<SimTime>,
+    }
+
+    impl Model for Ticker {
+        type Event = ();
+
+        fn handle(&mut self, now: SimTime, _ev: (), queue: &mut EventQueue<()>) {
+            self.fired_at.push(now);
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                queue.schedule_in(SimTime(10), ());
+            }
+        }
+    }
+
+    #[test]
+    fn ticker_fires_on_schedule() {
+        let mut e = Engine::new(Ticker { remaining: 3, fired_at: vec![] });
+        e.seed(SimTime(0), ());
+        let end = e.run();
+        assert_eq!(e.model.fired_at, vec![SimTime(0), SimTime(10), SimTime(20), SimTime(30)]);
+        assert_eq!(end, SimTime(30));
+        assert_eq!(e.events_processed(), 4);
+    }
+
+    struct Stopper {
+        handled: u32,
+    }
+
+    impl Model for Stopper {
+        type Event = u32;
+
+        fn handle(&mut self, _now: SimTime, _ev: u32, queue: &mut EventQueue<u32>) {
+            self.handled += 1;
+            queue.schedule_in(SimTime(1), 0);
+        }
+
+        fn done(&self) -> bool {
+            self.handled >= 5
+        }
+    }
+
+    #[test]
+    fn done_predicate_stops_engine() {
+        let mut e = Engine::new(Stopper { handled: 0 });
+        e.seed(SimTime(0), 0);
+        e.run();
+        assert_eq!(e.model.handled, 5);
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulation core.
+//!
+//! Plays the role SimpleSSD/Amber played for the paper: an event queue
+//! with deterministic ordering, exclusive-resource timelines, and a small
+//! engine driving model callbacks. Time is kept in integer picoseconds so
+//! event ordering is exact and runs are bit-reproducible.
+
+pub mod engine;
+pub mod event;
+pub mod resource;
+pub mod time;
+pub mod trace;
+
+pub use engine::{Engine, Model};
+pub use event::EventQueue;
+pub use resource::{Resource, ResourceBank};
+pub use time::SimTime;
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,110 @@
+//! Simulation time: integer picoseconds.
+//!
+//! f64 seconds are fine for analytic models, but event ordering must be
+//! exact — equal-time events tie-break by insertion order, and repeated
+//! float accumulation would make that fragile. 2^64 ps ≈ 213 days of
+//! simulated time, far beyond any experiment here.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point (or span) in simulated time, in picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// From seconds (f64, as produced by the circuit model). Rounds to the
+    /// nearest picosecond.
+    pub fn from_secs(s: f64) -> SimTime {
+        assert!(s >= 0.0 && s.is_finite(), "bad duration {s}");
+        SimTime((s * 1e12).round() as u64)
+    }
+
+    pub fn from_ns(ns: f64) -> SimTime {
+        SimTime::from_secs(ns * 1e-9)
+    }
+
+    pub fn from_us(us: f64) -> SimTime {
+        SimTime::from_secs(us * 1e-6)
+    }
+
+    /// To seconds.
+    pub fn secs(self) -> f64 {
+        self.0 as f64 * 1e-12
+    }
+
+    /// Saturating subtraction.
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_add(rhs.0).expect("sim time overflow"))
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("sim time underflow"))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::units::fmt_time(self.secs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_seconds() {
+        let t = SimTime::from_secs(1.79e-6);
+        assert!((t.secs() - 1.79e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ordering_is_exact() {
+        let a = SimTime::from_ns(1.0);
+        let b = SimTime::from_ns(1.0);
+        assert_eq!(a, b);
+        assert!(a + SimTime(1) > b);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_us(2.0);
+        let b = SimTime::from_us(0.5);
+        assert!(((a + b).secs() - 2.5e-6).abs() < 1e-15);
+        assert!(((a - b).secs() - 1.5e-6).abs() < 1e-15);
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad duration")]
+    fn rejects_negative() {
+        SimTime::from_secs(-1.0);
+    }
+}

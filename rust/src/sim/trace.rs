@@ -1,0 +1,99 @@
+//! Execution tracing for the simulator: cheap, bounded, and queryable in
+//! tests. Categories mirror the paper's pipeline stages so latency
+//! breakdowns (Fig. 12, Fig. 14b) can be extracted from a trace.
+
+use super::time::SimTime;
+
+/// One trace record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Stage/category, e.g. "inbound", "pim", "outbound", "rpu", "core".
+    pub category: &'static str,
+    /// Free-form label (resource id, op id).
+    pub label: String,
+}
+
+/// A bounded trace buffer.
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    enabled: bool,
+    cap: usize,
+}
+
+impl Trace {
+    /// Disabled trace (zero overhead beyond the branch).
+    pub fn disabled() -> Trace {
+        Trace { events: Vec::new(), enabled: false, cap: 0 }
+    }
+
+    /// Enabled with a record cap (drops silently past the cap).
+    pub fn enabled(cap: usize) -> Trace {
+        Trace { events: Vec::new(), enabled: true, cap }
+    }
+
+    pub fn record(&mut self, start: SimTime, end: SimTime, category: &'static str, label: impl Into<String>) {
+        if self.enabled && self.events.len() < self.cap {
+            self.events.push(TraceEvent { start, end, category, label: label.into() });
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Total busy time in a category (sums overlapping records).
+    pub fn category_time(&self, category: &str) -> SimTime {
+        let mut total = SimTime::ZERO;
+        for e in &self.events {
+            if e.category == category {
+                total += e.end - e.start;
+            }
+        }
+        total
+    }
+
+    /// Count of records in a category.
+    pub fn category_count(&self, category: &str) -> usize {
+        self.events.iter().filter(|e| e.category == category).count()
+    }
+
+    /// Latest end time across all records.
+    pub fn makespan(&self) -> SimTime {
+        self.events.iter().map(|e| e.end).max().unwrap_or(SimTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_when_enabled() {
+        let mut t = Trace::enabled(10);
+        t.record(SimTime(0), SimTime(5), "pim", "p0");
+        t.record(SimTime(5), SimTime(9), "pim", "p1");
+        t.record(SimTime(2), SimTime(3), "inbound", "x");
+        assert_eq!(t.category_count("pim"), 2);
+        assert_eq!(t.category_time("pim"), SimTime(9));
+        assert_eq!(t.makespan(), SimTime(9));
+    }
+
+    #[test]
+    fn silent_when_disabled() {
+        let mut t = Trace::disabled();
+        t.record(SimTime(0), SimTime(5), "pim", "p0");
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn respects_cap() {
+        let mut t = Trace::enabled(2);
+        for i in 0..5 {
+            t.record(SimTime(i), SimTime(i + 1), "x", "");
+        }
+        assert_eq!(t.events().len(), 2);
+    }
+}

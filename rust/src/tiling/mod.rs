@@ -1,0 +1,14 @@
+//! Tiling and mapping of sMVM operations across the flash hierarchy
+//! (paper §IV-B, Figs. 11–12): row-wise vs column-wise tiling at each of
+//! the four levels (channel / way / die / plane), the latency cost model
+//! (inbound I/O, PIM, outbound I/O), and the search for the best scheme.
+
+pub mod cost;
+pub mod enumerate;
+pub mod scheme;
+pub mod search;
+
+pub use cost::{TilingCost, TilingCostModel};
+pub use enumerate::enumerate_schemes;
+pub use scheme::{Level, Method, TilingScheme};
+pub use search::search_best;

@@ -1,0 +1,193 @@
+//! Tiling scheme descriptors.
+//!
+//! At every hierarchy level (channel, way, die, plane) a scheme picks a
+//! tiling method and a resource count (paper Fig. 11):
+//!
+//! * **Row** — the input dimension is scattered across `count` units;
+//!   their partial sums must later be accumulated.
+//! * **Col** — the output dimension is split across `count` units; the
+//!   input vector is broadcast and results concatenate.
+//! * **None** — the level is not tiled (count 1); work concentrates in a
+//!   single unit of that level, which with the H-tree enables in-die
+//!   accumulation of everything below.
+//!
+//! Schemes print in the paper's `ch/way/die/plane` notation, e.g.
+//! `C/C/N/R`.
+
+use crate::config::FlashOrgConfig;
+use anyhow::{bail, Result};
+
+/// Hierarchy level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Channel = 0,
+    Way = 1,
+    Die = 2,
+    Plane = 3,
+}
+
+impl Level {
+    pub const ALL: [Level; 4] = [Level::Channel, Level::Way, Level::Die, Level::Plane];
+
+    /// Resource population of this level in the organization.
+    ///
+    /// Note: the die level exposes all dies per way — the paper's Fig. 12
+    /// evaluation states "8 channels, 4 ways, 8 dies, and 256 planes"
+    /// even though Table I reserves 2 dies/way as SLC; we follow Fig. 12.
+    pub fn resources(self, org: &FlashOrgConfig) -> usize {
+        match self {
+            Level::Channel => org.channels,
+            Level::Way => org.ways_per_channel,
+            Level::Die => org.dies_per_way,
+            Level::Plane => org.planes_per_die,
+        }
+    }
+}
+
+/// Tiling method at one level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    None,
+    Row,
+    Col,
+}
+
+impl Method {
+    pub fn letter(self) -> char {
+        match self {
+            Method::None => 'N',
+            Method::Row => 'R',
+            Method::Col => 'C',
+        }
+    }
+}
+
+/// A complete scheme: method + count per level, in
+/// channel/way/die/plane order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilingScheme {
+    pub levels: [(Method, usize); 4],
+}
+
+impl TilingScheme {
+    pub fn new(levels: [(Method, usize); 4]) -> TilingScheme {
+        TilingScheme { levels }
+    }
+
+    pub fn method(&self, l: Level) -> Method {
+        self.levels[l as usize].0
+    }
+
+    pub fn count(&self, l: Level) -> usize {
+        self.levels[l as usize].1
+    }
+
+    /// Product of counts over levels using `m`.
+    pub fn product(&self, m: Method) -> usize {
+        self.levels.iter().filter(|(mm, _)| *mm == m).map(|(_, c)| c).product()
+    }
+
+    /// Total positions (units assigned a tile).
+    pub fn positions(&self) -> usize {
+        self.levels.iter().map(|(_, c)| c).product()
+    }
+
+    /// Validate against an organization and a tile grid
+    /// (`row_tiles × col_tiles`).
+    pub fn validate(&self, org: &FlashOrgConfig, row_tiles: usize, col_tiles: usize) -> Result<()> {
+        for l in Level::ALL {
+            let (m, c) = self.levels[l as usize];
+            if m == Method::None && c != 1 {
+                bail!("None level must have count 1");
+            }
+            if c == 0 || c > l.resources(org) {
+                bail!("count {c} at {l:?} exceeds resources {}", l.resources(org));
+            }
+        }
+        if self.product(Method::Row) < row_tiles {
+            bail!("row coverage {} < {row_tiles}", self.product(Method::Row));
+        }
+        if self.product(Method::Col) < col_tiles {
+            bail!("col coverage {} < {col_tiles}", self.product(Method::Col));
+        }
+        Ok(())
+    }
+
+    /// Paper notation: `C/C/N/R`.
+    pub fn notation(&self) -> String {
+        self.levels.iter().map(|(m, _)| m.letter()).collect::<Vec<_>>().iter().map(|c| c.to_string()).collect::<Vec<_>>().join("/")
+    }
+
+    /// Notation with counts: `C(2)/C(4)/N(1)/R(56)`.
+    pub fn notation_counts(&self) -> String {
+        self.levels
+            .iter()
+            .map(|(m, c)| format!("{}({})", m.letter(), c))
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+
+    fn org() -> FlashOrgConfig {
+        table1_system().org
+    }
+
+    #[test]
+    fn notation_matches_paper_style() {
+        let s = TilingScheme::new([
+            (Method::Col, 2),
+            (Method::Col, 4),
+            (Method::None, 1),
+            (Method::Row, 56),
+        ]);
+        assert_eq!(s.notation(), "C/C/N/R");
+        assert_eq!(s.notation_counts(), "C(2)/C(4)/N(1)/R(56)");
+    }
+
+    #[test]
+    fn products() {
+        let s = TilingScheme::new([
+            (Method::Col, 2),
+            (Method::Col, 7),
+            (Method::Row, 8),
+            (Method::Row, 7),
+        ]);
+        assert_eq!(s.product(Method::Col), 14);
+        assert_eq!(s.product(Method::Row), 56);
+        assert_eq!(s.positions(), 2 * 7 * 8 * 7);
+    }
+
+    #[test]
+    fn validate_coverage() {
+        let s = TilingScheme::new([
+            (Method::Col, 2),
+            (Method::Col, 4),
+            (Method::None, 1),
+            (Method::Row, 56),
+        ]);
+        // 2×4 = 8 col positions covers 8 col tiles, not 14.
+        assert!(s.validate(&org(), 56, 8).is_ok());
+        assert!(s.validate(&org(), 56, 14).is_err());
+    }
+
+    #[test]
+    fn validate_resource_bounds() {
+        let s = TilingScheme::new([
+            (Method::Col, 16), // > 8 channels
+            (Method::None, 1),
+            (Method::None, 1),
+            (Method::Row, 56),
+        ]);
+        assert!(s.validate(&org(), 56, 1).is_err());
+    }
+
+    #[test]
+    fn die_level_uses_fig12_population() {
+        assert_eq!(Level::Die.resources(&org()), 8);
+    }
+}

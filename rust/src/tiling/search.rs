@@ -1,0 +1,84 @@
+//! Best-mapping search: evaluate every legal scheme with the cost model
+//! and keep the lowest pipelined total (the "in-house simulator" search
+//! of paper §V-A).
+
+use super::cost::{TilingCost, TilingCostModel};
+use super::enumerate::enumerate_schemes;
+use super::scheme::TilingScheme;
+use crate::pim::op::MvmShape;
+
+/// A scored scheme.
+#[derive(Debug, Clone)]
+pub struct Ranked {
+    pub scheme: TilingScheme,
+    pub cost: TilingCost,
+}
+
+/// Exhaustive search; returns schemes sorted by total latency (best
+/// first). Empty result only if the shape cannot be covered at all.
+pub fn search_best(model: &TilingCostModel, shape: MvmShape) -> Vec<Ranked> {
+    let (rt, ct) = model.grid(shape);
+    let mut ranked: Vec<Ranked> = enumerate_schemes(&model.sys.org, rt, ct)
+        .into_iter()
+        .map(|scheme| Ranked { cost: model.cost(&scheme, shape), scheme })
+        .collect();
+    ranked.sort_by(|a, b| a.cost.total().cmp(&b.cost.total()));
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::TechParams;
+    use crate::config::presets::table1_system;
+    use crate::nand::NandTiming;
+
+    fn model() -> TilingCostModel {
+        let sys = table1_system();
+        let timing = NandTiming::of_system(&sys, &TechParams::default());
+        TilingCostModel::new(&sys, timing)
+    }
+
+    #[test]
+    fn search_returns_sorted_results() {
+        let m = model();
+        let r = search_best(&m, MvmShape::new(7168, 7168));
+        assert!(r.len() > 10);
+        for w in r.windows(2) {
+            assert!(w[0].cost.total() <= w[1].cost.total());
+        }
+    }
+
+    #[test]
+    fn best_scheme_uses_channel_col() {
+        // The Fig. 12 conclusion: channel-level column tiling wins.
+        let m = model();
+        let r = search_best(&m, MvmShape::new(7168, 7168));
+        let best = &r[0];
+        assert_eq!(
+            best.scheme.method(super::super::scheme::Level::Channel),
+            super::super::scheme::Method::Col,
+            "best scheme {}",
+            best.scheme.notation_counts()
+        );
+    }
+
+    #[test]
+    fn best_beats_naive_single_channel() {
+        let m = model();
+        let r = search_best(&m, MvmShape::new(7168, 7168));
+        let best = r.first().unwrap();
+        let worst = r.last().unwrap();
+        assert!(best.cost.total().secs() < worst.cost.total().secs());
+    }
+
+    #[test]
+    fn search_handles_non_square_shapes() {
+        let m = model();
+        // FFN shapes of OPT-30B: 7168 × 28672 and back.
+        for s in [MvmShape::new(7168, 28672), MvmShape::new(28672, 7168)] {
+            let r = search_best(&m, s);
+            assert!(!r.is_empty(), "no scheme for {s:?}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! A criterion-less micro/macro benchmark harness (the session registry has
+//! no `criterion`). Benches under `rust/benches/` use this to time closures
+//! and print both timing rows and the paper's figure/table series.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup_iters: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Hard cap on total measured time; the runner stops early past this.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 30, max_total: Duration::from_secs(10) }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            super::units::fmt_time(self.summary.mean),
+            super::units::fmt_time(self.summary.p50),
+            super::units::fmt_time(self.summary.p99),
+            self.summary.n
+        );
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration statistics. The closure's
+/// return value is passed through `std::hint::black_box` to prevent the
+/// optimizer from deleting the work.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let start_all = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if start_all.elapsed() > cfg.max_total {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Convenience: run with default config and print immediately.
+pub fn quick<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, &BenchConfig::default(), f);
+    r.print();
+    r
+}
+
+/// Section header for bench output, mirroring the paper artifact the bench
+/// regenerates (e.g. "Fig 6a — PIM latency vs N_row").
+pub fn section(title: &str) {
+    println!();
+    println!("== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 5, max_total: Duration::from_secs(2) };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.n >= 1);
+    }
+
+    #[test]
+    fn respects_max_total() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 1_000_000, max_total: Duration::from_millis(50) };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.summary.n < 1_000_000);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic RNG, statistics, unit
+//! formatting, ASCII tables, `.npy` IO, a bench harness, and a miniature
+//! property-testing kit.
+//!
+//! The session registry is offline, so these replace `rand`, `criterion`,
+//! and `proptest`.
+
+pub mod benchkit;
+pub mod npy;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;
+pub mod units;

@@ -1,0 +1,281 @@
+//! Minimal NumPy `.npy` (format version 1.0) reader/writer.
+//!
+//! The AOT step (`python/compile/aot.py`) exports model weights as `.npy`
+//! files next to the HLO text; the [`crate::runtime`] loads them here and
+//! feeds them to the compiled executable as PJRT literals. Supports the
+//! dtypes the pipeline uses: `f32`, `i32`, `i64`, `u8`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Element type of an array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn descr(self) -> &'static str {
+        match self {
+            DType::F32 => "<f4",
+            DType::I32 => "<i4",
+            DType::I64 => "<i8",
+            DType::U8 => "|u1",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    fn from_descr(d: &str) -> Result<DType> {
+        match d {
+            "<f4" | "=f4" => Ok(DType::F32),
+            "<i4" | "=i4" => Ok(DType::I32),
+            "<i8" | "=i8" => Ok(DType::I64),
+            "|u1" | "<u1" | "=u1" => Ok(DType::U8),
+            other => bail!("unsupported npy dtype {other:?}"),
+        }
+    }
+}
+
+/// A loaded array: raw little-endian bytes plus shape and dtype.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl NpyArray {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Interpret the payload as f32 (must match dtype).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("dtype is {:?}, not F32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Interpret the payload as i32 (must match dtype).
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("dtype is {:?}, not I32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Interpret the payload as i64 (must match dtype).
+    pub fn as_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != DType::I64 {
+            bail!("dtype is {:?}, not I64", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    /// Build an f32 array from values + shape.
+    pub fn from_f32(values: &[f32], shape: &[usize]) -> NpyArray {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NpyArray { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    /// Build an i32 array from values + shape.
+    pub fn from_i32(values: &[i32], shape: &[usize]) -> NpyArray {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NpyArray { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+}
+
+/// Read a `.npy` file.
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse `.npy` bytes.
+pub fn parse(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file (bad magic)");
+    }
+    let major = bytes[6];
+    if major != 1 && major != 2 {
+        bail!("unsupported npy version {major}");
+    }
+    let (header_len, header_start) = if major == 1 {
+        (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10usize)
+    } else {
+        (u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize, 12usize)
+    };
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        bail!("truncated npy header");
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end]).context("npy header not utf8")?;
+    let descr = extract_str_field(header, "descr")?;
+    let fortran = extract_bool_field(header, "fortran_order")?;
+    if fortran {
+        bail!("fortran-order npy not supported");
+    }
+    let shape = extract_shape_field(header)?;
+    let dtype = DType::from_descr(&descr)?;
+    let count: usize = shape.iter().product();
+    let need = count * dtype.size();
+    let payload = &bytes[header_end..];
+    if payload.len() < need {
+        bail!("npy payload too short: have {} need {need}", payload.len());
+    }
+    Ok(NpyArray { dtype, shape, data: payload[..need].to_vec() })
+}
+
+/// Write a `.npy` file (format 1.0).
+pub fn write(path: &Path, arr: &NpyArray) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!("({})", arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+    };
+    let mut header =
+        format!("{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}", arr.dtype.descr(), shape_str);
+    // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64, ending in \n.
+    let base = 10 + header.len() + 1;
+    let pad = (64 - base % 64) % 64;
+    header.extend(std::iter::repeat(' ').take(pad));
+    header.push('\n');
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&arr.data)?;
+    Ok(())
+}
+
+fn extract_str_field(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let idx = header.find(&pat).ok_or_else(|| anyhow!("missing {key} in npy header"))?;
+    let rest = &header[idx + pat.len()..];
+    let q1 = rest.find('\'').ok_or_else(|| anyhow!("malformed {key}"))?;
+    let rest2 = &rest[q1 + 1..];
+    let q2 = rest2.find('\'').ok_or_else(|| anyhow!("malformed {key}"))?;
+    Ok(rest2[..q2].to_string())
+}
+
+fn extract_bool_field(header: &str, key: &str) -> Result<bool> {
+    let pat = format!("'{key}':");
+    let idx = header.find(&pat).ok_or_else(|| anyhow!("missing {key} in npy header"))?;
+    let rest = header[idx + pat.len()..].trim_start();
+    if rest.starts_with("True") {
+        Ok(true)
+    } else if rest.starts_with("False") {
+        Ok(false)
+    } else {
+        bail!("malformed bool field {key}")
+    }
+}
+
+fn extract_shape_field(header: &str) -> Result<Vec<usize>> {
+    let pat = "'shape':";
+    let idx = header.find(pat).ok_or_else(|| anyhow!("missing shape in npy header"))?;
+    let rest = &header[idx + pat.len()..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("malformed shape"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("malformed shape"))?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        shape.push(p.parse::<usize>().with_context(|| format!("bad shape dim {p:?}"))?);
+    }
+    Ok(shape)
+}
+
+/// Read every `.npy` under a directory, keyed by file stem.
+pub fn read_dir(dir: &Path) -> Result<Vec<(String, NpyArray)>> {
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "npy").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or_default().to_string();
+        out.push((stem, read(&p)?));
+    }
+    Ok(out)
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("flashpim_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.npy");
+        let arr = NpyArray::from_f32(&[1.0, -2.5, 3.25, 0.0, 7.0, 8.0], &[2, 3]);
+        write(&path, &arr).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar_shapes() {
+        let dir = std::env::temp_dir().join("flashpim_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.npy");
+        let arr = NpyArray::from_i32(&[42], &[1]);
+        write(&path, &arr).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.as_i32().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(b"not an npy file at all").is_err());
+    }
+
+    #[test]
+    fn header_parse_tolerates_spacing() {
+        let arr = NpyArray::from_f32(&[5.0], &[1]);
+        let dir = std::env::temp_dir().join("flashpim_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.npy");
+        write(&path, &arr).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Header must be 64-byte aligned per the numpy spec.
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal ASCII table rendering for CLI/bench output — the benches print
+//! the same rows/series the paper's tables and figures report.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An ASCII table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given headers; all columns right-aligned
+    /// except the first.
+    pub fn new(headers: &[&str]) -> Table {
+        let aligns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), aligns, rows: Vec::new() }
+    }
+
+    /// Override the alignment of a column.
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    /// Append a row. Panics if the arity differs from the header.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of string slices.
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render to a string with a header separator.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut out = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let w = widths[i];
+                let c = &cells[i];
+                let pad = w - c.chars().count();
+                match self.aligns[i] {
+                    Align::Left => {
+                        out.push_str(c);
+                        out.extend(std::iter::repeat(' ').take(pad));
+                    }
+                    Align::Right => {
+                        out.extend(std::iter::repeat(' ').take(pad));
+                        out.push_str(c);
+                    }
+                }
+            }
+            out.trim_end().to_string()
+        };
+        let mut s = fmt_row(&self.headers);
+        s.push('\n');
+        s.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["long-name", "12345"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].ends_with("12345"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

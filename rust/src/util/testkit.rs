@@ -1,0 +1,131 @@
+//! A miniature property-based testing kit (the session registry has no
+//! `proptest`). Each property runs many cases from a deterministic seed
+//! sequence; failures report the seed so the case replays exactly.
+//!
+//! ```no_run
+//! use flashpim::util::testkit::check;
+//! check("addition commutes", 256, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle wrapping a forked RNG.
+pub struct Gen {
+    rng: Rng,
+    /// Seed for this case — printed on failure for replay.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one item from a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+
+    /// A power of two in `[2^lo_exp, 2^hi_exp]`.
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        1usize << self.rng.range(lo_exp as usize, hi_exp as usize + 1)
+    }
+
+    /// Vector of i8 of the given length.
+    pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
+        self.rng.vec_i8(n)
+    }
+
+    /// Vector of f64 in range.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Access the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the test) on the
+/// first case returning `Err`, printing the case seed and message.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, SEED_BASE, &mut prop);
+}
+
+/// Default base seed for [`check`].
+const SEED_BASE: u64 = 0xF1A5_4B1D_5EED_0001;
+
+/// Like [`check`] but with an explicit base seed (replay a failure).
+pub fn check_seeded<F>(name: &str, cases: usize, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut master = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name:?} failed at case {case} (seed=0x{seed:016x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed — paste the seed from a failure message.
+pub fn replay<F>(name: &str, seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property {name:?} replay failed (seed=0x{seed:016x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum nonneg", 64, |g| {
+            let v = g.vec_f64(8, 0.0, 1.0);
+            if v.iter().sum::<f64>() >= 0.0 { Ok(()) } else { Err("negative".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_seed() {
+        check("always fails eventually", 16, |g| {
+            if g.usize_in(0, 4) < 3 { Ok(()) } else { Err("hit".into()) }
+        });
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        check("pow2 bounds", 128, |g| {
+            let x = g.pow2(3, 10);
+            if x >= 8 && x <= 1024 && x.is_power_of_two() { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+}

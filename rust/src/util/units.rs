@@ -1,0 +1,108 @@
+//! Unit constants and human-readable formatting. All internal quantities
+//! are SI (seconds, bytes, joules, meters, hertz) stored as f64.
+
+pub const NS: f64 = 1e-9;
+pub const US: f64 = 1e-6;
+pub const MS: f64 = 1e-3;
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const GB: f64 = 1e9;
+
+pub const NM: f64 = 1e-9;
+pub const UM: f64 = 1e-6;
+pub const MM: f64 = 1e-3;
+
+pub const MHZ: f64 = 1e6;
+pub const GHZ: f64 = 1e9;
+
+pub const PJ: f64 = 1e-12;
+pub const NJ: f64 = 1e-9;
+
+pub const FF: f64 = 1e-15; // femtofarad
+pub const PF: f64 = 1e-12; // picofarad
+
+/// Format a duration in seconds with an auto-selected unit.
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{secs:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs / MS)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", secs / US)
+    } else if a >= 1e-9 {
+        format!("{:.1} ns", secs / NS)
+    } else if a == 0.0 {
+        "0 s".to_string()
+    } else {
+        format!("{:.1} ps", secs / 1e-12)
+    }
+}
+
+/// Format a byte count with an auto-selected binary unit.
+pub fn fmt_bytes(bytes: f64) -> String {
+    let a = bytes.abs();
+    if a >= GIB {
+        format!("{:.2} GiB", bytes / GIB)
+    } else if a >= MIB {
+        format!("{:.2} MiB", bytes / MIB)
+    } else if a >= KIB {
+        format!("{:.2} KiB", bytes / KIB)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+/// Format an energy in joules with an auto-selected unit.
+pub fn fmt_energy(joules: f64) -> String {
+    let a = joules.abs();
+    if a >= 1e-3 {
+        format!("{:.3} mJ", joules * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µJ", joules * 1e6)
+    } else if a >= 1e-9 {
+        format!("{:.3} nJ", joules / NJ)
+    } else {
+        format!("{:.3} pJ", joules / PJ)
+    }
+}
+
+/// Format a rate (things per second).
+pub fn fmt_rate(per_sec: f64, what: &str) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G{what}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{what}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K{what}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} {what}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_units_pick_scale() {
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(1.4), "1.400 s");
+        assert_eq!(fmt_time(7e-3), "7.000 ms");
+        assert_eq!(fmt_time(64e-9), "64.0 ns");
+    }
+
+    #[test]
+    fn byte_units_pick_scale() {
+        assert_eq!(fmt_bytes(94.0 * GIB), "94.00 GiB");
+        assert_eq!(fmt_bytes(256.0), "256 B");
+    }
+
+    #[test]
+    fn energy_units_pick_scale() {
+        assert_eq!(fmt_energy(3.5e-9), "3.500 nJ");
+        assert_eq!(fmt_energy(2e-12), "2.000 pJ");
+    }
+}

@@ -1,0 +1,76 @@
+//! Integration: every numeric anchor the paper publishes for the circuit
+//! level, checked end-to-end through the public API (DESIGN.md
+//! "Acceptance anchors").
+
+use flashpim::circuit::{cell_density_gb_mm2, PlaneLatency, TechParams};
+use flashpim::config::presets::*;
+use flashpim::config::CellKind;
+
+#[test]
+fn anchor_size_a_latency_2us() {
+    let lat = PlaneLatency::of(&size_a_plane(), &TechParams::default()).t_pim(8);
+    assert!((1.7e-6..=2.3e-6).contains(&lat), "{lat}");
+}
+
+#[test]
+fn anchor_size_a_density_12_84() {
+    let d = cell_density_gb_mm2(&size_a_plane(), &TechParams::default());
+    assert!((d - 12.84).abs() / 12.84 < 0.05, "{d}");
+}
+
+#[test]
+fn anchor_density_ratio_a_over_b_is_2() {
+    let t = TechParams::default();
+    let r = cell_density_gb_mm2(&size_a_plane(), &t) / cell_density_gb_mm2(&size_b_plane(), &t);
+    assert!((r - 2.0).abs() < 1e-6, "{r}");
+}
+
+#[test]
+fn anchor_conventional_read_20_50us() {
+    let t = TechParams::default();
+    let lat = PlaneLatency::of(&conventional_plane(), &t).t_read(CellKind::Qlc, &t);
+    assert!((20e-6..=50e-6).contains(&lat), "{lat}");
+}
+
+#[test]
+fn anchor_dse_selects_size_a() {
+    use flashpim::dse::select::{select_plane, SelectionCriteria};
+    let (winner, _) = select_plane(&SelectionCriteria::default(), &TechParams::default()).unwrap();
+    assert_eq!(winner.plane, size_a_plane());
+}
+
+#[test]
+fn anchor_io_latency_example() {
+    // Paper §III-C: 64 ns for 128 bytes at 2 GB/s.
+    let bus = flashpim::bus::ChannelBus::new(2.0e9);
+    assert_eq!(bus.transfer_time(128), flashpim::sim::SimTime::from_ns(64.0));
+}
+
+#[test]
+fn anchor_area_table2_and_budget() {
+    let b = flashpim::exp::table2::breakdown();
+    let (hv, lv, rpu) = b.ratios();
+    assert!((hv - 0.2162).abs() < 0.03);
+    assert!((lv - 0.2316).abs() < 0.03);
+    assert!((rpu - 0.0039).abs() < 0.002);
+    let die = flashpim::exp::table2::die_array_mm2();
+    assert!((die - 4.98).abs() / 4.98 < 0.03, "{die}");
+    let (lo, hi) = flashpim::area::budget::die_budget_mm2();
+    assert!(die < hi && (lo - 5.6).abs() < 0.4);
+}
+
+#[test]
+fn anchor_kv_write_and_break_even() {
+    use flashpim::kv::write_overhead::*;
+    use flashpim::llm::model_config::OptModel;
+    let t = initial_kv_write_time(&table1_system(), &OptModel::Opt30b.shape(), 1024);
+    assert!((0.10..=0.14).contains(&t), "{t}");
+    assert_eq!(break_even_tokens(0.120, 17e-3, 7e-3), 12);
+}
+
+#[test]
+fn anchor_lifetime_beyond_warranty() {
+    use flashpim::kv::lifetime::lifetime_years;
+    use flashpim::llm::model_config::OptModel;
+    assert!(lifetime_years(&OptModel::Opt30b.shape(), 7e-3).years > 5.0);
+}

@@ -1,0 +1,73 @@
+//! Integration: the serving coordinator under load — routing, admission
+//! control, utilization accounting, saturation behaviour.
+
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{simulate, Request, Route, Router, Workload};
+use flashpim::gpu::rtx4090x4_vllm;
+use flashpim::kv::cache::KvCacheManager;
+use flashpim::llm::model_config::OptModel;
+use flashpim::sim::SimTime;
+
+#[test]
+fn mixed_trace_completes_with_correct_split() {
+    let wl = Workload::synthetic(40, 0.6, 0.3, 256, 32, 11);
+    let gens = wl.requests.iter().filter(|r| r.is_generate()).count();
+    let rep = simulate(&table1_system(), &OptModel::Opt6_7b.shape(), &rtx4090x4_vllm(), &wl);
+    assert_eq!(rep.outcomes.len(), 40);
+    let (flash, gpu) = rep.counts();
+    assert_eq!(flash, gens);
+    assert_eq!(gpu, 40 - gens);
+}
+
+#[test]
+fn ttft_includes_prefill_and_kv_transfer() {
+    let wl = Workload { requests: vec![Request::generate(0, SimTime::ZERO, 512, 8)] };
+    let rep = simulate(&table1_system(), &OptModel::Opt6_7b.shape(), &rtx4090x4_vllm(), &wl);
+    let o = &rep.outcomes[0];
+    let ttft = o.ttft().unwrap().secs();
+    // Prefill + PCIe + SLC write of 512 tokens is tens of ms.
+    assert!(ttft > 10e-3, "ttft {ttft}");
+    assert_eq!(o.tokens_out, 8);
+}
+
+#[test]
+fn throughput_grows_with_generation_fraction() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let gpu = rtx4090x4_vllm();
+    let low = simulate(&sys, &model, &gpu, &Workload::synthetic(30, 0.2, 0.3, 128, 64, 5));
+    let high = simulate(&sys, &model, &gpu, &Workload::synthetic(30, 0.9, 0.3, 128, 64, 5));
+    assert!(high.throughput() > low.throughput());
+}
+
+#[test]
+fn router_respects_capacity_under_pressure() {
+    let mut router = Router::new(KvCacheManager::new(&table1_system(), &OptModel::Opt175b.shape()));
+    let cap_tokens = (router.kv.capacity / router.kv.per_token) as usize;
+    // Fill to the brim.
+    let big = Request::generate(1, SimTime::ZERO, cap_tokens - 10, 5);
+    assert_eq!(router.route(&big), Route::Flash);
+    router.admit(&big).unwrap();
+    // Next request must queue, and flow again after release.
+    let next = Request::generate(2, SimTime::ZERO, 100, 10);
+    assert_eq!(router.route(&next), Route::Queue);
+    router.finish(1).unwrap();
+    assert_eq!(router.route(&next), Route::Flash);
+}
+
+#[test]
+fn utilizations_bounded() {
+    let wl = Workload::synthetic(25, 0.5, 0.2, 256, 32, 9);
+    let rep = simulate(&table1_system(), &OptModel::Opt13b.shape(), &rtx4090x4_vllm(), &wl);
+    assert!(rep.flash_utilization >= 0.0 && rep.flash_utilization <= 1.0);
+    assert!(rep.gpu_utilization >= 0.0 && rep.gpu_utilization <= 1.0);
+}
+
+#[test]
+fn report_renders() {
+    let wl = Workload::synthetic(10, 0.5, 0.2, 128, 16, 1);
+    let rep = simulate(&table1_system(), &OptModel::Opt6_7b.shape(), &rtx4090x4_vllm(), &wl);
+    let s = rep.render();
+    assert!(s.contains("TPOT"));
+    assert!(s.contains("tok/s"));
+}

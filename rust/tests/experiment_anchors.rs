@@ -1,0 +1,87 @@
+//! Integration: the headline system-level results of the paper, checked
+//! through the experiment drivers the benches use.
+
+use flashpim::exp;
+
+#[test]
+fn fig5_conventional_210x_and_gpu_2_4x() {
+    let rows = exp::fig5::fig5();
+    let conv = rows[0].1;
+    let prop = rows[1].1;
+    let gpu = rows[2].1;
+    assert!((1.0..=1.9).contains(&conv), "conventional {conv}");
+    assert!((4e-3..=10e-3).contains(&prop), "proposed {prop}");
+    let improvement = conv / prop;
+    assert!((150.0..=280.0).contains(&improvement), "{improvement}");
+    let speedup = gpu / prop;
+    assert!((1.9..=3.1).contains(&speedup), "{speedup}");
+}
+
+#[test]
+fn fig9a_htree_reduction() {
+    let rows = exp::fig9::fig9a();
+    let mean = flashpim::util::stats::mean(
+        &rows.iter().map(|(_, _, _, r)| *r).collect::<Vec<_>>(),
+    );
+    assert!((0.36..=0.58).contains(&mean), "mean reduction {mean}");
+}
+
+#[test]
+fn fig9b_size_a_overhead_positive_modest() {
+    let rows = exp::fig9::fig9b();
+    let mean = flashpim::util::stats::mean(
+        &rows.iter().map(|(_, _, _, o)| *o).collect::<Vec<_>>(),
+    );
+    assert!((0.02..=0.35).contains(&mean), "mean overhead {mean}");
+}
+
+#[test]
+fn fig12_ordering_and_htree_win() {
+    let cases = exp::fig12::fig12();
+    let (nccr, ccnr, ccrr) = (&cases[0].1, &cases[1].1, &cases[2].1);
+    // inbound + PIM identical; channel-Col slashes outbound; in-die
+    // concentration (enabled by the H-tree) beats die-spreading.
+    assert_eq!(nccr.pim, ccnr.pim);
+    assert_eq!(ccnr.pim, ccrr.pim);
+    assert!(nccr.outbound > ccrr.outbound);
+    assert!(ccrr.outbound > ccnr.outbound);
+    let reduction = 1.0 - ccnr.outbound.secs() / ccrr.outbound.secs();
+    assert!((0.32..=0.62).contains(&reduction), "{reduction}");
+}
+
+#[test]
+fn fig14a_summary_anchors() {
+    let rows = exp::fig14::fig14a();
+    let s = exp::fig14::fig14a_summary(&rows);
+    assert!((1.9..=3.1).contains(&s.mean_speedup_vs_4090), "{}", s.mean_speedup_vs_4090);
+    assert!((-0.05..=0.15).contains(&s.mean_overhead_vs_a100), "{}", s.mean_overhead_vs_a100);
+    assert_eq!(s.oom_models.len(), 2);
+}
+
+#[test]
+fn fig14b_scaling_shape() {
+    let rows = exp::fig14::fig14b();
+    // dMVM+softmax grow with lengths; sMVM+LN flat (paper §V-B).
+    let first = &rows[0].1;
+    let last = &rows[3].1;
+    assert!((first.smvm - last.smvm).abs() < 1e-9);
+    assert!((first.ln - last.ln).abs() < 1e-9);
+    assert!(last.softmax > first.softmax);
+    assert!(last.dmvm > first.dmvm);
+}
+
+#[test]
+fn fig1_renders_and_anchors() {
+    let s = exp::fig1::render();
+    assert!(s.contains("GPT-3.5"));
+    let (_, _, ratio) = exp::fig1::fig1b();
+    assert!((30.0..=65.0).contains(&ratio), "{ratio}");
+}
+
+#[test]
+fn opt30b_tpot_near_7ms() {
+    use flashpim::config::presets::table1_system;
+    use flashpim::llm::model_config::OptModel;
+    let t = exp::fig14::flash_tpot(&table1_system(), OptModel::Opt30b, 1024, 1024);
+    assert!((4e-3..=10e-3).contains(&t), "{t}");
+}

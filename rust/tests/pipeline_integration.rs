@@ -1,0 +1,93 @@
+//! Integration across the modeling stack: circuit → nand → bus → pim →
+//! tiling → llm schedule, plus cross-model consistency checks.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::{table1_shared_bus, table1_system};
+use flashpim::config::BusTopology;
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::schedule::TokenSchedule;
+use flashpim::nand::NandTiming;
+use flashpim::pim::op::MvmShape;
+use flashpim::pim::smvm::SmvmPipeline;
+use flashpim::tiling::{search_best, TilingCostModel};
+
+#[test]
+fn timing_flows_from_circuit_to_pipeline() {
+    // The pipeline's PIM stage for a single tile equals the circuit
+    // model's T_PIM exactly.
+    let sys = table1_system();
+    let tech = TechParams::default();
+    let timing = NandTiming::of_system(&sys, &tech);
+    let pipe = SmvmPipeline::new(&sys, timing.clone(), 64);
+    let r = pipe.execute(MvmShape::new(128, 512)); // exactly one unit tile
+    let pim_span = r.pim_done.saturating_sub(r.inbound_done.min(r.pim_done));
+    assert!(pim_span <= timing.t_pim + flashpim::sim::SimTime::from_ns(1.0));
+}
+
+#[test]
+fn tiling_best_uses_htree_benefit() {
+    // The same shape costs less outbound under the H-tree than the
+    // shared bus for the best scheme of each.
+    let tech = TechParams::default();
+    let h_sys = table1_system();
+    let s_sys = table1_shared_bus();
+    assert_eq!(h_sys.bus, BusTopology::HTree);
+    let h_model = TilingCostModel::new(&h_sys, NandTiming::of_system(&h_sys, &tech));
+    let s_model = TilingCostModel::new(&s_sys, NandTiming::of_system(&s_sys, &tech));
+    let shape = MvmShape::new(7168, 7168);
+    let h_best = &search_best(&h_model, shape)[0];
+    let s_best = &search_best(&s_model, shape)[0];
+    assert!(h_best.cost.total() <= s_best.cost.total());
+}
+
+#[test]
+fn schedule_uses_best_tilings() {
+    // The TPOT sMVM component must not exceed a naive per-op upper bound
+    // (every MVM on one channel).
+    let sys = table1_system();
+    let mut sched = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt13b.shape());
+    let b = sched.token_breakdown(1024);
+    assert!(b.smvm > 0.0);
+    // 4 sMVMs + lm_head, all well under 100 µs each after tiling.
+    let per_op = b.smvm / (OptModel::Opt13b.shape().layers as f64 * 4.0 + 1.0);
+    assert!(per_op < 100e-6, "per-op smvm {per_op}");
+}
+
+#[test]
+fn bigger_models_spend_more_on_smvm() {
+    let sys = table1_system();
+    let tech = TechParams::default();
+    let mut small = TokenSchedule::new(&sys, &tech, OptModel::Opt6_7b.shape());
+    let mut big = TokenSchedule::new(&sys, &tech, OptModel::Opt175b.shape());
+    assert!(big.token_breakdown(1024).smvm > small.token_breakdown(1024).smvm);
+}
+
+#[test]
+fn shared_bus_system_has_higher_tpot() {
+    let tech = TechParams::default();
+    let mut htree = TokenSchedule::new(&table1_system(), &tech, OptModel::Opt30b.shape());
+    let mut shared = TokenSchedule::new(&table1_shared_bus(), &tech, OptModel::Opt30b.shape());
+    assert!(shared.tpot(1024) > htree.tpot(1024));
+}
+
+#[test]
+fn device_capacity_fits_all_benchmarked_models() {
+    use flashpim::nand::FlashOrganization;
+    let f = FlashOrganization::new(&table1_system());
+    for m in OptModel::ALL {
+        let need = m.shape().weight_bytes(1.0);
+        assert!(
+            (f.qlc_capacity_bytes() as f64) > need,
+            "{} needs {need} > {}",
+            m.shape().name,
+            f.qlc_capacity_bytes()
+        );
+    }
+}
+
+#[test]
+fn cli_experiments_run_end_to_end() {
+    for cmd in ["fig1", "table2", "dse", "lifetime"] {
+        flashpim::cli::run(vec![cmd.to_string()]).unwrap_or_else(|e| panic!("{cmd}: {e}"));
+    }
+}

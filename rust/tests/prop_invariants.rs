@@ -1,0 +1,208 @@
+//! Property-based invariants over the core subsystems (mini-proptest kit
+//! in `util::testkit`). Each property runs hundreds of randomized cases
+//! with replayable seeds.
+
+use flashpim::bus::{HTree, Rpu};
+use flashpim::circuit::{cell_density_gb_mm2, PlaneLatency, TechParams};
+use flashpim::config::presets::table1_system;
+use flashpim::config::{CellKind, PlaneConfig, RpuConfig};
+use flashpim::kv::cache::KvCacheManager;
+use flashpim::llm::model_config::OptModel;
+use flashpim::pim::op::MvmShape;
+use flashpim::sim::{EventQueue, Resource, SimTime};
+use flashpim::tiling::enumerate_schemes;
+use flashpim::util::testkit::check;
+
+fn random_plane(g: &mut flashpim::util::testkit::Gen) -> PlaneConfig {
+    PlaneConfig::new(g.pow2(6, 11), g.pow2(8, 14), g.pow2(5, 9), CellKind::Qlc)
+}
+
+#[test]
+fn prop_htree_reduction_equals_sequential_sum() {
+    check("htree reduce == sum", 200, |g| {
+        let leaves = g.pow2(1, 6);
+        let n = g.usize_in(1, 64);
+        let tree = HTree::new(leaves, Rpu::new(RpuConfig::default()), 2.0e9);
+        let values: Vec<Vec<i32>> = (0..leaves)
+            .map(|_| (0..n).map(|_| g.i64_in(-1000, 1000) as i32).collect())
+            .collect();
+        let got = tree.reduce_values(&values);
+        for j in 0..n {
+            let want: i32 = values.iter().map(|v| v[j]).sum();
+            if got[j] != want {
+                return Err(format!("col {j}: {} != {want}", got[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_monotone_under_growth() {
+    // Growing any dimension never reduces T_PIM (Fig. 6a's shape).
+    let tech = TechParams::default();
+    check("latency monotone", 150, |g| {
+        let p = random_plane(g);
+        let t0 = PlaneLatency::of(&p, &tech).t_pim(8);
+        let grown = match g.usize_in(0, 3) {
+            0 => PlaneConfig { n_row: p.n_row * 2, ..p },
+            1 => PlaneConfig { n_col: p.n_col * 2, ..p },
+            _ => PlaneConfig { n_stack: p.n_stack * 2, ..p },
+        };
+        let t1 = PlaneLatency::of(&grown, &tech).t_pim(8);
+        if t1 >= t0 { Ok(()) } else { Err(format!("{p:?} {t0} -> {grown:?} {t1}")) }
+    });
+}
+
+#[test]
+fn prop_density_row_invariant() {
+    let tech = TechParams::default();
+    check("density row-invariant", 150, |g| {
+        let p = random_plane(g);
+        let d0 = cell_density_gb_mm2(&p, &tech);
+        let d1 = cell_density_gb_mm2(&PlaneConfig { n_row: p.n_row * 2, ..p }, &tech);
+        if (d0 - d1).abs() < 1e-9 { Ok(()) } else { Err(format!("{d0} vs {d1}")) }
+    });
+}
+
+#[test]
+fn prop_tiling_schemes_cover_grid_exactly() {
+    // Every enumerated scheme covers the tile grid: Row product >= row
+    // tiles, Col product >= col tiles, all counts within resources.
+    let org = table1_system().org;
+    check("tiling coverage", 60, |g| {
+        let rt = g.usize_in(1, 64);
+        let ct = g.usize_in(1, 32);
+        for s in enumerate_schemes(&org, rt, ct) {
+            if s.validate(&org, rt, ct).is_err() {
+                return Err(format!("invalid scheme {} for {rt}x{ct}", s.notation_counts()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_is_time_ordered() {
+    check("event queue ordering", 100, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize_in(1, 200);
+        for i in 0..n {
+            q.schedule(SimTime(g.i64_in(0, 10_000) as u64), i);
+        }
+        let mut last = SimTime::ZERO;
+        while let Some((t, _)) = q.pop() {
+            if t < last {
+                return Err(format!("time went backwards: {t:?} < {last:?}"));
+            }
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resource_never_overlaps() {
+    check("resource exclusivity", 100, |g| {
+        let mut r = Resource::new();
+        let n = g.usize_in(1, 100);
+        let mut jobs: Vec<(SimTime, SimTime)> = Vec::new();
+        for _ in 0..n {
+            let at = SimTime(g.i64_in(0, 1000) as u64);
+            let dur = SimTime(g.i64_in(1, 100) as u64);
+            let start = r.acquire(at, dur);
+            jobs.push((start, start + dur));
+        }
+        jobs.sort();
+        for w in jobs.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!("overlap: {:?} then {:?}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_manager_conserves_bytes() {
+    check("kv conservation", 60, |g| {
+        let mut m = KvCacheManager::new(&table1_system(), &OptModel::Opt6_7b.shape());
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..g.usize_in(1, 60) {
+            if g.bool() || live.is_empty() {
+                let toks = g.usize_in(1, 512);
+                if m.admit(next_id, toks).is_ok() {
+                    live.push((next_id, toks));
+                }
+                next_id += 1;
+            } else if g.bool() {
+                let idx = g.usize_in(0, live.len());
+                let (id, ref mut t) = live[idx];
+                if m.append(id).is_ok() {
+                    *t += 1;
+                }
+            } else {
+                let idx = g.usize_in(0, live.len());
+                let (id, _) = live.swap_remove(idx);
+                m.release(id).map_err(|e| e.to_string())?;
+            }
+            let want: u64 = live.iter().map(|(_, t)| *t as u64 * m.per_token).sum();
+            if m.used() != want {
+                return Err(format!("used {} != expected {want}", m.used()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smvm_total_bounds() {
+    // Pipeline total is at least each stage and at most their sum (the
+    // stages overlap but never create time).
+    use flashpim::nand::NandTiming;
+    use flashpim::pim::smvm::SmvmPipeline;
+    let sys = table1_system();
+    let timing = NandTiming::of_system(&sys, &TechParams::default());
+    check("smvm pipeline bounds", 60, |g| {
+        let pipe = SmvmPipeline::new(&sys, timing.clone(), g.pow2(4, 8));
+        let shape = MvmShape::new(g.pow2(7, 13), g.pow2(7, 13));
+        let r = pipe.execute(shape);
+        if r.total < r.pim_done {
+            return Err("total earlier than pim".into());
+        }
+        if r.total < r.inbound_done {
+            return Err("total earlier than inbound".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rpu_vvm_matches_i64_dot() {
+    check("rpu vvm", 200, |g| {
+        let n = g.usize_in(1, 256);
+        let a: Vec<i16> = (0..n).map(|_| g.i64_in(-32768, 32768) as i16).collect();
+        let b: Vec<i16> = (0..n).map(|_| g.i64_in(-32768, 32768) as i16).collect();
+        let got = Rpu::vvm(&a, &b) as i64;
+        let want: i64 = a.iter().zip(&b).map(|(x, y)| *x as i64 * *y as i64).sum();
+        // i32 accumulate can overflow for adversarial inputs; the model
+        // matches exact math whenever the exact sum fits i32.
+        if want.abs() <= i32::MAX as i64 && got != want {
+            return Err(format!("{got} != {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_tpot_positive_and_finite() {
+    use flashpim::llm::schedule::TokenSchedule;
+    let sys = table1_system();
+    check("tpot sane", 10, |g| {
+        let model = *g.pick(&OptModel::ALL);
+        let mut s = TokenSchedule::new(&sys, &TechParams::default(), model.shape());
+        let t = s.tpot(g.usize_in(64, 4096));
+        if t.is_finite() && t > 0.0 && t < 1.0 { Ok(()) } else { Err(format!("{t}")) }
+    });
+}

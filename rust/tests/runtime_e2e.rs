@@ -1,0 +1,87 @@
+//! End-to-end runtime tests over the real AOT artifacts. These require
+//! `make artifacts` to have run; they skip (with a note) otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use flashpim::coordinator::serve::{Coordinator, Engine, Job};
+use flashpim::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = ArtifactBundle::default_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn bundle_loads_and_is_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let b = ArtifactBundle::load(&dir).unwrap();
+    assert_eq!(b.vocab, 256);
+    assert!(b.weights.len() > 10);
+    // First two weights are the embeddings with the manifest's dims.
+    assert_eq!(b.weights[0].1.shape, vec![b.vocab, b.d_model]);
+    assert_eq!(b.weights[1].1.shape, vec![b.max_seq, b.d_model]);
+}
+
+#[test]
+fn decode_step_runs_and_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut e1 = DecodeExecutor::load(&dir).unwrap();
+    let mut e2 = DecodeExecutor::load(&dir).unwrap();
+    let l1 = e1.step(104).unwrap();
+    let l2 = e2.step(104).unwrap();
+    assert_eq!(l1.len(), e1.bundle.vocab);
+    assert_eq!(l1, l2, "decode must be deterministic");
+}
+
+#[test]
+fn generation_continues_training_corpus() {
+    let Some(dir) = artifacts() else { return };
+    let tok = ByteTokenizer;
+    let mut exec = DecodeExecutor::load(&dir).unwrap();
+    let out = exec.generate(&tok.encode("the flash "), 24, &mut |_| {}).unwrap();
+    let text = tok.decode(&out);
+    // The trained char-LM must continue with corpus-like text: ascii,
+    // mostly lowercase words.
+    assert!(!text.is_empty());
+    let alpha = text.chars().filter(|c| c.is_ascii_lowercase() || *c == ' ').count();
+    assert!(
+        alpha as f64 / text.len() as f64 > 0.8,
+        "continuation does not look like corpus text: {text:?}"
+    );
+}
+
+#[test]
+fn kv_reset_between_sequences() {
+    let Some(dir) = artifacts() else { return };
+    let mut exec = DecodeExecutor::load(&dir).unwrap();
+    let a = exec.generate(&[116, 104, 101, 32], 8, &mut |_| {}).unwrap(); // "the "
+    let b = exec.generate(&[116, 104, 101, 32], 8, &mut |_| {}).unwrap();
+    assert_eq!(a, b, "reset() must clear sequence state");
+}
+
+#[test]
+fn coordinator_serves_functional_jobs() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new(move || DecodeExecutor::load(&dir).unwrap());
+    let tok = ByteTokenizer;
+    let served = coord
+        .run(Job { id: 9, prompt: tok.encode("a plane reads "), max_new: 12 })
+        .unwrap();
+    assert_eq!(served.tokens.len(), 12);
+    assert!(served.wall > 0.0);
+    assert!(served.ttft <= served.wall);
+}
+
+#[test]
+fn max_seq_budget_respected() {
+    let Some(dir) = artifacts() else { return };
+    let mut exec = DecodeExecutor::load(&dir).unwrap();
+    let max_seq = exec.bundle.max_seq;
+    let prompt: Vec<u32> = (0..max_seq as u32 - 4).map(|i| 97 + (i % 26)).collect();
+    let out = exec.generate(&prompt, 100, &mut |_| {}).unwrap();
+    assert!(out.len() <= 4, "budget {} exceeded: {}", 4, out.len());
+}
