@@ -1,0 +1,23 @@
+# Local targets mirroring the CI jobs (.github/workflows/ci.yml) exactly,
+# so a green `make ci` means a green pipeline.
+
+.PHONY: build test fmt clippy lint bench-check ci
+
+build:
+	cargo build --release --workspace
+
+test:
+	cargo test -q --workspace
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+lint: fmt clippy
+
+bench-check:
+	cargo bench --no-run --workspace
+
+ci: build test lint bench-check

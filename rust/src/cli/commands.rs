@@ -3,7 +3,9 @@
 use super::args::Args;
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
-use crate::coordinator::{simulate, Workload};
+use crate::coordinator::{
+    LenRange, policy_from_name, run_traffic, simulate, TrafficConfig, Workload,
+};
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
 use crate::kv::lifetime::{lifetime_years, lifetime_years_system};
@@ -13,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 const COMMANDS: &[&str] = &[
     "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "tiling",
-    "lifetime", "serve", "generate", "config", "energy", "all",
+    "lifetime", "serve", "serve-sim", "generate", "config", "energy", "all",
 ];
 
 const HELP: &str = "\
@@ -36,6 +38,13 @@ tools:
                        per-token energy rollup vs GPU baseline
   serve [--requests N --gen-frac F --model NAME]
                        simulated serving trace (router + offload)
+  serve-sim --devices N --rate R --requests K
+                       closed-loop Poisson traffic against a flash-PIM
+                       device pool (TTFT/TPOT/latency p50/p95/p99 and
+                       per-device utilization); also --policy
+                       round-robin|least-loaded, --queue-cap,
+                       --input-min/max, --output-min/max, --followup,
+                       --model, --seed
   generate --prompt S [--max-new N]
                        functional generation via the PJRT runtime
                        (requires `make artifacts`)
@@ -66,6 +75,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "lifetime" => cmd_lifetime(&args)?,
         "energy" => cmd_energy(&args)?,
         "serve" => cmd_serve(&args)?,
+        "serve-sim" => cmd_serve_sim(&args)?,
         "generate" => cmd_generate(&args)?,
         "config" => println!("{:#?}", table1_system()),
         "all" => {
@@ -165,6 +175,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
+        .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
+    let policy_name = args.flag_or("policy", "least-loaded");
+    let policy = policy_from_name(&policy_name)
+        .context("unknown policy; use round-robin|least-loaded")?;
+    // Defaults live in one place: TrafficConfig::default_for.
+    let mut cfg = TrafficConfig::default_for(args.usize_flag("devices", 4)?);
+    cfg.rate = args.f64_flag("rate", cfg.rate)?;
+    cfg.requests = args.usize_flag("requests", cfg.requests)?;
+    let (in_lo, in_hi) = (
+        args.usize_flag("input-min", cfg.input_tokens.lo)?,
+        args.usize_flag("input-max", cfg.input_tokens.hi)?,
+    );
+    let (out_lo, out_hi) = (
+        args.usize_flag("output-min", cfg.output_tokens.lo)?,
+        args.usize_flag("output-max", cfg.output_tokens.hi)?,
+    );
+    if cfg.devices == 0 || cfg.rate <= 0.0 {
+        bail!("--devices and --rate must be positive");
+    }
+    if in_lo < 1 || in_hi < in_lo || out_lo < 1 || out_hi < out_lo {
+        bail!(
+            "token ranges need 1 <= min <= max (input {in_lo}..{in_hi}, output {out_lo}..{out_hi})"
+        );
+    }
+    cfg.input_tokens = LenRange::new(in_lo, in_hi);
+    cfg.output_tokens = LenRange::new(out_lo, out_hi);
+    cfg.queue_capacity = args.usize_flag("queue-cap", cfg.queue_capacity)?;
+    if cfg.queue_capacity == 0 {
+        bail!("--queue-cap must be at least 1");
+    }
+    cfg.followup = args.f64_flag("followup", cfg.followup)?;
+    cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
+    let report = run_traffic(&table1_system(), &model.shape(), policy, &cfg);
+    print!("{}", report.render());
+    Ok(())
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let dir = ArtifactBundle::default_dir();
     if !dir.join("manifest.txt").exists() {
@@ -216,6 +265,45 @@ mod tests {
     #[test]
     fn lifetime_command_runs() {
         run(vec!["lifetime".into()]).unwrap();
+    }
+
+    #[test]
+    fn serve_sim_command_runs() {
+        run(vec![
+            "serve-sim".into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "12".into(),
+            "--output-min".into(),
+            "4".into(),
+            "--output-max".into(),
+            "8".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_sim_rejects_unknown_policy() {
+        let err = run(vec!["serve-sim".into(), "--policy".into(), "fifo".into()]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn serve_sim_rejects_bad_flag_values() {
+        assert!(run(vec!["serve-sim".into(), "--input-min".into(), "0".into()]).is_err());
+        assert!(run(vec![
+            "serve-sim".into(),
+            "--output-min".into(),
+            "50".into(),
+            "--output-max".into(),
+            "4".into(),
+        ])
+        .is_err());
+        assert!(run(vec!["serve-sim".into(), "--devices".into(), "0".into()]).is_err());
+        assert!(run(vec!["serve-sim".into(), "--queue-cap".into(), "0".into()]).is_err());
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Closed-loop traffic simulation for the device pool: Poisson arrivals at
+//! a configurable rate, prompt/output lengths drawn from [`crate::util::rng`]
+//! distributions, device service time taken from
+//! [`crate::llm::schedule::TokenSchedule`] — so *simulated flash latency*,
+//! not mock wall-clock, drives every reported number.
+//!
+//! The loop models the full serving path per request: scheduler pick
+//! ([`DeviceRouter`]: KV affinity first, then policy), bounded per-device
+//! admission (arrivals beyond the queue capacity are rejected —
+//! backpressure), SLC KV admission with idle-LRU eviction, the initial KV
+//! write, and the per-token decode schedule. Results aggregate into a
+//! [`PoolReport`] (TTFT/TPOT/latency p50/p95/p99, per-device utilization).
+
+use super::metrics::PoolReport;
+use super::router::{DeviceRouter, DeviceStatus, Scheduler};
+use crate::circuit::TechParams;
+use crate::config::SystemConfig;
+use crate::kv::write_overhead::initial_kv_write_time;
+use crate::llm::model_config::ModelShape;
+use crate::llm::schedule::TokenSchedule;
+use crate::sim::{Resource, SimTime};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Uniform token-length distribution over `[lo, hi]` (inclusive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LenRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl LenRange {
+    pub fn new(lo: usize, hi: usize) -> LenRange {
+        assert!(lo >= 1 && hi >= lo, "bad length range [{lo}, {hi}]");
+        LenRange { lo, hi }
+    }
+
+    pub fn fixed(n: usize) -> LenRange {
+        LenRange::new(n, n)
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        if self.lo == self.hi {
+            self.lo
+        } else {
+            rng.range(self.lo, self.hi + 1)
+        }
+    }
+}
+
+/// Traffic and pool configuration for one closed-loop run.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Number of flash-PIM devices in the pool.
+    pub devices: usize,
+    /// Mean Poisson arrival rate (requests/second).
+    pub rate: f64,
+    /// Total arrivals to generate.
+    pub requests: usize,
+    /// Prompt-length distribution.
+    pub input_tokens: LenRange,
+    /// Output-length distribution.
+    pub output_tokens: LenRange,
+    /// Per-device bound on queued + running jobs; arrivals beyond it are
+    /// rejected (backpressure).
+    pub queue_capacity: usize,
+    /// Probability that an arrival is a follow-up turn of a finished
+    /// session (exercises KV affinity).
+    pub followup: f64,
+    pub seed: u64,
+}
+
+impl TrafficConfig {
+    /// Sensible defaults for an interactive chat-style mix.
+    pub fn default_for(devices: usize) -> TrafficConfig {
+        TrafficConfig {
+            devices,
+            rate: 8.0,
+            requests: 200,
+            input_tokens: LenRange::new(128, 256),
+            output_tokens: LenRange::new(32, 64),
+            queue_capacity: 64,
+            followup: 0.3,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-request record produced by the simulator.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub id: u64,
+    pub session: u64,
+    /// Device the request ran on (`None` when rejected).
+    pub device: Option<usize>,
+    pub arrival: SimTime,
+    pub first_token: Option<SimTime>,
+    pub completed: SimTime,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// Context length at the first decode step (larger than `input_tokens`
+    /// on follow-up turns whose KV stayed resident).
+    pub context: usize,
+    pub rejected: bool,
+    pub followup: bool,
+}
+
+impl SimRequest {
+    /// End-to-end latency (accepted requests).
+    pub fn latency(&self) -> SimTime {
+        self.completed - self.arrival
+    }
+
+    /// Time to first token, including queueing and the initial KV write.
+    pub fn ttft(&self) -> Option<SimTime> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+
+    /// Mean time per output token after the first.
+    pub fn tpot(&self) -> Option<f64> {
+        let first = self.first_token?;
+        if self.output_tokens <= 1 {
+            return None;
+        }
+        Some((self.completed - first).secs() / (self.output_tokens - 1) as f64)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct DeviceState {
+    res: Resource,
+    /// Completion times of assigned jobs, FIFO (monotone — one server).
+    inflight: VecDeque<SimTime>,
+}
+
+impl DeviceState {
+    fn depth(&mut self, now: SimTime) -> usize {
+        while let Some(front) = self.inflight.front() {
+            if *front <= now {
+                self.inflight.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.inflight.len()
+    }
+}
+
+/// Run a closed-loop Poisson trace against a simulated device pool.
+/// Deterministic for a given config.
+pub fn run_traffic(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+) -> PoolReport {
+    assert!(cfg.devices > 0, "pool needs at least one device");
+    assert!(cfg.rate > 0.0, "arrival rate must be positive");
+    assert!(cfg.queue_capacity > 0, "queue capacity must be at least 1");
+    let tech = TechParams::default();
+    let mut sched = TokenSchedule::new(sys, &tech, model.clone());
+    let policy_name = policy.name().to_string();
+    let mut router = DeviceRouter::new(cfg.devices, sys, model, policy);
+    let mut rng = Rng::new(cfg.seed);
+    let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.devices];
+    // (session, completion time of its latest finished turn)
+    let mut sessions: Vec<(u64, SimTime)> = Vec::new();
+    let mut outcomes: Vec<SimRequest> = Vec::with_capacity(cfg.requests);
+    let mut clock = 0.0f64;
+    let mut next_session: u64 = 0;
+
+    for id in 0..cfg.requests as u64 {
+        clock += -(1.0 - rng.f64()).ln() / cfg.rate; // exponential gap
+        let now = SimTime::from_secs(clock);
+
+        // Follow-up turns reuse a session whose previous turn has finished.
+        let candidates: Vec<u64> = sessions
+            .iter()
+            .filter(|(_, done)| *done <= now)
+            .map(|(s, _)| *s)
+            .collect();
+        let reuse = !candidates.is_empty() && rng.chance(cfg.followup);
+        let session = if reuse {
+            *rng.choice(&candidates)
+        } else {
+            next_session += 1;
+            next_session
+        };
+
+        let l_in = cfg.input_tokens.sample(&mut rng);
+        let l_out = cfg.output_tokens.sample(&mut rng);
+
+        let status: Vec<DeviceStatus> = devices
+            .iter_mut()
+            .enumerate()
+            .map(|(i, d)| DeviceStatus {
+                device: i,
+                queue_depth: d.depth(now),
+                kv_used: router.kv(i).used(),
+                kv_capacity: router.kv(i).capacity,
+            })
+            .collect();
+        let dev = router.assign(session, &status);
+
+        let reject = |router: &mut DeviceRouter, outcomes: &mut Vec<SimRequest>| {
+            if router.kv(dev).context_len(session).is_none() {
+                router.forget(session); // placement without resident KV
+            }
+            outcomes.push(SimRequest {
+                id,
+                session,
+                device: None,
+                arrival: now,
+                first_token: None,
+                completed: now,
+                input_tokens: l_in,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                followup: reuse,
+            });
+        };
+
+        // Bounded admission: the picked device's queue may be full.
+        if status[dev].queue_depth >= cfg.queue_capacity {
+            reject(&mut router, &mut outcomes);
+            continue;
+        }
+
+        // SLC KV admission, evicting idle resident sessions (oldest first)
+        // when the region is full.
+        let per_token = router.kv(dev).per_token;
+        let resident = router.kv(dev).context_len(session);
+        let needed = (l_in + l_out) as u64 * per_token;
+        if router.kv(dev).used() + needed > router.kv(dev).capacity {
+            evict_idle(&mut router, dev, &sessions, now, session, needed);
+        }
+        if router.kv(dev).used() + needed > router.kv(dev).capacity {
+            reject(&mut router, &mut outcomes);
+            continue;
+        }
+        match resident {
+            // Fresh (or evicted-and-returning) session: admit the prompt.
+            None => {
+                router.kv_mut(dev).admit(session, l_in).expect("admission after space check");
+            }
+            // Follow-up with resident KV: append the new prompt tokens.
+            Some(_) => {
+                for _ in 0..l_in {
+                    router.kv_mut(dev).append(session).expect("append after space check");
+                }
+            }
+        }
+        let l_ctx0 = resident.unwrap_or(0) + l_in;
+
+        // Service time on the flash device: initial SLC write of the new
+        // prompt KV, then the per-token decode schedule.
+        let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, l_in));
+        let mut service = kv_write;
+        let mut first_offset = SimTime::ZERO;
+        for step in 0..l_out {
+            service += sched.step_time(l_ctx0 + step);
+            if step == 0 {
+                first_offset = service;
+            }
+            router.kv_mut(dev).append(session).expect("append after space check");
+        }
+        let start = devices[dev].res.acquire(now, service);
+        let completed = start + service;
+        devices[dev].inflight.push_back(completed);
+        match sessions.iter_mut().find(|(s, _)| *s == session) {
+            Some(entry) => entry.1 = completed,
+            None => sessions.push((session, completed)),
+        }
+        outcomes.push(SimRequest {
+            id,
+            session,
+            device: Some(dev),
+            arrival: now,
+            first_token: Some(start + first_offset),
+            completed,
+            input_tokens: l_in,
+            output_tokens: l_out,
+            context: l_ctx0,
+            rejected: false,
+            followup: reuse,
+        });
+    }
+
+    let makespan =
+        outcomes.iter().filter(|o| !o.rejected).map(|o| o.completed).max().unwrap_or(SimTime::ZERO);
+    let device_utilization =
+        devices.iter().map(|d| d.res.utilization(makespan)).collect::<Vec<_>>();
+    let device_jobs = devices.iter().map(|d| d.res.jobs() as usize).collect::<Vec<_>>();
+    PoolReport {
+        policy: policy_name,
+        devices: cfg.devices,
+        offered_rate: cfg.rate,
+        outcomes,
+        makespan,
+        device_utilization,
+        device_jobs,
+    }
+}
+
+/// Evict idle resident sessions on `dev` (latest turn finished, not the
+/// current session), oldest completion first, until `needed` bytes fit.
+fn evict_idle(
+    router: &mut DeviceRouter,
+    dev: usize,
+    sessions: &[(u64, SimTime)],
+    now: SimTime,
+    keep: u64,
+    needed: u64,
+) {
+    let mut idle: Vec<(SimTime, u64)> = router
+        .sessions_on(dev)
+        .into_iter()
+        .filter(|s| *s != keep)
+        .filter_map(|s| {
+            sessions
+                .iter()
+                .find(|(id, _)| *id == s)
+                .and_then(|(_, done)| if *done <= now { Some((*done, s)) } else { None })
+        })
+        .collect();
+    idle.sort_unstable();
+    for (_, s) in idle {
+        if router.kv(dev).used() + needed <= router.kv(dev).capacity {
+            break;
+        }
+        let _ = router.evict(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::coordinator::router::{LeastLoaded, RoundRobin};
+    use crate::llm::model_config::OptModel;
+
+    fn quick_cfg(devices: usize, requests: usize, rate: f64, seed: u64) -> TrafficConfig {
+        TrafficConfig {
+            devices,
+            rate,
+            requests,
+            input_tokens: LenRange::new(64, 128),
+            output_tokens: LenRange::new(8, 16),
+            queue_capacity: 64,
+            followup: 0.3,
+            seed,
+        }
+    }
+
+    fn run(cfg: &TrafficConfig, least_loaded: bool) -> PoolReport {
+        let policy: Box<dyn Scheduler + Send> = if least_loaded {
+            Box::new(LeastLoaded::new())
+        } else {
+            Box::new(RoundRobin::new())
+        };
+        run_traffic(&table1_system(), &OptModel::Opt6_7b.shape(), policy, cfg)
+    }
+
+    #[test]
+    fn all_arrivals_accounted_for() {
+        let cfg = quick_cfg(2, 40, 10.0, 3);
+        let rep = run(&cfg, true);
+        assert_eq!(rep.outcomes.len(), 40);
+        assert_eq!(rep.accepted() + rep.rejected(), 40);
+        assert_eq!(rep.device_utilization.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg(2, 30, 10.0, 7);
+        let a = run(&cfg, true);
+        let b = run(&cfg, true);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.accepted(), b.accepted());
+    }
+
+    #[test]
+    fn followups_share_devices_with_their_sessions() {
+        let mut cfg = quick_cfg(4, 60, 10.0, 5);
+        cfg.followup = 0.6;
+        let rep = run(&cfg, true);
+        let mut seen = std::collections::HashMap::new();
+        let mut followups = 0;
+        for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+            if let Some(prev) = seen.get(&o.session) {
+                followups += 1;
+                assert_eq!(
+                    o.device, *prev,
+                    "follow-up turn of session {} moved devices",
+                    o.session
+                );
+                assert!(o.context > o.input_tokens, "resident KV must extend the context");
+            }
+            seen.insert(o.session, o.device);
+        }
+        assert!(followups > 0, "trace produced no follow-up turns");
+    }
+
+    #[test]
+    fn saturated_single_device_rejects_arrivals() {
+        let mut cfg = quick_cfg(1, 80, 200.0, 9);
+        cfg.queue_capacity = 4;
+        cfg.output_tokens = LenRange::new(32, 64);
+        let rep = run(&cfg, true);
+        assert!(rep.rejected() > 0, "200 req/s into one bounded device must shed load");
+        // Rejected arrivals produce no tokens and no device assignment.
+        for o in rep.outcomes.iter().filter(|o| o.rejected) {
+            assert_eq!(o.device, None);
+            assert_eq!(o.output_tokens, 0);
+        }
+    }
+
+    #[test]
+    fn utilization_and_latency_sane() {
+        let cfg = quick_cfg(4, 80, 10.0, 11);
+        let rep = run(&cfg, true);
+        for u in &rep.device_utilization {
+            assert!((0.0..=1.0).contains(u), "utilization {u}");
+        }
+        let lat = rep.latency_summary();
+        let ttft = rep.ttft_summary();
+        assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+        assert!(ttft.p50 > 0.0);
+        // TPOT must track the schedule's per-token estimate.
+        let mut sched = TokenSchedule::new(
+            &table1_system(),
+            &TechParams::default(),
+            OptModel::Opt6_7b.shape(),
+        );
+        let expect = sched.tpot(128);
+        let tpot = rep.tpot_summary().p50;
+        assert!(tpot > 0.5 * expect && tpot < 3.0 * expect, "TPOT {tpot} vs schedule {expect}");
+    }
+
+    #[test]
+    fn pool_beats_single_device_p95_at_same_rate() {
+        // Acceptance: at the same Poisson arrival rate, a 4-device pool
+        // under least-loaded scheduling must deliver strictly lower p95
+        // latency than a single device.
+        let mut cfg = TrafficConfig::default_for(4);
+        cfg.rate = 12.0;
+        cfg.requests = 250;
+        let pool = run(&cfg, true);
+        assert_eq!(pool.rejected(), 0, "4-device pool must absorb the offered load");
+        let mut single = cfg.clone();
+        single.devices = 1;
+        let one = run(&single, true);
+        let p95_pool = pool.latency_summary().p95;
+        let p95_one = one.latency_summary().p95;
+        assert!(
+            p95_pool < p95_one,
+            "pool p95 {p95_pool} must beat single-device p95 {p95_one}"
+        );
+    }
+
+    #[test]
+    fn round_robin_spreads_jobs_evenly() {
+        let mut cfg = quick_cfg(4, 80, 6.0, 13);
+        cfg.followup = 0.0; // fresh sessions only: pure policy routing
+        let rep = run(&cfg, false);
+        assert_eq!(rep.rejected(), 0);
+        let min = rep.device_jobs.iter().min().unwrap();
+        let max = rep.device_jobs.iter().max().unwrap();
+        assert_eq!(rep.device_jobs.iter().sum::<usize>(), 80);
+        assert!(max - min <= 1, "round-robin imbalance: {:?}", rep.device_jobs);
+    }
+}

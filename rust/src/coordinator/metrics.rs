@@ -1,8 +1,13 @@
-//! Serving metrics: latency/TPOT summaries and device utilization.
+//! Serving metrics: latency/TPOT summaries and device utilization — for
+//! the single-device trace ([`ServingReport`]) and the device-pool
+//! closed-loop simulator ([`PoolReport`]).
 
+use super::loadgen::SimRequest;
 use super::request::RequestOutcome;
 use crate::sim::SimTime;
 use crate::util::stats::Summary;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
 
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
@@ -68,6 +73,105 @@ impl ServingReport {
     }
 }
 
+/// Aggregate report of one closed-loop device-pool run
+/// (see [`crate::coordinator::loadgen::run_traffic`]).
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// Scheduler policy name ("round-robin" / "least-loaded").
+    pub policy: String,
+    /// Devices in the pool.
+    pub devices: usize,
+    /// Offered Poisson arrival rate (requests/second).
+    pub offered_rate: f64,
+    pub outcomes: Vec<SimRequest>,
+    /// End of the simulated horizon (last accepted completion).
+    pub makespan: SimTime,
+    /// Busy fraction of each device over the horizon.
+    pub device_utilization: Vec<f64>,
+    /// Jobs served per device.
+    pub device_jobs: Vec<usize>,
+}
+
+impl PoolReport {
+    pub fn accepted(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.rejected).count()
+    }
+
+    /// Arrivals shed by backpressure (bounded queues / KV region full).
+    pub fn rejected(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.rejected).count()
+    }
+
+    /// End-to-end latency summary over accepted requests (seconds).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(
+            &self
+                .outcomes
+                .iter()
+                .filter(|o| !o.rejected)
+                .map(|o| o.latency().secs())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Time-to-first-token summary (seconds).
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(
+            &self.outcomes.iter().filter_map(|o| o.ttft().map(|t| t.secs())).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Time-per-output-token summary (seconds/token).
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.outcomes.iter().filter_map(|o| o.tpot()).collect::<Vec<_>>())
+    }
+
+    /// Output tokens per second across the run.
+    pub fn throughput(&self) -> f64 {
+        let tokens: usize = self.outcomes.iter().map(|o| o.output_tokens).sum();
+        if self.makespan == SimTime::ZERO {
+            return 0.0;
+        }
+        tokens as f64 / self.makespan.secs()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "pool: {} device(s), {} scheduling, {:.1} req/s offered\n\
+             requests: {} accepted / {} rejected   makespan {}   throughput {:.1} tok/s\n\n",
+            self.devices,
+            self.policy,
+            self.offered_rate,
+            self.accepted(),
+            self.rejected(),
+            self.makespan,
+            self.throughput(),
+        );
+        let mut t = Table::new(&["metric", "mean", "p50", "p95", "p99"]);
+        for (name, s) in [
+            ("TTFT", self.ttft_summary()),
+            ("TPOT", self.tpot_summary()),
+            ("latency", self.latency_summary()),
+        ] {
+            t.row(&[
+                name.to_string(),
+                fmt_time(s.mean),
+                fmt_time(s.p50),
+                fmt_time(s.p95),
+                fmt_time(s.p99),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        let mut d = Table::new(&["device", "jobs", "utilization"]);
+        for (i, (u, j)) in self.device_utilization.iter().zip(&self.device_jobs).enumerate() {
+            d.row(&[format!("dev{i}"), j.to_string(), format!("{:.1}%", u * 100.0)]);
+        }
+        out.push_str(&d.render());
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +198,48 @@ mod tests {
         assert_eq!(r.counts(), (2, 1));
         assert!((r.throughput() - 150.0).abs() < 1e-9);
         assert!(r.render().contains("tok/s"));
+    }
+
+    fn sim_request(id: u64, device: Option<usize>, tokens: usize) -> SimRequest {
+        SimRequest {
+            id,
+            session: id,
+            device,
+            arrival: SimTime::ZERO,
+            first_token: device.map(|_| SimTime::from_us(50.0)),
+            completed: SimTime::from_us(50.0 + 10.0 * tokens as f64),
+            input_tokens: 64,
+            output_tokens: tokens,
+            context: 64,
+            rejected: device.is_none(),
+            followup: false,
+        }
+    }
+
+    #[test]
+    fn pool_report_counts_and_render() {
+        let r = PoolReport {
+            policy: "least-loaded".to_string(),
+            devices: 2,
+            offered_rate: 8.0,
+            outcomes: vec![
+                sim_request(1, Some(0), 10),
+                sim_request(2, Some(1), 20),
+                sim_request(3, None, 0),
+            ],
+            makespan: SimTime::from_secs(1.0),
+            device_utilization: vec![0.5, 0.25],
+            device_jobs: vec![1, 1],
+        };
+        assert_eq!(r.accepted(), 2);
+        assert_eq!(r.rejected(), 1);
+        assert!((r.throughput() - 30.0).abs() < 1e-9);
+        let s = r.render();
+        assert!(s.contains("least-loaded"));
+        assert!(s.contains("p95"));
+        assert!(s.contains("dev1"));
+        let lat = r.latency_summary();
+        assert_eq!(lat.n, 2);
+        assert!(lat.p95 <= lat.p99 + 1e-15);
     }
 }

@@ -1,24 +1,42 @@
-//! The serving coordinator — the paper's deployment model (§I, §IV):
-//! GPUs handle multi-batch summarization (prefill); **single-batch token
-//! generation offloads to the flash-PIM device**, paying a one-time
+//! The serving coordinator — the paper's deployment model (§I, §IV) scaled
+//! out: GPUs handle multi-batch summarization (prefill); **single-batch
+//! token generation offloads to flash-PIM devices**, paying a one-time
 //! initial-KV transfer over PCIe and freeing the GPUs for further
 //! summarization requests.
 //!
-//! Two execution modes share the same router/scheduler logic:
-//! * [`simulate`] — discrete-event simulation of a request trace
-//!   (latency/throughput reports, utilization);
-//! * the functional path used by `examples/token_generation.rs`, where
-//!   the PJRT runtime actually generates tokens while this module keeps
-//!   the simulated device timing alongside.
+//! The production-scale path is a *device pool*: N flash-PIM devices
+//! behind one scheduler. [`router`] hosts the [`Scheduler`] policies
+//! (round-robin, least-loaded) plus [`DeviceRouter`] — KV affinity pins a
+//! session's follow-up turns to the device holding its SLC KV cache — and
+//! every device queue is bounded, so overload is surfaced as backpressure
+//! instead of unbounded buffering.
+//!
+//! Three execution modes share that router/scheduler logic:
+//! * [`simulate`] — discrete-event simulation of a mixed GPU + flash
+//!   request trace (latency/throughput reports, utilization);
+//! * [`loadgen`] — closed-loop Poisson traffic against the device pool,
+//!   with per-request device time taken from
+//!   [`crate::llm::schedule::TokenSchedule`] (the `serve-sim` CLI
+//!   subcommand);
+//! * the functional path ([`serve`] for one engine, [`pool`] for N), where
+//!   the PJRT runtime actually generates tokens while the simulated device
+//!   timing runs alongside.
 
+pub mod loadgen;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod serve;
 pub mod simulate;
 
-pub use metrics::ServingReport;
+pub use loadgen::{LenRange, run_traffic, SimRequest, TrafficConfig};
+pub use metrics::{PoolReport, ServingReport};
+pub use pool::{DevicePool, PoolJob, PoolServed, SubmitError};
 pub use request::{Request, RequestKind, RequestOutcome};
-pub use router::{Route, Router};
+pub use router::{
+    DeviceRouter, DeviceStatus, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
+    Scheduler,
+};
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};

@@ -5,9 +5,18 @@
 //!
 //! Admission control: a generation request needs SLC KV-region space for
 //! its whole context before it is dispatched; otherwise it queues.
+//!
+//! With a device *pool* (N flash-PIM devices behind one scheduler) the
+//! router additionally picks a device per job: [`Scheduler`] policies
+//! ([`RoundRobin`], [`LeastLoaded`]) balance fresh sessions, and
+//! [`DeviceRouter`] pins follow-up turns to the device already holding the
+//! session's SLC KV cache (KV affinity, via [`crate::kv::cache`]).
 
 use super::request::{Request, RequestKind};
+use crate::config::SystemConfig;
 use crate::kv::cache::KvCacheManager;
+use crate::llm::model_config::ModelShape;
+use std::collections::HashMap;
 
 /// Routing decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,6 +73,161 @@ impl Router {
     }
 }
 
+/// Snapshot of one pool device, fed to a [`Scheduler`] pick. Status slices
+/// always cover every device in index order (`status[i].device == i`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceStatus {
+    pub device: usize,
+    /// Jobs queued or running on the device.
+    pub queue_depth: usize,
+    /// Bytes used in the device's SLC KV region.
+    pub kv_used: u64,
+    /// Capacity of the device's SLC KV region.
+    pub kv_capacity: u64,
+}
+
+/// Device-selection policy for fresh sessions (follow-up turns bypass the
+/// policy — KV affinity pins them, see [`DeviceRouter::assign`]).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Pick a device index for a fresh job. `status` is never empty.
+    fn pick(&mut self, status: &[DeviceStatus]) -> usize;
+}
+
+/// Cycle through devices regardless of load.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, status: &[DeviceStatus]) -> usize {
+        assert!(!status.is_empty(), "pick over empty pool");
+        let i = self.next % status.len();
+        self.next = (i + 1) % status.len();
+        status[i].device
+    }
+}
+
+/// Pick the device with the shallowest queue; break ties by KV usage, then
+/// by index (deterministic).
+#[derive(Debug, Clone, Default)]
+pub struct LeastLoaded;
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded
+    }
+}
+
+impl Scheduler for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, status: &[DeviceStatus]) -> usize {
+        status
+            .iter()
+            .min_by_key(|s| (s.queue_depth, s.kv_used, s.device))
+            .expect("pick over empty pool")
+            .device
+    }
+}
+
+/// Build a scheduling policy from its CLI name.
+pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
+    match name {
+        "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
+        "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
+        _ => None,
+    }
+}
+
+/// Multi-device router: owns one [`KvCacheManager`] per pool device and a
+/// session → device placement map. A follow-up turn for a session whose KV
+/// is still resident lands on the same device (affinity); fresh sessions go
+/// through the [`Scheduler`] policy.
+pub struct DeviceRouter {
+    devices: Vec<KvCacheManager>,
+    sessions: HashMap<u64, usize>,
+    policy: Box<dyn Scheduler + Send>,
+}
+
+impl DeviceRouter {
+    pub fn new(
+        n_devices: usize,
+        sys: &SystemConfig,
+        model: &ModelShape,
+        policy: Box<dyn Scheduler + Send>,
+    ) -> DeviceRouter {
+        assert!(n_devices > 0, "pool needs at least one device");
+        let devices = (0..n_devices).map(|_| KvCacheManager::new(sys, model)).collect();
+        DeviceRouter { devices, sessions: HashMap::new(), policy }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Device holding this session's KV, if still resident.
+    pub fn device_for(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).copied()
+    }
+
+    /// Pick the device for `session`: KV affinity first, else the policy.
+    /// Records the placement so later turns stick to the same device.
+    pub fn assign(&mut self, session: u64, status: &[DeviceStatus]) -> usize {
+        if let Some(d) = self.sessions.get(&session) {
+            return *d;
+        }
+        let d = self.policy.pick(status);
+        self.sessions.insert(session, d);
+        d
+    }
+
+    pub fn kv(&self, device: usize) -> &KvCacheManager {
+        &self.devices[device]
+    }
+
+    pub fn kv_mut(&mut self, device: usize) -> &mut KvCacheManager {
+        &mut self.devices[device]
+    }
+
+    /// Sessions currently placed on `device`.
+    pub fn sessions_on(&self, device: usize) -> Vec<u64> {
+        self.sessions.iter().filter(|(_, d)| **d == device).map(|(s, _)| *s).collect()
+    }
+
+    /// Drop a session's KV residency (capacity eviction or session close).
+    pub fn evict(&mut self, session: u64) -> anyhow::Result<()> {
+        let d = self
+            .sessions
+            .remove(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        self.devices[d].release(session)
+    }
+
+    /// Remove a placement that never admitted KV (e.g. rejected job).
+    pub fn forget(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +280,98 @@ mod tests {
         assert_eq!(r.route(&next), Route::Queue);
         r.finish(1).unwrap();
         assert_eq!(r.route(&next), Route::Flash);
+    }
+
+    fn status(depths: &[usize]) -> Vec<DeviceStatus> {
+        depths
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| DeviceStatus {
+                device: i,
+                queue_depth: q,
+                kv_used: 0,
+                kv_capacity: 1 << 30,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut rr = RoundRobin::new();
+        let s = status(&[0, 0, 0, 0]);
+        let picks: Vec<usize> = (0..8).map(|_| rr.pick(&s)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        let mut counts = [0usize; 4];
+        for p in picks {
+            counts[p] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "uneven round-robin: {counts:?}");
+    }
+
+    #[test]
+    fn round_robin_ignores_load() {
+        let mut rr = RoundRobin::new();
+        let s = status(&[9, 0]);
+        assert_eq!(rr.pick(&s), 0); // cycles even onto the busy device
+        assert_eq!(rr.pick(&s), 1);
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptier_device() {
+        let mut ll = LeastLoaded::new();
+        // Skewed job sizes: device 0 has a deep backlog, device 1 is almost
+        // idle, device 2 in between.
+        assert_eq!(ll.pick(&status(&[5, 1, 3])), 1);
+        assert_eq!(ll.pick(&status(&[0, 1, 3])), 0);
+        // Ties break by KV usage, then index.
+        let mut s = status(&[2, 2]);
+        s[0].kv_used = 100;
+        assert_eq!(ll.pick(&s), 1);
+        assert_eq!(ll.pick(&status(&[2, 2])), 0);
+    }
+
+    #[test]
+    fn policy_names_resolve() {
+        assert_eq!(policy_from_name("round-robin").unwrap().name(), "round-robin");
+        assert_eq!(policy_from_name("rr").unwrap().name(), "round-robin");
+        assert_eq!(policy_from_name("least-loaded").unwrap().name(), "least-loaded");
+        assert!(policy_from_name("bogus").is_none());
+    }
+
+    #[test]
+    fn device_router_affinity_overrides_policy() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let mut dr = DeviceRouter::new(3, &sys, &model, Box::new(LeastLoaded::new()));
+        // Fresh session goes to the least-loaded device (index 0 on ties).
+        let d = dr.assign(7, &status(&[0, 0, 0]));
+        assert_eq!(d, 0);
+        dr.kv_mut(d).admit(7, 128).unwrap();
+        // Device 0 is now the busiest — a follow-up turn still lands there.
+        assert_eq!(dr.assign(7, &status(&[9, 0, 0])), 0);
+        assert_eq!(dr.device_for(7), Some(0));
+        // A fresh session avoids it.
+        assert_ne!(dr.assign(8, &status(&[9, 0, 0])), 0);
+        // Eviction drops residency; the session re-places like a fresh one.
+        dr.evict(7).unwrap();
+        assert_eq!(dr.device_for(7), None);
+        assert_eq!(dr.kv(0).used(), 0);
+        assert_ne!(dr.assign(7, &status(&[9, 0, 0])), 0);
+    }
+
+    #[test]
+    fn sessions_on_tracks_placements() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let mut dr = DeviceRouter::new(2, &sys, &model, Box::new(RoundRobin::new()));
+        let s = status(&[0, 0]);
+        assert_eq!(dr.assign(1, &s), 0);
+        assert_eq!(dr.assign(2, &s), 1);
+        assert_eq!(dr.assign(3, &s), 0);
+        let mut on0 = dr.sessions_on(0);
+        on0.sort_unstable();
+        assert_eq!(on0, vec![1, 3]);
+        dr.forget(3);
+        assert_eq!(dr.sessions_on(0), vec![1]);
     }
 }

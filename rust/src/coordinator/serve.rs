@@ -26,6 +26,7 @@ pub trait Engine: 'static {
 }
 
 /// A generation job.
+#[derive(Debug, Clone)]
 pub struct Job {
     pub id: u64,
     pub prompt: Vec<u32>,

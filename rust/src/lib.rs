@@ -22,8 +22,12 @@
 //! * [`gpu`] — the GPU baselines (4×RTX4090 + vLLM, 4×A100 + AttAcc).
 //! * [`area`] — the peri-under-array area model (Table II).
 //! * [`controller`] — SSD-controller ARM cores (LN/softmax) and PCIe.
-//! * [`coordinator`] — the serving coordinator: request router, offload
-//!   scheduler, generation loop, metrics.
+//! * [`coordinator`] — the serving subsystem: a *pool* of flash-PIM
+//!   devices behind a scheduler (round-robin / least-loaded policies, KV
+//!   affinity, bounded queues with backpressure), the request router and
+//!   offload logic, a closed-loop Poisson traffic simulator
+//!   (`serve-sim`), the functional generation loop, and serving metrics
+//!   (TTFT/TPOT/latency percentiles, per-device utilization).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes the functional model.
 //! * [`exp`] — one driver per paper figure/table, shared by the CLI and the

@@ -1,8 +1,13 @@
 //! Integration: the serving coordinator under load — routing, admission
-//! control, utilization accounting, saturation behaviour.
+//! control, utilization accounting, saturation behaviour — and the
+//! device-pool subsystem: pool scheduling, bounded-queue backpressure,
+//! KV affinity, and the closed-loop traffic simulator.
 
 use flashpim::config::presets::table1_system;
-use flashpim::coordinator::{simulate, Request, Route, Router, Workload};
+use flashpim::coordinator::{
+    LeastLoaded, LenRange, policy_from_name, PoolReport, Request, RoundRobin, Route, Router,
+    run_traffic, Scheduler, simulate, TrafficConfig, Workload,
+};
 use flashpim::gpu::rtx4090x4_vllm;
 use flashpim::kv::cache::KvCacheManager;
 use flashpim::llm::model_config::OptModel;
@@ -70,4 +75,94 @@ fn report_renders() {
     let s = rep.render();
     assert!(s.contains("TPOT"));
     assert!(s.contains("tok/s"));
+}
+
+// ---- device pool: scheduling, backpressure, KV affinity ----
+
+fn traffic(devices: usize, rate: f64, requests: usize, seed: u64) -> TrafficConfig {
+    TrafficConfig {
+        devices,
+        rate,
+        requests,
+        input_tokens: LenRange::new(96, 192),
+        output_tokens: LenRange::new(16, 32),
+        queue_capacity: 64,
+        followup: 0.35,
+        seed,
+    }
+}
+
+fn run_pool(cfg: &TrafficConfig, policy: Box<dyn Scheduler + Send>) -> PoolReport {
+    run_traffic(&table1_system(), &OptModel::Opt6_7b.shape(), policy, cfg)
+}
+
+#[test]
+fn pool_serves_full_poisson_trace() {
+    // Acceptance-shaped run: >= 4 devices, >= 200 Poisson arrivals, full
+    // percentile + utilization report.
+    let cfg = traffic(4, 10.0, 220, 17);
+    let rep = run_pool(&cfg, policy_from_name("least-loaded").unwrap());
+    assert_eq!(rep.outcomes.len(), 220);
+    assert_eq!(rep.accepted(), 220, "pool must absorb the offered load");
+    assert_eq!(rep.device_utilization.len(), 4);
+    let rendered = rep.render();
+    assert!(rendered.contains("p95") && rendered.contains("dev3"));
+    // Every device participates under least-loaded scheduling.
+    assert!(rep.device_jobs.iter().all(|&j| j > 0), "idle device: {:?}", rep.device_jobs);
+}
+
+#[test]
+fn pool_scheduling_beats_single_device() {
+    // Same offered Poisson rate; one device saturates (long queues) while
+    // four devices under least-loaded scheduling keep waits near zero.
+    let cfg = traffic(4, 25.0, 200, 23);
+    let pool = run_pool(&cfg, Box::new(LeastLoaded::new()));
+    let mut one = cfg.clone();
+    one.devices = 1;
+    let single = run_pool(&one, Box::new(LeastLoaded::new()));
+    let (p_pool, p_one) = (pool.latency_summary().p95, single.latency_summary().p95);
+    assert!(p_pool < p_one, "pool p95 {p_pool} vs single-device p95 {p_one}");
+}
+
+#[test]
+fn bounded_queues_shed_load_instead_of_buffering() {
+    let mut cfg = traffic(2, 500.0, 150, 29);
+    cfg.queue_capacity = 3;
+    cfg.followup = 0.0;
+    let rep = run_pool(&cfg, Box::new(RoundRobin::new()));
+    assert!(rep.rejected() > 0, "overload must surface as backpressure");
+    assert_eq!(rep.accepted() + rep.rejected(), 150);
+    for o in rep.outcomes.iter().filter(|o| o.rejected) {
+        assert!(o.device.is_none() && o.first_token.is_none());
+    }
+}
+
+#[test]
+fn kv_affinity_keeps_sessions_on_their_device() {
+    let mut cfg = traffic(4, 10.0, 120, 31);
+    cfg.followup = 0.6;
+    let rep = run_pool(&cfg, Box::new(LeastLoaded::new()));
+    let mut device_of = std::collections::HashMap::new();
+    let mut followups = 0;
+    for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+        if let Some(prev) = device_of.get(&o.session) {
+            followups += 1;
+            assert_eq!(o.device, *prev, "session {} migrated devices", o.session);
+            // The resident KV extends the context past the new prompt.
+            assert!(o.context > o.input_tokens);
+        }
+        device_of.insert(o.session, o.device);
+    }
+    assert!(followups >= 10, "only {followups} follow-up turns in trace");
+}
+
+#[test]
+fn policies_are_selectable_by_name() {
+    let cfg = traffic(3, 10.0, 60, 37);
+    let rr = run_pool(&cfg, policy_from_name("round-robin").unwrap());
+    let ll = run_pool(&cfg, policy_from_name("least-loaded").unwrap());
+    assert_eq!(rr.policy, "round-robin");
+    assert_eq!(ll.policy, "least-loaded");
+    assert_eq!(rr.accepted() + rr.rejected(), 60);
+    assert_eq!(ll.accepted() + ll.rejected(), 60);
 }

@@ -1,0 +1,268 @@
+//! Minimal, dependency-free drop-in for the subset of the `anyhow` API this
+//! workspace uses: [`Result`], [`Error`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the [`Context`] extension trait for `Result` and
+//! `Option`.
+//!
+//! Vendored as a path dependency so `cargo build` needs no network access to
+//! crates.io. Error values are plain message chains — no backtraces, no
+//! downcasting — but the surface matches `anyhow` 1.x closely enough that
+//! swapping back to the crates.io package is a one-line `Cargo.toml` change.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost context first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        items
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(c) = cur.cause.as_deref() {
+            cur = c;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, `anyhow`-style.
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        let mut i = 0usize;
+        while let Some(e) = cur {
+            write!(f, "\n    {i}: {}", e.msg)?;
+            cur = e.cause.as_deref();
+            i += 1;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        // Flatten the std error's source chain into message form.
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = err.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut cause = None;
+        for m in msgs.into_iter().rev() {
+            cause = Some(Box::new(Error { msg: m, cause }));
+        }
+        Error { msg: err.to_string(), cause }
+    }
+}
+
+#[doc(hidden)]
+pub mod ext {
+    use super::{Error, StdError};
+
+    /// Errors that can absorb an outer context message: implemented for
+    /// std errors and for [`Error`] itself (mirrors `anyhow`'s internal
+    /// `ext_context` structure).
+    pub trait ErrorLike {
+        fn apply_context(self, msg: String) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> ErrorLike for E {
+        fn apply_context(self, msg: String) -> Error {
+            Error::from(self).context(msg)
+        }
+    }
+
+    impl ErrorLike for Error {
+        fn apply_context(self, msg: String) -> Error {
+            self.context(msg)
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Attach a context message to the error (or `None`) case.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily evaluated context message.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: ext::ErrorLike> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.apply_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.apply_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e2 = anyhow!("pair {} and {}", 1, 2);
+        assert_eq!(e2.to_string(), "pair 1 and 2");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f() -> Result<()> {
+            bail!("stop at {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop at 7");
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert!(f(-1).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        assert_eq!(e.root_cause(), "missing file");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn context_chains_on_own_error() {
+        let e = Error::msg("inner");
+        let r: Result<()> = Err(e);
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.chain(), vec!["outer", "inner"]);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+    }
+}
