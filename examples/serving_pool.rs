@@ -1,17 +1,24 @@
 //! Device-pool serving study: closed-loop Poisson traffic against a pool
 //! of flash-PIM devices, comparing scheduler policies and pool sizes at
-//! the same offered load.
+//! the same offered load, then sweeping arrival rates into a
+//! throughput–latency curve (the paper's vLLM-comparison shape).
 //!
 //! ```bash
 //! cargo run --release --example serving_pool
 //! ```
 //!
-//! Per-request device time comes from the paper's per-token schedule
-//! (`llm::schedule::TokenSchedule`), so the latency percentiles below are
-//! simulated flash latency, not mock wall-clock.
+//! Per-request device time comes from one precomputed `LatencyTable`
+//! (built once from the paper's per-token schedule and shared — via
+//! `Arc`-style `&` borrows — by every run and sweep thread), so the
+//! latency percentiles below are simulated flash latency, not mock
+//! wall-clock.
 
+use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
-use flashpim::coordinator::{policy_from_name, run_traffic, TrafficConfig};
+use flashpim::coordinator::{
+    policy_from_name, render_sweep, run_traffic_with_table, sweep_rates, TrafficConfig,
+};
+use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
 use flashpim::util::table::Table;
 use flashpim::util::units::fmt_time;
@@ -19,18 +26,26 @@ use flashpim::util::units::fmt_time;
 fn main() {
     let sys = table1_system();
     let model = OptModel::Opt6_7b.shape();
+    // One offline build; every run below queries it immutably.
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
     let mut cfg = TrafficConfig::default_for(1);
     cfg.rate = 12.0;
     cfg.requests = 250;
 
     println!(
-        "workload: {} Poisson arrivals at {:.0} req/s, OPT-6.7B, prompts {}-{}, outputs {}-{}\n",
+        "workload: {} Poisson arrivals at {:.0} req/s, {}, prompts {}-{}, outputs {}-{}",
         cfg.requests,
         cfg.rate,
+        model.name,
         cfg.input_tokens.lo,
         cfg.input_tokens.hi,
         cfg.output_tokens.lo,
         cfg.output_tokens.hi,
+    );
+    println!(
+        "latency table: {} buckets of {} tokens, built once and shared\n",
+        table.max_context() / table.stride() + 1,
+        table.stride(),
     );
 
     let mut t = Table::new(&[
@@ -49,7 +64,7 @@ fn main() {
         for policy_name in ["round-robin", "least-loaded"] {
             let policy = policy_from_name(policy_name).expect("known policy");
             cfg.devices = devices;
-            let rep = run_traffic(&sys, &model, policy, &cfg);
+            let rep = run_traffic_with_table(&sys, &model, &table, policy, &cfg);
             let lat = rep.latency_summary();
             let max_util =
                 rep.device_utilization.iter().cloned().fold(0.0f64, f64::max);
@@ -74,9 +89,25 @@ fn main() {
     println!("Least-loaded beats round-robin at the tail because it never queues");
     println!("behind a long generation when a sibling device sits idle.");
     println!();
-    println!("Full per-run report for the 4-device least-loaded configuration:");
+    println!("Throughput-latency curve, 4 devices, both policies (sweep threads");
+    println!("share the same table — no per-thread schedule caches to rebuild):");
     println!();
     cfg.devices = 4;
-    let rep = run_traffic(&sys, &model, policy_from_name("least-loaded").unwrap(), &cfg);
+    let rates = [4.0, 8.0, 16.0, 24.0, 32.0];
+    let points =
+        sweep_rates(&sys, &model, &table, &cfg, &rates, &["round-robin", "least-loaded"])
+            .expect("valid sweep");
+    print!("{}", render_sweep(&points));
+
+    println!();
+    println!("Full per-run report for the 4-device least-loaded configuration:");
+    println!();
+    let rep = run_traffic_with_table(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+    );
     print!("{}", rep.render());
 }

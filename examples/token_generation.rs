@@ -17,9 +17,9 @@
 
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
-use flashpim::coordinator::serve::{simulated_generation_time, Coordinator, Job};
+use flashpim::coordinator::serve::{Coordinator, Job};
+use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
-use flashpim::llm::schedule::TokenSchedule;
 use flashpim::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
 use flashpim::util::stats::Summary;
 
@@ -77,9 +77,9 @@ fn main() -> anyhow::Result<()> {
     println!();
     println!("== simulated flash-PIM timing at OPT-30B scale ==");
     let sys = table1_system();
-    let mut sched = TokenSchedule::new(&sys, &TechParams::default(), OptModel::Opt30b.shape());
+    let table = LatencyTable::build(&sys, &TechParams::default(), OptModel::Opt30b.shape());
     let l_in = 1024;
-    let sim = simulated_generation_time(&mut sched, l_in, total_tokens);
+    let sim = table.decode_time(l_in, total_tokens);
     let tpot = sim.secs() / total_tokens as f64;
     println!(
         "generating the same {} tokens at OPT-30B scale on the flash device: {} (TPOT {})",

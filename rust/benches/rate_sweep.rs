@@ -1,0 +1,59 @@
+//! Perf bench for the serve-sim hot path: the offline `LatencyTable`
+//! build (one exhaustive tiling search per distinct sMVM shape), the O(1)
+//! immutable TPOT query that replaced per-thread `TokenSchedule` caches,
+//! a single closed-loop run, and the multi-threaded arrival-rate sweep of
+//! `serve-sim --sweep` sharing one table.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{
+    LenRange, policy_from_name, run_traffic_with_table, sweep_rates, TrafficConfig,
+};
+use flashpim::llm::LatencyTable;
+use flashpim::llm::model_config::OptModel;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("serve-sim rate sweep");
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+
+    quick("LatencyTable build (OPT-6.7B)", || {
+        LatencyTable::build(&sys, &TechParams::default(), model.clone())
+    });
+
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    quick("LatencyTable::tpot query", || table.tpot(1536));
+
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 12.0,
+        requests: 2000,
+        input_tokens: LenRange::new(64, 128),
+        output_tokens: LenRange::new(8, 16),
+        queue_capacity: 64,
+        followup: 0.3,
+        seed: 42,
+    };
+    quick("closed-loop run: 2k requests, 4 devices", || {
+        run_traffic_with_table(
+            &sys,
+            &model,
+            &table,
+            policy_from_name("least-loaded").unwrap(),
+            &cfg,
+        )
+    });
+
+    quick("sweep: 2 policies x 3 rates x 2k requests", || {
+        sweep_rates(
+            &sys,
+            &model,
+            &table,
+            &cfg,
+            &[6.0, 12.0, 24.0],
+            &["round-robin", "least-loaded"],
+        )
+        .expect("valid sweep")
+    });
+}

@@ -4,14 +4,16 @@ use super::args::Args;
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::{
-    LenRange, policy_from_name, run_traffic, simulate, TrafficConfig, Workload,
+    LenRange, policy_from_name, render_sweep, run_traffic_with_table, simulate, sweep_rates,
+    TrafficConfig, Workload,
 };
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
 use crate::kv::lifetime::{lifetime_years, lifetime_years_system};
+use crate::llm::LatencyTable;
 use crate::llm::model_config::OptModel;
 use crate::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 const COMMANDS: &[&str] = &[
     "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "tiling",
@@ -44,7 +46,12 @@ tools:
                        per-device utilization); also --policy
                        round-robin|least-loaded, --queue-cap,
                        --input-min/max, --output-min/max, --followup,
-                       --model, --seed
+                       --model, --seed. With --sweep, runs every arrival
+                       rate (--rates 2,4,8 or --rate-min/--rate-max/
+                       --rate-steps) under BOTH policies against one
+                       shared latency table and prints the
+                       throughput-latency curve (--policy and --rate
+                       are ignored in sweep mode)
   generate --prompt S [--max-new N]
                        functional generation via the PJRT runtime
                        (requires `make artifacts`)
@@ -178,9 +185,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
         .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
-    let policy_name = args.flag_or("policy", "least-loaded");
-    let policy = policy_from_name(&policy_name)
-        .context("unknown policy; use round-robin|least-loaded")?;
     // Defaults live in one place: TrafficConfig::default_for.
     let mut cfg = TrafficConfig::default_for(args.usize_flag("devices", 4)?);
     cfg.rate = args.f64_flag("rate", cfg.rate)?;
@@ -209,9 +213,73 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     }
     cfg.followup = args.f64_flag("followup", cfg.followup)?;
     cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
-    let report = run_traffic(&table1_system(), &model.shape(), policy, &cfg);
+
+    // Validate sweep/policy flags before paying for the table build.
+    let sweep = args.bool_flag("sweep");
+    let rates = if sweep { Some(sweep_rate_list(args)?) } else { None };
+    let policy = if sweep {
+        None // sweep mode runs both policies; --policy is ignored
+    } else {
+        let name = args.flag_or("policy", "least-loaded");
+        Some(policy_from_name(&name).context("unknown policy; use round-robin|least-loaded")?)
+    };
+
+    // One offline table build serves every run below (single run or the
+    // whole rate sweep across both policies).
+    let sys = table1_system();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
+    if let Some(rates) = rates {
+        let points = sweep_rates(
+            &sys,
+            &model.shape(),
+            &table,
+            &cfg,
+            &rates,
+            &["round-robin", "least-loaded"],
+        )?;
+        println!(
+            "rate sweep: {} device(s), {} requests/point, {} ({} buckets, stride {})",
+            cfg.devices,
+            cfg.requests,
+            table.model_name(),
+            table.max_context() / table.stride() + 1,
+            table.stride(),
+        );
+        print!("{}", render_sweep(&points));
+        return Ok(());
+    }
+    let policy = policy.expect("non-sweep path parsed a policy above");
+    let report = run_traffic_with_table(&sys, &model.shape(), &table, policy, &cfg);
     print!("{}", report.render());
     Ok(())
+}
+
+/// Arrival rates for `serve-sim --sweep`: an explicit `--rates a,b,c`
+/// list, or a linear `--rate-min`/`--rate-max`/`--rate-steps` span.
+/// Fully validated here so bad flags fail before the table build.
+fn sweep_rate_list(args: &Args) -> Result<Vec<f64>> {
+    let rates: Vec<f64> = if let Some(spec) = args.flag("rates") {
+        spec.split(',')
+            .map(|part| {
+                part.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--rates expects comma-separated numbers, got {part:?}"))
+            })
+            .collect::<Result<_>>()?
+    } else {
+        let lo = args.f64_flag("rate-min", 2.0)?;
+        let hi = args.f64_flag("rate-max", 32.0)?;
+        let steps = args.usize_flag("rate-steps", 6)?;
+        let ok = lo.is_finite() && hi.is_finite() && lo > 0.0 && hi >= lo && steps >= 2;
+        if !ok {
+            bail!(
+                "need 0 < --rate-min <= --rate-max and --rate-steps >= 2 (got {lo}, {hi}, {steps})"
+            );
+        }
+        (0..steps).map(|i| lo + (hi - lo) * i as f64 / (steps - 1) as f64).collect()
+    };
+    crate::coordinator::sweep::validate_rates(&rates)?;
+    Ok(rates)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -233,12 +301,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("output: {:?}", tok.decode(&out));
     println!("tokens: {} in {:.3}s ({:.1} tok/s wall)", out.len(), wall, out.len() as f64 / wall);
     // Simulated flash-PIM timing for the same token count on OPT-30B.
-    let mut sched = crate::llm::schedule::TokenSchedule::new(
-        &table1_system(),
-        &TechParams::default(),
-        OptModel::Opt30b.shape(),
-    );
-    let sim = crate::coordinator::serve::simulated_generation_time(&mut sched, prompt.len(), out.len());
+    let table =
+        LatencyTable::build(&table1_system(), &TechParams::default(), OptModel::Opt30b.shape());
+    let sim = table.decode_time(prompt.len(), out.len());
     println!("simulated flash-PIM time (OPT-30B scale): {}", sim);
     Ok(())
 }
@@ -289,6 +354,44 @@ mod tests {
     fn serve_sim_rejects_unknown_policy() {
         let err = run(vec!["serve-sim".into(), "--policy".into(), "fifo".into()]);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn serve_sim_sweep_runs() {
+        run(vec![
+            "serve-sim".into(),
+            "--sweep".into(),
+            "--devices".into(),
+            "2".into(),
+            "--requests".into(),
+            "30".into(),
+            "--rates".into(),
+            "20,40".into(),
+            "--input-min".into(),
+            "16".into(),
+            "--input-max".into(),
+            "32".into(),
+            "--output-min".into(),
+            "2".into(),
+            "--output-max".into(),
+            "4".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_sim_sweep_rejects_bad_rates() {
+        assert!(run(vec!["serve-sim".into(), "--sweep".into(), "--rates".into(), "abc".into()])
+            .is_err());
+        assert!(run(vec!["serve-sim".into(), "--sweep".into(), "--rates".into(), "-4".into()])
+            .is_err());
+        assert!(run(vec![
+            "serve-sim".into(),
+            "--sweep".into(),
+            "--rate-steps".into(),
+            "1".into(),
+        ])
+        .is_err());
     }
 
     #[test]

@@ -1,26 +1,32 @@
 //! Closed-loop traffic simulation for the device pool: Poisson arrivals at
 //! a configurable rate, prompt/output lengths drawn from [`crate::util::rng`]
-//! distributions, device service time taken from
-//! [`crate::llm::schedule::TokenSchedule`] — so *simulated flash latency*,
-//! not mock wall-clock, drives every reported number.
+//! distributions, device service time taken from an immutable precomputed
+//! [`LatencyTable`] — so *simulated flash latency*, not mock wall-clock,
+//! drives every reported number, and the exhaustive §V-A tiling search
+//! behind it runs once per (model, system), not once per run or thread.
 //!
 //! The loop models the full serving path per request: scheduler pick
 //! ([`DeviceRouter`]: KV affinity first, then policy), bounded per-device
 //! admission (arrivals beyond the queue capacity are rejected —
 //! backpressure), SLC KV admission with idle-LRU eviction, the initial KV
-//! write, and the per-token decode schedule. Results aggregate into a
+//! write, and the per-token decode latency. Results aggregate into a
 //! [`PoolReport`] (TTFT/TPOT/latency p50/p95/p99, per-device utilization).
+//!
+//! Session bookkeeping is heap/hash-based, so traces of 100k+ requests
+//! run in seconds — the old per-arrival scans over every session ever
+//! seen capped the simulator at toy request counts.
 
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, Scheduler};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
 use crate::kv::write_overhead::initial_kv_write_time;
+use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
-use crate::llm::schedule::TokenSchedule;
 use crate::sim::{Resource, SimTime};
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// Uniform token-length distribution over `[lo, hi]` (inclusive).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,7 +82,7 @@ impl TrafficConfig {
         TrafficConfig {
             devices,
             rate: 8.0,
-            requests: 200,
+            requests: 1000,
             input_tokens: LenRange::new(128, 256),
             output_tokens: LenRange::new(32, 64),
             queue_capacity: 64,
@@ -87,7 +93,7 @@ impl TrafficConfig {
 }
 
 /// Per-request record produced by the simulator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimRequest {
     pub id: u64,
     pub session: u64,
@@ -146,25 +152,49 @@ impl DeviceState {
     }
 }
 
-/// Run a closed-loop Poisson trace against a simulated device pool.
-/// Deterministic for a given config.
+/// Run a closed-loop Poisson trace against a simulated device pool,
+/// building the per-token latency table internally. Deterministic for a
+/// given config. Prefer [`run_traffic_with_table`] when running several
+/// configurations (pool sizes, policies, rate sweeps): the table builds
+/// once and is shared.
 pub fn run_traffic(
     sys: &SystemConfig,
     model: &ModelShape,
     policy: Box<dyn Scheduler + Send>,
     cfg: &TrafficConfig,
 ) -> PoolReport {
+    let table = LatencyTable::build(sys, &TechParams::default(), model.clone());
+    run_traffic_with_table(sys, model, &table, policy, cfg)
+}
+
+/// Run a closed-loop Poisson trace using a prebuilt immutable
+/// [`LatencyTable`] (`&self` queries only — share one table across
+/// threads via `Arc`). Deterministic for a given config.
+pub fn run_traffic_with_table(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+) -> PoolReport {
     assert!(cfg.devices > 0, "pool needs at least one device");
     assert!(cfg.rate > 0.0, "arrival rate must be positive");
     assert!(cfg.queue_capacity > 0, "queue capacity must be at least 1");
-    let tech = TechParams::default();
-    let mut sched = TokenSchedule::new(sys, &tech, model.clone());
+    assert_eq!(table.model_name(), model.name, "latency table built for a different model");
+    assert_eq!(table.system_name(), sys.name, "latency table built for a different system");
     let policy_name = policy.name().to_string();
     let mut router = DeviceRouter::new(cfg.devices, sys, model, policy);
     let mut rng = Rng::new(cfg.seed);
     let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.devices];
-    // (session, completion time of its latest finished turn)
-    let mut sessions: Vec<(u64, SimTime)> = Vec::new();
+    // Latest-turn completion per session ever scheduled.
+    let mut completion: HashMap<u64, SimTime> = HashMap::new();
+    // Sessions whose latest turn is still running, keyed by completion;
+    // drained into `idle` as the arrival clock passes them. Constant-ish
+    // per-arrival cost — the old design re-scanned every session ever
+    // seen on each arrival, which capped traces at toy sizes.
+    let mut busy: BinaryHeap<Reverse<(SimTime, u64)>> = BinaryHeap::new();
+    // Sessions eligible for a follow-up turn right now.
+    let mut idle: Vec<u64> = Vec::new();
     let mut outcomes: Vec<SimRequest> = Vec::with_capacity(cfg.requests);
     let mut clock = 0.0f64;
     let mut next_session: u64 = 0;
@@ -172,16 +202,19 @@ pub fn run_traffic(
     for id in 0..cfg.requests as u64 {
         clock += -(1.0 - rng.f64()).ln() / cfg.rate; // exponential gap
         let now = SimTime::from_secs(clock);
+        while let Some(Reverse((done, s))) = busy.peek().copied() {
+            if done > now {
+                break;
+            }
+            busy.pop();
+            idle.push(s);
+        }
 
         // Follow-up turns reuse a session whose previous turn has finished.
-        let candidates: Vec<u64> = sessions
-            .iter()
-            .filter(|(_, done)| *done <= now)
-            .map(|(s, _)| *s)
-            .collect();
-        let reuse = !candidates.is_empty() && rng.chance(cfg.followup);
+        let reuse = !idle.is_empty() && rng.chance(cfg.followup);
         let session = if reuse {
-            *rng.choice(&candidates)
+            let pick = rng.range(0, idle.len());
+            idle.swap_remove(pick)
         } else {
             next_session += 1;
             next_session
@@ -202,28 +235,32 @@ pub fn run_traffic(
             .collect();
         let dev = router.assign(session, &status);
 
-        let reject = |router: &mut DeviceRouter, outcomes: &mut Vec<SimRequest>| {
-            if router.kv(dev).context_len(session).is_none() {
-                router.forget(session); // placement without resident KV
-            }
-            outcomes.push(SimRequest {
-                id,
-                session,
-                device: None,
-                arrival: now,
-                first_token: None,
-                completed: now,
-                input_tokens: l_in,
-                output_tokens: 0,
-                context: 0,
-                rejected: true,
-                followup: reuse,
-            });
-        };
+        let reject =
+            |router: &mut DeviceRouter, idle: &mut Vec<u64>, outcomes: &mut Vec<SimRequest>| {
+                if reuse {
+                    idle.push(session); // the session stays eligible for follow-ups
+                }
+                if router.kv(dev).context_len(session).is_none() {
+                    router.forget(session); // placement without resident KV
+                }
+                outcomes.push(SimRequest {
+                    id,
+                    session,
+                    device: None,
+                    arrival: now,
+                    first_token: None,
+                    completed: now,
+                    input_tokens: l_in,
+                    output_tokens: 0,
+                    context: 0,
+                    rejected: true,
+                    followup: reuse,
+                });
+            };
 
         // Bounded admission: the picked device's queue may be full.
         if status[dev].queue_depth >= cfg.queue_capacity {
-            reject(&mut router, &mut outcomes);
+            reject(&mut router, &mut idle, &mut outcomes);
             continue;
         }
 
@@ -233,10 +270,10 @@ pub fn run_traffic(
         let resident = router.kv(dev).context_len(session);
         let needed = (l_in + l_out) as u64 * per_token;
         if router.kv(dev).used() + needed > router.kv(dev).capacity {
-            evict_idle(&mut router, dev, &sessions, now, session, needed);
+            evict_idle(&mut router, dev, &completion, now, session, needed);
         }
         if router.kv(dev).used() + needed > router.kv(dev).capacity {
-            reject(&mut router, &mut outcomes);
+            reject(&mut router, &mut idle, &mut outcomes);
             continue;
         }
         match resident {
@@ -246,32 +283,29 @@ pub fn run_traffic(
             }
             // Follow-up with resident KV: append the new prompt tokens.
             Some(_) => {
-                for _ in 0..l_in {
-                    router.kv_mut(dev).append(session).expect("append after space check");
-                }
+                router.kv_mut(dev).append_n(session, l_in).expect("append after space check");
             }
         }
         let l_ctx0 = resident.unwrap_or(0) + l_in;
 
         // Service time on the flash device: initial SLC write of the new
-        // prompt KV, then the per-token decode schedule.
+        // prompt KV, then the per-token decode latency from the shared
+        // table (O(1) per step, `&self` — no schedule cache to warm).
         let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, l_in));
         let mut service = kv_write;
         let mut first_offset = SimTime::ZERO;
         for step in 0..l_out {
-            service += sched.step_time(l_ctx0 + step);
+            service += table.step_time(l_ctx0 + step);
             if step == 0 {
                 first_offset = service;
             }
-            router.kv_mut(dev).append(session).expect("append after space check");
         }
+        router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
         let start = devices[dev].res.acquire(now, service);
         let completed = start + service;
         devices[dev].inflight.push_back(completed);
-        match sessions.iter_mut().find(|(s, _)| *s == session) {
-            Some(entry) => entry.1 = completed,
-            None => sessions.push((session, completed)),
-        }
+        completion.insert(session, completed);
+        busy.push(Reverse((completed, session)));
         outcomes.push(SimRequest {
             id,
             session,
@@ -304,29 +338,33 @@ pub fn run_traffic(
 }
 
 /// Evict idle resident sessions on `dev` (latest turn finished, not the
-/// current session), oldest completion first, until `needed` bytes fit.
+/// current session), oldest completion first, until `needed` bytes fit —
+/// plus a 1/64-capacity overshoot: under steady overload, freeing only
+/// `needed` would re-trigger this scan-and-sort on the very next arrival,
+/// so the batch amortizes it across many arrivals.
 fn evict_idle(
     router: &mut DeviceRouter,
     dev: usize,
-    sessions: &[(u64, SimTime)],
+    completion: &HashMap<u64, SimTime>,
     now: SimTime,
     keep: u64,
     needed: u64,
 ) {
+    let capacity = router.kv(dev).capacity;
+    let target = needed.max(capacity / 64).min(capacity);
     let mut idle: Vec<(SimTime, u64)> = router
         .sessions_on(dev)
         .into_iter()
         .filter(|s| *s != keep)
         .filter_map(|s| {
-            sessions
-                .iter()
-                .find(|(id, _)| *id == s)
-                .and_then(|(_, done)| if *done <= now { Some((*done, s)) } else { None })
+            completion.get(&s).and_then(|done| if *done <= now { Some((*done, s)) } else { None })
         })
         .collect();
+    // Sorted order (not HashMap iteration order) keeps eviction — and the
+    // whole trace — deterministic for a given seed.
     idle.sort_unstable();
     for (_, s) in idle {
-        if router.kv(dev).used() + needed <= router.kv(dev).capacity {
+        if router.kv(dev).used() + target <= capacity {
             break;
         }
         let _ = router.evict(s);
@@ -427,15 +465,26 @@ mod tests {
         let ttft = rep.ttft_summary();
         assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
         assert!(ttft.p50 > 0.0);
-        // TPOT must track the schedule's per-token estimate.
-        let mut sched = TokenSchedule::new(
+        // TPOT must track the table's per-token estimate.
+        let table = LatencyTable::build(
             &table1_system(),
             &TechParams::default(),
             OptModel::Opt6_7b.shape(),
         );
-        let expect = sched.tpot(128);
+        let expect = table.tpot(128);
         let tpot = rep.tpot_summary().p50;
-        assert!(tpot > 0.5 * expect && tpot < 3.0 * expect, "TPOT {tpot} vs schedule {expect}");
+        assert!(tpot > 0.5 * expect && tpot < 3.0 * expect, "TPOT {tpot} vs table {expect}");
+    }
+
+    #[test]
+    fn prebuilt_table_matches_internal_build() {
+        let cfg = quick_cfg(2, 40, 10.0, 3);
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let a = run_traffic(&sys, &model, Box::new(LeastLoaded::new()), &cfg);
+        let b = run_traffic_with_table(&sys, &model, &table, Box::new(LeastLoaded::new()), &cfg);
+        assert_eq!(a, b, "shared-table run must reproduce the internal-build run exactly");
     }
 
     #[test]

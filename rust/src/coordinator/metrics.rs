@@ -74,8 +74,9 @@ impl ServingReport {
 }
 
 /// Aggregate report of one closed-loop device-pool run
-/// (see [`crate::coordinator::loadgen::run_traffic`]).
-#[derive(Debug, Clone)]
+/// (see [`crate::coordinator::loadgen::run_traffic`]). `PartialEq` so
+/// determinism tests can compare whole runs outcome-for-outcome.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PoolReport {
     /// Scheduler policy name ("round-robin" / "least-loaded").
     pub policy: String,

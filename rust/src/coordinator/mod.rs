@@ -15,9 +15,10 @@
 //! * [`simulate`] — discrete-event simulation of a mixed GPU + flash
 //!   request trace (latency/throughput reports, utilization);
 //! * [`loadgen`] — closed-loop Poisson traffic against the device pool,
-//!   with per-request device time taken from
-//!   [`crate::llm::schedule::TokenSchedule`] (the `serve-sim` CLI
-//!   subcommand);
+//!   with per-request device time from a shared precomputed
+//!   [`crate::llm::latency_table::LatencyTable`] (the `serve-sim` CLI
+//!   subcommand), plus [`sweep`] for arrival-rate throughput–latency
+//!   curves (`serve-sim --sweep`);
 //! * the functional path ([`serve`] for one engine, [`pool`] for N), where
 //!   the PJRT runtime actually generates tokens while the simulated device
 //!   timing runs alongside.
@@ -29,10 +30,11 @@ pub mod request;
 pub mod router;
 pub mod serve;
 pub mod simulate;
+pub mod sweep;
 
-pub use loadgen::{LenRange, run_traffic, SimRequest, TrafficConfig};
+pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
 pub use metrics::{PoolReport, ServingReport};
-pub use pool::{DevicePool, PoolJob, PoolServed, SubmitError};
+pub use pool::{DevicePool, PoolJob, PoolServed, SimFlashEngine, SubmitError};
 pub use request::{Request, RequestKind, RequestOutcome};
 pub use router::{
     DeviceRouter, DeviceStatus, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
@@ -40,3 +42,4 @@ pub use router::{
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};
+pub use sweep::{render_sweep, sweep_rates, SweepPoint};

@@ -11,6 +11,8 @@
 
 use super::router::{DeviceStatus, Scheduler};
 use super::serve::{Engine, Job};
+use crate::llm::latency_table::LatencyTable;
+use crate::sim::SimTime;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -47,6 +49,10 @@ pub struct PoolServed {
     pub wall: f64,
     /// Wall-clock time to first token.
     pub ttft: f64,
+    /// Simulated flash latency of the job, when the engine models device
+    /// timing (see [`Engine::sim_job_time`]); `None` for purely
+    /// functional engines.
+    pub sim: Option<SimTime>,
 }
 
 /// Why a submission was refused (bounded queues, not unbounded `mpsc`).
@@ -118,20 +124,21 @@ impl DevicePool {
                             Msg::Run(job, reply) => {
                                 let start = Instant::now();
                                 let mut first: Option<f64> = None;
-                                let result = engine
-                                    .generate(&job.prompt, job.max_new, &mut |_t| {
+                                let l_in = job.prompt.len();
+                                let generated =
+                                    engine.generate(&job.prompt, job.max_new, &mut |_t| {
                                         if first.is_none() {
                                             first = Some(start.elapsed().as_secs_f64());
                                         }
-                                    })
-                                    .map(|tokens| PoolServed {
-                                        device,
-                                        id: job.id,
-                                        tokens,
-                                        wall: start.elapsed().as_secs_f64(),
-                                        ttft: first
-                                            .unwrap_or_else(|| start.elapsed().as_secs_f64()),
                                     });
+                                let result = generated.map(|tokens| PoolServed {
+                                    device,
+                                    id: job.id,
+                                    sim: engine.sim_job_time(l_in, tokens.len()),
+                                    tokens,
+                                    wall: start.elapsed().as_secs_f64(),
+                                    ttft: first.unwrap_or_else(|| start.elapsed().as_secs_f64()),
+                                });
                                 worker_pending.fetch_sub(1, Ordering::SeqCst);
                                 let _ = reply.send(result);
                             }
@@ -147,6 +154,21 @@ impl DevicePool {
             affinity: Mutex::new(HashMap::new()),
             queue_capacity,
         }
+    }
+
+    /// Pool of simulated flash devices: every worker's engine is a
+    /// [`SimFlashEngine`] holding a clone of **one** shared
+    /// `Arc<LatencyTable>` — there are no per-thread `TokenSchedule`
+    /// caches to build or warm, and adding devices adds no schedule work.
+    pub fn simulated(
+        n_devices: usize,
+        queue_capacity: usize,
+        policy: Box<dyn Scheduler + Send>,
+        table: Arc<LatencyTable>,
+    ) -> DevicePool {
+        DevicePool::new(n_devices, queue_capacity, policy, move |_| {
+            SimFlashEngine::new(Arc::clone(&table))
+        })
     }
 
     pub fn n_devices(&self) -> usize {
@@ -230,6 +252,41 @@ impl DevicePool {
             Ok(rx) => rx.recv().expect("worker reply"),
             Err(e) => Err(anyhow::anyhow!("{e}")),
         }
+    }
+}
+
+/// Engine whose device timing comes from a shared immutable
+/// [`LatencyTable`]: token values are an echo stream (last prompt token,
+/// counting up) and [`Engine::sim_job_time`] answers from the table, so
+/// a pool of these measures scheduler/queueing behaviour against
+/// simulated flash latency without any per-thread schedule state.
+pub struct SimFlashEngine {
+    table: Arc<LatencyTable>,
+}
+
+impl SimFlashEngine {
+    pub fn new(table: Arc<LatencyTable>) -> SimFlashEngine {
+        SimFlashEngine { table }
+    }
+}
+
+impl Engine for SimFlashEngine {
+    fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        let base = *prompt.last().unwrap_or(&0);
+        let out: Vec<u32> = (0..max_new as u32).map(|i| base.wrapping_add(i)).collect();
+        for t in &out {
+            on_token(*t);
+        }
+        Ok(out)
+    }
+
+    fn sim_job_time(&self, l_in: usize, n_out: usize) -> Option<SimTime> {
+        Some(self.table.decode_time(l_in, n_out))
     }
 }
 
@@ -369,5 +426,34 @@ mod tests {
         let pool = DevicePool::new(2, 2, Box::new(RoundRobin::new()), |_| MockEngine);
         pool.run(PoolJob::new(job(1))).unwrap();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn functional_engines_report_no_sim_time() {
+        let pool = DevicePool::new(1, 2, Box::new(RoundRobin::new()), |_| MockEngine);
+        assert_eq!(pool.run(PoolJob::new(job(1))).unwrap().sim, None);
+    }
+
+    #[test]
+    fn simulated_pool_workers_share_one_table() {
+        use crate::circuit::TechParams;
+        use crate::config::presets::table1_system;
+        use crate::llm::model_config::OptModel;
+
+        let table = Arc::new(LatencyTable::build(
+            &table1_system(),
+            &TechParams::default(),
+            OptModel::Opt6_7b.shape(),
+        ));
+        let pool = DevicePool::simulated(2, 4, Box::new(RoundRobin::new()), Arc::clone(&table));
+        let a = pool.run(PoolJob::new(job(1))).unwrap();
+        let b = pool.run(PoolJob::new(job(2))).unwrap();
+        assert_eq!((a.device, b.device), (0, 1), "round-robin across both workers");
+        // Both workers answer from the same shared table: identical jobs
+        // (1 prompt token, 2 generated) report identical simulated time.
+        let expect = table.decode_time(1, 2);
+        assert!(expect > SimTime::ZERO);
+        assert_eq!(a.sim, Some(expect));
+        assert_eq!(b.sim, Some(expect));
     }
 }

@@ -2,7 +2,8 @@
 //! generation engine (the PJRT executor in production, a mock in tests)
 //! and serves generation jobs from a channel, streaming tokens back.
 //! Wall-clock latency is measured per request; the simulated flash-PIM
-//! timing runs alongside via [`crate::llm::schedule::TokenSchedule`].
+//! timing runs alongside via a precomputed immutable
+//! [`crate::llm::latency_table::LatencyTable`].
 
 use crate::sim::SimTime;
 use anyhow::Result;
@@ -23,6 +24,15 @@ pub trait Engine: 'static {
         max_new: usize,
         on_token: &mut dyn FnMut(u32),
     ) -> Result<Vec<u32>>;
+
+    /// Simulated flash latency for a whole job (`n_out` tokens generated
+    /// from a context of `l_in`), when the engine models device timing —
+    /// e.g. [`super::pool::SimFlashEngine`] answering from a shared
+    /// [`crate::llm::latency_table::LatencyTable`]. Purely functional
+    /// engines return `None` (the default).
+    fn sim_job_time(&self, _l_in: usize, _n_out: usize) -> Option<SimTime> {
+        None
+    }
 }
 
 /// A generation job.
@@ -109,20 +119,6 @@ impl Drop for Coordinator {
             let _ = h.join();
         }
     }
-}
-
-/// Pair a functional run with its simulated device time: returns the
-/// simulated flash latency for generating `n` tokens from context `l_in`.
-pub fn simulated_generation_time(
-    sched: &mut crate::llm::schedule::TokenSchedule,
-    l_in: usize,
-    n: usize,
-) -> SimTime {
-    let mut total = SimTime::ZERO;
-    for step in 0..n {
-        total += sched.step_time(l_in + step);
-    }
-    total
 }
 
 #[cfg(test)]

@@ -1,0 +1,227 @@
+//! Arrival-rate sweep: the throughput–latency curve of the device pool
+//! (the shape of the paper's vLLM comparison — §V-B serves single-batch
+//! generation at 2.4× four RTX4090s, and a serving system is judged by
+//! where its latency knee sits as offered load grows).
+//!
+//! One immutable [`LatencyTable`] is built by the caller and shared by
+//! every sweep point; the points themselves run concurrently on scoped
+//! threads (each run owns its RNG and router, so results are
+//! deterministic and independent of scheduling).
+
+use super::loadgen::{run_traffic_with_table, TrafficConfig};
+use super::metrics::PoolReport;
+use super::router::policy_from_name;
+use crate::config::SystemConfig;
+use crate::llm::latency_table::LatencyTable;
+use crate::llm::model_config::ModelShape;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One (policy, rate) point of a sweep, reduced to the curve metrics so a
+/// long sweep does not hold every per-request outcome in memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub policy: String,
+    /// Offered Poisson arrival rate (requests/second).
+    pub rate: f64,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Output tokens per second over the run.
+    pub throughput: f64,
+    pub ttft_p95: f64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+}
+
+impl SweepPoint {
+    fn of(report: &PoolReport) -> SweepPoint {
+        let lat = report.latency_summary();
+        SweepPoint {
+            policy: report.policy.clone(),
+            rate: report.offered_rate,
+            accepted: report.accepted(),
+            rejected: report.rejected(),
+            throughput: report.throughput(),
+            ttft_p95: report.ttft_summary().p95,
+            latency_p50: lat.p50,
+            latency_p95: lat.p95,
+            latency_p99: lat.p99,
+        }
+    }
+}
+
+/// Validate a sweep rate list: non-empty, positive, finite, and within
+/// the point cap. Shared by [`sweep_rates`] and the CLI's flag parsing so
+/// the CLI can fail fast, before paying for a latency-table build.
+pub fn validate_rates(rates: &[f64]) -> Result<()> {
+    if rates.is_empty() {
+        bail!("rate sweep needs at least one rate");
+    }
+    if rates.len() > 64 {
+        bail!("rate sweep capped at 64 rates, got {}", rates.len());
+    }
+    if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
+        bail!("sweep rates must be positive and finite: {rates:?}");
+    }
+    Ok(())
+}
+
+/// Run `base` at every arrival rate in `rates` for every policy in
+/// `policies`, sharing one prebuilt latency table. Rates are sorted
+/// ascending and deduplicated, so each policy's block of the result is a
+/// monotone-rate throughput–latency curve.
+pub fn sweep_rates(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    base: &TrafficConfig,
+    rates: &[f64],
+    policies: &[&str],
+) -> Result<Vec<SweepPoint>> {
+    validate_rates(rates)?;
+    if policies.is_empty() {
+        bail!("rate sweep needs at least one policy");
+    }
+    for p in policies {
+        if policy_from_name(p).is_none() {
+            bail!("unknown policy {p:?}; use round-robin|least-loaded");
+        }
+    }
+    let mut rates = rates.to_vec();
+    rates.sort_by(f64::total_cmp);
+    rates.dedup();
+
+    // A fixed pool of `width` workers pulls (policy, rate) pairs from a
+    // shared index: in-flight PoolReports (every per-request outcome,
+    // until reduced to a SweepPoint) stay bounded by the core count, and
+    // no core idles waiting on a slow high-rate point.
+    let pairs: Vec<(&str, f64)> =
+        policies.iter().flat_map(|&p| rates.iter().map(move |&r| (p, r))).collect();
+    let width = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let next = AtomicUsize::new(0);
+    let mut points: Vec<Option<SweepPoint>> = (0..pairs.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..width.min(pairs.len()))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&(p, r)) = pairs.get(i) else {
+                            break;
+                        };
+                        let mut cfg = base.clone();
+                        cfg.rate = r;
+                        let policy = policy_from_name(p).expect("policy validated above");
+                        let point =
+                            SweepPoint::of(&run_traffic_with_table(sys, model, table, policy, &cfg));
+                        local.push((i, point));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, point) in w.join().expect("sweep worker panicked") {
+                points[i] = Some(point);
+            }
+        }
+    });
+    Ok(points.into_iter().map(|p| p.expect("every sweep pair ran")).collect())
+}
+
+/// Render sweep points as an ASCII throughput–latency table.
+pub fn render_sweep(points: &[SweepPoint]) -> String {
+    let mut t = Table::new(&[
+        "policy",
+        "rate req/s",
+        "accepted",
+        "rejected",
+        "tok/s",
+        "TTFT p95",
+        "lat p50",
+        "lat p95",
+        "lat p99",
+    ]);
+    for p in points {
+        t.row(&[
+            p.policy.clone(),
+            format!("{:.1}", p.rate),
+            p.accepted.to_string(),
+            p.rejected.to_string(),
+            format!("{:.1}", p.throughput),
+            fmt_time(p.ttft_p95),
+            fmt_time(p.latency_p50),
+            fmt_time(p.latency_p95),
+            fmt_time(p.latency_p99),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::TechParams;
+    use crate::config::presets::table1_system;
+    use crate::coordinator::loadgen::LenRange;
+    use crate::llm::model_config::OptModel;
+
+    fn base_cfg() -> TrafficConfig {
+        TrafficConfig {
+            devices: 2,
+            rate: 1.0, // overridden per point
+            requests: 40,
+            input_tokens: LenRange::new(32, 64),
+            output_tokens: LenRange::new(4, 8),
+            queue_capacity: 16,
+            followup: 0.3,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_policies_and_sorts_rates() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let points = sweep_rates(
+            &sys,
+            &model,
+            &table,
+            &base_cfg(),
+            &[20.0, 5.0, 10.0], // unsorted on purpose
+            &["round-robin", "least-loaded"],
+        )
+        .unwrap();
+        assert_eq!(points.len(), 6);
+        for block in points.chunks(3) {
+            assert!(block.windows(2).all(|w| w[0].rate < w[1].rate), "rates must ascend");
+            assert!(block.windows(2).all(|w| w[0].policy == w[1].policy));
+            for p in block {
+                assert_eq!(p.accepted + p.rejected, 40);
+                assert!(p.throughput > 0.0);
+            }
+        }
+        assert_eq!(points[0].policy, "round-robin");
+        assert_eq!(points[3].policy, "least-loaded");
+        let rendered = render_sweep(&points);
+        assert!(rendered.contains("least-loaded") && rendered.contains("TTFT p95"));
+    }
+
+    #[test]
+    fn sweep_rejects_bad_input() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let cfg = base_cfg();
+        assert!(sweep_rates(&sys, &model, &table, &cfg, &[], &["rr"]).is_err());
+        assert!(sweep_rates(&sys, &model, &table, &cfg, &[1.0], &[]).is_err());
+        assert!(sweep_rates(&sys, &model, &table, &cfg, &[-1.0], &["rr"]).is_err());
+        assert!(sweep_rates(&sys, &model, &table, &cfg, &[f64::NAN], &["rr"]).is_err());
+        assert!(sweep_rates(&sys, &model, &table, &cfg, &[1.0], &["fifo"]).is_err());
+    }
+}

@@ -6,6 +6,7 @@
 use crate::config::SystemConfig;
 use crate::llm::model_config::ModelShape;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// One sequence's cache state.
 #[derive(Debug, Clone)]
@@ -17,14 +18,16 @@ pub struct SequenceCache {
     pub bytes: u64,
 }
 
-/// Manager for the SLC KV region.
+/// Manager for the SLC KV region. Sequences are indexed by id so the
+/// serving simulator's per-turn admit/append/evict traffic stays O(1)
+/// even with thousands of resident sessions.
 pub struct KvCacheManager {
     /// Usable SLC capacity (bytes).
     pub capacity: u64,
     /// KV bytes per token for the bound model.
     pub per_token: u64,
     used: u64,
-    sequences: Vec<SequenceCache>,
+    sequences: HashMap<u64, SequenceCache>,
     /// Cumulative bytes ever written (endurance accounting).
     total_written: u64,
 }
@@ -39,7 +42,7 @@ impl KvCacheManager {
             capacity,
             per_token: model.kv_bytes_per_token(1.0) as u64,
             used: 0,
-            sequences: Vec::new(),
+            sequences: HashMap::new(),
             total_written: 0,
         }
     }
@@ -50,47 +53,50 @@ impl KvCacheManager {
         if self.used + bytes > self.capacity {
             bail!("KV region full: {} + {} > {}", self.used, bytes, self.capacity);
         }
-        if self.sequences.iter().any(|s| s.seq_id == seq_id) {
+        if self.sequences.contains_key(&seq_id) {
             bail!("sequence {seq_id} already admitted");
         }
         self.used += bytes;
         self.total_written += bytes;
-        self.sequences.push(SequenceCache { seq_id, tokens: initial_tokens, bytes });
+        self.sequences.insert(seq_id, SequenceCache { seq_id, tokens: initial_tokens, bytes });
         Ok(())
     }
 
     /// Append one generated token's k/v.
     pub fn append(&mut self, seq_id: u64) -> Result<()> {
-        let per = self.per_token;
-        if self.used + per > self.capacity {
+        self.append_n(seq_id, 1)
+    }
+
+    /// Append `n` tokens' k/v in one reservation — the serving simulator
+    /// books a whole turn (prompt extension + generated tokens) at once.
+    pub fn append_n(&mut self, seq_id: u64, n: usize) -> Result<()> {
+        let bytes = self.per_token * n as u64;
+        if self.used + bytes > self.capacity {
             bail!("KV region full on append");
         }
         let seq = self
             .sequences
-            .iter_mut()
-            .find(|s| s.seq_id == seq_id)
+            .get_mut(&seq_id)
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq_id}"))?;
-        seq.tokens += 1;
-        seq.bytes += per;
-        self.used += per;
-        self.total_written += per;
+        seq.tokens += n;
+        seq.bytes += bytes;
+        self.used += bytes;
+        self.total_written += bytes;
         Ok(())
     }
 
     /// Release a finished sequence, reclaiming its space.
     pub fn release(&mut self, seq_id: u64) -> Result<()> {
-        let idx = self
+        let seq = self
             .sequences
-            .iter()
-            .position(|s| s.seq_id == seq_id)
+            .remove(&seq_id)
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq_id}"))?;
-        let seq = self.sequences.swap_remove(idx);
         self.used -= seq.bytes;
         Ok(())
     }
 
     pub fn context_len(&self, seq_id: u64) -> Option<usize> {
-        self.sequences.iter().find(|s| s.seq_id == seq_id).map(|s| s.tokens)
+        self.sequences.get(&seq_id).map(|s| s.tokens)
     }
 
     pub fn used(&self) -> u64 {
@@ -139,6 +145,18 @@ mod tests {
         assert!(m.admit(1, max_tokens + 1).is_err());
         m.admit(2, max_tokens).unwrap();
         assert!(m.append(2).is_err());
+    }
+
+    #[test]
+    fn append_n_books_a_whole_turn() {
+        let mut m = mgr();
+        m.admit(1, 100).unwrap();
+        m.append_n(1, 25).unwrap();
+        assert_eq!(m.context_len(1), Some(125));
+        assert_eq!(m.used(), 125 * m.per_token);
+        assert!(m.append_n(2, 1).is_err(), "unknown sequence must error");
+        let room = ((m.capacity - m.used()) / m.per_token) as usize;
+        assert!(m.append_n(1, room + 1).is_err(), "over-capacity bulk append must error");
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Offline-precomputed per-token latency for the serving pool.
+//!
+//! The closed-loop simulator and the device-pool workers need millions of
+//! "TPOT at context length l" queries, but [`TokenSchedule`] answers them
+//! through `&mut self` memoized caches — one exhaustive §V-A tiling
+//! search per cold shape, duplicated in every thread that owns a
+//! schedule. `LatencyTable` splits that into two phases:
+//!
+//! 1. **Build** (offline, once per model × system): run the exact
+//!    `TokenSchedule` over evenly-strided context-length buckets up to
+//!    the model's max trained context. The default stride is 1 — a dense
+//!    table is only `max_context + 1` f64s (16 KiB for OPT), build cost
+//!    is dominated by the one-off tiling searches anyway, and density
+//!    makes in-range queries *exact*: the dMVM cost model is a staircase
+//!    in context length (`div_ceil` page reads), which no interpolation
+//!    stride can track pointwise through a jump.
+//! 2. **Query** (hot path): immutable `&self` O(1) lookups — linear
+//!    interpolation between buckets for coarser strides, windowed-slope
+//!    extrapolation beyond the last bucket (the window spans the trailing
+//!    quarter of the table, averaging over staircase periods).
+//!
+//! One `Arc<LatencyTable>` is shared by every pool worker and sweep
+//! thread; there is no per-thread cache to warm and no lock to take.
+
+use super::model_config::ModelShape;
+use super::schedule::TokenSchedule;
+use crate::circuit::TechParams;
+use crate::config::SystemConfig;
+use crate::sim::SimTime;
+
+/// Immutable per-token latency table (seconds per output token as a
+/// function of context length). Cheap to clone the `Arc`, `Send + Sync`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyTable {
+    /// Name of the model the table was built for.
+    model: String,
+    /// Name of the system configuration the table was built for.
+    system: String,
+    /// Bucket spacing in tokens.
+    stride: usize,
+    /// `tpot[i]` = exact TPOT at context length `i * stride`.
+    tpot: Vec<f64>,
+    /// d(TPOT)/d(l) used past the last bucket, averaged over the trailing
+    /// quarter of the table so the dMVM staircase does not bias it.
+    tail_slope: f64,
+}
+
+impl LatencyTable {
+    /// Default bucket spacing: dense. In-range queries are exact table
+    /// hits; pass a coarser stride to [`Self::build_spanning`] to trade
+    /// accuracy near the dMVM staircase jumps for a smaller build.
+    pub const DEFAULT_STRIDE: usize = 1;
+
+    /// Build with default stride, spanning the model's trained context.
+    pub fn build(sys: &SystemConfig, tech: &TechParams, model: ModelShape) -> LatencyTable {
+        let max_context = model.max_context;
+        Self::build_spanning(sys, tech, model, max_context, Self::DEFAULT_STRIDE)
+    }
+
+    /// Build a table spanning `[0, max_context]` with the given bucket
+    /// stride. Runs the exact `TokenSchedule` once per bucket; the
+    /// schedule's own shape memoization makes every bucket after the
+    /// first cost only the context-dependent (dMVM/softmax) models.
+    pub fn build_spanning(
+        sys: &SystemConfig,
+        tech: &TechParams,
+        model: ModelShape,
+        max_context: usize,
+        stride: usize,
+    ) -> LatencyTable {
+        assert!(stride >= 1, "bucket stride must be at least 1");
+        assert!(max_context >= stride, "max context {max_context} below stride {stride}");
+        let mut sched = TokenSchedule::new(sys, tech, model);
+        let segments = max_context.div_ceil(stride);
+        let tpot: Vec<f64> = (0..=segments).map(|i| sched.tpot(i * stride)).collect();
+        let window = (segments / 4).max(1);
+        let tail_slope =
+            ((tpot[segments] - tpot[segments - window]) / (window * stride) as f64).max(0.0);
+        LatencyTable {
+            model: sched.model.name.clone(),
+            system: sys.name.clone(),
+            stride,
+            tpot,
+            tail_slope,
+        }
+    }
+
+    /// Model the table was built for.
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    /// System configuration the table was built for.
+    pub fn system_name(&self) -> &str {
+        &self.system
+    }
+
+    /// Bucket spacing in tokens.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Largest tabulated context length; queries beyond it extrapolate.
+    pub fn max_context(&self) -> usize {
+        (self.tpot.len() - 1) * self.stride
+    }
+
+    /// Time-per-output-token (seconds) at context length `l_ctx` — O(1).
+    pub fn tpot(&self, l_ctx: usize) -> f64 {
+        let i = l_ctx / self.stride;
+        let last = self.tpot.len() - 1;
+        if i >= last {
+            let beyond = (l_ctx - last * self.stride) as f64;
+            return self.tpot[last] + self.tail_slope * beyond;
+        }
+        let frac = (l_ctx - i * self.stride) as f64 / self.stride as f64;
+        self.tpot[i] + (self.tpot[i + 1] - self.tpot[i]) * frac
+    }
+
+    /// Simulated wall-clock of one decode step at context length `l_ctx`.
+    pub fn step_time(&self, l_ctx: usize) -> SimTime {
+        SimTime::from_secs(self.tpot(l_ctx))
+    }
+
+    /// Simulated flash latency of a whole decode: `l_out` tokens starting
+    /// from context `l_ctx0` (the context grows one token per step).
+    pub fn decode_time(&self, l_ctx0: usize, l_out: usize) -> SimTime {
+        let mut total = SimTime::ZERO;
+        for step in 0..l_out {
+            total += self.step_time(l_ctx0 + step);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    fn table(m: OptModel) -> LatencyTable {
+        LatencyTable::build(&table1_system(), &TechParams::default(), m.shape())
+    }
+
+    #[test]
+    fn dense_default_is_exact_in_range() {
+        let t = table(OptModel::Opt6_7b);
+        let mut exact = TokenSchedule::new(
+            &table1_system(),
+            &TechParams::default(),
+            OptModel::Opt6_7b.shape(),
+        );
+        // Stride 1: every in-range context length is a bucket point,
+        // including lengths just past the dMVM staircase jumps.
+        for l in [0, 7, 100, 513, 1023, 1024, 2047, 2048] {
+            assert_eq!(t.tpot(l), exact.tpot(l), "l={l}");
+        }
+    }
+
+    #[test]
+    fn coarse_tables_interpolate_between_buckets() {
+        let t = LatencyTable::build_spanning(
+            &table1_system(),
+            &TechParams::default(),
+            OptModel::Opt30b.shape(),
+            2048,
+            64,
+        );
+        let (lo, mid, hi) = (t.tpot(1024), t.tpot(1056), t.tpot(1088));
+        assert!(lo <= mid && mid <= hi, "{lo} {mid} {hi}");
+        assert!((mid - (lo + hi) / 2.0).abs() < 1e-12, "linear within a segment");
+        // A coarse table agrees with the dense one at shared bucket points.
+        let dense = table(OptModel::Opt30b);
+        for l in [0, 512, 1024, 2048] {
+            assert_eq!(t.tpot(l), dense.tpot(l), "l={l}");
+        }
+    }
+
+    #[test]
+    fn extrapolates_monotonically_beyond_max() {
+        let t = table(OptModel::Opt6_7b);
+        let max = t.max_context();
+        assert_eq!(max, 2048);
+        assert!(t.tpot(4 * max) >= t.tpot(2 * max));
+        assert!(t.tpot(2 * max) >= t.tpot(max));
+    }
+
+    #[test]
+    fn decode_time_sums_steps() {
+        let t = table(OptModel::Opt6_7b);
+        let by_hand = t.step_time(100) + t.step_time(101) + t.step_time(102);
+        assert_eq!(t.decode_time(100, 3), by_hand);
+        assert_eq!(t.decode_time(100, 0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn spanning_build_respects_bounds() {
+        let t = LatencyTable::build_spanning(
+            &table1_system(),
+            &TechParams::default(),
+            OptModel::Opt6_7b.shape(),
+            1000,
+            128,
+        );
+        // 1000 rounds up to 8 segments of 128.
+        assert_eq!(t.max_context(), 1024);
+        assert_eq!(t.stride(), 128);
+        assert_eq!(t.model_name(), "OPT-6.7B");
+        assert_eq!(t.system_name(), "table1");
+    }
+}

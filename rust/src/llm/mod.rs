@@ -3,12 +3,14 @@
 //! and the W8A8 quantization scheme the PIM arrays assume.
 
 pub mod energy;
+pub mod latency_table;
 pub mod layers;
 pub mod model_config;
 pub mod quant;
 pub mod schedule;
 
 pub use energy::{EnergySchedule, TokenEnergy};
+pub use latency_table::LatencyTable;
 pub use layers::{BlockOp, decoder_block_ops};
 pub use model_config::{ModelShape, OptModel};
 pub use quant::QuantSpec;

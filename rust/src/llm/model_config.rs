@@ -15,6 +15,10 @@ pub struct ModelShape {
     pub d_ffn: usize,
     /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum trained context length (learned positions; 2048 for the
+    /// OPT family). Latency tables tabulate up to here and extrapolate
+    /// linearly beyond.
+    pub max_context: usize,
 }
 
 impl ModelShape {
@@ -79,6 +83,7 @@ impl OptModel {
             heads,
             d_ffn: 4 * d_model,
             vocab: 50272,
+            max_context: 2048,
         }
     }
 

@@ -2,7 +2,7 @@
 //! device (paper Fig. 14). Chains the decoder-block ops through the
 //! per-op cost models:
 //!
-//! * sMVM → best tiling scheme from [`crate::tiling::search_best`]
+//! * sMVM → best tiling scheme from [`crate::tiling::search_min`]
 //! * dMVM → [`crate::pim::DmvmEngine`] with head-level die parallelism
 //! * LN / softmax → [`crate::controller::ArmCores`]
 //!
@@ -18,7 +18,7 @@ use crate::nand::NandTiming;
 use crate::pim::dmvm::DmvmEngine;
 use crate::pim::op::MvmShape;
 use crate::sim::SimTime;
-use crate::tiling::{search_best, TilingCostModel};
+use crate::tiling::{search_min, TilingCostModel};
 use std::collections::HashMap;
 
 /// Per-category time breakdown of one generated token (Fig. 14b).
@@ -45,8 +45,11 @@ pub struct TokenSchedule {
     cores: ArmCores,
     /// Memoized best-scheme total per sMVM shape.
     smvm_cache: HashMap<MvmShape, f64>,
-    /// Memoized full-token breakdown per context length (§Perf: the
-    /// serving simulator queries step_time per generated token).
+    /// Memoized full-token breakdown per context length. The serving pool
+    /// does not query this directly any more — it precomputes an immutable
+    /// [`super::latency_table::LatencyTable`] once and shares it across
+    /// threads; this cache just keeps the table build (and ad-hoc exact
+    /// queries) cheap.
     token_cache: HashMap<usize, TokenBreakdown>,
     /// SLC dies available for dMVM head parallelism.
     slc_dies: usize,
@@ -68,14 +71,14 @@ impl TokenSchedule {
         }
     }
 
-    /// Best-mapping sMVM latency for a shape (memoized).
+    /// Best-mapping sMVM latency for a shape (memoized). Uses the
+    /// [`search_min`] fast path — cold shapes cost one O(n) scan over the
+    /// legal schemes, not a full ranking sort.
     pub fn smvm_time(&mut self, shape: MvmShape) -> f64 {
         if let Some(t) = self.smvm_cache.get(&shape) {
             return *t;
         }
-        let ranked = search_best(&self.cost_model, shape);
-        let t = ranked
-            .first()
+        let t = search_min(&self.cost_model, shape)
             .map(|r| r.cost.total().secs())
             .expect("shape must be mappable on the Table-I organization");
         self.smvm_cache.insert(shape, t);

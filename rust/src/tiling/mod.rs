@@ -11,4 +11,4 @@ pub mod search;
 pub use cost::{TilingCost, TilingCostModel};
 pub use enumerate::enumerate_schemes;
 pub use scheme::{Level, Method, TilingScheme};
-pub use search::search_best;
+pub use search::{search_best, search_min};

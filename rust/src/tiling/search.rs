@@ -16,6 +16,9 @@ pub struct Ranked {
 
 /// Exhaustive search; returns schemes sorted by total latency (best
 /// first). Empty result only if the shape cannot be covered at all.
+///
+/// Callers that only need the winner should use [`search_min`]: sorting
+/// the full scheme set is wasted work on the TPOT hot path.
 pub fn search_best(model: &TilingCostModel, shape: MvmShape) -> Vec<Ranked> {
     let (rt, ct) = model.grid(shape);
     let mut ranked: Vec<Ranked> = enumerate_schemes(&model.sys.org, rt, ct)
@@ -24,6 +27,18 @@ pub fn search_best(model: &TilingCostModel, shape: MvmShape) -> Vec<Ranked> {
         .collect();
     ranked.sort_by(|a, b| a.cost.total().cmp(&b.cost.total()));
     ranked
+}
+
+/// Fast path: the single cheapest scheme, found in one O(n) pass instead
+/// of ranking every legal scheme. Ties resolve to the first scheme in
+/// enumeration order — the same winner `search_best`'s stable sort puts
+/// first. `None` only if the shape cannot be covered at all.
+pub fn search_min(model: &TilingCostModel, shape: MvmShape) -> Option<Ranked> {
+    let (rt, ct) = model.grid(shape);
+    enumerate_schemes(&model.sys.org, rt, ct)
+        .into_iter()
+        .map(|scheme| Ranked { cost: model.cost(&scheme, shape), scheme })
+        .min_by(|a, b| a.cost.total().cmp(&b.cost.total()))
 }
 
 #[cfg(test)]
@@ -70,6 +85,17 @@ mod tests {
         let best = r.first().unwrap();
         let worst = r.last().unwrap();
         assert!(best.cost.total().secs() < worst.cost.total().secs());
+    }
+
+    #[test]
+    fn search_min_agrees_with_full_ranking() {
+        let m = model();
+        for s in [MvmShape::new(7168, 7168), MvmShape::new(7168, 28672)] {
+            let ranked = search_best(&m, s);
+            let min = search_min(&m, s).expect("coverable shape");
+            assert_eq!(min.cost.total(), ranked[0].cost.total(), "{s:?}");
+            assert_eq!(min.scheme, ranked[0].scheme, "{s:?}");
+        }
     }
 
     #[test]

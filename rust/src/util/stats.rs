@@ -6,6 +6,9 @@
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
+    /// Population standard deviation (÷ n), not the sample estimator
+    /// (÷ n−1): the serving reports summarize complete runs, not draws
+    /// from a larger population.
     pub stddev: f64,
     pub min: f64,
     pub max: f64,
@@ -18,7 +21,13 @@ pub struct Summary {
 impl Summary {
     /// Compute a summary; `samples` need not be sorted. Empty input yields
     /// an all-zero summary.
+    ///
+    /// NaN samples are rejected up front with a clear panic (they used to
+    /// surface as an opaque `partial_cmp` failure deep inside the sort
+    /// comparator, and a NaN would silently poison mean/stddev anyway).
     pub fn of(samples: &[f64]) -> Summary {
+        let nan = samples.iter().filter(|x| x.is_nan()).count();
+        assert!(nan == 0, "Summary::of: {nan} NaN sample(s) among {} values", samples.len());
         if samples.is_empty() {
             return Summary {
                 n: 0,
@@ -33,7 +42,7 @@ impl Summary {
             };
         }
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -55,6 +64,10 @@ impl Summary {
 pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     assert!(!sorted.is_empty());
     assert!((0.0..=100.0).contains(&pct));
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile_sorted requires ascending, NaN-free input"
+    );
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -111,6 +124,19 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN sample(s)")]
+    fn summary_rejects_nan_up_front() {
+        Summary::of(&[1.0, f64::NAN, 3.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "ascending")]
+    fn percentile_rejects_unsorted_in_debug() {
+        percentile_sorted(&[3.0, 1.0, 2.0], 50.0);
     }
 
     #[test]

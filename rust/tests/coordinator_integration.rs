@@ -3,13 +3,15 @@
 //! device-pool subsystem: pool scheduling, bounded-queue backpressure,
 //! KV affinity, and the closed-loop traffic simulator.
 
+use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
 use flashpim::coordinator::{
     LeastLoaded, LenRange, policy_from_name, PoolReport, Request, RoundRobin, Route, Router,
-    run_traffic, Scheduler, simulate, TrafficConfig, Workload,
+    run_traffic, Scheduler, simulate, sweep_rates, TrafficConfig, Workload,
 };
 use flashpim::gpu::rtx4090x4_vllm;
 use flashpim::kv::cache::KvCacheManager;
+use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
 use flashpim::sim::SimTime;
 
@@ -154,6 +156,50 @@ fn kv_affinity_keeps_sessions_on_their_device() {
         device_of.insert(o.session, o.device);
     }
     assert!(followups >= 10, "only {followups} follow-up turns in trace");
+}
+
+#[test]
+fn rate_sweep_emits_monotone_curve_for_both_policies() {
+    // Acceptance: `--sweep` produces, per scheduler policy, a block of
+    // points with strictly ascending offered rates — the
+    // throughput–latency curve shape of the paper's vLLM comparison.
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = traffic(2, 1.0, 80, 41);
+    let rates = [24.0, 6.0, 12.0]; // unsorted input must come back sorted
+    let points = sweep_rates(
+        &sys,
+        &model,
+        &table,
+        &cfg,
+        &rates,
+        &["round-robin", "least-loaded"],
+    )
+    .unwrap();
+    assert_eq!(points.len(), 6);
+    let policies: Vec<&str> = points.iter().map(|p| p.policy.as_str()).collect();
+    assert_eq!(policies[..3], ["round-robin"; 3]);
+    assert_eq!(policies[3..], ["least-loaded"; 3]);
+    for block in points.chunks(3) {
+        assert!(block.windows(2).all(|w| w[0].rate < w[1].rate), "rates must ascend");
+        for p in block {
+            assert_eq!(p.accepted + p.rejected, 80);
+            assert!(p.throughput > 0.0 && p.latency_p50 > 0.0);
+            assert!(p.latency_p50 <= p.latency_p95 && p.latency_p95 <= p.latency_p99);
+        }
+    }
+    // 4× the offered load onto an un-saturated pool must push delivered
+    // throughput well up: the curve's x-axis is real.
+    for block in points.chunks(3) {
+        assert!(
+            block[2].throughput > 1.5 * block[0].throughput,
+            "{}: throughput {} at 24 req/s vs {} at 6 req/s",
+            block[0].policy,
+            block[2].throughput,
+            block[0].throughput
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,125 @@
+//! The precomputed `LatencyTable` against the exact `TokenSchedule`, and
+//! end-to-end behaviour of the table-driven serving simulator: bit-exact
+//! determinism for a seed, and completion of a 100k-request trace (the
+//! scale the shared-table redesign exists to serve).
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{
+    policy_from_name, run_traffic, run_traffic_with_table, LenRange, TrafficConfig,
+};
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::{LatencyTable, TokenSchedule};
+use flashpim::util::testkit::check;
+
+#[test]
+fn table_matches_exact_schedule_within_1pct() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let mut exact = TokenSchedule::new(&sys, &TechParams::default(), model);
+    let max = table.max_context();
+    // Random in-range context lengths: the dense default table must be
+    // within 1% of the exact schedule (it is in fact bit-exact there —
+    // the tolerance guards any future coarsening of the default stride).
+    check("table tpot within 1% of exact schedule", 48, |g| {
+        let l = g.usize_in(1, max + 1);
+        let approx = table.tpot(l);
+        let truth = exact.tpot(l);
+        let err = (approx - truth).abs() / truth;
+        if err < 0.01 {
+            Ok(())
+        } else {
+            Err(format!("l={l}: table {approx} vs exact {truth} ({:.3}% off)", err * 100.0))
+        }
+    });
+    // Past the trained context (long multi-turn sessions get there) the
+    // table extrapolates a windowed slope through the dMVM staircase;
+    // allow 5% pointwise.
+    check("extrapolated tpot within 5% of exact schedule", 24, |g| {
+        let l = g.usize_in(max + 1, 3 * max);
+        let approx = table.tpot(l);
+        let truth = exact.tpot(l);
+        let err = (approx - truth).abs() / truth;
+        if err < 0.05 {
+            Ok(())
+        } else {
+            Err(format!("l={l}: table {approx} vs exact {truth} ({:.3}% off)", err * 100.0))
+        }
+    });
+}
+
+#[test]
+fn table_step_time_monotone_in_context() {
+    let sys = table1_system();
+    let table =
+        LatencyTable::build(&sys, &TechParams::default(), OptModel::Opt13b.shape());
+    let mut prev = 0.0;
+    for l in (0..=3 * table.max_context()).step_by(97) {
+        let t = table.tpot(l);
+        assert!(t >= prev, "tpot regressed at l={l}: {t} < {prev}");
+        assert!(t.is_finite(), "non-finite tpot at l={l}");
+        prev = t;
+    }
+}
+
+fn traffic(seed: u64) -> TrafficConfig {
+    TrafficConfig {
+        devices: 3,
+        rate: 20.0,
+        requests: 400,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 32,
+        followup: 0.5,
+        seed,
+    }
+}
+
+#[test]
+fn same_seed_reproduces_identical_pool_report() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let cfg = traffic(99);
+    let a = run_traffic(&sys, &model, policy_from_name("least-loaded").unwrap(), &cfg);
+    let b = run_traffic(&sys, &model, policy_from_name("least-loaded").unwrap(), &cfg);
+    // Outcome-for-outcome equality, not just aggregate equality.
+    assert_eq!(a, b);
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 100;
+    let c = run_traffic(&sys, &model, policy_from_name("least-loaded").unwrap(), &other_seed);
+    assert_ne!(a, c, "different seeds must give different traces");
+}
+
+#[test]
+fn serve_sim_completes_100k_requests() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 400.0,
+        requests: 100_000,
+        input_tokens: LenRange::new(8, 16),
+        output_tokens: LenRange::new(1, 4),
+        queue_capacity: 64,
+        followup: 0.4,
+        seed: 7,
+    };
+    let rep = run_traffic_with_table(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+    );
+    assert_eq!(rep.outcomes.len(), 100_000);
+    assert_eq!(rep.accepted() + rep.rejected(), 100_000);
+    assert!(rep.accepted() > 50_000, "only {} accepted", rep.accepted());
+    assert!(rep.makespan.secs() > 0.0);
+    let lat = rep.latency_summary();
+    assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+    for u in &rep.device_utilization {
+        assert!((0.0..=1.0).contains(u), "utilization {u}");
+    }
+}
