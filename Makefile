@@ -1,7 +1,7 @@
 # Local targets mirroring the CI jobs (.github/workflows/ci.yml) exactly,
 # so a green `make ci` means a green pipeline.
 
-.PHONY: build test fmt clippy lint bench-check ci
+.PHONY: build test fmt clippy lint bench-check doc doc-test ci
 
 build:
 	cargo build --release --workspace
@@ -20,4 +20,10 @@ lint: fmt clippy
 bench-check:
 	cargo bench --no-run --workspace
 
-ci: build test lint bench-check
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+
+doc-test:
+	cargo test --doc --workspace
+
+ci: build test lint bench-check doc doc-test

@@ -7,16 +7,18 @@
 //! cargo run --release --example serving_pool
 //! ```
 //!
-//! Per-request device time comes from one precomputed `LatencyTable`
-//! (built once from the paper's per-token schedule and shared — via
-//! `Arc`-style `&` borrows — by every run and sweep thread), so the
-//! latency percentiles below are simulated flash latency, not mock
-//! wall-clock.
+//! Everything below runs on the deterministic event-driven simulator
+//! (`coordinator::event_sim`): a single thread replays the whole trace
+//! as discrete events, per-request device time comes from one
+//! precomputed `LatencyTable`, the prefill path prices the PCIe KV
+//! upload, and re-running this example reproduces every number bit for
+//! bit. (`serve-sim --threaded` keeps the legacy direct-replay backend
+//! around as a cross-check.)
 
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
 use flashpim::coordinator::{
-    policy_from_name, render_sweep, run_traffic_with_table, sweep_rates, TrafficConfig,
+    policy_from_name, render_sweep, run_traffic_events, sweep_rates, TrafficConfig,
 };
 use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
@@ -64,7 +66,7 @@ fn main() {
         for policy_name in ["round-robin", "least-loaded"] {
             let policy = policy_from_name(policy_name).expect("known policy");
             cfg.devices = devices;
-            let rep = run_traffic_with_table(&sys, &model, &table, policy, &cfg);
+            let rep = run_traffic_events(&sys, &model, &table, policy, &cfg);
             let lat = rep.latency_summary();
             let max_util =
                 rep.device_utilization.iter().cloned().fold(0.0f64, f64::max);
@@ -89,8 +91,8 @@ fn main() {
     println!("Least-loaded beats round-robin at the tail because it never queues");
     println!("behind a long generation when a sibling device sits idle.");
     println!();
-    println!("Throughput-latency curve, 4 devices, both policies (sweep threads");
-    println!("share the same table — no per-thread schedule caches to rebuild):");
+    println!("Throughput-latency curve, 4 devices, both policies (one deterministic");
+    println!("event timeline per point, all points sharing one latency table):");
     println!();
     cfg.devices = 4;
     let rates = [4.0, 8.0, 16.0, 24.0, 32.0];
@@ -102,7 +104,7 @@ fn main() {
     println!();
     println!("Full per-run report for the 4-device least-loaded configuration:");
     println!();
-    let rep = run_traffic_with_table(
+    let rep = run_traffic_events(
         &sys,
         &model,
         &table,

@@ -1,13 +1,16 @@
 //! Perf bench for the serve-sim hot path: the offline `LatencyTable`
 //! build (one exhaustive tiling search per distinct sMVM shape), the O(1)
 //! immutable TPOT query that replaced per-thread `TokenSchedule` caches,
-//! a single closed-loop run, and the multi-threaded arrival-rate sweep of
-//! `serve-sim --sweep` sharing one table.
+//! a single closed-loop run on each backend (the event-driven default vs
+//! the legacy direct replay), and the arrival-rate sweep of
+//! `serve-sim --sweep` in both its single-threaded event form and its
+//! threaded direct cross-check form.
 
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
 use flashpim::coordinator::{
-    LenRange, policy_from_name, run_traffic_with_table, sweep_rates, TrafficConfig,
+    LenRange, policy_from_name, run_traffic_events, run_traffic_with_table, sweep_rates,
+    sweep_rates_threaded, TrafficConfig,
 };
 use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
@@ -35,7 +38,16 @@ fn main() {
         followup: 0.3,
         seed: 42,
     };
-    quick("closed-loop run: 2k requests, 4 devices", || {
+    quick("event run: 2k requests, 4 devices", || {
+        run_traffic_events(
+            &sys,
+            &model,
+            &table,
+            policy_from_name("least-loaded").unwrap(),
+            &cfg,
+        )
+    });
+    quick("direct run: 2k requests, 4 devices", || {
         run_traffic_with_table(
             &sys,
             &model,
@@ -45,8 +57,19 @@ fn main() {
         )
     });
 
-    quick("sweep: 2 policies x 3 rates x 2k requests", || {
+    quick("event sweep: 2 policies x 3 rates x 2k requests", || {
         sweep_rates(
+            &sys,
+            &model,
+            &table,
+            &cfg,
+            &[6.0, 12.0, 24.0],
+            &["round-robin", "least-loaded"],
+        )
+        .expect("valid sweep")
+    });
+    quick("threaded sweep: 2 policies x 3 rates x 2k requests", || {
+        sweep_rates_threaded(
             &sys,
             &model,
             &table,

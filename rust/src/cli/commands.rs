@@ -4,8 +4,8 @@ use super::args::Args;
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::{
-    LenRange, policy_from_name, render_sweep, run_traffic_with_table, simulate, sweep_rates,
-    TrafficConfig, Workload,
+    LenRange, policy_from_name, render_sweep, run_traffic_events, run_traffic_with_table,
+    simulate, sweep_rates, sweep_rates_threaded, TrafficConfig, Workload,
 };
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
@@ -43,7 +43,11 @@ tools:
   serve-sim --devices N --rate R --requests K
                        closed-loop Poisson traffic against a flash-PIM
                        device pool (TTFT/TPOT/latency p50/p95/p99 and
-                       per-device utilization); also --policy
+                       per-device utilization). Runs on the deterministic
+                       event-driven simulator by default (bit-identical
+                       reports per seed, prefill prices the PCIe KV
+                       upload); --threaded selects the legacy direct
+                       cross-check backend. Also --policy
                        round-robin|least-loaded, --queue-cap,
                        --input-min/max, --output-min/max, --followup,
                        --model, --seed. With --sweep, runs every arrival
@@ -215,6 +219,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
 
     // Validate sweep/policy flags before paying for the table build.
+    let threaded = args.bool_flag("threaded");
     let sweep = args.bool_flag("sweep");
     let rates = if sweep { Some(sweep_rate_list(args)?) } else { None };
     let policy = if sweep {
@@ -229,16 +234,15 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let sys = table1_system();
     let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
     if let Some(rates) = rates {
-        let points = sweep_rates(
-            &sys,
-            &model.shape(),
-            &table,
-            &cfg,
-            &rates,
-            &["round-robin", "least-loaded"],
-        )?;
+        let both = ["round-robin", "least-loaded"];
+        let points = if threaded {
+            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, &both)?
+        } else {
+            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, &both)?
+        };
         println!(
-            "rate sweep: {} device(s), {} requests/point, {} ({} buckets, stride {})",
+            "rate sweep ({} backend): {} device(s), {} requests/point, {} ({} buckets, stride {})",
+            if threaded { "threaded direct" } else { "event" },
             cfg.devices,
             cfg.requests,
             table.model_name(),
@@ -249,7 +253,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         return Ok(());
     }
     let policy = policy.expect("non-sweep path parsed a policy above");
-    let report = run_traffic_with_table(&sys, &model.shape(), &table, policy, &cfg);
+    let report = if threaded {
+        run_traffic_with_table(&sys, &model.shape(), &table, policy, &cfg)
+    } else {
+        run_traffic_events(&sys, &model.shape(), &table, policy, &cfg)
+    };
     print!("{}", report.render());
     Ok(())
 }
@@ -336,6 +344,25 @@ mod tests {
     fn serve_sim_command_runs() {
         run(vec![
             "serve-sim".into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "12".into(),
+            "--output-min".into(),
+            "4".into(),
+            "--output-max".into(),
+            "8".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_sim_threaded_backend_runs() {
+        run(vec![
+            "serve-sim".into(),
+            "--threaded".into(),
             "--devices".into(),
             "2".into(),
             "--rate".into(),

@@ -145,6 +145,9 @@ pub struct ControllerConfig {
     pub pcie_lanes: usize,
     /// PCIe per-lane bandwidth, bytes/s (gen5 ≈ 3.938 GB/s/lane).
     pub pcie_lane_bw: f64,
+    /// PCIe one-way latency per transaction, nanoseconds (gen5 switch +
+    /// root-complex traversal ≈ 800 ns).
+    pub pcie_latency_ns: f64,
     /// Flash channel bus bandwidth, bytes/s (Table I: 2 GB/s = 1000 MT/s × 8-bit... per channel).
     pub channel_bus_bw: f64,
 }
@@ -156,6 +159,7 @@ impl Default for ControllerConfig {
             arm_freq_hz: 1.0e9,
             pcie_lanes: 4,
             pcie_lane_bw: 3.938e9,
+            pcie_latency_ns: 800.0,
             channel_bus_bw: 2.0e9,
         }
     }
@@ -258,6 +262,8 @@ impl SystemConfig {
             arm_freq_hz: doc.float_or("controller", "arm_freq_hz", base.ctrl.arm_freq_hz)?,
             pcie_lanes: doc.int_or("controller", "pcie_lanes", base.ctrl.pcie_lanes as i64)? as usize,
             pcie_lane_bw: doc.float_or("controller", "pcie_lane_bw", base.ctrl.pcie_lane_bw)?,
+            pcie_latency_ns: doc
+                .float_or("controller", "pcie_latency_ns", base.ctrl.pcie_latency_ns)?,
             channel_bus_bw: doc.float_or("controller", "channel_bus_bw", base.ctrl.channel_bus_bw)?,
         };
         let cfg = SystemConfig {
@@ -318,5 +324,18 @@ mod tests {
         assert_eq!(cfg.plane.n_col, 1024);
         assert_eq!(cfg.bus, BusTopology::Shared);
         assert_eq!(cfg.org.channels, 8); // inherited from Table I
+    }
+
+    #[test]
+    fn pcie_latency_defaults_and_overrides() {
+        // The 800 ns one-way latency lives in the schema (it used to be
+        // hardcoded inside `controller::pcie`), so presets and TOML files
+        // can change it.
+        assert_eq!(ControllerConfig::default().pcie_latency_ns, 800.0);
+        let doc =
+            crate::config::toml_lite::parse("[controller]\npcie_latency_ns = 1600.0").unwrap();
+        let cfg = SystemConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.ctrl.pcie_latency_ns, 1600.0);
+        assert_eq!(cfg.ctrl.pcie_lanes, 4); // the rest inherits Table I
     }
 }

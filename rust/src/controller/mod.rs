@@ -1,6 +1,32 @@
 //! SSD-controller models (Table I): the ARM Cortex-A9 cores that execute
 //! LayerNorm / softmax / activations in FP16, and the PCIe 5.0 ×4 host
 //! link used for the initial KV-cache transfer.
+//!
+//! Both models are pure latency calculators over
+//! [`ControllerConfig`](crate::config::ControllerConfig) — the serving
+//! simulators call them to price every host-side step of a request, and
+//! the per-token schedule ([`crate::llm::TokenSchedule`]) folds the ARM
+//! cores into its LN/softmax terms.
+//!
+//! # Example
+//!
+//! Price a prompt's KV upload over the host link (the prefill term the
+//! event-driven serving simulator charges before the first decode step):
+//!
+//! ```
+//! use flashpim::config::ControllerConfig;
+//! use flashpim::controller::PcieLink;
+//! use flashpim::sim::SimTime;
+//!
+//! let cfg = ControllerConfig::default();
+//! let link = PcieLink::new(&cfg);
+//! let kv_bytes = 64.0 * 1024.0 * 1024.0; // 64 MiB of prompt KV
+//! let t = link.transfer_time(kv_bytes);
+//! // Never faster than the configured one-way latency, and a gen5 x4
+//! // link moves 64 MiB in a handful of milliseconds.
+//! assert!(t >= SimTime::from_ns(cfg.pcie_latency_ns));
+//! assert!(t.secs() < 0.1);
+//! ```
 
 pub mod cores;
 pub mod pcie;

@@ -19,7 +19,7 @@ impl PcieLink {
         PcieLink {
             // ~7.9 % encoding/TLP overhead on gen5.
             bw: cfg.pcie_bw() * 0.92,
-            latency: SimTime::from_ns(800.0),
+            latency: SimTime::from_ns(cfg.pcie_latency_ns),
             timeline: Resource::new(),
         }
     }
@@ -46,6 +46,17 @@ mod tests {
         let link = PcieLink::new(&ControllerConfig::default());
         // 4 lanes × ~3.94 GB/s × 0.92 ≈ 14.5 GB/s.
         assert!((14.0e9..15.0e9).contains(&link.bw), "bw = {}", link.bw);
+    }
+
+    #[test]
+    fn latency_comes_from_config() {
+        let mut cfg = ControllerConfig::default();
+        assert_eq!(PcieLink::new(&cfg).latency, SimTime::from_ns(800.0));
+        cfg.pcie_latency_ns = 1600.0;
+        let link = PcieLink::new(&cfg);
+        assert_eq!(link.latency, SimTime::from_ns(1600.0));
+        // A zero-byte transfer is pure link latency.
+        assert_eq!(link.transfer_time(0.0), SimTime::from_ns(1600.0));
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! Deterministic event-driven serving simulation on [`crate::sim::Engine`].
+//!
+//! This is the default backend behind `serve-sim` and the rate sweep. The
+//! closed-loop Poisson traffic model is expressed as a discrete-event
+//! [`Model`]: every state change is an explicit event on the engine's
+//! deterministic queue (integer-picosecond timestamps, FIFO tie-breaks),
+//! so two runs with the same seed produce **bit-identical**
+//! [`PoolReport`]s, and a single thread replays million-request traces —
+//! no locks, no thread-timing jitter, no per-worker state.
+//!
+//! Events, in the life of one request:
+//!
+//! 1. [`ServingEvent::Arrive`] — Poisson arrival. Samples the session
+//!    (fresh or follow-up), prompt/output lengths, then runs admission:
+//!    scheduler pick through the shared [`Scheduler`]-driven
+//!    [`DeviceRouter`] (KV affinity first, then policy), the bounded-queue
+//!    backpressure check, and SLC KV admission with idle-LRU eviction.
+//!    Rejected arrivals surface immediately as shed load. The handler
+//!    reschedules the next arrival, closing the loop.
+//! 2. [`ServingEvent::PrefillDone`] — the prefill phase finished on a
+//!    device: the GPU-computed prompt KV crossed the host link (priced by
+//!    [`PcieLink::transfer_time`] — the direct backend ignores this
+//!    term), landed in SLC ([`initial_kv_write_time`]), and the first
+//!    decode step produced the first token.
+//! 3. [`ServingEvent::TokenDone`] — one decode step completed; its
+//!    duration came from the shared immutable [`LatencyTable`] at the
+//!    session's current context length.
+//! 4. [`ServingEvent::Retire`] — the session's turn is over: the outcome
+//!    is recorded, the session becomes eligible for follow-up turns (and
+//!    for idle eviction), and the device starts its next queued job.
+//!
+//! The legacy direct-replay loop
+//! ([`run_traffic_with_table`][super::loadgen::run_traffic_with_table])
+//! is kept as a cross-check backend (`serve-sim --threaded` selects it,
+//! and its rate sweep still fans out on scoped threads). Both backends
+//! draw from the RNG in the same structural order (gap, follow-up
+//! chance, session pick, lengths), so with follow-ups disabled their
+//! traces agree *pointwise* up to the PCIe upload term the event model
+//! adds (asserted in `tests/event_sim.rs`); with follow-ups enabled the
+//! two idle-session sets evolve on slightly different timelines, so
+//! agreement is statistical (percentiles within a few percent), not
+//! pointwise.
+
+use super::loadgen::{SimRequest, TrafficConfig};
+use super::metrics::PoolReport;
+use super::router::{DeviceRouter, DeviceStatus, Scheduler};
+use crate::config::SystemConfig;
+use crate::controller::PcieLink;
+use crate::kv::write_overhead::initial_kv_write_time;
+use crate::llm::latency_table::LatencyTable;
+use crate::llm::model_config::ModelShape;
+use crate::sim::{Engine, EventQueue, Model, SimTime};
+use crate::util::rng::Rng;
+use std::collections::{HashMap, VecDeque};
+
+/// Event payload of the serving model. One variant per state change in a
+/// request's life; `device` indexes the pool (each device runs at most
+/// one job, so the index identifies the job).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingEvent {
+    /// Next Poisson arrival (self-rescheduling).
+    Arrive,
+    /// PCIe KV upload + SLC write + first decode step finished.
+    PrefillDone { device: usize },
+    /// One decode step finished.
+    TokenDone { device: usize },
+    /// Turn complete: record the outcome, free the device.
+    Retire { device: usize },
+}
+
+/// An admitted request waiting in (or at the head of) a device queue.
+#[derive(Debug, Clone)]
+struct Pending {
+    id: u64,
+    session: u64,
+    arrival: SimTime,
+    l_in: usize,
+    l_out: usize,
+    /// Context length at the first decode step (resident KV + new prompt).
+    ctx0: usize,
+    followup: bool,
+}
+
+/// The request currently being served by a device.
+#[derive(Debug, Clone)]
+struct Active {
+    req: Pending,
+    /// Service start (prefill begin) — busy-time accounting.
+    started: SimTime,
+    first_token: Option<SimTime>,
+    tokens_done: usize,
+}
+
+/// One pool device: a bounded FIFO of admitted jobs, at most one active,
+/// and its own host link for prefill KV uploads.
+#[derive(Debug, Clone)]
+struct Device {
+    queue: VecDeque<Pending>,
+    active: Option<Active>,
+    busy: SimTime,
+    jobs: usize,
+    pcie: PcieLink,
+}
+
+impl Device {
+    /// Jobs queued or running — the quantity the bounded-queue admission
+    /// check and the [`Scheduler`] policies see.
+    fn depth(&self) -> usize {
+        self.queue.len() + self.active.is_some() as usize
+    }
+}
+
+/// The closed-loop serving simulation as a [`Model`] for [`Engine`].
+///
+/// Use [`run_traffic_events`] unless you need to drive the engine
+/// yourself (e.g. to interleave other models or stop early).
+pub struct ServingModel<'a> {
+    cfg: TrafficConfig,
+    sys: &'a SystemConfig,
+    model: &'a ModelShape,
+    table: &'a LatencyTable,
+    router: DeviceRouter,
+    rng: Rng,
+    devices: Vec<Device>,
+    /// Arrival clock accumulated in f64 seconds — the same accumulation
+    /// the direct backend uses, so both backends sample identical
+    /// arrival instants from identical seeds.
+    clock: f64,
+    arrivals: usize,
+    next_session: u64,
+    /// Sessions whose latest turn has retired (eligible for follow-ups).
+    idle: Vec<u64>,
+    /// Retirement time per finished session; entries are removed when the
+    /// session starts a new turn. Feeds oldest-first idle eviction.
+    completed_at: HashMap<u64, SimTime>,
+    outcomes: Vec<SimRequest>,
+}
+
+impl<'a> ServingModel<'a> {
+    pub fn new(
+        sys: &'a SystemConfig,
+        model: &'a ModelShape,
+        table: &'a LatencyTable,
+        policy: Box<dyn Scheduler + Send>,
+        cfg: &TrafficConfig,
+    ) -> ServingModel<'a> {
+        assert!(cfg.devices > 0, "pool needs at least one device");
+        assert!(cfg.rate > 0.0, "arrival rate must be positive");
+        assert!(cfg.queue_capacity > 0, "queue capacity must be at least 1");
+        assert_eq!(table.model_name(), model.name, "latency table built for a different model");
+        assert_eq!(table.system_name(), sys.name, "latency table built for a different system");
+        let router = DeviceRouter::new(cfg.devices, sys, model, policy);
+        let devices = (0..cfg.devices)
+            .map(|_| Device {
+                queue: VecDeque::new(),
+                active: None,
+                busy: SimTime::ZERO,
+                jobs: 0,
+                pcie: PcieLink::new(&sys.ctrl),
+            })
+            .collect();
+        ServingModel {
+            cfg: cfg.clone(),
+            sys,
+            model,
+            table,
+            router,
+            rng: Rng::new(cfg.seed),
+            devices,
+            clock: 0.0,
+            arrivals: 0,
+            next_session: 0,
+            idle: Vec::new(),
+            completed_at: HashMap::new(),
+            outcomes: Vec::with_capacity(cfg.requests),
+        }
+    }
+
+    /// Reduce the finished simulation to a [`PoolReport`]. Outcomes are
+    /// sorted into arrival (id) order to match the direct backend.
+    pub fn into_report(mut self) -> PoolReport {
+        self.outcomes.sort_by_key(|o| o.id);
+        let makespan = self
+            .outcomes
+            .iter()
+            .filter(|o| !o.rejected)
+            .map(|o| o.completed)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        let device_utilization = self
+            .devices
+            .iter()
+            .map(|d| if makespan == SimTime::ZERO { 0.0 } else { d.busy.secs() / makespan.secs() })
+            .collect();
+        let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
+        PoolReport {
+            backend: "event",
+            policy: self.router.policy_name().to_string(),
+            devices: self.cfg.devices,
+            offered_rate: self.cfg.rate,
+            outcomes: self.outcomes,
+            makespan,
+            device_utilization,
+            device_jobs,
+        }
+    }
+
+    fn on_arrive(&mut self, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let id = self.arrivals as u64;
+        self.arrivals += 1;
+        self.admit(id, now, queue);
+        // Close the loop *after* this arrival's draws — the exact order
+        // the direct backend consumes the stream in.
+        if self.arrivals < self.cfg.requests {
+            self.clock += -(1.0 - self.rng.f64()).ln() / self.cfg.rate; // exponential gap
+            queue.schedule(SimTime::from_secs(self.clock), ServingEvent::Arrive);
+        }
+    }
+
+    /// Admission control for one arrival: session sampling, scheduler
+    /// pick, bounded-queue check, KV admission with idle eviction, and —
+    /// if everything passes — enqueue on the picked device.
+    fn admit(&mut self, id: u64, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        // Follow-up turns reuse a session whose previous turn retired.
+        // The sampling sequence is the one function both backends share
+        // (`loadgen::sample_arrival`), so the RNG streams stay in
+        // lockstep by construction.
+        let (session, reuse, l_in, l_out) = super::loadgen::sample_arrival(
+            &mut self.rng,
+            &self.cfg,
+            &mut self.idle,
+            &mut self.next_session,
+        );
+
+        let status: Vec<DeviceStatus> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceStatus {
+                device: i,
+                queue_depth: d.depth(),
+                kv_used: self.router.kv(i).used(),
+                kv_capacity: self.router.kv(i).capacity,
+            })
+            .collect();
+        let dev = self.router.assign(session, &status);
+
+        // Bounded admission: the picked device's queue may be full.
+        if status[dev].queue_depth >= self.cfg.queue_capacity {
+            self.reject(id, now, session, dev, l_in, reuse);
+            return;
+        }
+
+        // SLC KV admission, evicting retired resident sessions (oldest
+        // first) when the region is full.
+        let per_token = self.router.kv(dev).per_token;
+        let resident = self.router.kv(dev).context_len(session);
+        let needed = (l_in + l_out) as u64 * per_token;
+        if self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
+            self.evict_idle(dev, session, needed);
+        }
+        if self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
+            self.reject(id, now, session, dev, l_in, reuse);
+            return;
+        }
+        match resident {
+            // Fresh (or evicted-and-returning) session: admit the prompt.
+            None => {
+                self.router.kv_mut(dev).admit(session, l_in).expect("admission after space check");
+            }
+            // Follow-up with resident KV: append the new prompt tokens.
+            Some(_) => {
+                self.router
+                    .kv_mut(dev)
+                    .append_n(session, l_in)
+                    .expect("append after space check");
+            }
+        }
+        let ctx0 = resident.unwrap_or(0) + l_in;
+        self.router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
+        // Running again: no longer an idle-eviction candidate.
+        self.completed_at.remove(&session);
+
+        let was_idle = self.devices[dev].active.is_none();
+        self.devices[dev].queue.push_back(Pending {
+            id,
+            session,
+            arrival: now,
+            l_in,
+            l_out,
+            ctx0,
+            followup: reuse,
+        });
+        if was_idle {
+            self.start_service(dev, now, queue);
+        }
+    }
+
+    fn reject(
+        &mut self,
+        id: u64,
+        now: SimTime,
+        session: u64,
+        dev: usize,
+        l_in: usize,
+        reuse: bool,
+    ) {
+        if reuse {
+            self.idle.push(session); // the session stays eligible for follow-ups
+        }
+        if self.router.kv(dev).context_len(session).is_none() {
+            self.router.forget(session); // placement without resident KV
+        }
+        self.outcomes.push(SimRequest {
+            id,
+            session,
+            device: None,
+            arrival: now,
+            first_token: None,
+            completed: now,
+            input_tokens: l_in,
+            output_tokens: 0,
+            context: 0,
+            rejected: true,
+            followup: reuse,
+        });
+    }
+
+    /// Evict retired resident sessions on `dev` (never the current
+    /// session), oldest retirement first, via the eviction core shared
+    /// with the direct backend (`loadgen::evict_oldest_idle`).
+    fn evict_idle(&mut self, dev: usize, keep: u64, needed: u64) {
+        let idle: Vec<(SimTime, u64)> = self
+            .router
+            .sessions_on(dev)
+            .into_iter()
+            .filter(|s| *s != keep)
+            .filter_map(|s| self.completed_at.get(&s).map(|done| (*done, s)))
+            .collect();
+        super::loadgen::evict_oldest_idle(&mut self.router, dev, idle, needed);
+    }
+
+    /// Begin serving the next queued job on `dev`: schedule its
+    /// [`ServingEvent::PrefillDone`] after the PCIe KV upload, the SLC
+    /// write of the prompt KV, and the first decode step.
+    fn start_service(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let (sys, model, table) = (self.sys, self.model, self.table);
+        let dev = &mut self.devices[d];
+        debug_assert!(dev.active.is_none(), "device {d} already serving");
+        let Some(req) = dev.queue.pop_front() else {
+            return;
+        };
+        let upload = dev.pcie.transfer_time(model.kv_bytes(req.l_in, 1.0));
+        let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, req.l_in));
+        let first_step = table.step_time(req.ctx0);
+        dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
+        let ready = now + upload + kv_write + first_step;
+        queue.schedule(ready, ServingEvent::PrefillDone { device: d });
+    }
+
+    /// Schedule the next decode step, or retirement when the turn is done.
+    fn advance(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let table = self.table;
+        let a = self.devices[d].active.as_ref().expect("advance without active job");
+        if a.tokens_done == a.req.l_out {
+            queue.schedule(now, ServingEvent::Retire { device: d });
+        } else {
+            let step = table.step_time(a.req.ctx0 + a.tokens_done);
+            queue.schedule(now + step, ServingEvent::TokenDone { device: d });
+        }
+    }
+
+    fn on_retire(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let dev = &mut self.devices[d];
+        let a = dev.active.take().expect("retire without active job");
+        dev.busy += now - a.started;
+        dev.jobs += 1;
+        let r = a.req;
+        self.completed_at.insert(r.session, now);
+        self.idle.push(r.session);
+        self.outcomes.push(SimRequest {
+            id: r.id,
+            session: r.session,
+            device: Some(d),
+            arrival: r.arrival,
+            first_token: a.first_token,
+            completed: now,
+            input_tokens: r.l_in,
+            output_tokens: r.l_out,
+            context: r.ctx0,
+            rejected: false,
+            followup: r.followup,
+        });
+        self.start_service(d, now, queue);
+    }
+}
+
+impl Model for ServingModel<'_> {
+    type Event = ServingEvent;
+
+    fn handle(&mut self, now: SimTime, ev: ServingEvent, queue: &mut EventQueue<ServingEvent>) {
+        match ev {
+            ServingEvent::Arrive => self.on_arrive(now, queue),
+            ServingEvent::PrefillDone { device } => {
+                let a = self.devices[device].active.as_mut().expect("prefill without active job");
+                a.first_token = Some(now);
+                a.tokens_done = 1;
+                self.advance(device, now, queue);
+            }
+            ServingEvent::TokenDone { device } => {
+                let a = self.devices[device].active.as_mut().expect("token without active job");
+                a.tokens_done += 1;
+                self.advance(device, now, queue);
+            }
+            ServingEvent::Retire { device } => self.on_retire(device, now, queue),
+        }
+    }
+}
+
+/// Run a closed-loop Poisson trace on the event-driven backend. Same
+/// inputs as [`run_traffic_with_table`][super::loadgen::run_traffic_with_table];
+/// the report additionally prices the prefill PCIe KV upload and is
+/// **bit-identical** across runs with the same configuration
+/// (single-threaded, deterministic event order).
+pub fn run_traffic_events(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+) -> PoolReport {
+    let mut engine = Engine::new(ServingModel::new(sys, model, table, policy, cfg));
+    // Per accepted request: Arrive + PrefillDone + (l_out - 1) TokenDone
+    // + Retire, so requests × (hi + 4) bounds any trace with headroom.
+    engine.max_events =
+        (cfg.requests as u64).saturating_mul(cfg.output_tokens.hi as u64 + 4).saturating_add(16);
+    if cfg.requests > 0 {
+        let gap = -(1.0 - engine.model.rng.f64()).ln() / cfg.rate;
+        engine.model.clock = gap;
+        engine.seed(SimTime::from_secs(gap), ServingEvent::Arrive);
+    }
+    engine.run();
+    engine.model.into_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::TechParams;
+    use crate::config::presets::table1_system;
+    use crate::coordinator::loadgen::LenRange;
+    use crate::coordinator::router::{LeastLoaded, RoundRobin};
+    use crate::llm::model_config::OptModel;
+
+    fn quick_cfg(devices: usize, requests: usize, rate: f64, seed: u64) -> TrafficConfig {
+        TrafficConfig {
+            devices,
+            rate,
+            requests,
+            input_tokens: LenRange::new(64, 128),
+            output_tokens: LenRange::new(8, 16),
+            queue_capacity: 64,
+            followup: 0.3,
+            seed,
+        }
+    }
+
+    fn run(cfg: &TrafficConfig, least_loaded: bool) -> PoolReport {
+        let policy: Box<dyn Scheduler + Send> = if least_loaded {
+            Box::new(LeastLoaded::new())
+        } else {
+            Box::new(RoundRobin::new())
+        };
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        run_traffic_events(&sys, &model, &table, policy, cfg)
+    }
+
+    #[test]
+    fn all_arrivals_accounted_for() {
+        let cfg = quick_cfg(2, 40, 10.0, 3);
+        let rep = run(&cfg, true);
+        assert_eq!(rep.backend, "event");
+        assert_eq!(rep.outcomes.len(), 40);
+        assert_eq!(rep.accepted() + rep.rejected(), 40);
+        assert_eq!(rep.device_utilization.len(), 2);
+        // Outcomes come back in arrival order despite completion-order
+        // retirement events.
+        assert!(rep.outcomes.windows(2).all(|w| w[0].id < w[1].id));
+    }
+
+    #[test]
+    fn bit_identical_given_seed() {
+        let cfg = quick_cfg(3, 60, 15.0, 7);
+        let a = run(&cfg, true);
+        let b = run(&cfg, true);
+        assert_eq!(a, b, "same seed must reproduce the report byte for byte");
+        let mut other = cfg.clone();
+        other.seed = 8;
+        assert_ne!(a, run(&other, true), "different seeds must differ");
+    }
+
+    #[test]
+    fn followups_share_devices_with_their_sessions() {
+        let mut cfg = quick_cfg(4, 60, 10.0, 5);
+        cfg.followup = 0.6;
+        let rep = run(&cfg, true);
+        let mut seen = std::collections::HashMap::new();
+        let mut followups = 0;
+        for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+            if let Some(prev) = seen.get(&o.session) {
+                followups += 1;
+                assert_eq!(o.device, *prev, "follow-up of session {} moved devices", o.session);
+                assert!(o.context > o.input_tokens, "resident KV must extend the context");
+            }
+            seen.insert(o.session, o.device);
+        }
+        assert!(followups > 0, "trace produced no follow-up turns");
+    }
+
+    #[test]
+    fn saturated_single_device_rejects_arrivals() {
+        let mut cfg = quick_cfg(1, 80, 200.0, 9);
+        cfg.queue_capacity = 4;
+        cfg.output_tokens = LenRange::new(32, 64);
+        let rep = run(&cfg, true);
+        assert!(rep.rejected() > 0, "200 req/s into one bounded device must shed load");
+        for o in rep.outcomes.iter().filter(|o| o.rejected) {
+            assert_eq!(o.device, None);
+            assert_eq!(o.output_tokens, 0);
+        }
+    }
+
+    #[test]
+    fn utilization_and_latency_sane() {
+        let cfg = quick_cfg(4, 80, 10.0, 11);
+        let rep = run(&cfg, true);
+        for u in &rep.device_utilization {
+            assert!((0.0..=1.0).contains(u), "utilization {u}");
+        }
+        let lat = rep.latency_summary();
+        let ttft = rep.ttft_summary();
+        assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+        assert!(ttft.p50 > 0.0);
+        assert_eq!(rep.device_jobs.iter().sum::<usize>(), rep.accepted());
+    }
+
+    #[test]
+    fn empty_trace_reports_empty() {
+        let mut cfg = quick_cfg(2, 1, 10.0, 1);
+        cfg.requests = 0;
+        let rep = run(&cfg, false);
+        assert_eq!(rep.outcomes.len(), 0);
+        assert_eq!(rep.makespan, SimTime::ZERO);
+        assert!(rep.device_utilization.iter().all(|u| *u == 0.0));
+    }
+
+    #[test]
+    fn round_robin_spreads_jobs_evenly() {
+        let mut cfg = quick_cfg(4, 80, 6.0, 13);
+        cfg.followup = 0.0; // fresh sessions only: pure policy routing
+        let rep = run(&cfg, false);
+        assert_eq!(rep.rejected(), 0);
+        let min = rep.device_jobs.iter().min().unwrap();
+        let max = rep.device_jobs.iter().max().unwrap();
+        assert_eq!(rep.device_jobs.iter().sum::<usize>(), 80);
+        assert!(max - min <= 1, "round-robin imbalance: {:?}", rep.device_jobs);
+    }
+}

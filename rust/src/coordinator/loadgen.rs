@@ -1,9 +1,20 @@
-//! Closed-loop traffic simulation for the device pool: Poisson arrivals at
-//! a configurable rate, prompt/output lengths drawn from [`crate::util::rng`]
-//! distributions, device service time taken from an immutable precomputed
+//! Closed-loop traffic simulation for the device pool — the **direct
+//! replay** backend: Poisson arrivals at a configurable rate,
+//! prompt/output lengths drawn from [`crate::util::rng`] distributions,
+//! device service time taken from an immutable precomputed
 //! [`LatencyTable`] — so *simulated flash latency*, not mock wall-clock,
 //! drives every reported number, and the exhaustive §V-A tiling search
 //! behind it runs once per (model, system), not once per run or thread.
+//!
+//! The serving default is the event-driven backend
+//! ([`super::event_sim::run_traffic_events`]), which expresses the same
+//! model as explicit events on [`crate::sim::Engine`] and additionally
+//! prices the prefill PCIe KV upload. This loop computes each request's
+//! whole service inline at arrival time instead; it is kept as the
+//! `serve-sim --threaded` cross-check path (its rate sweep fans out on
+//! scoped threads) and draws from the RNG in the same structural order
+//! as the event backend, so fresh-session traces line up request for
+//! request.
 //!
 //! The loop models the full serving path per request: scheduler pick
 //! ([`DeviceRouter`]: KV affinity first, then policy), bounded per-device
@@ -45,7 +56,10 @@ impl LenRange {
         LenRange::new(n, n)
     }
 
-    fn sample(&self, rng: &mut Rng) -> usize {
+    /// Draw one length. Exactly one RNG draw when the range is non-trivial
+    /// (and none when `lo == hi`) — both serving backends rely on this to
+    /// consume identical RNG streams.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
         if self.lo == self.hi {
             self.lo
         } else {
@@ -90,6 +104,33 @@ impl TrafficConfig {
             seed: 42,
         }
     }
+}
+
+/// Sample one arrival's identity: the follow-up decision, the session
+/// (picked from `idle` or freshly numbered via `next_session`), and the
+/// prompt/output lengths. Both serving backends route their draws
+/// through this one function, so the RNG stream order — unconditional
+/// Bernoulli (not short-circuited on an empty idle set, whose timeline
+/// differs slightly between backends), conditional idle pick, two length
+/// draws — stays in lockstep by construction.
+pub(super) fn sample_arrival(
+    rng: &mut Rng,
+    cfg: &TrafficConfig,
+    idle: &mut Vec<u64>,
+    next_session: &mut u64,
+) -> (u64, bool, usize, usize) {
+    let chance = rng.chance(cfg.followup);
+    let reuse = !idle.is_empty() && chance;
+    let session = if reuse {
+        let pick = rng.range(0, idle.len());
+        idle.swap_remove(pick)
+    } else {
+        *next_session += 1;
+        *next_session
+    };
+    let l_in = cfg.input_tokens.sample(rng);
+    let l_out = cfg.output_tokens.sample(rng);
+    (session, reuse, l_in, l_out)
 }
 
 /// Per-request record produced by the simulator.
@@ -211,17 +252,8 @@ pub fn run_traffic_with_table(
         }
 
         // Follow-up turns reuse a session whose previous turn has finished.
-        let reuse = !idle.is_empty() && rng.chance(cfg.followup);
-        let session = if reuse {
-            let pick = rng.range(0, idle.len());
-            idle.swap_remove(pick)
-        } else {
-            next_session += 1;
-            next_session
-        };
-
-        let l_in = cfg.input_tokens.sample(&mut rng);
-        let l_out = cfg.output_tokens.sample(&mut rng);
+        let (session, reuse, l_in, l_out) =
+            sample_arrival(&mut rng, cfg, &mut idle, &mut next_session);
 
         let status: Vec<DeviceStatus> = devices
             .iter_mut()
@@ -327,6 +359,7 @@ pub fn run_traffic_with_table(
         devices.iter().map(|d| d.res.utilization(makespan)).collect::<Vec<_>>();
     let device_jobs = devices.iter().map(|d| d.res.jobs() as usize).collect::<Vec<_>>();
     PoolReport {
+        backend: "direct",
         policy: policy_name,
         devices: cfg.devices,
         offered_rate: cfg.rate,
@@ -338,10 +371,7 @@ pub fn run_traffic_with_table(
 }
 
 /// Evict idle resident sessions on `dev` (latest turn finished, not the
-/// current session), oldest completion first, until `needed` bytes fit —
-/// plus a 1/64-capacity overshoot: under steady overload, freeing only
-/// `needed` would re-trigger this scan-and-sort on the very next arrival,
-/// so the batch amortizes it across many arrivals.
+/// current session), oldest completion first, until `needed` bytes fit.
 fn evict_idle(
     router: &mut DeviceRouter,
     dev: usize,
@@ -350,9 +380,7 @@ fn evict_idle(
     keep: u64,
     needed: u64,
 ) {
-    let capacity = router.kv(dev).capacity;
-    let target = needed.max(capacity / 64).min(capacity);
-    let mut idle: Vec<(SimTime, u64)> = router
+    let idle: Vec<(SimTime, u64)> = router
         .sessions_on(dev)
         .into_iter()
         .filter(|s| *s != keep)
@@ -360,10 +388,28 @@ fn evict_idle(
             completion.get(&s).and_then(|done| if *done <= now { Some((*done, s)) } else { None })
         })
         .collect();
+    evict_oldest_idle(router, dev, idle, needed);
+}
+
+/// Shared eviction core for both serving backends: evict `candidates`
+/// (idle sessions resident on `dev`, tagged with their completion time)
+/// oldest first until `needed` bytes fit — plus a 1/64-capacity
+/// overshoot: under steady overload, freeing only `needed` would
+/// re-trigger the candidate scan on the very next arrival, so the batch
+/// amortizes it across many arrivals. One implementation keeps the two
+/// backends' eviction policies in lockstep by construction.
+pub(super) fn evict_oldest_idle(
+    router: &mut DeviceRouter,
+    dev: usize,
+    mut candidates: Vec<(SimTime, u64)>,
+    needed: u64,
+) {
+    let capacity = router.kv(dev).capacity;
+    let target = needed.max(capacity / 64).min(capacity);
     // Sorted order (not HashMap iteration order) keeps eviction — and the
     // whole trace — deterministic for a given seed.
-    idle.sort_unstable();
-    for (_, s) in idle {
+    candidates.sort_unstable();
+    for (_, s) in candidates {
         if router.kv(dev).used() + target <= capacity {
             break;
         }

@@ -74,10 +74,14 @@ impl ServingReport {
 }
 
 /// Aggregate report of one closed-loop device-pool run
-/// (see [`crate::coordinator::loadgen::run_traffic`]). `PartialEq` so
+/// (see [`crate::coordinator::event_sim::run_traffic_events`] and the
+/// legacy [`crate::coordinator::loadgen::run_traffic`]). `PartialEq` so
 /// determinism tests can compare whole runs outcome-for-outcome.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolReport {
+    /// Simulation backend that produced the report: `"event"` for the
+    /// event-driven default, `"direct"` for the legacy replay loop.
+    pub backend: &'static str,
     /// Scheduler policy name ("round-robin" / "least-loaded").
     pub policy: String,
     /// Devices in the pool.
@@ -138,11 +142,12 @@ impl PoolReport {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "pool: {} device(s), {} scheduling, {:.1} req/s offered\n\
+            "pool: {} device(s), {} scheduling, {:.1} req/s offered ({} backend)\n\
              requests: {} accepted / {} rejected   makespan {}   throughput {:.1} tok/s\n\n",
             self.devices,
             self.policy,
             self.offered_rate,
+            self.backend,
             self.accepted(),
             self.rejected(),
             self.makespan,
@@ -220,6 +225,7 @@ mod tests {
     #[test]
     fn pool_report_counts_and_render() {
         let r = PoolReport {
+            backend: "event",
             policy: "least-loaded".to_string(),
             devices: 2,
             offered_rate: 8.0,
@@ -237,6 +243,7 @@ mod tests {
         assert!((r.throughput() - 30.0).abs() < 1e-9);
         let s = r.render();
         assert!(s.contains("least-loaded"));
+        assert!(s.contains("event backend"));
         assert!(s.contains("p95"));
         assert!(s.contains("dev1"));
         let lat = r.latency_summary();

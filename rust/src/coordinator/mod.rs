@@ -11,18 +11,81 @@
 //! every device queue is bounded, so overload is surfaced as backpressure
 //! instead of unbounded buffering.
 //!
-//! Three execution modes share that router/scheduler logic:
-//! * [`simulate`] — discrete-event simulation of a mixed GPU + flash
-//!   request trace (latency/throughput reports, utilization);
-//! * [`loadgen`] — closed-loop Poisson traffic against the device pool,
-//!   with per-request device time from a shared precomputed
-//!   [`crate::llm::latency_table::LatencyTable`] (the `serve-sim` CLI
-//!   subcommand), plus [`sweep`] for arrival-rate throughput–latency
-//!   curves (`serve-sim --sweep`);
+//! Execution modes sharing that router/scheduler logic:
+//!
+//! * [`event_sim`] — **the serving default**: the closed-loop Poisson
+//!   traffic model as a deterministic discrete-event [`crate::sim::Model`]
+//!   on [`crate::sim::Engine`]. Single-threaded, bit-reproducible
+//!   [`PoolReport`]s, and the prefill path prices the PCIe KV upload.
+//!   Backs `serve-sim` and the [`sweep`] rate sweeps.
+//! * [`loadgen`] — the legacy direct-replay loop over the same traffic
+//!   model (each request's service computed inline at arrival). Kept as
+//!   the `serve-sim --threaded` cross-check; its sweep fans out on scoped
+//!   threads.
+//! * [`mod@simulate`] — discrete-event simulation of a mixed GPU + flash
+//!   request trace (latency/throughput reports, utilization) for the
+//!   offload argument itself.
 //! * the functional path ([`serve`] for one engine, [`pool`] for N), where
 //!   the PJRT runtime actually generates tokens while the simulated device
 //!   timing runs alongside.
+//!
+//! Per-token decode latency always comes from a shared precomputed
+//! [`crate::llm::latency_table::LatencyTable`], built once per
+//! (model, system) and queried immutably.
+//!
+//! # Examples
+//!
+//! Build a latency table (a small span keeps the example fast; serving
+//! uses [`LatencyTable::build`][crate::llm::LatencyTable::build], which
+//! spans the model's trained context) and query it:
+//!
+//! ```
+//! use flashpim::circuit::TechParams;
+//! use flashpim::config::presets::table1_system;
+//! use flashpim::llm::{model_config::OptModel, LatencyTable};
+//!
+//! let sys = table1_system();
+//! let table = LatencyTable::build_spanning(
+//!     &sys,
+//!     &TechParams::default(),
+//!     OptModel::Opt6_7b.shape(),
+//!     256, // max tabulated context
+//!     64,  // bucket stride
+//! );
+//! assert!(table.tpot(128) > 0.0, "per-token latency must be positive");
+//! assert!(table.tpot(256) >= table.tpot(0), "longer context is never faster");
+//! ```
+//!
+//! Run a tiny event-driven serving simulation twice and observe that the
+//! reports are bit-identical for the same seed:
+//!
+//! ```
+//! use flashpim::circuit::TechParams;
+//! use flashpim::config::presets::table1_system;
+//! use flashpim::coordinator::{policy_from_name, run_traffic_events, LenRange, TrafficConfig};
+//! use flashpim::llm::{model_config::OptModel, LatencyTable};
+//!
+//! let sys = table1_system();
+//! let model = OptModel::Opt6_7b.shape();
+//! let table = LatencyTable::build_spanning(&sys, &TechParams::default(), model.clone(), 256, 64);
+//! let cfg = TrafficConfig {
+//!     devices: 2,
+//!     rate: 20.0,
+//!     requests: 10,
+//!     input_tokens: LenRange::new(16, 32),
+//!     output_tokens: LenRange::new(2, 4),
+//!     queue_capacity: 8,
+//!     followup: 0.0,
+//!     seed: 1,
+//! };
+//! let policy = || policy_from_name("least-loaded").unwrap();
+//! let a = run_traffic_events(&sys, &model, &table, policy(), &cfg);
+//! let b = run_traffic_events(&sys, &model, &table, policy(), &cfg);
+//! assert_eq!(a, b, "same seed, same bytes");
+//! assert_eq!(a.accepted() + a.rejected(), 10);
+//! ```
 
+pub mod event_sim;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
@@ -32,6 +95,7 @@ pub mod serve;
 pub mod simulate;
 pub mod sweep;
 
+pub use event_sim::{run_traffic_events, ServingEvent, ServingModel};
 pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
 pub use metrics::{PoolReport, ServingReport};
 pub use pool::{DevicePool, PoolJob, PoolServed, SimFlashEngine, SubmitError};
@@ -42,4 +106,4 @@ pub use router::{
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};
-pub use sweep::{render_sweep, sweep_rates, SweepPoint};
+pub use sweep::{render_sweep, sweep_rates, sweep_rates_threaded, SweepPoint};

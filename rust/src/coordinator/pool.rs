@@ -8,6 +8,13 @@
 //! *bounded* — a full queue refuses the job with [`SubmitError::QueueFull`]
 //! instead of buffering without limit, so overload surfaces as backpressure
 //! at the admission edge.
+//!
+//! This is the *functional* pool (threads run real engines and report
+//! wall-clock). Traffic *simulation* does not run here: it runs on the
+//! deterministic event-driven backend
+//! ([`super::event_sim`]), which reuses this module's admission semantics
+//! (bounded queues, [`Scheduler`] policies, KV affinity) on a simulated
+//! timeline.
 
 use super::router::{DeviceStatus, Scheduler};
 use super::serve::{Engine, Job};

@@ -4,10 +4,15 @@
 //! where its latency knee sits as offered load grows).
 //!
 //! One immutable [`LatencyTable`] is built by the caller and shared by
-//! every sweep point; the points themselves run concurrently on scoped
-//! threads (each run owns its RNG and router, so results are
-//! deterministic and independent of scheduling).
+//! every sweep point. The default [`sweep_rates`] loops the deterministic
+//! event-driven model ([`run_traffic_events`]) point by point on a single
+//! thread — the whole sweep is bit-reproducible, and ordering needs no
+//! joins or locks. [`sweep_rates_threaded`] keeps the legacy cross-check:
+//! the direct-replay backend fanned out on scoped threads (each point
+//! owns its RNG and router, so results are still deterministic and
+//! independent of thread scheduling — just not a single event timeline).
 
+use super::event_sim::run_traffic_events;
 use super::loadgen::{run_traffic_with_table, TrafficConfig};
 use super::metrics::PoolReport;
 use super::router::policy_from_name;
@@ -69,18 +74,10 @@ pub fn validate_rates(rates: &[f64]) -> Result<()> {
     Ok(())
 }
 
-/// Run `base` at every arrival rate in `rates` for every policy in
-/// `policies`, sharing one prebuilt latency table. Rates are sorted
-/// ascending and deduplicated, so each policy's block of the result is a
-/// monotone-rate throughput–latency curve.
-pub fn sweep_rates(
-    sys: &SystemConfig,
-    model: &ModelShape,
-    table: &LatencyTable,
-    base: &TrafficConfig,
-    rates: &[f64],
-    policies: &[&str],
-) -> Result<Vec<SweepPoint>> {
+/// Validate inputs and expand them into the ordered (policy, rate) pairs
+/// a sweep runs: rates sorted ascending and deduplicated within each
+/// policy's block, policies in caller order.
+fn sweep_pairs<'a>(rates: &[f64], policies: &[&'a str]) -> Result<Vec<(&'a str, f64)>> {
     validate_rates(rates)?;
     if policies.is_empty() {
         bail!("rate sweep needs at least one policy");
@@ -93,13 +90,59 @@ pub fn sweep_rates(
     let mut rates = rates.to_vec();
     rates.sort_by(f64::total_cmp);
     rates.dedup();
+    Ok(policies.iter().flat_map(|&p| rates.iter().map(move |&r| (p, r))).collect())
+}
+
+/// Run `base` at every arrival rate in `rates` for every policy in
+/// `policies` on the event-driven backend, sharing one prebuilt latency
+/// table. Points run sequentially on the calling thread — the sweep is a
+/// single deterministic computation with no joins or locks. (Each point
+/// seeds its own RNG, so fanning the same points out over threads would
+/// be bit-identical too; reach for [`sweep_rates_threaded`] when
+/// wall-clock matters more than a single-threaded timeline.) Rates are
+/// sorted ascending and deduplicated, so each policy's block of the
+/// result is a monotone-rate throughput–latency curve.
+pub fn sweep_rates(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    base: &TrafficConfig,
+    rates: &[f64],
+    policies: &[&str],
+) -> Result<Vec<SweepPoint>> {
+    let pairs = sweep_pairs(rates, policies)?;
+    Ok(pairs
+        .into_iter()
+        .map(|(p, r)| {
+            let mut cfg = base.clone();
+            cfg.rate = r;
+            let policy = policy_from_name(p).expect("policy validated above");
+            SweepPoint::of(&run_traffic_events(sys, model, table, policy, &cfg))
+        })
+        .collect())
+}
+
+/// Cross-check sweep: the direct-replay backend
+/// ([`run_traffic_with_table`]) fanned out on scoped threads, behind
+/// `serve-sim --sweep --threaded`. The two backends deliberately share
+/// their arrival-sampling and eviction code (lockstep by construction),
+/// so this cross-checks the *independent* parts — inline `Resource`
+/// timing versus the event timeline — not the shared sampling; it is
+/// also the faster sweep on multi-core machines.
+pub fn sweep_rates_threaded(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    base: &TrafficConfig,
+    rates: &[f64],
+    policies: &[&str],
+) -> Result<Vec<SweepPoint>> {
+    let pairs = sweep_pairs(rates, policies)?;
 
     // A fixed pool of `width` workers pulls (policy, rate) pairs from a
     // shared index: in-flight PoolReports (every per-request outcome,
     // until reduced to a SweepPoint) stay bounded by the core count, and
     // no core idles waiting on a slow high-rate point.
-    let pairs: Vec<(&str, f64)> =
-        policies.iter().flat_map(|&p| rates.iter().map(move |&r| (p, r))).collect();
     let width = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let next = AtomicUsize::new(0);
     let mut points: Vec<Option<SweepPoint>> = (0..pairs.len()).map(|_| None).collect();
@@ -116,9 +159,8 @@ pub fn sweep_rates(
                         let mut cfg = base.clone();
                         cfg.rate = r;
                         let policy = policy_from_name(p).expect("policy validated above");
-                        let point =
-                            SweepPoint::of(&run_traffic_with_table(sys, model, table, policy, &cfg));
-                        local.push((i, point));
+                        let report = run_traffic_with_table(sys, model, table, policy, &cfg);
+                        local.push((i, SweepPoint::of(&report)));
                     }
                     local
                 })
@@ -183,6 +225,20 @@ mod tests {
         }
     }
 
+    fn check_points(points: &[SweepPoint]) {
+        assert_eq!(points.len(), 6);
+        for block in points.chunks(3) {
+            assert!(block.windows(2).all(|w| w[0].rate < w[1].rate), "rates must ascend");
+            assert!(block.windows(2).all(|w| w[0].policy == w[1].policy));
+            for p in block {
+                assert_eq!(p.accepted + p.rejected, 40);
+                assert!(p.throughput > 0.0);
+            }
+        }
+        assert_eq!(points[0].policy, "round-robin");
+        assert_eq!(points[3].policy, "least-loaded");
+    }
+
     #[test]
     fn sweep_covers_policies_and_sorts_rates() {
         let sys = table1_system();
@@ -197,19 +253,37 @@ mod tests {
             &["round-robin", "least-loaded"],
         )
         .unwrap();
-        assert_eq!(points.len(), 6);
-        for block in points.chunks(3) {
-            assert!(block.windows(2).all(|w| w[0].rate < w[1].rate), "rates must ascend");
-            assert!(block.windows(2).all(|w| w[0].policy == w[1].policy));
-            for p in block {
-                assert_eq!(p.accepted + p.rejected, 40);
-                assert!(p.throughput > 0.0);
-            }
-        }
-        assert_eq!(points[0].policy, "round-robin");
-        assert_eq!(points[3].policy, "least-loaded");
+        check_points(&points);
         let rendered = render_sweep(&points);
         assert!(rendered.contains("least-loaded") && rendered.contains("TTFT p95"));
+        // The whole sweep is one deterministic computation.
+        let again = sweep_rates(
+            &sys,
+            &model,
+            &table,
+            &base_cfg(),
+            &[20.0, 5.0, 10.0],
+            &["round-robin", "least-loaded"],
+        )
+        .unwrap();
+        assert_eq!(points, again);
+    }
+
+    #[test]
+    fn threaded_cross_check_covers_the_same_grid() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let points = sweep_rates_threaded(
+            &sys,
+            &model,
+            &table,
+            &base_cfg(),
+            &[20.0, 5.0, 10.0],
+            &["round-robin", "least-loaded"],
+        )
+        .unwrap();
+        check_points(&points);
     }
 
     #[test]
@@ -223,5 +297,6 @@ mod tests {
         assert!(sweep_rates(&sys, &model, &table, &cfg, &[-1.0], &["rr"]).is_err());
         assert!(sweep_rates(&sys, &model, &table, &cfg, &[f64::NAN], &["rr"]).is_err());
         assert!(sweep_rates(&sys, &model, &table, &cfg, &[1.0], &["fifo"]).is_err());
+        assert!(sweep_rates_threaded(&sys, &model, &table, &cfg, &[1.0], &["fifo"]).is_err());
     }
 }

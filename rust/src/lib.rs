@@ -9,7 +9,8 @@
 //! * [`circuit`] — the RC/Horowitz circuit model behind the plane-size
 //!   design-space exploration (paper Eqs. 3–6, Fig. 6).
 //! * [`dse`] — the design-space sweep and plane selection (`256×2048×128`).
-//! * [`sim`] — a discrete-event simulation core used by the SSD model.
+//! * [`sim`] — the discrete-event simulation core: integer-picosecond
+//!   time, a deterministic event queue/engine, and resource timelines.
 //! * [`nand`] — the 3D NAND hierarchy (channel/way/die/plane, SLC/QLC).
 //! * [`bus`] — shared-bus and H-tree intra-die interconnects with RPUs
 //!   (Figs. 7–9).
@@ -25,16 +26,19 @@
 //! * [`coordinator`] — the serving subsystem: a *pool* of flash-PIM
 //!   devices behind a scheduler (round-robin / least-loaded policies, KV
 //!   affinity, bounded queues with backpressure), the request router and
-//!   offload logic, a closed-loop Poisson traffic simulator
-//!   (`serve-sim`), the functional generation loop, and serving metrics
-//!   (TTFT/TPOT/latency percentiles, per-device utilization).
+//!   offload logic, a deterministic event-driven closed-loop Poisson
+//!   traffic simulator (`serve-sim`, bit-identical reports per seed) with
+//!   a legacy direct-replay cross-check, arrival-rate sweeps, the
+//!   functional generation loop, and serving metrics (TTFT/TPOT/latency
+//!   percentiles, per-device utilization).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes the functional model.
 //! * [`exp`] — one driver per paper figure/table, shared by the CLI and the
 //!   benches.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `docs/ARCHITECTURE.md` for the module map, the data flow of a
+//! request through the serving stack, and the paper-section → source-file
+//! index.
 
 pub mod area;
 pub mod bus;

@@ -19,8 +19,9 @@
 //!    extrapolation beyond the last bucket (the window spans the trailing
 //!    quarter of the table, averaging over staircase periods).
 //!
-//! One `Arc<LatencyTable>` is shared by every pool worker and sweep
-//! thread; there is no per-thread cache to warm and no lock to take.
+//! One `Arc<LatencyTable>` is shared by every serving backend, sweep
+//! point, and pool worker; there is no per-thread cache to warm and no
+//! lock to take.
 
 use super::model_config::ModelShape;
 use super::schedule::TokenSchedule;

@@ -4,6 +4,46 @@
 //! with deterministic ordering, exclusive-resource timelines, and a small
 //! engine driving model callbacks. Time is kept in integer picoseconds so
 //! event ordering is exact and runs are bit-reproducible.
+//!
+//! Two styles of model build on this core:
+//!
+//! * **Timeline models** schedule work directly on [`Resource`] /
+//!   [`ResourceBank`] busy-until timelines (the pipeline latency models
+//!   in [`crate::pim`] and [`crate::bus`] work this way).
+//! * **Event models** implement [`Model`] and let [`Engine`] drive them:
+//!   every state change is an event on the deterministic [`EventQueue`]
+//!   (min-heap on time with FIFO tie-breaks). The serving simulator
+//!   [`crate::coordinator::event_sim`] is the flagship user.
+//!
+//! # Example
+//!
+//! A minimal self-rescheduling model, driven to completion:
+//!
+//! ```
+//! use flashpim::sim::{Engine, EventQueue, Model, SimTime};
+//!
+//! struct Ticker {
+//!     fired: u32,
+//! }
+//!
+//! impl Model for Ticker {
+//!     type Event = ();
+//!
+//!     fn handle(&mut self, _now: SimTime, _ev: (), queue: &mut EventQueue<()>) {
+//!         self.fired += 1;
+//!         if self.fired < 3 {
+//!             queue.schedule_in(SimTime::from_ns(10.0), ());
+//!         }
+//!     }
+//! }
+//!
+//! let mut engine = Engine::new(Ticker { fired: 0 });
+//! engine.seed(SimTime::ZERO, ());
+//! let end = engine.run(); // runs until the queue drains
+//! assert_eq!(engine.model.fired, 3);
+//! assert_eq!(end, SimTime::from_ns(20.0));
+//! assert_eq!(engine.events_processed(), 3);
+//! ```
 
 pub mod engine;
 pub mod event;

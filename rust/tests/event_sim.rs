@@ -1,0 +1,190 @@
+//! The event-driven serving backend end to end: bit-identical reports
+//! for a seed, pointwise agreement with the legacy direct-replay backend
+//! up to the PCIe prefill upload it adds, statistical parity on a
+//! 10k-request trace, and completion of a 100k-request trace on a single
+//! thread (the scale the event redesign exists to serve).
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::controller::PcieLink;
+use flashpim::coordinator::{
+    LenRange, policy_from_name, run_traffic_events, run_traffic_with_table, TrafficConfig,
+};
+use flashpim::kv::write_overhead::initial_kv_write_time;
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::LatencyTable;
+use flashpim::sim::SimTime;
+
+fn traffic(seed: u64) -> TrafficConfig {
+    TrafficConfig {
+        devices: 3,
+        rate: 20.0,
+        requests: 400,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 32,
+        followup: 0.5,
+        seed,
+    }
+}
+
+#[test]
+fn same_seed_reproduces_bit_identical_report() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = traffic(99);
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let a = run_traffic_events(&sys, &model, &table, ll(), &cfg);
+    let b = run_traffic_events(&sys, &model, &table, ll(), &cfg);
+    // Outcome-for-outcome equality — every timestamp, device pick, and
+    // flag — not just aggregate equality.
+    assert_eq!(a, b);
+    assert_eq!(a.backend, "event");
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 100;
+    let c = run_traffic_events(&sys, &model, &table, ll(), &other_seed);
+    assert_ne!(a, c, "different seeds must give different traces");
+}
+
+/// With fresh sessions only and round-robin routing, both backends
+/// consume identical RNG streams and route identically, so their traces
+/// agree request for request — the event backend's timestamps exceed the
+/// direct backend's by exactly the PCIe KV upload it prices (plus any
+/// extra queueing that upload induces).
+#[test]
+fn event_backend_matches_direct_backend_plus_pcie_upload() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = TrafficConfig {
+        devices: 2,
+        rate: 5.0,
+        requests: 100,
+        input_tokens: LenRange::new(64, 128),
+        output_tokens: LenRange::new(8, 16),
+        queue_capacity: 64,
+        followup: 0.0, // fresh sessions only: identical routing either way
+        seed: 11,
+    };
+    let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    assert_eq!(ev.rejected(), 0, "lightly loaded pool must accept everything");
+    assert_eq!(di.rejected(), 0);
+    assert_eq!(ev.outcomes.len(), di.outcomes.len());
+
+    let link = PcieLink::new(&sys.ctrl);
+    let mut exact = 0usize;
+    for (e, d) in ev.outcomes.iter().zip(&di.outcomes) {
+        // The sampled trace and the routing are identical.
+        assert_eq!((e.id, e.session, e.device), (d.id, d.session, d.device));
+        assert_eq!(
+            (e.input_tokens, e.output_tokens, e.context),
+            (d.input_tokens, d.output_tokens, d.context)
+        );
+        assert_eq!(e.arrival, d.arrival);
+        // The event backend adds the prefill PCIe upload to the service
+        // path; queueing can only push it later still, never earlier.
+        let upload = link.transfer_time(model.kv_bytes(e.input_tokens, 1.0));
+        let (ev_ttft, di_ttft) = (e.ttft().unwrap(), d.ttft().unwrap());
+        assert!(ev_ttft >= di_ttft + upload, "request {}: {ev_ttft:?} vs {di_ttft:?}", e.id);
+        assert!(e.latency() >= d.latency() + upload, "request {}", e.id);
+        if ev_ttft == di_ttft + upload {
+            exact += 1;
+        }
+    }
+    // At ~8% utilization most requests queue in neither backend, so the
+    // difference is *exactly* the upload for the bulk of the trace.
+    assert!(exact * 2 > ev.outcomes.len(), "only {exact}/{} exact matches", ev.outcomes.len());
+}
+
+/// Acceptance: on a 10k-request trace the event backend's end-to-end
+/// latency percentiles sit within 5% of the legacy backend's — the PCIe
+/// upload it adds is a small, correctly-bounded perturbation.
+#[test]
+fn latency_percentiles_within_5pct_of_direct_backend_on_10k_trace() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 12.0,
+        requests: 10_000,
+        input_tokens: LenRange::new(32, 64),
+        output_tokens: LenRange::new(32, 64),
+        queue_capacity: 64,
+        followup: 0.3,
+        seed: 123,
+    };
+    let ev = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
+    let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
+    assert_eq!(ev.outcomes.len(), 10_000);
+    assert_eq!(di.outcomes.len(), 10_000);
+    let (le, ld) = (ev.latency_summary(), di.latency_summary());
+    for (name, a, b) in [("p50", le.p50, ld.p50), ("p95", le.p95, ld.p95)] {
+        let rel = (a - b).abs() / b;
+        assert!(rel < 0.05, "latency {name}: event {a} vs direct {b} ({:.2}% apart)", rel * 100.0);
+    }
+}
+
+#[test]
+fn event_backend_completes_100k_requests_single_threaded() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 400.0,
+        requests: 100_000,
+        input_tokens: LenRange::new(8, 16),
+        output_tokens: LenRange::new(1, 4),
+        queue_capacity: 64,
+        followup: 0.4,
+        seed: 7,
+    };
+    let rep =
+        run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg);
+    assert_eq!(rep.outcomes.len(), 100_000);
+    assert_eq!(rep.accepted() + rep.rejected(), 100_000);
+    assert!(rep.accepted() > 50_000, "only {} accepted", rep.accepted());
+    assert!(rep.makespan.secs() > 0.0);
+    let lat = rep.latency_summary();
+    assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+    for u in &rep.device_utilization {
+        assert!((0.0..=1.0).contains(u), "utilization {u}");
+    }
+}
+
+/// TTFT on the event backend includes queueing, the PCIe KV upload, the
+/// SLC prompt write, and the first decode step — for an unqueued fresh
+/// request that sum is exact and reconstructable from the components.
+#[test]
+fn ttft_decomposes_into_upload_write_and_first_step() {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let cfg = TrafficConfig {
+        devices: 1,
+        rate: 1.0,
+        requests: 1,
+        input_tokens: LenRange::fixed(256),
+        output_tokens: LenRange::fixed(8),
+        queue_capacity: 4,
+        followup: 0.0,
+        seed: 3,
+    };
+    let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    assert_eq!(rep.accepted(), 1);
+    let o = &rep.outcomes[0];
+    let link = PcieLink::new(&sys.ctrl);
+    let expect = link.transfer_time(model.kv_bytes(256, 1.0))
+        + SimTime::from_secs(initial_kv_write_time(&sys, &model, 256))
+        + table.step_time(256);
+    assert_eq!(o.ttft().unwrap(), expect);
+    // The remaining 7 decode steps complete the turn.
+    let mut rest = SimTime::ZERO;
+    for step in 1..8 {
+        rest += table.step_time(256 + step);
+    }
+    assert_eq!(o.latency(), expect + rest);
+}
