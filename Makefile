@@ -1,7 +1,7 @@
 # Local targets mirroring the CI jobs (.github/workflows/ci.yml) exactly,
 # so a green `make ci` means a green pipeline.
 
-.PHONY: build test fmt clippy lint bench-check doc doc-test ci
+.PHONY: build test fmt clippy lint bench-check doc doc-test check-docs-links ci
 
 build:
 	cargo build --release --workspace
@@ -26,4 +26,7 @@ doc:
 doc-test:
 	cargo test --doc --workspace
 
-ci: build test lint bench-check doc doc-test
+check-docs-links:
+	python3 scripts/check_docs_links.py
+
+ci: build test lint bench-check doc doc-test check-docs-links

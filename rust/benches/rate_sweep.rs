@@ -37,6 +37,7 @@ fn main() {
         queue_capacity: 64,
         followup: 0.3,
         seed: 42,
+        workload: None,
     };
     quick("event run: 2k requests, 4 devices", || {
         run_traffic_events(

@@ -1,0 +1,44 @@
+//! Perf bench for the multi-class workload path: per-arrival class
+//! sampling on top of the shared RNG stream (a preset mix vs the legacy
+//! single-class stream), the SLO-aware scheduler against least-loaded at
+//! the same offered load, and the per-class report reduction.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{policy_from_name, run_traffic_events, TrafficConfig, WorkloadMix};
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::LatencyTable;
+use flashpim::util::benchkit::{quick, section};
+
+fn main() {
+    section("multi-class workload serving");
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+
+    let mut cfg = TrafficConfig::default_for(4);
+    cfg.rate = 12.0;
+    cfg.requests = 2000;
+
+    quick("single-class event run: 2k requests, 4 devices", || {
+        run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg)
+    });
+
+    let mut mixed = cfg.clone();
+    mixed.workload = Some(WorkloadMix::preset("agentic-burst").expect("built-in preset"));
+    quick("agentic-burst event run: 2k requests, 4 devices", || {
+        run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &mixed)
+    });
+    quick("agentic-burst under slo-aware scheduling", || {
+        run_traffic_events(&sys, &model, &table, policy_from_name("slo-aware").unwrap(), &mixed)
+    });
+
+    let report = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("slo-aware").unwrap(),
+        &mixed,
+    );
+    quick("per-class report reduction over 2k outcomes", || report.class_reports());
+}

@@ -4,8 +4,9 @@ use super::args::Args;
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::{
-    LenRange, policy_from_name, render_sweep, run_traffic_events, run_traffic_with_table,
-    simulate, sweep_rates, sweep_rates_threaded, TrafficConfig, Workload,
+    LenRange, policy_from_name, render_slo_frontier, render_sweep, run_traffic_events,
+    run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded, TrafficConfig, Workload,
+    WorkloadMix,
 };
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
@@ -48,14 +49,21 @@ tools:
                        reports per seed, prefill prices the PCIe KV
                        upload); --threaded selects the legacy direct
                        cross-check backend. Also --policy
-                       round-robin|least-loaded, --queue-cap,
+                       round-robin|least-loaded|slo-aware, --queue-cap,
                        --input-min/max, --output-min/max, --followup,
-                       --model, --seed. With --sweep, runs every arrival
-                       rate (--rates 2,4,8 or --rate-min/--rate-max/
-                       --rate-steps) under BOTH policies against one
-                       shared latency table and prints the
-                       throughput-latency curve (--policy and --rate
-                       are ignored in sweep mode)
+                       --model, --seed. --workload
+                       chat|summarize-long|agentic-burst|batch-offline|
+                       FILE.toml replaces the single token-range stream
+                       with a multi-class mix (per-class TTFT/TPOT
+                       percentiles and SLO attainment in the report; see
+                       docs/WORKLOADS.md). With --sweep, runs every
+                       arrival rate (--rates 2,4,8 or --rate-min/
+                       --rate-max/--rate-steps) under ALL policies
+                       against one shared latency table and prints the
+                       throughput-latency curve — plus, with --workload,
+                       the max rate sustaining >=99% SLO attainment per
+                       class (--policy and --rate are ignored in sweep
+                       mode)
   generate --prompt S [--max-new N]
                        functional generation via the PJRT runtime
                        (requires `make artifacts`)
@@ -189,33 +197,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
         .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
-    // Defaults live in one place: TrafficConfig::default_for.
+    // Defaults live in one place: TrafficConfig::default_for (whose
+    // traffic shape is the `chat` workload-class preset).
     let mut cfg = TrafficConfig::default_for(args.usize_flag("devices", 4)?);
     cfg.rate = args.f64_flag("rate", cfg.rate)?;
     cfg.requests = args.usize_flag("requests", cfg.requests)?;
-    let (in_lo, in_hi) = (
-        args.usize_flag("input-min", cfg.input_tokens.lo)?,
-        args.usize_flag("input-max", cfg.input_tokens.hi)?,
-    );
-    let (out_lo, out_hi) = (
-        args.usize_flag("output-min", cfg.output_tokens.lo)?,
-        args.usize_flag("output-max", cfg.output_tokens.hi)?,
-    );
     if cfg.devices == 0 || cfg.rate <= 0.0 {
         bail!("--devices and --rate must be positive");
     }
-    if in_lo < 1 || in_hi < in_lo || out_lo < 1 || out_hi < out_lo {
-        bail!(
-            "token ranges need 1 <= min <= max (input {in_lo}..{in_hi}, output {out_lo}..{out_hi})"
+    if let Some(spec) = args.flag("workload") {
+        // A mix defines per-class shapes; the scalar shape flags would
+        // silently fight it, so they are rejected outright.
+        for flag in ["input-min", "input-max", "output-min", "output-max", "followup"] {
+            if args.flag(flag).is_some() {
+                bail!("--{flag} conflicts with --workload (the mix defines per-class shapes)");
+            }
+        }
+        cfg.workload = Some(WorkloadMix::resolve(spec)?);
+    } else {
+        let (in_lo, in_hi) = (
+            args.usize_flag("input-min", cfg.input_tokens.lo)?,
+            args.usize_flag("input-max", cfg.input_tokens.hi)?,
         );
+        let (out_lo, out_hi) = (
+            args.usize_flag("output-min", cfg.output_tokens.lo)?,
+            args.usize_flag("output-max", cfg.output_tokens.hi)?,
+        );
+        if in_lo < 1 || in_hi < in_lo || out_lo < 1 || out_hi < out_lo {
+            bail!(
+                "token ranges need 1 <= min <= max \
+                 (input {in_lo}..{in_hi}, output {out_lo}..{out_hi})"
+            );
+        }
+        cfg.input_tokens = LenRange::new(in_lo, in_hi);
+        cfg.output_tokens = LenRange::new(out_lo, out_hi);
+        cfg.followup = args.f64_flag("followup", cfg.followup)?;
+        if !(0.0..=1.0).contains(&cfg.followup) {
+            bail!("--followup is a probability; need 0 <= p <= 1, got {}", cfg.followup);
+        }
     }
-    cfg.input_tokens = LenRange::new(in_lo, in_hi);
-    cfg.output_tokens = LenRange::new(out_lo, out_hi);
     cfg.queue_capacity = args.usize_flag("queue-cap", cfg.queue_capacity)?;
     if cfg.queue_capacity == 0 {
         bail!("--queue-cap must be at least 1");
     }
-    cfg.followup = args.f64_flag("followup", cfg.followup)?;
     cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
 
     // Validate sweep/policy flags before paying for the table build.
@@ -223,22 +247,25 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let sweep = args.bool_flag("sweep");
     let rates = if sweep { Some(sweep_rate_list(args)?) } else { None };
     let policy = if sweep {
-        None // sweep mode runs both policies; --policy is ignored
+        None // sweep mode runs every policy; --policy is ignored
     } else {
         let name = args.flag_or("policy", "least-loaded");
-        Some(policy_from_name(&name).context("unknown policy; use round-robin|least-loaded")?)
+        Some(
+            policy_from_name(&name)
+                .context("unknown policy; use round-robin|least-loaded|slo-aware")?,
+        )
     };
 
     // One offline table build serves every run below (single run or the
-    // whole rate sweep across both policies).
+    // whole rate sweep across all policies).
     let sys = table1_system();
     let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
     if let Some(rates) = rates {
-        let both = ["round-robin", "least-loaded"];
+        let all = ["round-robin", "least-loaded", "slo-aware"];
         let points = if threaded {
-            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, &both)?
+            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, &all)?
         } else {
-            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, &both)?
+            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, &all)?
         };
         println!(
             "rate sweep ({} backend): {} device(s), {} requests/point, {} ({} buckets, stride {})",
@@ -249,7 +276,14 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             table.max_context() / table.stride() + 1,
             table.stride(),
         );
+        if let Some(mix) = &cfg.workload {
+            println!("workload mix: {}", mix.name());
+        }
         print!("{}", render_sweep(&points));
+        if cfg.workload.is_some() {
+            println!();
+            print!("{}", render_slo_frontier(&points, 0.99));
+        }
         return Ok(());
     }
     let policy = policy.expect("non-sweep path parsed a policy above");
@@ -434,6 +468,39 @@ mod tests {
         .is_err());
         assert!(run(vec!["serve-sim".into(), "--devices".into(), "0".into()]).is_err());
         assert!(run(vec!["serve-sim".into(), "--queue-cap".into(), "0".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_sim_workload_preset_runs() {
+        for policy in ["round-robin", "least-loaded", "slo-aware"] {
+            run(vec![
+                "serve-sim".into(),
+                "--workload".into(),
+                "chat".into(),
+                "--policy".into(),
+                policy.into(),
+                "--devices".into(),
+                "2".into(),
+                "--rate".into(),
+                "40".into(),
+                "--requests".into(),
+                "12".into(),
+            ])
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn serve_sim_workload_rejects_conflicts_and_unknowns() {
+        assert!(run(vec![
+            "serve-sim".into(),
+            "--workload".into(),
+            "chat".into(),
+            "--input-min".into(),
+            "8".into(),
+        ])
+        .is_err());
+        assert!(run(vec!["serve-sim".into(), "--workload".into(), "bogus-mix".into()]).is_err());
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Configuration system: a TOML-lite parser, typed configuration schema,
 //! and presets mirroring the paper's Table I and the Size A / Size B plane
-//! configurations.
+//! configurations — plus the serving workload-mix schema
+//! ([`WorkloadSpec`]) and its built-in scenario presets
+//! ([`workload_preset`]).
 
 pub mod presets;
 pub mod schema;
 pub mod toml_lite;
 
-pub use presets::{size_a_plane, size_b_plane, table1_system};
+pub use presets::{size_a_plane, size_b_plane, table1_system, workload_preset, WORKLOAD_PRESETS};
 pub use schema::{
     BusTopology, CellKind, ControllerConfig, FlashOrgConfig, PlaneConfig, RpuConfig, SystemConfig,
+    WorkloadClassSpec, WorkloadSpec,
 };

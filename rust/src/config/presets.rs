@@ -1,5 +1,6 @@
-//! Named presets: the paper's Table I system and the Size A / Size B plane
-//! configurations from §III-B/C.
+//! Named presets: the paper's Table I system, the Size A / Size B plane
+//! configurations from §III-B/C, and the built-in serving workload
+//! classes/mixes behind `serve-sim --workload` (see `docs/WORKLOADS.md`).
 
 use super::schema::*;
 
@@ -60,6 +61,104 @@ pub fn table1_size_b() -> SystemConfig {
     SystemConfig { plane: size_b_plane(), name: "table1-size-b".into(), ..table1_system() }
 }
 
+/// Interactive chat turns: short prompts, short outputs, frequent
+/// follow-ups, tight TTFT. Also the single definition behind the default
+/// single-class traffic of `TrafficConfig::default_for` — the legacy
+/// path and the workload path share these constants.
+pub fn chat_class() -> WorkloadClassSpec {
+    WorkloadClassSpec {
+        name: "chat".to_string(),
+        share: 1.0,
+        input: (128, 256),
+        output: (32, 64),
+        followup: 0.3,
+        ttft_slo: 0.150,
+        tpot_slo: 0.004,
+    }
+}
+
+/// Long-context summarization: 1K+-token prompts (the paper's §I
+/// GPU-side workload, here offloaded whole), short outputs, a loose TTFT
+/// budget that absorbs the large initial KV write.
+pub fn summarize_long_class() -> WorkloadClassSpec {
+    WorkloadClassSpec {
+        name: "summarize-long".to_string(),
+        share: 1.0,
+        input: (1024, 1792),
+        output: (64, 128),
+        followup: 0.1,
+        ttft_slo: 2.0,
+        tpot_slo: 0.006,
+    }
+}
+
+/// Agentic tool-use chains: tiny prompts, short outputs, and a high
+/// follow-up probability — one session issues a burst of dependent turns,
+/// each wanting a very fast first token.
+pub fn agentic_class() -> WorkloadClassSpec {
+    WorkloadClassSpec {
+        name: "agentic".to_string(),
+        share: 1.0,
+        input: (32, 96),
+        output: (16, 48),
+        followup: 0.85,
+        ttft_slo: 0.100,
+        tpot_slo: 0.004,
+    }
+}
+
+/// Offline batch generation: long prompts, long outputs, no interactive
+/// deadline to speak of — the class exists to soak spare capacity without
+/// starving the interactive classes.
+pub fn batch_class() -> WorkloadClassSpec {
+    WorkloadClassSpec {
+        name: "batch".to_string(),
+        share: 1.0,
+        input: (512, 1024),
+        output: (256, 512),
+        followup: 0.0,
+        ttft_slo: 30.0,
+        tpot_slo: 0.020,
+    }
+}
+
+/// Built-in mix names accepted by `serve-sim --workload`, ascending.
+pub const WORKLOAD_PRESETS: &[&str] =
+    &["agentic-burst", "batch-offline", "chat", "summarize-long"];
+
+/// Built-in workload mixes. Class lists are kept in ascending name order
+/// so a mix round-trips exactly through its TOML rendering
+/// ([`WorkloadSpec::to_toml`] / [`WorkloadSpec::from_doc`]).
+pub fn workload_preset(name: &str) -> Option<WorkloadSpec> {
+    let with_share = |mut c: WorkloadClassSpec, share: f64| {
+        c.share = share;
+        c
+    };
+    let spec = |classes: Vec<WorkloadClassSpec>| WorkloadSpec { name: name.to_string(), classes };
+    match name {
+        // Pure interactive chat — the single-class baseline scenario.
+        "chat" => Some(spec(vec![chat_class()])),
+        // Adversarial blend: interactive turns arriving behind 1K+-token
+        // prefills. The scenario the SLO-aware scheduler exists for.
+        "summarize-long" => Some(spec(vec![
+            with_share(chat_class(), 0.6),
+            with_share(summarize_long_class(), 0.4),
+        ])),
+        // Bursty dependent chains over a chat background; exercises KV
+        // affinity (follow-ups pin to the device holding the session KV).
+        "agentic-burst" => Some(spec(vec![
+            with_share(agentic_class(), 0.55),
+            with_share(chat_class(), 0.45),
+        ])),
+        // Throughput filler under an interactive foreground.
+        "batch-offline" => Some(spec(vec![
+            with_share(batch_class(), 0.3),
+            with_share(chat_class(), 0.7),
+        ])),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +169,30 @@ mod tests {
         table1_shared_bus().validate().unwrap();
         table1_size_b().validate().unwrap();
         conventional_plane().validate().unwrap();
+    }
+
+    #[test]
+    fn workload_presets_validate_and_round_trip() {
+        for name in WORKLOAD_PRESETS {
+            let spec = workload_preset(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            spec.validate().unwrap_or_else(|e| panic!("preset {name}: {e}"));
+            assert_eq!(spec.name, *name);
+            // Class names ascend, so the TOML rendering round-trips exactly.
+            assert!(spec.classes.windows(2).all(|w| w[0].name < w[1].name), "{name} unsorted");
+            let doc = crate::config::toml_lite::parse(&spec.to_toml()).unwrap();
+            assert_eq!(WorkloadSpec::from_doc(&doc).unwrap(), spec);
+        }
+        assert!(workload_preset("bogus").is_none());
+    }
+
+    #[test]
+    fn default_traffic_and_chat_class_share_one_definition() {
+        // The `chat` class is THE definition of the default traffic shape;
+        // `TrafficConfig::default_for` delegates to it (asserted on the
+        // coordinator side), so these constants only live here.
+        let c = chat_class();
+        assert_eq!((c.input, c.output), ((128, 256), (32, 64)));
+        assert_eq!(c.followup, 0.3);
     }
 
     #[test]

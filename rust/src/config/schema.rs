@@ -1,8 +1,9 @@
 //! Typed system configuration — the paper's Table I plus the plane-size
-//! parameters explored in Section III.
+//! parameters explored in Section III — and the serving-workload schema
+//! ([`WorkloadSpec`]) behind `serve-sim --workload`.
 
-use super::toml_lite::Doc;
-use anyhow::{bail, Result};
+use super::toml_lite::{Doc, Value};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Cell technology of a die region.
@@ -283,6 +284,182 @@ impl SystemConfig {
     }
 }
 
+/// One request class of a serving workload mix: its weight in the arrival
+/// stream, prompt/output length ranges, follow-up probability, and
+/// per-class SLO targets. This is the plain-numbers *schema* type the
+/// TOML files and presets speak; `coordinator::workload` converts it into
+/// the runtime `WorkloadClass`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadClassSpec {
+    pub name: String,
+    /// Relative arrival-rate share; normalized across the mix's classes.
+    pub share: f64,
+    /// Prompt-length range `[lo, hi]`, inclusive, in tokens.
+    pub input: (usize, usize),
+    /// Output-length range `[lo, hi]`, inclusive, in tokens.
+    pub output: (usize, usize),
+    /// Probability that an arrival of this class is a follow-up turn of
+    /// one of the class's own finished sessions.
+    pub followup: f64,
+    /// Time-to-first-token SLO target, seconds (`f64::INFINITY` = none).
+    pub ttft_slo: f64,
+    /// Time-per-output-token SLO target, seconds (`f64::INFINITY` = none).
+    pub tpot_slo: f64,
+}
+
+/// Workload names are embedded verbatim in TOML section headers and
+/// quoted strings by [`WorkloadSpec::to_toml`]; restricting them to
+/// `[A-Za-z0-9_-]` keeps the documented parse/render round-trip exact
+/// (no `#`, `"`, `]`, or newline escaping cases to get wrong).
+fn valid_workload_name(name: &str) -> bool {
+    !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+impl WorkloadClassSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !valid_workload_name(&self.name) {
+            bail!(
+                "workload class name {:?} must be non-empty and use only [A-Za-z0-9_-]",
+                self.name
+            );
+        }
+        if !(self.share.is_finite() && self.share > 0.0) {
+            bail!("class {:?}: share must be positive and finite, got {}", self.name, self.share);
+        }
+        for (which, (lo, hi)) in [("input", self.input), ("output", self.output)] {
+            if lo < 1 || hi < lo {
+                bail!("class {:?}: {which} range needs 1 <= lo <= hi, got [{lo}, {hi}]", self.name);
+            }
+        }
+        if !(0.0..=1.0).contains(&self.followup) {
+            bail!("class {:?}: followup must be in [0, 1], got {}", self.name, self.followup);
+        }
+        for (which, slo) in [("ttft_slo", self.ttft_slo), ("tpot_slo", self.tpot_slo)] {
+            // Infinity is the explicit "no target" value, so only NaN and
+            // non-positive targets are rejected.
+            if slo.is_nan() || slo <= 0.0 {
+                bail!("class {:?}: {which} must be positive, got {slo}", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A named, weighted set of [`WorkloadClassSpec`]s — the TOML face of a
+/// serving scenario (see `docs/WORKLOADS.md`). Files look like:
+///
+/// ```toml
+/// name = "support-desk"
+///
+/// [class.chat]
+/// share = 0.7
+/// input = [128, 256]
+/// output = [32, 64]
+/// followup = 0.3
+/// ttft_slo = 0.15   # seconds
+/// tpot_slo = 0.004  # seconds per output token
+///
+/// [class.reports]
+/// share = 0.3
+/// input = [1024, 1792]
+/// output = [64, 128]
+/// ```
+///
+/// Classes are indexed in section-name order (alphabetical — [`Doc`]
+/// stores sections in a `BTreeMap`), which pins the class ⇄ RNG-stream
+/// association for a given file: the same file always samples the same
+/// trace from the same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub classes: Vec<WorkloadClassSpec>,
+}
+
+impl WorkloadSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !valid_workload_name(&self.name) {
+            bail!("workload name {:?} must be non-empty and use only [A-Za-z0-9_-]", self.name);
+        }
+        if self.classes.is_empty() {
+            bail!("workload {:?} needs at least one [class.<name>] section", self.name);
+        }
+        for c in &self.classes {
+            c.validate()?;
+        }
+        let mut names: Vec<&str> = self.classes.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            bail!("duplicate workload class names in {:?}", self.name);
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-lite file.
+    pub fn from_file(path: &Path) -> Result<WorkloadSpec> {
+        let doc = super::toml_lite::parse_file(path)?;
+        Self::from_doc(&doc).with_context(|| format!("workload file {}", path.display()))
+    }
+
+    /// Build from a parsed document: a top-level `name` plus one
+    /// `[class.<name>]` section per class.
+    pub fn from_doc(doc: &Doc) -> Result<WorkloadSpec> {
+        let name = doc.str_or("", "name", "custom")?;
+        let mut classes = Vec::new();
+        for section in doc.sections.keys() {
+            let Some(class_name) = section.strip_prefix("class.") else {
+                continue;
+            };
+            let range = |key: &str| -> Result<(usize, usize)> {
+                match doc.get(section, key) {
+                    Some(Value::Array(xs)) if xs.len() == 2 => {
+                        Ok((xs[0].as_usize()?, xs[1].as_usize()?))
+                    }
+                    Some(other) => {
+                        bail!("[{section}] {key} must be a two-element array, got {other:?}")
+                    }
+                    None => bail!("[{section}] is missing `{key} = [lo, hi]`"),
+                }
+            };
+            classes.push(WorkloadClassSpec {
+                name: class_name.trim().to_string(),
+                share: doc.float_or(section, "share", 1.0)?,
+                input: range("input")?,
+                output: range("output")?,
+                followup: doc.float_or(section, "followup", 0.0)?,
+                ttft_slo: doc.float_or(section, "ttft_slo", f64::INFINITY)?,
+                tpot_slo: doc.float_or(section, "tpot_slo", f64::INFINITY)?,
+            });
+        }
+        let spec = WorkloadSpec { name, classes };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Render back to TOML-lite. `from_doc(parse(to_toml()))` reproduces
+    /// the spec exactly when class names are already in ascending order
+    /// (parsing normalizes section order); `f64` `Display` round-trips
+    /// bit-exactly, including `inf` for "no target".
+    pub fn to_toml(&self) -> String {
+        let mut out = format!("name = \"{}\"\n", self.name);
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\n[class.{}]\nshare = {}\ninput = [{}, {}]\noutput = [{}, {}]\n\
+                 followup = {}\nttft_slo = {}\ntpot_slo = {}\n",
+                c.name,
+                c.share,
+                c.input.0,
+                c.input.1,
+                c.output.0,
+                c.output.1,
+                c.followup,
+                c.ttft_slo,
+                c.tpot_slo,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +501,78 @@ mod tests {
         assert_eq!(cfg.plane.n_col, 1024);
         assert_eq!(cfg.bus, BusTopology::Shared);
         assert_eq!(cfg.org.channels, 8); // inherited from Table I
+    }
+
+    #[test]
+    fn workload_spec_parses_and_round_trips() {
+        let text = "\
+name = \"demo\"
+
+[class.chat]
+share = 0.7
+input = [128, 256]
+output = [32, 64]
+followup = 0.3
+ttft_slo = 0.15
+tpot_slo = 0.004
+
+[class.reports]
+share = 0.3
+input = [1024, 1792]
+output = [64, 128]
+";
+        let doc = crate::config::toml_lite::parse(text).unwrap();
+        let spec = WorkloadSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.classes.len(), 2);
+        assert_eq!(spec.classes[0].name, "chat");
+        assert_eq!(spec.classes[0].input, (128, 256));
+        assert_eq!(spec.classes[0].ttft_slo, 0.15);
+        // Omitted keys fall back: share 1.0 default not used here, but
+        // followup and the SLO targets were omitted for `reports`.
+        assert_eq!(spec.classes[1].followup, 0.0);
+        assert_eq!(spec.classes[1].ttft_slo, f64::INFINITY);
+        // Exact round-trip through to_toml.
+        let reparsed =
+            WorkloadSpec::from_doc(&crate::config::toml_lite::parse(&spec.to_toml()).unwrap())
+                .unwrap();
+        assert_eq!(spec, reparsed);
+    }
+
+    #[test]
+    fn workload_spec_rejects_bad_input() {
+        let parse =
+            |s: &str| WorkloadSpec::from_doc(&crate::config::toml_lite::parse(s).unwrap());
+        // No classes at all.
+        assert!(parse("name = \"empty\"").is_err());
+        // Malformed range.
+        assert!(parse("[class.a]\ninput = [8]\noutput = [1, 2]").is_err());
+        assert!(parse("[class.a]\ninput = [9, 8]\noutput = [1, 2]").is_err());
+        // Bad share / followup / SLO.
+        assert!(parse("[class.a]\ninput = [1, 2]\noutput = [1, 2]\nshare = 0").is_err());
+        assert!(parse("[class.a]\ninput = [1, 2]\noutput = [1, 2]\nfollowup = 1.5").is_err());
+        assert!(parse("[class.a]\ninput = [1, 2]\noutput = [1, 2]\nttft_slo = -1").is_err());
+        // Names land verbatim in section headers / quoted strings, so the
+        // TOML-hostile characters are rejected up front.
+        for bad in ["a b", "a\"b", "a]b", ""] {
+            let spec = WorkloadSpec {
+                name: "ok".into(),
+                classes: vec![WorkloadClassSpec { name: bad.to_string(), ..presets::chat_class() }],
+            };
+            assert!(spec.validate().is_err(), "class name {bad:?} must be rejected");
+        }
+        // `#` would truncate the header at the comment stripper.
+        let hash = WorkloadSpec {
+            name: "a#b".into(),
+            classes: vec![presets::chat_class()],
+        };
+        assert!(hash.validate().is_err());
+        // Duplicate names on a hand-built spec.
+        let dup = WorkloadSpec {
+            name: "dup".into(),
+            classes: vec![presets::chat_class(), presets::chat_class()],
+        };
+        assert!(dup.validate().is_err());
     }
 
     #[test]

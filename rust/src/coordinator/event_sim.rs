@@ -33,17 +33,24 @@
 //! ([`run_traffic_with_table`][super::loadgen::run_traffic_with_table])
 //! is kept as a cross-check backend (`serve-sim --threaded` selects it,
 //! and its rate sweep still fans out on scoped threads). Both backends
-//! draw from the RNG in the same structural order (gap, follow-up
-//! chance, session pick, lengths), so with follow-ups disabled their
-//! traces agree *pointwise* up to the PCIe upload term the event model
-//! adds (asserted in `tests/event_sim.rs`); with follow-ups enabled the
-//! two idle-session sets evolve on slightly different timelines, so
-//! agreement is statistical (percentiles within a few percent), not
-//! pointwise.
+//! draw from the RNG in the same structural order (gap, class pick,
+//! follow-up chance, session pick, lengths — one shared
+//! `workload::ArrivalSampler`), so with follow-ups disabled their traces agree
+//! *pointwise* up to the PCIe upload term the event model adds (asserted
+//! in `tests/event_sim.rs`); with follow-ups enabled the two idle-session
+//! sets evolve on slightly different timelines, so agreement is
+//! statistical (percentiles within a few percent), not pointwise.
+//!
+//! Multi-class workloads ([`super::workload::WorkloadMix`] via
+//! [`TrafficConfig::workload`]) ride the same machinery: the sampler
+//! draws each arrival's class, class identity lands in every
+//! [`SimRequest`], and the report gains per-class percentiles and SLO
+//! attainment.
 
 use super::loadgen::{SimRequest, TrafficConfig};
 use super::metrics::PoolReport;
-use super::router::{DeviceRouter, DeviceStatus, Scheduler};
+use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
+use super::workload::ArrivalSampler;
 use crate::config::SystemConfig;
 use crate::controller::PcieLink;
 use crate::kv::write_overhead::initial_kv_write_time;
@@ -73,6 +80,8 @@ pub enum ServingEvent {
 struct Pending {
     id: u64,
     session: u64,
+    /// Workload-class index (0 for single-class runs).
+    class: usize,
     arrival: SimTime,
     l_in: usize,
     l_out: usize,
@@ -100,6 +109,12 @@ struct Device {
     busy: SimTime,
     jobs: usize,
     pcie: PcieLink,
+    /// When the device drains everything admitted so far. Every admitted
+    /// job's full service is priced from stateless models at admission,
+    /// and the queue is FIFO and work-conserving, so this *prediction*
+    /// tracks the event timeline exactly (debug-asserted at retirement) —
+    /// it is what schedulers see as [`DeviceStatus::est_wait`].
+    free_at: SimTime,
 }
 
 impl Device {
@@ -121,15 +136,15 @@ pub struct ServingModel<'a> {
     table: &'a LatencyTable,
     router: DeviceRouter,
     rng: Rng,
+    /// Shared arrival-sampling path (class pick, follow-up decision,
+    /// session choice, lengths) — also owns the per-class idle lists.
+    sampler: ArrivalSampler,
     devices: Vec<Device>,
     /// Arrival clock accumulated in f64 seconds — the same accumulation
     /// the direct backend uses, so both backends sample identical
     /// arrival instants from identical seeds.
     clock: f64,
     arrivals: usize,
-    next_session: u64,
-    /// Sessions whose latest turn has retired (eligible for follow-ups).
-    idle: Vec<u64>,
     /// Retirement time per finished session; entries are removed when the
     /// session starts a new turn. Feeds oldest-first idle eviction.
     completed_at: HashMap<u64, SimTime>,
@@ -157,6 +172,7 @@ impl<'a> ServingModel<'a> {
                 busy: SimTime::ZERO,
                 jobs: 0,
                 pcie: PcieLink::new(&sys.ctrl),
+                free_at: SimTime::ZERO,
             })
             .collect();
         ServingModel {
@@ -166,11 +182,10 @@ impl<'a> ServingModel<'a> {
             table,
             router,
             rng: Rng::new(cfg.seed),
+            sampler: ArrivalSampler::new(cfg),
             devices,
             clock: 0.0,
             arrivals: 0,
-            next_session: 0,
-            idle: Vec::new(),
             completed_at: HashMap::new(),
             outcomes: Vec::with_capacity(cfg.requests),
         }
@@ -198,6 +213,7 @@ impl<'a> ServingModel<'a> {
             policy: self.router.policy_name().to_string(),
             devices: self.cfg.devices,
             offered_rate: self.cfg.rate,
+            workload: self.cfg.workload.clone(),
             outcomes: self.outcomes,
             makespan,
             device_utilization,
@@ -221,16 +237,12 @@ impl<'a> ServingModel<'a> {
     /// pick, bounded-queue check, KV admission with idle eviction, and —
     /// if everything passes — enqueue on the picked device.
     fn admit(&mut self, id: u64, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
-        // Follow-up turns reuse a session whose previous turn retired.
-        // The sampling sequence is the one function both backends share
-        // (`loadgen::sample_arrival`), so the RNG streams stay in
-        // lockstep by construction.
-        let (session, reuse, l_in, l_out) = super::loadgen::sample_arrival(
-            &mut self.rng,
-            &self.cfg,
-            &mut self.idle,
-            &mut self.next_session,
-        );
+        // Follow-up turns reuse a retired session of the same class. The
+        // sampling sequence is the one [`ArrivalSampler`] both backends
+        // share, so the RNG streams stay in lockstep by construction.
+        let arr = self.sampler.sample(&mut self.rng);
+        let (session, class, reuse) = (arr.session, arr.class, arr.followup);
+        let (l_in, l_out) = (arr.input_tokens, arr.output_tokens);
 
         let status: Vec<DeviceStatus> = self
             .devices
@@ -239,15 +251,24 @@ impl<'a> ServingModel<'a> {
             .map(|(i, d)| DeviceStatus {
                 device: i,
                 queue_depth: d.depth(),
+                est_wait: d.free_at.saturating_sub(now),
                 kv_used: self.router.kv(i).used(),
                 kv_capacity: self.router.kv(i).capacity,
             })
             .collect();
-        let dev = self.router.assign(session, &status);
+        // Fresh-session prefill estimate (the policy never sees pinned
+        // follow-ups): PCIe KV upload + SLC prompt write + first step.
+        let upload = self.devices[0].pcie.transfer_time(self.model.kv_bytes(l_in, 1.0));
+        let kv_write = SimTime::from_secs(initial_kv_write_time(self.sys, self.model, l_in));
+        let job = JobInfo {
+            est_prefill: (upload + kv_write).secs() + self.table.tpot(l_in),
+            ttft_target: self.sampler.classes()[class].slo.ttft,
+        };
+        let dev = self.router.assign(session, &status, &job);
 
         // Bounded admission: the picked device's queue may be full.
         if status[dev].queue_depth >= self.cfg.queue_capacity {
-            self.reject(id, now, session, dev, l_in, reuse);
+            self.reject(id, now, session, class, dev, l_in, reuse);
             return;
         }
 
@@ -260,7 +281,7 @@ impl<'a> ServingModel<'a> {
             self.evict_idle(dev, session, needed);
         }
         if self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
-            self.reject(id, now, session, dev, l_in, reuse);
+            self.reject(id, now, session, class, dev, l_in, reuse);
             return;
         }
         match resident {
@@ -281,10 +302,18 @@ impl<'a> ServingModel<'a> {
         // Running again: no longer an idle-eviction candidate.
         self.completed_at.remove(&session);
 
-        let was_idle = self.devices[dev].active.is_none();
-        self.devices[dev].queue.push_back(Pending {
+        // Price the whole service now (stateless models, FIFO queue), so
+        // `free_at` predicts this job's completion exactly — the
+        // scheduler-visible backlog clock.
+        let service = upload + kv_write + self.table.decode_time(ctx0, l_out);
+        let d = &mut self.devices[dev];
+        d.free_at = d.free_at.max(now) + service;
+
+        let was_idle = d.active.is_none();
+        d.queue.push_back(Pending {
             id,
             session,
+            class,
             arrival: now,
             l_in,
             l_out,
@@ -296,17 +325,20 @@ impl<'a> ServingModel<'a> {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn reject(
         &mut self,
         id: u64,
         now: SimTime,
         session: u64,
+        class: usize,
         dev: usize,
         l_in: usize,
         reuse: bool,
     ) {
         if reuse {
-            self.idle.push(session); // the session stays eligible for follow-ups
+            // The session stays eligible for follow-ups of its class.
+            self.sampler.release(session, class);
         }
         if self.router.kv(dev).context_len(session).is_none() {
             self.router.forget(session); // placement without resident KV
@@ -314,6 +346,7 @@ impl<'a> ServingModel<'a> {
         self.outcomes.push(SimRequest {
             id,
             session,
+            class,
             device: None,
             arrival: now,
             first_token: None,
@@ -375,12 +408,22 @@ impl<'a> ServingModel<'a> {
         let a = dev.active.take().expect("retire without active job");
         dev.busy += now - a.started;
         dev.jobs += 1;
+        // The admission-time completion prediction must track the event
+        // timeline exactly: equal once the device drains, never behind.
+        debug_assert!(dev.free_at >= now, "free_at prediction fell behind the timeline");
+        debug_assert!(
+            !dev.queue.is_empty() || dev.free_at == now,
+            "drained device predicted busy until {} at {}",
+            dev.free_at,
+            now
+        );
         let r = a.req;
         self.completed_at.insert(r.session, now);
-        self.idle.push(r.session);
+        self.sampler.release(r.session, r.class);
         self.outcomes.push(SimRequest {
             id: r.id,
             session: r.session,
+            class: r.class,
             device: Some(d),
             arrival: r.arrival,
             first_token: a.first_token,
@@ -431,9 +474,11 @@ pub fn run_traffic_events(
 ) -> PoolReport {
     let mut engine = Engine::new(ServingModel::new(sys, model, table, policy, cfg));
     // Per accepted request: Arrive + PrefillDone + (l_out - 1) TokenDone
-    // + Retire, so requests × (hi + 4) bounds any trace with headroom.
-    engine.max_events =
-        (cfg.requests as u64).saturating_mul(cfg.output_tokens.hi as u64 + 4).saturating_add(16);
+    // + Retire, so requests × (max hi over classes + 4) bounds any trace
+    // with headroom.
+    engine.max_events = (cfg.requests as u64)
+        .saturating_mul(cfg.max_output_tokens() as u64 + 4)
+        .saturating_add(16);
     if cfg.requests > 0 {
         let gap = -(1.0 - engine.model.rng.f64()).ln() / cfg.rate;
         engine.model.clock = gap;
@@ -462,6 +507,7 @@ mod tests {
             queue_capacity: 64,
             followup: 0.3,
             seed,
+            workload: None,
         }
     }
 

@@ -12,9 +12,11 @@
 //! prices the prefill PCIe KV upload. This loop computes each request's
 //! whole service inline at arrival time instead; it is kept as the
 //! `serve-sim --threaded` cross-check path (its rate sweep fans out on
-//! scoped threads) and draws from the RNG in the same structural order
-//! as the event backend, so fresh-session traces line up request for
-//! request.
+//! scoped threads) and samples arrivals through the same
+//! `workload::ArrivalSampler` as the event backend — single-class configs and
+//! multi-class [`WorkloadMix`] scenarios alike — so the two backends'
+//! RNG streams stay in lockstep by construction and fresh-session traces
+//! line up request for request.
 //!
 //! The loop models the full serving path per request: scheduler pick
 //! ([`DeviceRouter`]: KV affinity first, then policy), bounded per-device
@@ -28,7 +30,8 @@
 //! seen capped the simulator at toy request counts.
 
 use super::metrics::PoolReport;
-use super::router::{DeviceRouter, DeviceStatus, Scheduler};
+use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
+use super::workload::{ArrivalSampler, WorkloadClass, WorkloadMix};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
 use crate::kv::write_overhead::initial_kv_write_time;
@@ -77,60 +80,54 @@ pub struct TrafficConfig {
     pub rate: f64,
     /// Total arrivals to generate.
     pub requests: usize,
-    /// Prompt-length distribution.
+    /// Prompt-length distribution (single-class runs; ignored when
+    /// [`Self::workload`] is set — each class brings its own ranges).
     pub input_tokens: LenRange,
-    /// Output-length distribution.
+    /// Output-length distribution (single-class runs; see above).
     pub output_tokens: LenRange,
     /// Per-device bound on queued + running jobs; arrivals beyond it are
     /// rejected (backpressure).
     pub queue_capacity: usize,
     /// Probability that an arrival is a follow-up turn of a finished
-    /// session (exercises KV affinity).
+    /// session (single-class runs; exercises KV affinity).
     pub followup: f64,
     pub seed: u64,
+    /// Multi-class scenario ([`WorkloadMix`]): when set, per-arrival
+    /// class sampling replaces the three scalar shape fields above, class
+    /// identity rides each request into the report, and
+    /// [`PoolReport::class_reports`][super::metrics::PoolReport::class_reports]
+    /// gains per-class percentiles and SLO attainment.
+    pub workload: Option<WorkloadMix>,
 }
 
 impl TrafficConfig {
-    /// Sensible defaults for an interactive chat-style mix.
+    /// Sensible single-class defaults, delegating the traffic shape to
+    /// the `chat` [`WorkloadClass`] preset — the default path and the
+    /// workload path share one definition instead of silently diverging
+    /// constants.
     pub fn default_for(devices: usize) -> TrafficConfig {
+        let chat = WorkloadClass::chat();
         TrafficConfig {
             devices,
             rate: 8.0,
             requests: 1000,
-            input_tokens: LenRange::new(128, 256),
-            output_tokens: LenRange::new(32, 64),
+            input_tokens: chat.input_tokens,
+            output_tokens: chat.output_tokens,
             queue_capacity: 64,
-            followup: 0.3,
+            followup: chat.followup,
             seed: 42,
+            workload: None,
         }
     }
-}
 
-/// Sample one arrival's identity: the follow-up decision, the session
-/// (picked from `idle` or freshly numbered via `next_session`), and the
-/// prompt/output lengths. Both serving backends route their draws
-/// through this one function, so the RNG stream order — unconditional
-/// Bernoulli (not short-circuited on an empty idle set, whose timeline
-/// differs slightly between backends), conditional idle pick, two length
-/// draws — stays in lockstep by construction.
-pub(super) fn sample_arrival(
-    rng: &mut Rng,
-    cfg: &TrafficConfig,
-    idle: &mut Vec<u64>,
-    next_session: &mut u64,
-) -> (u64, bool, usize, usize) {
-    let chance = rng.chance(cfg.followup);
-    let reuse = !idle.is_empty() && chance;
-    let session = if reuse {
-        let pick = rng.range(0, idle.len());
-        idle.swap_remove(pick)
-    } else {
-        *next_session += 1;
-        *next_session
-    };
-    let l_in = cfg.input_tokens.sample(rng);
-    let l_out = cfg.output_tokens.sample(rng);
-    (session, reuse, l_in, l_out)
+    /// Largest output-length upper bound an arrival can draw — sizes the
+    /// event budget of the event-driven backend.
+    pub fn max_output_tokens(&self) -> usize {
+        match &self.workload {
+            Some(mix) => mix.max_output_tokens(),
+            None => self.output_tokens.hi,
+        }
+    }
 }
 
 /// Per-request record produced by the simulator.
@@ -138,6 +135,9 @@ pub(super) fn sample_arrival(
 pub struct SimRequest {
     pub id: u64,
     pub session: u64,
+    /// Workload-class index in the run's [`WorkloadMix`] (0 for
+    /// single-class runs).
+    pub class: usize,
     /// Device the request ran on (`None` when rejected).
     pub device: Option<usize>,
     pub arrival: SimTime,
@@ -226,34 +226,34 @@ pub fn run_traffic_with_table(
     let policy_name = policy.name().to_string();
     let mut router = DeviceRouter::new(cfg.devices, sys, model, policy);
     let mut rng = Rng::new(cfg.seed);
+    let mut sampler = ArrivalSampler::new(cfg);
     let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.devices];
     // Latest-turn completion per session ever scheduled.
     let mut completion: HashMap<u64, SimTime> = HashMap::new();
-    // Sessions whose latest turn is still running, keyed by completion;
-    // drained into `idle` as the arrival clock passes them. Constant-ish
+    // Sessions whose latest turn is still running, keyed by completion
+    // (class rides along for the per-class idle lists); drained into the
+    // sampler's idle sets as the arrival clock passes them. Constant-ish
     // per-arrival cost — the old design re-scanned every session ever
     // seen on each arrival, which capped traces at toy sizes.
-    let mut busy: BinaryHeap<Reverse<(SimTime, u64)>> = BinaryHeap::new();
-    // Sessions eligible for a follow-up turn right now.
-    let mut idle: Vec<u64> = Vec::new();
+    let mut busy: BinaryHeap<Reverse<(SimTime, u64, usize)>> = BinaryHeap::new();
     let mut outcomes: Vec<SimRequest> = Vec::with_capacity(cfg.requests);
     let mut clock = 0.0f64;
-    let mut next_session: u64 = 0;
 
     for id in 0..cfg.requests as u64 {
         clock += -(1.0 - rng.f64()).ln() / cfg.rate; // exponential gap
         let now = SimTime::from_secs(clock);
-        while let Some(Reverse((done, s))) = busy.peek().copied() {
+        while let Some(Reverse((done, s, c))) = busy.peek().copied() {
             if done > now {
                 break;
             }
             busy.pop();
-            idle.push(s);
+            sampler.release(s, c);
         }
 
-        // Follow-up turns reuse a session whose previous turn has finished.
-        let (session, reuse, l_in, l_out) =
-            sample_arrival(&mut rng, cfg, &mut idle, &mut next_session);
+        // Follow-up turns reuse a finished session of the same class.
+        let arr = sampler.sample(&mut rng);
+        let (session, class, reuse) = (arr.session, arr.class, arr.followup);
+        let (l_in, l_out) = (arr.input_tokens, arr.output_tokens);
 
         let status: Vec<DeviceStatus> = devices
             .iter_mut()
@@ -261,38 +261,48 @@ pub fn run_traffic_with_table(
             .map(|(i, d)| DeviceStatus {
                 device: i,
                 queue_depth: d.depth(now),
+                est_wait: d.res.free_at().saturating_sub(now),
                 kv_used: router.kv(i).used(),
                 kv_capacity: router.kv(i).capacity,
             })
             .collect();
-        let dev = router.assign(session, &status);
+        // Prefill estimate for a fresh session (the policy only runs for
+        // those — follow-ups are pinned by KV affinity). This backend
+        // does not price the PCIe upload, so neither does its estimate.
+        let job = JobInfo {
+            est_prefill: initial_kv_write_time(sys, model, l_in) + table.tpot(l_in),
+            ttft_target: sampler.classes()[class].slo.ttft,
+        };
+        let dev = router.assign(session, &status, &job);
 
-        let reject =
-            |router: &mut DeviceRouter, idle: &mut Vec<u64>, outcomes: &mut Vec<SimRequest>| {
-                if reuse {
-                    idle.push(session); // the session stays eligible for follow-ups
-                }
-                if router.kv(dev).context_len(session).is_none() {
-                    router.forget(session); // placement without resident KV
-                }
-                outcomes.push(SimRequest {
-                    id,
-                    session,
-                    device: None,
-                    arrival: now,
-                    first_token: None,
-                    completed: now,
-                    input_tokens: l_in,
-                    output_tokens: 0,
-                    context: 0,
-                    rejected: true,
-                    followup: reuse,
-                });
-            };
+        let reject = |router: &mut DeviceRouter,
+                      sampler: &mut ArrivalSampler,
+                      outcomes: &mut Vec<SimRequest>| {
+            if reuse {
+                sampler.release(session, class); // stays follow-up-eligible
+            }
+            if router.kv(dev).context_len(session).is_none() {
+                router.forget(session); // placement without resident KV
+            }
+            outcomes.push(SimRequest {
+                id,
+                session,
+                class,
+                device: None,
+                arrival: now,
+                first_token: None,
+                completed: now,
+                input_tokens: l_in,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                followup: reuse,
+            });
+        };
 
         // Bounded admission: the picked device's queue may be full.
         if status[dev].queue_depth >= cfg.queue_capacity {
-            reject(&mut router, &mut idle, &mut outcomes);
+            reject(&mut router, &mut sampler, &mut outcomes);
             continue;
         }
 
@@ -305,7 +315,7 @@ pub fn run_traffic_with_table(
             evict_idle(&mut router, dev, &completion, now, session, needed);
         }
         if router.kv(dev).used() + needed > router.kv(dev).capacity {
-            reject(&mut router, &mut idle, &mut outcomes);
+            reject(&mut router, &mut sampler, &mut outcomes);
             continue;
         }
         match resident {
@@ -337,10 +347,11 @@ pub fn run_traffic_with_table(
         let completed = start + service;
         devices[dev].inflight.push_back(completed);
         completion.insert(session, completed);
-        busy.push(Reverse((completed, session)));
+        busy.push(Reverse((completed, session, class)));
         outcomes.push(SimRequest {
             id,
             session,
+            class,
             device: Some(dev),
             arrival: now,
             first_token: Some(start + first_offset),
@@ -363,6 +374,7 @@ pub fn run_traffic_with_table(
         policy: policy_name,
         devices: cfg.devices,
         offered_rate: cfg.rate,
+        workload: cfg.workload.clone(),
         outcomes,
         makespan,
         device_utilization,
@@ -434,6 +446,7 @@ mod tests {
             queue_capacity: 64,
             followup: 0.3,
             seed,
+            workload: None,
         }
     }
 

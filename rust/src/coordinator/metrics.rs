@@ -1,9 +1,12 @@
 //! Serving metrics: latency/TPOT summaries and device utilization — for
 //! the single-device trace ([`ServingReport`]) and the device-pool
-//! closed-loop simulator ([`PoolReport`]).
+//! closed-loop simulator ([`PoolReport`], including per-class
+//! percentiles and SLO attainment via [`ClassReport`] when the run
+//! carried a [`WorkloadMix`]).
 
 use super::loadgen::SimRequest;
 use super::request::RequestOutcome;
+use super::workload::{SloTarget, WorkloadMix};
 use crate::sim::SimTime;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
@@ -82,12 +85,17 @@ pub struct PoolReport {
     /// Simulation backend that produced the report: `"event"` for the
     /// event-driven default, `"direct"` for the legacy replay loop.
     pub backend: &'static str,
-    /// Scheduler policy name ("round-robin" / "least-loaded").
+    /// Scheduler policy name ("round-robin" / "least-loaded" /
+    /// "slo-aware").
     pub policy: String,
     /// Devices in the pool.
     pub devices: usize,
     /// Offered Poisson arrival rate (requests/second).
     pub offered_rate: f64,
+    /// The run's multi-class scenario, when it had one — maps each
+    /// outcome's class index to a name and SLO targets, and switches on
+    /// the per-class section of [`Self::render`].
+    pub workload: Option<WorkloadMix>,
     pub outcomes: Vec<SimRequest>,
     /// End of the simulated horizon (last accepted completion).
     pub makespan: SimTime,
@@ -95,6 +103,30 @@ pub struct PoolReport {
     pub device_utilization: Vec<f64>,
     /// Jobs served per device.
     pub device_jobs: Vec<usize>,
+}
+
+/// Per-class slice of a [`PoolReport`]: the class's traffic counts,
+/// latency summaries, and SLO attainment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    pub name: String,
+    /// Normalized arrival share the mix assigns the class.
+    pub share: f64,
+    /// Arrivals of this class (accepted + rejected).
+    pub arrivals: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// TTFT summary over the class's accepted requests (seconds).
+    pub ttft: Summary,
+    /// TPOT summary over the class's accepted multi-token requests.
+    pub tpot: Summary,
+    /// End-to-end latency summary over the class's accepted requests.
+    pub latency: Summary,
+    pub slo: SloTarget,
+    /// Fraction of the class's **arrivals** meeting both SLO targets —
+    /// a rejected request counts as a miss (the client got nothing), and
+    /// a class with no arrivals vacuously attains 1.0.
+    pub slo_attainment: f64,
 }
 
 impl PoolReport {
@@ -140,6 +172,56 @@ impl PoolReport {
         tokens as f64 / self.makespan.secs()
     }
 
+    /// Did this outcome meet `slo`? Rejections always miss; TTFT and TPOT
+    /// must both land within target (TPOT vacuously for 1-token outputs).
+    fn meets_slo(o: &SimRequest, slo: SloTarget) -> bool {
+        match o.ttft() {
+            Some(ttft) => !o.rejected && slo.met(ttft.secs(), o.tpot()),
+            None => false,
+        }
+    }
+
+    /// One [`ClassReport`] per mix class, in mix order; empty for
+    /// single-class runs without a workload.
+    pub fn class_reports(&self) -> Vec<ClassReport> {
+        let Some(mix) = &self.workload else {
+            return Vec::new();
+        };
+        mix.classes()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let of_class = || self.outcomes.iter().filter(move |o| o.class == i);
+                let arrivals = of_class().count();
+                let rejected = of_class().filter(|o| o.rejected).count();
+                let met = of_class().filter(|o| Self::meets_slo(o, c.slo)).count();
+                ClassReport {
+                    name: c.name.clone(),
+                    share: mix.share(i),
+                    arrivals,
+                    accepted: arrivals - rejected,
+                    rejected,
+                    ttft: Summary::of(
+                        &of_class().filter_map(|o| o.ttft().map(|t| t.secs())).collect::<Vec<_>>(),
+                    ),
+                    tpot: Summary::of(&of_class().filter_map(|o| o.tpot()).collect::<Vec<_>>()),
+                    latency: Summary::of(
+                        &of_class()
+                            .filter(|o| !o.rejected)
+                            .map(|o| o.latency().secs())
+                            .collect::<Vec<_>>(),
+                    ),
+                    slo: c.slo,
+                    slo_attainment: if arrivals == 0 {
+                        1.0
+                    } else {
+                        met as f64 / arrivals as f64
+                    },
+                }
+            })
+            .collect()
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "pool: {} device(s), {} scheduling, {:.1} req/s offered ({} backend)\n\
@@ -174,8 +256,43 @@ impl PoolReport {
             d.row(&[format!("dev{i}"), j.to_string(), format!("{:.1}%", u * 100.0)]);
         }
         out.push_str(&d.render());
+        if let Some(mix) = &self.workload {
+            out.push_str(&format!("\nworkload mix: {}\n", mix.name()));
+            let mut c = Table::new(&[
+                "class",
+                "share",
+                "arrive",
+                "reject",
+                "TTFT p95",
+                "ttft slo",
+                "TPOT p95",
+                "tpot slo",
+                "lat p95",
+                "SLO met",
+            ]);
+            for r in self.class_reports() {
+                c.row(&[
+                    r.name,
+                    format!("{:.0}%", r.share * 100.0),
+                    r.arrivals.to_string(),
+                    r.rejected.to_string(),
+                    fmt_time(r.ttft.p95),
+                    fmt_slo(r.slo.ttft),
+                    fmt_time(r.tpot.p95),
+                    fmt_slo(r.slo.tpot),
+                    fmt_time(r.latency.p95),
+                    format!("{:.1}%", r.slo_attainment * 100.0),
+                ]);
+            }
+            out.push_str(&c.render());
+        }
         out
     }
+}
+
+/// Format an SLO target; infinite targets ("no objective") render as `-`.
+fn fmt_slo(target: f64) -> String {
+    if target.is_finite() { fmt_time(target) } else { "-".to_string() }
 }
 
 #[cfg(test)]
@@ -210,6 +327,7 @@ mod tests {
         SimRequest {
             id,
             session: id,
+            class: (id % 2) as usize,
             device,
             arrival: SimTime::ZERO,
             first_token: device.map(|_| SimTime::from_us(50.0)),
@@ -229,6 +347,7 @@ mod tests {
             policy: "least-loaded".to_string(),
             devices: 2,
             offered_rate: 8.0,
+            workload: None,
             outcomes: vec![
                 sim_request(1, Some(0), 10),
                 sim_request(2, Some(1), 20),
@@ -241,13 +360,75 @@ mod tests {
         assert_eq!(r.accepted(), 2);
         assert_eq!(r.rejected(), 1);
         assert!((r.throughput() - 30.0).abs() < 1e-9);
+        assert!(r.class_reports().is_empty(), "no workload, no per-class section");
         let s = r.render();
         assert!(s.contains("least-loaded"));
         assert!(s.contains("event backend"));
         assert!(s.contains("p95"));
         assert!(s.contains("dev1"));
+        assert!(!s.contains("workload mix"));
         let lat = r.latency_summary();
         assert_eq!(lat.n, 2);
         assert!(lat.p95 <= lat.p99 + 1e-15);
+    }
+
+    #[test]
+    fn class_reports_split_attainment_by_class() {
+        use crate::coordinator::loadgen::LenRange;
+        use crate::coordinator::workload::WorkloadClass;
+
+        // `sim_request` classes by id parity: class 0 gets the even ids,
+        // class 1 the odd ones.
+        // Class 0 "even": an impossible 1 µs TTFT — nothing attains.
+        // Class 1 "odd": loose targets — every *served* request attains.
+        let mix = WorkloadMix::new(
+            "t",
+            vec![
+                WorkloadClass::new(
+                    "even",
+                    0.5,
+                    LenRange::fixed(64),
+                    LenRange::new(2, 32),
+                    0.0,
+                    SloTarget { ttft: 1e-6, tpot: 1.0 },
+                ),
+                WorkloadClass::new(
+                    "odd",
+                    0.5,
+                    LenRange::fixed(64),
+                    LenRange::new(2, 32),
+                    0.0,
+                    SloTarget { ttft: 1.0, tpot: 1.0 },
+                ),
+            ],
+        )
+        .unwrap();
+        let r = PoolReport {
+            backend: "event",
+            policy: "slo-aware".to_string(),
+            devices: 2,
+            offered_rate: 8.0,
+            workload: Some(mix),
+            outcomes: vec![
+                sim_request(1, Some(0), 10), // odd, served -> attains
+                sim_request(2, Some(1), 20), // even, served -> misses TTFT
+                sim_request(3, None, 0),     // odd, rejected -> misses
+                sim_request(4, Some(0), 5),  // even, served -> misses TTFT
+            ],
+            makespan: SimTime::from_secs(1.0),
+            device_utilization: vec![0.5, 0.25],
+            device_jobs: vec![2, 1],
+        };
+        let classes = r.class_reports();
+        assert_eq!(classes.len(), 2);
+        let (even, odd) = (&classes[0], &classes[1]);
+        assert_eq!((even.name.as_str(), even.arrivals, even.rejected), ("even", 2, 0));
+        assert_eq!((odd.name.as_str(), odd.arrivals, odd.rejected), ("odd", 2, 1));
+        assert_eq!(even.slo_attainment, 0.0, "1 µs TTFT is unattainable");
+        assert!((odd.slo_attainment - 0.5).abs() < 1e-12, "served odd attains, rejected misses");
+        assert!(odd.ttft.n == 1 && odd.latency.n == 1, "summaries cover accepted only");
+        let s = r.render();
+        assert!(s.contains("workload mix: t"));
+        assert!(s.contains("SLO met") && s.contains("odd") && s.contains("even"));
     }
 }

@@ -6,10 +6,18 @@
 //!
 //! The production-scale path is a *device pool*: N flash-PIM devices
 //! behind one scheduler. [`router`] hosts the [`Scheduler`] policies
-//! (round-robin, least-loaded) plus [`DeviceRouter`] — KV affinity pins a
-//! session's follow-up turns to the device holding its SLC KV cache — and
-//! every device queue is bounded, so overload is surfaced as backpressure
+//! (round-robin, least-loaded, and the SLO-aware bin-packer
+//! [`SloAware`]) plus [`DeviceRouter`] — KV affinity pins a session's
+//! follow-up turns to the device holding its SLC KV cache — and every
+//! device queue is bounded, so overload is surfaced as backpressure
 //! instead of unbounded buffering.
+//!
+//! Traffic need not be one homogeneous stream: [`workload`] defines
+//! multi-class scenarios ([`WorkloadMix`] — chat, long-context
+//! summarization, agentic bursts, offline batch, or custom TOML mixes),
+//! sampled per arrival from the shared RNG stream, with per-class
+//! TTFT/TPOT SLO targets reported as attainment in every [`PoolReport`]
+//! (see `docs/WORKLOADS.md`).
 //!
 //! Execution modes sharing that router/scheduler logic:
 //!
@@ -77,6 +85,7 @@
 //!     queue_capacity: 8,
 //!     followup: 0.0,
 //!     seed: 1,
+//!     workload: None,
 //! };
 //! let policy = || policy_from_name("least-loaded").unwrap();
 //! let a = run_traffic_events(&sys, &model, &table, policy(), &cfg);
@@ -94,16 +103,21 @@ pub mod router;
 pub mod serve;
 pub mod simulate;
 pub mod sweep;
+pub mod workload;
 
 pub use event_sim::{run_traffic_events, ServingEvent, ServingModel};
 pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
-pub use metrics::{PoolReport, ServingReport};
+pub use metrics::{ClassReport, PoolReport, ServingReport};
 pub use pool::{DevicePool, PoolJob, PoolServed, SimFlashEngine, SubmitError};
 pub use request::{Request, RequestKind, RequestOutcome};
 pub use router::{
-    DeviceRouter, DeviceStatus, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
-    Scheduler,
+    DeviceRouter, DeviceStatus, JobInfo, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
+    Scheduler, SloAware,
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};
-pub use sweep::{render_sweep, sweep_rates, sweep_rates_threaded, SweepPoint};
+pub use sweep::{
+    ClassAttainment, max_sustained_rates, render_slo_frontier, render_sweep, SloFrontier,
+    sweep_rates, sweep_rates_threaded, SweepPoint,
+};
+pub use workload::{SloTarget, WorkloadClass, WorkloadMix};

@@ -16,7 +16,7 @@
 //! (bounded queues, [`Scheduler`] policies, KV affinity) on a simulated
 //! timeline.
 
-use super::router::{DeviceStatus, Scheduler};
+use super::router::{DeviceStatus, JobInfo, Scheduler};
 use super::serve::{Engine, Job};
 use crate::llm::latency_table::LatencyTable;
 use crate::sim::SimTime;
@@ -186,8 +186,10 @@ impl DevicePool {
         self.queue_capacity
     }
 
-    /// Current per-device status (queue depths; the functional pool does not
-    /// track KV bytes — the simulator's `DeviceRouter` does).
+    /// Current per-device status (queue depths; the functional pool does
+    /// not track KV bytes or per-job service estimates — the simulators'
+    /// `DeviceRouter` does — so `est_wait` reads zero here and time-based
+    /// policies fall through to their queue-depth/index tie-breaks).
     pub fn status(&self) -> Vec<DeviceStatus> {
         self.workers
             .iter()
@@ -195,6 +197,7 @@ impl DevicePool {
             .map(|(i, w)| DeviceStatus {
                 device: i,
                 queue_depth: w.pending.load(Ordering::SeqCst),
+                est_wait: SimTime::ZERO,
                 kv_used: 0,
                 kv_capacity: 0,
             })
@@ -221,7 +224,7 @@ impl DevicePool {
 
     fn pick_by_policy(&self) -> usize {
         let status = self.status();
-        self.policy.lock().expect("policy lock").pick(&status)
+        self.policy.lock().expect("policy lock").pick(&status, &JobInfo::unconstrained())
     }
 
     /// Submit a job; returns a receiver for its result, or hands the job

@@ -8,14 +8,21 @@
 //!
 //! With a device *pool* (N flash-PIM devices behind one scheduler) the
 //! router additionally picks a device per job: [`Scheduler`] policies
-//! ([`RoundRobin`], [`LeastLoaded`]) balance fresh sessions, and
-//! [`DeviceRouter`] pins follow-up turns to the device already holding the
-//! session's SLC KV cache (KV affinity, via [`crate::kv::cache`]).
+//! ([`RoundRobin`], [`LeastLoaded`], [`SloAware`]) balance fresh
+//! sessions, and [`DeviceRouter`] pins follow-up turns to the device
+//! already holding the session's SLC KV cache (KV affinity, via
+//! [`crate::kv::cache`]). Every pick sees per-device [`DeviceStatus`]
+//! (queue depth, estimated wait, KV usage) plus the arriving job's
+//! [`JobInfo`] (estimated prefill, the class's TTFT target), which is
+//! what lets [`SloAware`] place a job by whether a queue endangers its
+//! class's first-token deadline.
 
 use super::request::{Request, RequestKind};
 use crate::config::SystemConfig;
 use crate::kv::cache::KvCacheManager;
 use crate::llm::model_config::ModelShape;
+use crate::sim::SimTime;
+use std::cmp::Reverse;
 use std::collections::HashMap;
 
 /// Routing decision.
@@ -80,10 +87,37 @@ pub struct DeviceStatus {
     pub device: usize,
     /// Jobs queued or running on the device.
     pub queue_depth: usize,
+    /// Time until the device would *start* a job enqueued now — the sum
+    /// of the remaining service of everything queued or running. Both
+    /// simulation backends supply it exactly (FIFO work-conserving
+    /// queues); the functional pool reports zero, so time-based policies
+    /// degrade to depth/index tie-breaks there.
+    pub est_wait: SimTime,
     /// Bytes used in the device's SLC KV region.
     pub kv_used: u64,
     /// Capacity of the device's SLC KV region.
     pub kv_capacity: u64,
+}
+
+/// What a [`Scheduler`] knows about the arriving job beyond the pool
+/// state: how long its prefill would take on an idle device and how
+/// tight its class's first-token deadline is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobInfo {
+    /// Estimated prefill time on an idle device, seconds (KV upload +
+    /// SLC prompt write + first decode step, for a fresh session).
+    pub est_prefill: f64,
+    /// TTFT SLO target of the arriving class, seconds;
+    /// `f64::INFINITY` when the class (or a classless run) has none.
+    pub ttft_target: f64,
+}
+
+impl JobInfo {
+    /// No deadline and no footprint — what callers outside the traffic
+    /// simulators (e.g. the functional pool) pass.
+    pub fn unconstrained() -> JobInfo {
+        JobInfo { est_prefill: 0.0, ttft_target: f64::INFINITY }
+    }
 }
 
 /// Device-selection policy for fresh sessions (follow-up turns bypass the
@@ -91,8 +125,9 @@ pub struct DeviceStatus {
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Pick a device index for a fresh job. `status` is never empty.
-    fn pick(&mut self, status: &[DeviceStatus]) -> usize;
+    /// Pick a device index for a fresh job described by `job`. `status`
+    /// is never empty.
+    fn pick(&mut self, status: &[DeviceStatus], job: &JobInfo) -> usize;
 }
 
 /// Cycle through devices regardless of load.
@@ -112,7 +147,7 @@ impl Scheduler for RoundRobin {
         "round-robin"
     }
 
-    fn pick(&mut self, status: &[DeviceStatus]) -> usize {
+    fn pick(&mut self, status: &[DeviceStatus], _job: &JobInfo) -> usize {
         assert!(!status.is_empty(), "pick over empty pool");
         let i = self.next % status.len();
         self.next = (i + 1) % status.len();
@@ -136,7 +171,7 @@ impl Scheduler for LeastLoaded {
         "least-loaded"
     }
 
-    fn pick(&mut self, status: &[DeviceStatus]) -> usize {
+    fn pick(&mut self, status: &[DeviceStatus], _job: &JobInfo) -> usize {
         status
             .iter()
             .min_by_key(|s| (s.queue_depth, s.kv_used, s.device))
@@ -145,11 +180,61 @@ impl Scheduler for LeastLoaded {
     }
 }
 
+/// SLO-aware placement: among the devices whose current backlog would
+/// still let the arriving job produce its first token within its class's
+/// TTFT target (`est_wait + est_prefill <= ttft_target`), pick the one
+/// with the **deepest feasible backlog**. That is deliberate bin-packing,
+/// not load spreading: loose-deadline work (summarization, offline batch)
+/// piles onto already-busy devices, which keeps lightly-loaded devices
+/// free for the tight-deadline classes that cannot tolerate queueing
+/// behind a 1K-token prefill. When no device can meet the target the
+/// deadline is already lost, so it falls back to least-loaded-in-time
+/// (minimum `est_wait`) to shed the damage minimally.
+///
+/// Ties break by queue depth (so callers whose status carries no time
+/// estimate — the functional pool — still pack by real load instead of
+/// collapsing onto device 0), then lower KV usage, then lower index —
+/// fully deterministic, like every policy here.
+#[derive(Debug, Clone, Default)]
+pub struct SloAware;
+
+impl SloAware {
+    pub fn new() -> SloAware {
+        SloAware
+    }
+}
+
+impl Scheduler for SloAware {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn pick(&mut self, status: &[DeviceStatus], job: &JobInfo) -> usize {
+        let feasible = status
+            .iter()
+            .filter(|s| s.est_wait.secs() + job.est_prefill <= job.ttft_target)
+            // Deepest feasible backlog (by time, then by queue depth),
+            // then least KV, then lowest index.
+            .max_by_key(|s| {
+                (s.est_wait, s.queue_depth, Reverse(s.kv_used), Reverse(s.device))
+            });
+        match feasible {
+            Some(s) => s.device,
+            None => status
+                .iter()
+                .min_by_key(|s| (s.est_wait, s.queue_depth, s.kv_used, s.device))
+                .expect("pick over empty pool")
+                .device,
+        }
+    }
+}
+
 /// Build a scheduling policy from its CLI name.
 pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
     match name {
         "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
         "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
+        "slo-aware" | "slo" => Some(Box::new(SloAware::new())),
         _ => None,
     }
 }
@@ -189,13 +274,14 @@ impl DeviceRouter {
         self.sessions.get(&session).copied()
     }
 
-    /// Pick the device for `session`: KV affinity first, else the policy.
-    /// Records the placement so later turns stick to the same device.
-    pub fn assign(&mut self, session: u64, status: &[DeviceStatus]) -> usize {
+    /// Pick the device for `session`: KV affinity first, else the policy
+    /// (which sees the arriving job's [`JobInfo`]). Records the placement
+    /// so later turns stick to the same device.
+    pub fn assign(&mut self, session: u64, status: &[DeviceStatus], job: &JobInfo) -> usize {
         if let Some(d) = self.sessions.get(&session) {
             return *d;
         }
-        let d = self.policy.pick(status);
+        let d = self.policy.pick(status, job);
         self.sessions.insert(session, d);
         d
     }
@@ -289,17 +375,24 @@ mod tests {
             .map(|(i, &q)| DeviceStatus {
                 device: i,
                 queue_depth: q,
+                // One second of estimated wait per queued job keeps the
+                // depth- and time-based views consistent in these tests.
+                est_wait: SimTime::from_secs(q as f64),
                 kv_used: 0,
                 kv_capacity: 1 << 30,
             })
             .collect()
     }
 
+    fn any_job() -> JobInfo {
+        JobInfo::unconstrained()
+    }
+
     #[test]
     fn round_robin_is_fair() {
         let mut rr = RoundRobin::new();
         let s = status(&[0, 0, 0, 0]);
-        let picks: Vec<usize> = (0..8).map(|_| rr.pick(&s)).collect();
+        let picks: Vec<usize> = (0..8).map(|_| rr.pick(&s, &any_job())).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
         let mut counts = [0usize; 4];
         for p in picks {
@@ -312,8 +405,8 @@ mod tests {
     fn round_robin_ignores_load() {
         let mut rr = RoundRobin::new();
         let s = status(&[9, 0]);
-        assert_eq!(rr.pick(&s), 0); // cycles even onto the busy device
-        assert_eq!(rr.pick(&s), 1);
+        assert_eq!(rr.pick(&s, &any_job()), 0); // cycles even onto the busy device
+        assert_eq!(rr.pick(&s, &any_job()), 1);
     }
 
     #[test]
@@ -321,13 +414,45 @@ mod tests {
         let mut ll = LeastLoaded::new();
         // Skewed job sizes: device 0 has a deep backlog, device 1 is almost
         // idle, device 2 in between.
-        assert_eq!(ll.pick(&status(&[5, 1, 3])), 1);
-        assert_eq!(ll.pick(&status(&[0, 1, 3])), 0);
+        assert_eq!(ll.pick(&status(&[5, 1, 3]), &any_job()), 1);
+        assert_eq!(ll.pick(&status(&[0, 1, 3]), &any_job()), 0);
         // Ties break by KV usage, then index.
         let mut s = status(&[2, 2]);
         s[0].kv_used = 100;
-        assert_eq!(ll.pick(&s), 1);
-        assert_eq!(ll.pick(&status(&[2, 2])), 0);
+        assert_eq!(ll.pick(&s, &any_job()), 1);
+        assert_eq!(ll.pick(&status(&[2, 2]), &any_job()), 0);
+    }
+
+    #[test]
+    fn slo_aware_packs_feasible_and_sheds_infeasible() {
+        let mut slo = SloAware::new();
+        // Deadline admits devices waiting <= 2.5 s (prefill 0.5, target 3).
+        let job = JobInfo { est_prefill: 0.5, ttft_target: 3.0 };
+        // Feasible: waits 0, 1, 2 (devices 0, 1, 2); device 3 (wait 5) is
+        // not. Bin-packing picks the *deepest* feasible backlog: device 2.
+        assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &job), 2);
+        // A tight deadline shrinks the feasible set to the idle device.
+        let tight = JobInfo { est_prefill: 0.5, ttft_target: 0.6 };
+        assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &tight), 0);
+        // No device feasible: fall back to least wait (device 1 here).
+        let hopeless = JobInfo { est_prefill: 0.5, ttft_target: 0.1 };
+        assert_eq!(slo.pick(&status(&[3, 1, 2, 5]), &hopeless), 1);
+        // Without a deadline every device is feasible: pack onto the
+        // busiest outright.
+        assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &any_job()), 3);
+        // Feasibility ties break by KV usage, then index.
+        let mut s = status(&[2, 2]);
+        s[0].kv_used = 100;
+        assert_eq!(slo.pick(&s, &job), 1);
+        assert_eq!(slo.pick(&status(&[2, 2]), &job), 0);
+        // A status source with no time estimate (the functional pool
+        // reports est_wait zero) still packs by real queue depth instead
+        // of collapsing onto device 0.
+        let mut flat = status(&[1, 3, 2]);
+        for d in &mut flat {
+            d.est_wait = SimTime::ZERO;
+        }
+        assert_eq!(slo.pick(&flat, &any_job()), 1);
     }
 
     #[test]
@@ -335,6 +460,8 @@ mod tests {
         assert_eq!(policy_from_name("round-robin").unwrap().name(), "round-robin");
         assert_eq!(policy_from_name("rr").unwrap().name(), "round-robin");
         assert_eq!(policy_from_name("least-loaded").unwrap().name(), "least-loaded");
+        assert_eq!(policy_from_name("slo-aware").unwrap().name(), "slo-aware");
+        assert_eq!(policy_from_name("slo").unwrap().name(), "slo-aware");
         assert!(policy_from_name("bogus").is_none());
     }
 
@@ -344,19 +471,19 @@ mod tests {
         let model = OptModel::Opt6_7b.shape();
         let mut dr = DeviceRouter::new(3, &sys, &model, Box::new(LeastLoaded::new()));
         // Fresh session goes to the least-loaded device (index 0 on ties).
-        let d = dr.assign(7, &status(&[0, 0, 0]));
+        let d = dr.assign(7, &status(&[0, 0, 0]), &any_job());
         assert_eq!(d, 0);
         dr.kv_mut(d).admit(7, 128).unwrap();
         // Device 0 is now the busiest — a follow-up turn still lands there.
-        assert_eq!(dr.assign(7, &status(&[9, 0, 0])), 0);
+        assert_eq!(dr.assign(7, &status(&[9, 0, 0]), &any_job()), 0);
         assert_eq!(dr.device_for(7), Some(0));
         // A fresh session avoids it.
-        assert_ne!(dr.assign(8, &status(&[9, 0, 0])), 0);
+        assert_ne!(dr.assign(8, &status(&[9, 0, 0]), &any_job()), 0);
         // Eviction drops residency; the session re-places like a fresh one.
         dr.evict(7).unwrap();
         assert_eq!(dr.device_for(7), None);
         assert_eq!(dr.kv(0).used(), 0);
-        assert_ne!(dr.assign(7, &status(&[9, 0, 0])), 0);
+        assert_ne!(dr.assign(7, &status(&[9, 0, 0]), &any_job()), 0);
     }
 
     #[test]
@@ -365,9 +492,9 @@ mod tests {
         let model = OptModel::Opt6_7b.shape();
         let mut dr = DeviceRouter::new(2, &sys, &model, Box::new(RoundRobin::new()));
         let s = status(&[0, 0]);
-        assert_eq!(dr.assign(1, &s), 0);
-        assert_eq!(dr.assign(2, &s), 1);
-        assert_eq!(dr.assign(3, &s), 0);
+        assert_eq!(dr.assign(1, &s, &any_job()), 0);
+        assert_eq!(dr.assign(2, &s, &any_job()), 1);
+        assert_eq!(dr.assign(3, &s, &any_job()), 0);
         let mut on0 = dr.sessions_on(0);
         on0.sort_unstable();
         assert_eq!(on0, vec![1, 3]);

@@ -11,6 +11,14 @@
 //! the direct-replay backend fanned out on scoped threads (each point
 //! owns its RNG and router, so results are still deterministic and
 //! independent of thread scheduling — just not a single event timeline).
+//!
+//! When the base config carries a [`WorkloadMix`][wl], every point also
+//! records per-class SLO attainment, and [`max_sustained_rates`] /
+//! [`render_slo_frontier`] reduce the sweep to the serving question the
+//! mixes exist for: *the highest offered rate at which each class still
+//! attains its SLOs ≥ X% of the time, per scheduling policy*.
+//!
+//! [wl]: super::workload::WorkloadMix
 
 use super::event_sim::run_traffic_events;
 use super::loadgen::{run_traffic_with_table, TrafficConfig};
@@ -23,6 +31,15 @@ use crate::util::table::Table;
 use crate::util::units::fmt_time;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// SLO attainment of one workload class at one sweep point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassAttainment {
+    pub class: String,
+    /// Fraction of the class's arrivals meeting both SLO targets
+    /// (rejections count as misses).
+    pub attainment: f64,
+}
 
 /// One (policy, rate) point of a sweep, reduced to the curve metrics so a
 /// long sweep does not hold every per-request outcome in memory.
@@ -39,6 +56,8 @@ pub struct SweepPoint {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// Per-class SLO attainment, in mix order; empty without a workload.
+    pub class_attainment: Vec<ClassAttainment>,
 }
 
 impl SweepPoint {
@@ -54,7 +73,17 @@ impl SweepPoint {
             latency_p50: lat.p50,
             latency_p95: lat.p95,
             latency_p99: lat.p99,
+            class_attainment: report
+                .class_reports()
+                .into_iter()
+                .map(|c| ClassAttainment { class: c.name, attainment: c.slo_attainment })
+                .collect(),
         }
+    }
+
+    /// Worst per-class attainment at this point (`None` without classes).
+    pub fn min_attainment(&self) -> Option<f64> {
+        self.class_attainment.iter().map(|c| c.attainment).min_by(f64::total_cmp)
     }
 }
 
@@ -84,7 +113,7 @@ fn sweep_pairs<'a>(rates: &[f64], policies: &[&'a str]) -> Result<Vec<(&'a str, 
     }
     for p in policies {
         if policy_from_name(p).is_none() {
-            bail!("unknown policy {p:?}; use round-robin|least-loaded");
+            bail!("unknown policy {p:?}; use round-robin|least-loaded|slo-aware");
         }
     }
     let mut rates = rates.to_vec();
@@ -175,7 +204,8 @@ pub fn sweep_rates_threaded(
     Ok(points.into_iter().map(|p| p.expect("every sweep pair ran")).collect())
 }
 
-/// Render sweep points as an ASCII throughput–latency table.
+/// Render sweep points as an ASCII throughput–latency table. The final
+/// column is the worst per-class SLO attainment (`-` without a workload).
 pub fn render_sweep(points: &[SweepPoint]) -> String {
     let mut t = Table::new(&[
         "policy",
@@ -187,6 +217,7 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
         "lat p50",
         "lat p95",
         "lat p99",
+        "min SLO",
     ]);
     for p in points {
         t.row(&[
@@ -199,9 +230,80 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
             fmt_time(p.latency_p50),
             fmt_time(p.latency_p95),
             fmt_time(p.latency_p99),
+            match p.min_attainment() {
+                Some(a) => format!("{:.1}%", a * 100.0),
+                None => "-".to_string(),
+            },
         ]);
     }
     t.render()
+}
+
+/// The SLO frontier of one (policy, class) pair: the highest swept rate
+/// at which the class still attained its targets at least as often as
+/// the threshold, and the attainment observed there.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloFrontier {
+    pub policy: String,
+    pub class: String,
+    /// `None` when no swept rate sustained the threshold.
+    pub max_rate: Option<f64>,
+    /// Attainment at `max_rate` (0.0 when `max_rate` is `None`).
+    pub attainment: f64,
+}
+
+/// Reduce workload sweep points to per-(policy, class) SLO frontiers:
+/// the maximum swept rate sustaining `min_attainment`. Pairs appear in
+/// first-encounter order (policy blocks, mix class order); the result is
+/// empty when the points carry no per-class data.
+pub fn max_sustained_rates(points: &[SweepPoint], min_attainment: f64) -> Vec<SloFrontier> {
+    let mut frontiers: Vec<SloFrontier> = Vec::new();
+    for p in points {
+        for c in &p.class_attainment {
+            let found = frontiers.iter().position(|f| f.policy == p.policy && f.class == c.class);
+            let idx = match found {
+                Some(i) => i,
+                None => {
+                    frontiers.push(SloFrontier {
+                        policy: p.policy.clone(),
+                        class: c.class.clone(),
+                        max_rate: None,
+                        attainment: 0.0,
+                    });
+                    frontiers.len() - 1
+                }
+            };
+            let entry = &mut frontiers[idx];
+            let sustained = c.attainment >= min_attainment;
+            let improves = entry.max_rate.is_none() || entry.max_rate < Some(p.rate);
+            if sustained && improves {
+                entry.max_rate = Some(p.rate);
+                entry.attainment = c.attainment;
+            }
+        }
+    }
+    frontiers
+}
+
+/// Render the SLO frontier table for a workload sweep.
+pub fn render_slo_frontier(points: &[SweepPoint], min_attainment: f64) -> String {
+    let mut t = Table::new(&["policy", "class", "max rate req/s", "SLO met there"]);
+    for f in max_sustained_rates(points, min_attainment) {
+        t.row(&[
+            f.policy,
+            f.class,
+            match f.max_rate {
+                Some(r) => format!("{r:.1}"),
+                None => "none".to_string(),
+            },
+            if f.max_rate.is_some() { format!("{:.1}%", f.attainment * 100.0) } else { "-".into() },
+        ]);
+    }
+    format!(
+        "max offered rate sustaining >= {:.0}% SLO attainment per class:\n{}",
+        min_attainment * 100.0,
+        t.render()
+    )
 }
 
 #[cfg(test)]
@@ -222,6 +324,7 @@ mod tests {
             queue_capacity: 16,
             followup: 0.3,
             seed: 5,
+            workload: None,
         }
     }
 
@@ -284,6 +387,49 @@ mod tests {
         )
         .unwrap();
         check_points(&points);
+    }
+
+    #[test]
+    fn frontier_picks_max_sustained_rate_per_policy_and_class() {
+        let point = |policy: &str, rate: f64, chat: f64, batch: f64| SweepPoint {
+            policy: policy.to_string(),
+            rate,
+            accepted: 10,
+            rejected: 0,
+            throughput: 1.0,
+            ttft_p95: 0.1,
+            latency_p50: 0.1,
+            latency_p95: 0.2,
+            latency_p99: 0.3,
+            class_attainment: vec![
+                ClassAttainment { class: "chat".into(), attainment: chat },
+                ClassAttainment { class: "batch".into(), attainment: batch },
+            ],
+        };
+        let points = vec![
+            point("rr", 4.0, 1.0, 1.0),
+            point("rr", 8.0, 0.995, 1.0),
+            point("rr", 16.0, 0.80, 0.97),
+            point("slo", 4.0, 1.0, 1.0),
+            point("slo", 8.0, 1.0, 1.0),
+            point("slo", 16.0, 0.999, 0.95),
+        ];
+        assert_eq!(points[0].min_attainment(), Some(1.0));
+        let f = max_sustained_rates(&points, 0.99);
+        assert_eq!(f.len(), 4);
+        let get = |policy: &str, class: &str| {
+            f.iter().find(|x| x.policy == policy && x.class == class).unwrap().max_rate
+        };
+        assert_eq!(get("rr", "chat"), Some(8.0));
+        assert_eq!(get("rr", "batch"), Some(8.0), "16.0 dips below 99%");
+        assert_eq!(get("slo", "chat"), Some(16.0));
+        assert_eq!(get("slo", "batch"), Some(8.0));
+        let rendered = render_slo_frontier(&points, 0.99);
+        assert!(rendered.contains("99%") && rendered.contains("slo") && rendered.contains("chat"));
+        // A threshold nothing sustains renders "none".
+        let none = max_sustained_rates(&points[2..3], 0.99);
+        assert_eq!(none[0].max_rate, None);
+        assert!(render_slo_frontier(&points[2..3], 0.99).contains("none"));
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! Multi-class workload scenarios for the serving simulators.
+//!
+//! The paper evaluates single-batch generation against one request shape
+//! at a time, but a deployed device pool sees a *blend*: short
+//! interactive chat turns, 1K+-token summarization prefills, bursty
+//! agentic follow-up chains, and offline batch fills — the heterogeneous
+//! serving mixes PIM-AI (UPMEM) and Cambricon-LLM evaluate on-device.
+//! This module models such blends:
+//!
+//! * [`WorkloadClass`] — one request class: arrival-share weight,
+//!   prompt/output [`LenRange`]s, follow-up probability, and per-class
+//!   [`SloTarget`]s (TTFT / TPOT).
+//! * [`WorkloadMix`] — a named, weighted set of classes. Built-in
+//!   scenario presets come from [`crate::config::presets::workload_preset`]
+//!   (`chat`, `summarize-long`, `agentic-burst`, `batch-offline`); custom
+//!   mixes load from TOML via [`crate::config::WorkloadSpec`]. Attach a
+//!   mix to a run through [`TrafficConfig::workload`].
+//! * `ArrivalSampler` *(crate-internal)* — the one piece of code both
+//!   serving backends draw arrivals through, so the class pick, follow-up
+//!   decision, session choice, and length draws consume the shared RNG
+//!   stream in identical order: same seed → bit-identical traces on
+//!   either backend, with or without a mix.
+//!
+//! Class identity rides each request into the report:
+//! [`PoolReport::class_reports`][super::metrics::PoolReport::class_reports]
+//! summarizes TTFT/TPOT/latency percentiles and SLO attainment per class,
+//! and the `slo-aware` scheduler ([`super::router::SloAware`]) uses the
+//! arriving class's TTFT target to place jobs.
+//!
+//! # Example
+//!
+//! Build a two-class mix, run a small event-driven simulation, and read
+//! the per-class report:
+//!
+//! ```
+//! use flashpim::circuit::TechParams;
+//! use flashpim::config::presets::table1_system;
+//! use flashpim::coordinator::{
+//!     policy_from_name, run_traffic_events, LenRange, SloTarget, TrafficConfig, WorkloadClass,
+//!     WorkloadMix,
+//! };
+//! use flashpim::llm::{model_config::OptModel, LatencyTable};
+//!
+//! let short = WorkloadClass::new(
+//!     "short",
+//!     0.75,
+//!     LenRange::new(16, 32),
+//!     LenRange::new(2, 4),
+//!     0.0,
+//!     SloTarget { ttft: 0.2, tpot: 0.01 },
+//! );
+//! let long = WorkloadClass::new(
+//!     "long",
+//!     0.25,
+//!     LenRange::new(96, 128),
+//!     LenRange::new(4, 8),
+//!     0.0,
+//!     SloTarget { ttft: 1.0, tpot: 0.01 },
+//! );
+//! let mix = WorkloadMix::new("demo", vec![short, long]).unwrap();
+//!
+//! let sys = table1_system();
+//! let model = OptModel::Opt6_7b.shape();
+//! let table = LatencyTable::build_spanning(&sys, &TechParams::default(), model.clone(), 256, 64);
+//! let mut cfg = TrafficConfig::default_for(2);
+//! cfg.requests = 40;
+//! cfg.rate = 30.0;
+//! cfg.workload = Some(mix);
+//!
+//! let policy = policy_from_name("slo-aware").unwrap();
+//! let report = run_traffic_events(&sys, &model, &table, policy, &cfg);
+//! let classes = report.class_reports();
+//! assert_eq!(classes.len(), 2);
+//! assert_eq!((classes[0].name.as_str(), classes[1].name.as_str()), ("short", "long"));
+//! assert_eq!(classes[0].arrivals + classes[1].arrivals, 40);
+//! for c in &classes {
+//!     assert!((0.0..=1.0).contains(&c.slo_attainment), "{}: {}", c.name, c.slo_attainment);
+//! }
+//! ```
+
+use super::loadgen::{LenRange, TrafficConfig};
+use crate::config::presets;
+use crate::config::schema::{WorkloadClassSpec, WorkloadSpec};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-class service-level objectives — absolute targets in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Time-to-first-token target (seconds).
+    pub ttft: f64,
+    /// Time-per-output-token target (seconds per token).
+    pub tpot: f64,
+}
+
+impl SloTarget {
+    /// No objectives: every served request trivially attains.
+    pub const NONE: SloTarget = SloTarget { ttft: f64::INFINITY, tpot: f64::INFINITY };
+
+    /// Does a served request with these observed metrics meet the
+    /// targets? `tpot` is `None` for single-token outputs, where TPOT is
+    /// undefined — vacuously met.
+    pub fn met(&self, ttft_secs: f64, tpot_secs: Option<f64>) -> bool {
+        let tpot_ok = match tpot_secs {
+            Some(t) => t <= self.tpot,
+            None => true,
+        };
+        ttft_secs <= self.ttft && tpot_ok
+    }
+}
+
+/// One request class of a serving mix — the runtime counterpart of
+/// [`WorkloadClassSpec`] (typed ranges instead of plain tuples).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadClass {
+    pub name: String,
+    /// Relative arrival-rate share; [`WorkloadMix`] normalizes across
+    /// classes, so shares need not sum to 1.
+    pub share: f64,
+    pub input_tokens: LenRange,
+    pub output_tokens: LenRange,
+    /// Probability that an arrival of this class is a follow-up turn of
+    /// one of the class's own finished sessions (sessions never change
+    /// class mid-life).
+    pub followup: f64,
+    pub slo: SloTarget,
+}
+
+impl WorkloadClass {
+    pub fn new(
+        name: &str,
+        share: f64,
+        input_tokens: LenRange,
+        output_tokens: LenRange,
+        followup: f64,
+        slo: SloTarget,
+    ) -> WorkloadClass {
+        WorkloadClass { name: name.to_string(), share, input_tokens, output_tokens, followup, slo }
+    }
+
+    /// Convert a validated schema class into its runtime form.
+    pub fn from_spec(spec: &WorkloadClassSpec) -> Result<WorkloadClass> {
+        spec.validate()?;
+        Ok(WorkloadClass {
+            name: spec.name.clone(),
+            share: spec.share,
+            input_tokens: LenRange::new(spec.input.0, spec.input.1),
+            output_tokens: LenRange::new(spec.output.0, spec.output.1),
+            followup: spec.followup,
+            slo: SloTarget { ttft: spec.ttft_slo, tpot: spec.tpot_slo },
+        })
+    }
+
+    /// The `chat` class preset — also the single definition behind
+    /// [`TrafficConfig::default_for`]'s traffic shape.
+    pub fn chat() -> WorkloadClass {
+        WorkloadClass::from_spec(&presets::chat_class()).expect("chat preset is valid")
+    }
+
+    fn to_spec(&self) -> WorkloadClassSpec {
+        WorkloadClassSpec {
+            name: self.name.clone(),
+            share: self.share,
+            input: (self.input_tokens.lo, self.input_tokens.hi),
+            output: (self.output_tokens.lo, self.output_tokens.hi),
+            followup: self.followup,
+            ttft_slo: self.slo.ttft,
+            tpot_slo: self.slo.tpot,
+        }
+    }
+}
+
+/// A named, weighted set of [`WorkloadClass`]es sampled per arrival.
+///
+/// Class shares are normalized once at construction into cumulative
+/// bounds, so a mix costs at most one extra RNG draw per arrival (none
+/// for single-class mixes — the legacy single-class RNG stream is
+/// preserved bit for bit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadMix {
+    name: String,
+    classes: Vec<WorkloadClass>,
+    /// Cumulative normalized share bounds; the last entry is exactly 1.0
+    /// so any `u < 1.0` draw lands in a class.
+    cum: Vec<f64>,
+}
+
+impl WorkloadMix {
+    /// Build and validate a mix (via the schema validation rules).
+    pub fn new(name: &str, classes: Vec<WorkloadClass>) -> Result<WorkloadMix> {
+        let spec = WorkloadSpec {
+            name: name.to_string(),
+            classes: classes.iter().map(WorkloadClass::to_spec).collect(),
+        };
+        spec.validate()?;
+        let total: f64 = classes.iter().map(|c| c.share).sum();
+        let mut acc = 0.0;
+        let mut cum: Vec<f64> = classes
+            .iter()
+            .map(|c| {
+                acc += c.share / total;
+                acc
+            })
+            .collect();
+        *cum.last_mut().expect("validated non-empty") = 1.0;
+        Ok(WorkloadMix { name: name.to_string(), classes, cum })
+    }
+
+    /// Build from a validated schema spec.
+    pub fn from_spec(spec: &WorkloadSpec) -> Result<WorkloadMix> {
+        let classes =
+            spec.classes.iter().map(WorkloadClass::from_spec).collect::<Result<Vec<_>>>()?;
+        WorkloadMix::new(&spec.name, classes)
+    }
+
+    /// Load a custom mix from a TOML file (see [`WorkloadSpec`] for the
+    /// format and `docs/WORKLOADS.md` for a walkthrough).
+    pub fn from_file(path: &Path) -> Result<WorkloadMix> {
+        WorkloadMix::from_spec(&WorkloadSpec::from_file(path)?)
+    }
+
+    /// A built-in scenario preset by name (see [`Self::preset_names`]).
+    pub fn preset(name: &str) -> Option<WorkloadMix> {
+        let spec = presets::workload_preset(name)?;
+        Some(WorkloadMix::from_spec(&spec).expect("built-in presets are valid"))
+    }
+
+    /// Names accepted by [`Self::preset`] / `serve-sim --workload`.
+    pub fn preset_names() -> &'static [&'static str] {
+        presets::WORKLOAD_PRESETS
+    }
+
+    /// Resolve a `--workload` argument: a preset name, else a TOML path.
+    pub fn resolve(arg: &str) -> Result<WorkloadMix> {
+        if let Some(mix) = WorkloadMix::preset(arg) {
+            return Ok(mix);
+        }
+        WorkloadMix::from_file(Path::new(arg)).with_context(|| {
+            format!(
+                "--workload {arg:?} is neither a built-in preset ({}) nor a readable TOML file",
+                WorkloadMix::preset_names().join(", ")
+            )
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn classes(&self) -> &[WorkloadClass] {
+        &self.classes
+    }
+
+    /// Normalized arrival share of class `i`.
+    pub fn share(&self, i: usize) -> f64 {
+        self.cum[i] - if i == 0 { 0.0 } else { self.cum[i - 1] }
+    }
+
+    /// Largest output-length upper bound across classes — sizes the event
+    /// budget of a run.
+    pub fn max_output_tokens(&self) -> usize {
+        self.classes.iter().map(|c| c.output_tokens.hi).max().expect("non-empty mix")
+    }
+
+    /// Render as the TOML the [`WorkloadSpec`] parser reads back.
+    pub fn to_toml(&self) -> String {
+        WorkloadSpec {
+            name: self.name.clone(),
+            classes: self.classes.iter().map(WorkloadClass::to_spec).collect(),
+        }
+        .to_toml()
+    }
+
+    /// Map a uniform `u ∈ [0, 1)` draw to a class index: the first class
+    /// whose cumulative bound exceeds `u` (clamped for safety — `u` is
+    /// always below the final bound of 1.0).
+    fn pick_class(&self, u: f64) -> usize {
+        self.cum.partition_point(|&c| u >= c).min(self.cum.len() - 1)
+    }
+}
+
+/// One sampled arrival: the session it belongs to, its class, and its
+/// drawn shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct Arrival {
+    pub session: u64,
+    pub class: usize,
+    /// This arrival reuses a finished session of its class.
+    pub followup: bool,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// The single arrival-sampling path shared by both serving backends
+/// (event-driven and direct replay), so their RNG streams stay in
+/// lockstep by construction. Per arrival the draw order is fixed:
+///
+/// 1. class pick — one `f64` draw, **skipped for single-class mixes** so
+///    legacy single-class configs keep their exact pre-workload streams;
+/// 2. follow-up Bernoulli — unconditional (not short-circuited on an
+///    empty idle set, whose timeline differs slightly between backends);
+/// 3. idle-session pick within the class — only when reusing;
+/// 4. prompt and output length draws from the class's ranges.
+///
+/// Sessions are filed per class: a follow-up turn continues a session of
+/// the *same* class (an agentic chain stays agentic), which is also what
+/// keeps the per-class report semantics clean.
+#[derive(Debug, Clone)]
+pub(super) struct ArrivalSampler {
+    mix: WorkloadMix,
+    /// Follow-up-eligible finished sessions, per class.
+    idle: Vec<Vec<u64>>,
+    next_session: u64,
+}
+
+impl ArrivalSampler {
+    /// Build from a traffic config: its [`TrafficConfig::workload`] mix,
+    /// or a synthetic single class from the legacy scalar fields. The
+    /// scalar `followup` is clamped to `[0, 1]` — `Rng::chance` always
+    /// saturated out-of-range probabilities, so library callers who
+    /// relied on that keep working instead of tripping mix validation.
+    pub fn new(cfg: &TrafficConfig) -> ArrivalSampler {
+        // NaN behaves like "never" (`Rng::chance(NaN)` is false).
+        let followup =
+            if cfg.followup.is_nan() { 0.0 } else { cfg.followup.clamp(0.0, 1.0) };
+        let mix = match &cfg.workload {
+            Some(mix) => mix.clone(),
+            None => WorkloadMix::new(
+                "single",
+                vec![WorkloadClass::new(
+                    "default",
+                    1.0,
+                    cfg.input_tokens,
+                    cfg.output_tokens,
+                    followup,
+                    SloTarget::NONE,
+                )],
+            )
+            .expect("single-class mix is valid"),
+        };
+        let idle = vec![Vec::new(); mix.classes().len()];
+        ArrivalSampler { mix, idle, next_session: 0 }
+    }
+
+    pub fn classes(&self) -> &[WorkloadClass] {
+        self.mix.classes()
+    }
+
+    /// Draw one arrival (see the type-level doc for the draw order).
+    pub fn sample(&mut self, rng: &mut Rng) -> Arrival {
+        let class =
+            if self.mix.classes().len() == 1 { 0 } else { self.mix.pick_class(rng.f64()) };
+        let c = &self.mix.classes()[class];
+        let chance = rng.chance(c.followup);
+        let reuse = !self.idle[class].is_empty() && chance;
+        let session = if reuse {
+            let pick = rng.range(0, self.idle[class].len());
+            self.idle[class].swap_remove(pick)
+        } else {
+            self.next_session += 1;
+            self.next_session
+        };
+        let input_tokens = c.input_tokens.sample(rng);
+        let output_tokens = c.output_tokens.sample(rng);
+        Arrival { session, class, followup: reuse, input_tokens, output_tokens }
+    }
+
+    /// A session's turn retired (or its follow-up arrival was rejected):
+    /// it becomes follow-up-eligible again.
+    pub fn release(&mut self, session: u64, class: usize) {
+        self.idle[class].push(session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_class_mix() -> WorkloadMix {
+        WorkloadMix::new(
+            "two",
+            vec![
+                WorkloadClass::new(
+                    "a",
+                    3.0,
+                    LenRange::new(8, 16),
+                    LenRange::new(2, 4),
+                    0.0,
+                    SloTarget::NONE,
+                ),
+                WorkloadClass::new(
+                    "b",
+                    1.0,
+                    LenRange::new(64, 128),
+                    LenRange::new(8, 16),
+                    0.5,
+                    SloTarget { ttft: 0.5, tpot: 0.01 },
+                ),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shares_normalize_and_cumulate() {
+        let mix = two_class_mix();
+        assert!((mix.share(0) - 0.75).abs() < 1e-12);
+        assert!((mix.share(1) - 0.25).abs() < 1e-12);
+        assert_eq!(mix.pick_class(0.0), 0);
+        assert_eq!(mix.pick_class(0.7499), 0);
+        assert_eq!(mix.pick_class(0.7501), 1);
+        assert_eq!(mix.pick_class(0.999_999), 1);
+        assert_eq!(mix.max_output_tokens(), 16);
+    }
+
+    #[test]
+    fn presets_resolve_and_reject() {
+        for name in WorkloadMix::preset_names() {
+            let mix = WorkloadMix::preset(name).expect("preset exists");
+            assert_eq!(mix.name(), *name);
+            let total: f64 = (0..mix.classes().len()).map(|i| mix.share(i)).sum();
+            assert!((total - 1.0).abs() < 1e-12, "{name}: shares sum to {total}");
+        }
+        assert!(WorkloadMix::preset("bogus").is_none());
+        assert!(WorkloadMix::resolve("chat").is_ok());
+        assert!(WorkloadMix::resolve("/no/such/file.toml").is_err());
+    }
+
+    #[test]
+    fn chat_class_backs_default_traffic() {
+        let chat = WorkloadClass::chat();
+        let cfg = TrafficConfig::default_for(4);
+        assert_eq!(cfg.input_tokens, chat.input_tokens);
+        assert_eq!(cfg.output_tokens, chat.output_tokens);
+        assert_eq!(cfg.followup, chat.followup);
+    }
+
+    #[test]
+    fn single_class_sampler_matches_legacy_stream() {
+        // A sampler over a single-class mix must consume the RNG exactly
+        // as the pre-workload sampler did: Bernoulli, conditional idle
+        // pick, two length draws — and never a class draw.
+        let cfg = TrafficConfig::default_for(2);
+        let mut sampler = ArrivalSampler::new(&cfg);
+        let mut rng = Rng::new(7);
+        let mut reference = Rng::new(7);
+        for turn in 0..200 {
+            let arr = sampler.sample(&mut rng);
+            // Replay the legacy draw order by hand.
+            let chance = reference.chance(cfg.followup);
+            let idle_len = sampler.idle[0].len() + usize::from(arr.followup);
+            let reuse = chance && idle_len > 0;
+            if reuse {
+                reference.range(0, idle_len);
+            }
+            let l_in = cfg.input_tokens.sample(&mut reference);
+            let l_out = cfg.output_tokens.sample(&mut reference);
+            assert_eq!((arr.followup, arr.input_tokens, arr.output_tokens), (reuse, l_in, l_out));
+            assert_eq!(arr.class, 0);
+            // Retire every third turn so the idle set grows and follow-ups
+            // actually occur.
+            if turn % 3 == 0 {
+                sampler.release(arr.session, arr.class);
+            }
+        }
+    }
+
+    #[test]
+    fn followups_stay_within_their_class() {
+        let mut cfg = TrafficConfig::default_for(2);
+        cfg.workload = Some(two_class_mix());
+        let mut sampler = ArrivalSampler::new(&cfg);
+        let mut rng = Rng::new(42);
+        let mut class_of = std::collections::HashMap::new();
+        for _ in 0..2000 {
+            let arr = sampler.sample(&mut rng);
+            if let Some(prev) = class_of.get(&arr.session) {
+                assert_eq!(*prev, arr.class, "session {} switched class", arr.session);
+                assert!(arr.followup);
+            }
+            class_of.insert(arr.session, arr.class);
+            sampler.release(arr.session, arr.class);
+        }
+        // Both fresh and follow-up paths were exercised for class b.
+        assert!(class_of.values().filter(|c| **c == 1).count() > 50);
+    }
+
+    #[test]
+    fn mix_toml_round_trips() {
+        let mix = two_class_mix();
+        let doc = crate::config::toml_lite::parse(&mix.to_toml()).unwrap();
+        let back = WorkloadMix::from_spec(&WorkloadSpec::from_doc(&doc).unwrap()).unwrap();
+        assert_eq!(mix, back);
+    }
+
+    #[test]
+    fn slo_target_met_semantics() {
+        let slo = SloTarget { ttft: 0.1, tpot: 0.01 };
+        assert!(slo.met(0.1, Some(0.01)));
+        assert!(!slo.met(0.11, Some(0.005)));
+        assert!(!slo.met(0.05, Some(0.02)));
+        assert!(slo.met(0.05, None), "single-token outputs have no TPOT");
+        assert!(SloTarget::NONE.met(1e9, Some(1e9)));
+    }
+}

@@ -24,13 +24,16 @@
 //! * [`area`] — the peri-under-array area model (Table II).
 //! * [`controller`] — SSD-controller ARM cores (LN/softmax) and PCIe.
 //! * [`coordinator`] — the serving subsystem: a *pool* of flash-PIM
-//!   devices behind a scheduler (round-robin / least-loaded policies, KV
-//!   affinity, bounded queues with backpressure), the request router and
-//!   offload logic, a deterministic event-driven closed-loop Poisson
-//!   traffic simulator (`serve-sim`, bit-identical reports per seed) with
-//!   a legacy direct-replay cross-check, arrival-rate sweeps, the
-//!   functional generation loop, and serving metrics (TTFT/TPOT/latency
-//!   percentiles, per-device utilization).
+//!   devices behind a scheduler (round-robin / least-loaded / SLO-aware
+//!   policies, KV affinity, bounded queues with backpressure), the
+//!   request router and offload logic, a deterministic event-driven
+//!   closed-loop Poisson traffic simulator (`serve-sim`, bit-identical
+//!   reports per seed) with a legacy direct-replay cross-check,
+//!   multi-class workload mixes with per-class SLO targets
+//!   (`serve-sim --workload`, see `docs/WORKLOADS.md`), arrival-rate
+//!   sweeps with SLO frontiers, the functional generation loop, and
+//!   serving metrics (TTFT/TPOT/latency percentiles, per-class SLO
+//!   attainment, per-device utilization).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes the functional model.
 //! * [`exp`] — one driver per paper figure/table, shared by the CLI and the

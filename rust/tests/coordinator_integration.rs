@@ -91,6 +91,7 @@ fn traffic(devices: usize, rate: f64, requests: usize, seed: u64) -> TrafficConf
         queue_capacity: 64,
         followup: 0.35,
         seed,
+        workload: None,
     }
 }
 

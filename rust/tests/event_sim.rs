@@ -25,6 +25,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         queue_capacity: 32,
         followup: 0.5,
         seed,
+        workload: None,
     }
 }
 
@@ -66,6 +67,7 @@ fn event_backend_matches_direct_backend_plus_pcie_upload() {
         queue_capacity: 64,
         followup: 0.0, // fresh sessions only: identical routing either way
         seed: 11,
+        workload: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
@@ -115,6 +117,7 @@ fn latency_percentiles_within_5pct_of_direct_backend_on_10k_trace() {
         queue_capacity: 64,
         followup: 0.3,
         seed: 123,
+        workload: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
@@ -141,6 +144,7 @@ fn event_backend_completes_100k_requests_single_threaded() {
         queue_capacity: 64,
         followup: 0.4,
         seed: 7,
+        workload: None,
     };
     let rep =
         run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg);
@@ -172,6 +176,7 @@ fn ttft_decomposes_into_upload_write_and_first_step() {
         queue_capacity: 4,
         followup: 0.0,
         seed: 3,
+        workload: None,
     };
     let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     assert_eq!(rep.accepted(), 1);

@@ -73,6 +73,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         queue_capacity: 32,
         followup: 0.5,
         seed,
+        workload: None,
     }
 }
 
@@ -105,6 +106,7 @@ fn serve_sim_completes_100k_requests() {
         queue_capacity: 64,
         followup: 0.4,
         seed: 7,
+        workload: None,
     };
     let rep = run_traffic_with_table(
         &sys,

@@ -1,0 +1,226 @@
+//! The multi-class workload subsystem end to end: same-seed bit-identical
+//! per-class reports for every scheduler policy on both backends, class
+//! shares tracking the mix weights on a 10k trace, the SLO-aware policy
+//! beating round-robin on an adversarial chat + summarize-long blend, and
+//! a custom mix round-tripping through its TOML file form.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::config::SystemConfig;
+use flashpim::coordinator::{
+    LenRange, policy_from_name, PoolReport, run_traffic_events, run_traffic_with_table, SloTarget,
+    TrafficConfig, WorkloadClass, WorkloadMix,
+};
+use flashpim::llm::model_config::{ModelShape, OptModel};
+use flashpim::llm::LatencyTable;
+use std::sync::OnceLock;
+
+/// One shared (system, model, latency table) for the whole file — the
+/// table build dominates test wall-clock and is identical everywhere.
+fn setup() -> &'static (SystemConfig, ModelShape, LatencyTable) {
+    static SHARED: OnceLock<(SystemConfig, ModelShape, LatencyTable)> = OnceLock::new();
+    SHARED.get_or_init(|| {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        (sys, model, table)
+    })
+}
+
+fn run_events(cfg: &TrafficConfig, policy: &str) -> PoolReport {
+    let (sys, model, table) = setup();
+    run_traffic_events(sys, model, table, policy_from_name(policy).unwrap(), cfg)
+}
+
+fn base_cfg(mix: WorkloadMix, requests: usize, rate: f64, seed: u64) -> TrafficConfig {
+    let mut cfg = TrafficConfig::default_for(4);
+    cfg.requests = requests;
+    cfg.rate = rate;
+    cfg.seed = seed;
+    cfg.workload = Some(mix);
+    cfg
+}
+
+#[test]
+fn per_class_reports_bit_identical_for_all_three_policies() {
+    // Acceptance-shaped: a preset mix with follow-up chains, every
+    // scheduler policy, same seed twice -> byte-identical reports with a
+    // populated per-class section.
+    let mix = WorkloadMix::preset("agentic-burst").expect("built-in preset");
+    let cfg = base_cfg(mix, 300, 20.0, 9);
+    for policy in ["round-robin", "least-loaded", "slo-aware"] {
+        let a = run_events(&cfg, policy);
+        let b = run_events(&cfg, policy);
+        assert_eq!(a, b, "{policy}: same seed must reproduce the report byte for byte");
+        assert_eq!(a.policy, policy);
+        let classes = a.class_reports();
+        assert_eq!(classes.len(), 2, "{policy}: agentic-burst has two classes");
+        assert_eq!(classes.iter().map(|c| c.arrivals).sum::<usize>(), 300);
+        for c in &classes {
+            assert!(c.arrivals > 0, "{policy}: class {} never arrived", c.name);
+            assert!(c.ttft.n > 0 && c.ttft.p95 > 0.0, "{policy}: {} has no TTFT", c.name);
+            assert!(c.latency.p50 <= c.latency.p95, "{policy}: {} percentiles", c.name);
+            assert!((0.0..=1.0).contains(&c.slo_attainment));
+        }
+        // The rendered report carries the per-class SLO section.
+        let rendered = a.render();
+        assert!(rendered.contains("workload mix: agentic-burst"));
+        assert!(rendered.contains("SLO met") && rendered.contains("agentic"));
+    }
+    // A different seed must change the trace.
+    let mut other = cfg.clone();
+    other.seed = 10;
+    assert_ne!(run_events(&cfg, "slo-aware"), run_events(&other, "slo-aware"));
+}
+
+#[test]
+fn direct_backend_carries_classes_and_stays_deterministic() {
+    let (sys, model, table) = setup();
+    let mix = WorkloadMix::preset("chat").expect("built-in preset");
+    let cfg = base_cfg(mix, 200, 15.0, 21);
+    let run = || {
+        run_traffic_with_table(sys, model, table, policy_from_name("slo-aware").unwrap(), &cfg)
+    };
+    let a = run();
+    assert_eq!(a, run(), "direct backend must be deterministic under a workload");
+    assert_eq!(a.backend, "direct");
+    let classes = a.class_reports();
+    assert_eq!(classes.len(), 1);
+    assert_eq!(classes[0].name, "chat");
+    assert_eq!(classes[0].arrivals, 200);
+}
+
+#[test]
+fn class_shares_track_mix_weights_on_10k_trace() {
+    // Tiny shapes keep a 10k-request trace fast; shares are what's under
+    // test. 0.7/0.3 split, n = 10_000 -> sigma ~ 0.0046, so a 0.03
+    // tolerance sits beyond 6 sigma of the deterministic draw.
+    let mix = WorkloadMix::new(
+        "split",
+        vec![
+            WorkloadClass::new(
+                "heavy",
+                0.7,
+                LenRange::new(8, 16),
+                LenRange::new(2, 4),
+                0.0,
+                SloTarget::NONE,
+            ),
+            WorkloadClass::new(
+                "light",
+                0.3,
+                LenRange::new(16, 32),
+                LenRange::new(2, 4),
+                0.0,
+                SloTarget::NONE,
+            ),
+        ],
+    )
+    .unwrap();
+    let cfg = base_cfg(mix, 10_000, 400.0, 5);
+    let rep = run_events(&cfg, "least-loaded");
+    assert_eq!(rep.outcomes.len(), 10_000);
+    let heavy = rep.outcomes.iter().filter(|o| o.class == 0).count() as f64 / 10_000.0;
+    assert!((heavy - 0.7).abs() < 0.03, "class share drifted: {heavy} vs 0.7");
+    // The per-class report sees the same partition.
+    let classes = rep.class_reports();
+    assert_eq!(classes[0].arrivals + classes[1].arrivals, 10_000);
+    assert!((classes[0].share - 0.7).abs() < 1e-12);
+    // Every outcome's lengths come from its class's ranges.
+    for o in rep.outcomes.iter().filter(|r| !r.rejected) {
+        let range = if o.class == 0 { 8..=16 } else { 16..=32 };
+        assert!(range.contains(&o.input_tokens), "class {} drew {}", o.class, o.input_tokens);
+    }
+}
+
+/// The adversarial scenario the SLO-aware policy exists for: interactive
+/// chat turns (tight TTFT) blended with 1K+-token summarization prefills
+/// (loose TTFT). Round-robin routinely parks a chat arrival behind a
+/// ~400 ms summarize job and blows its 150 ms target; the SLO-aware
+/// bin-packer concentrates the loose-deadline work and keeps chat-feasible
+/// devices available.
+#[test]
+fn slo_aware_beats_round_robin_on_adversarial_mix() {
+    let mix = WorkloadMix::new(
+        "adversarial",
+        vec![
+            WorkloadClass::new(
+                "chat",
+                0.6,
+                LenRange::new(64, 128),
+                LenRange::new(16, 32),
+                0.0,
+                SloTarget { ttft: 0.150, tpot: 0.010 },
+            ),
+            WorkloadClass::new(
+                "summarize-long",
+                0.4,
+                LenRange::new(1024, 1536),
+                LenRange::new(96, 160),
+                0.0,
+                SloTarget { ttft: 5.0, tpot: 0.010 },
+            ),
+        ],
+    )
+    .unwrap();
+    let cfg = base_cfg(mix, 2400, 14.0, 11);
+    let rr = run_events(&cfg, "round-robin");
+    let slo = run_events(&cfg, "slo-aware");
+    let chat = |rep: &PoolReport| rep.class_reports()[0].clone();
+    let overall = |rep: &PoolReport| {
+        let cs = rep.class_reports();
+        cs.iter().map(|c| c.slo_attainment * c.arrivals as f64).sum::<f64>()
+            / cs.iter().map(|c| c.arrivals as f64).sum::<f64>()
+    };
+    let (rr_chat, slo_chat) = (chat(&rr), chat(&slo));
+    assert_eq!(rr_chat.name, "chat");
+    assert!(
+        slo_chat.slo_attainment > rr_chat.slo_attainment,
+        "slo-aware chat attainment {:.3} must beat round-robin's {:.3}",
+        slo_chat.slo_attainment,
+        rr_chat.slo_attainment
+    );
+    assert!(
+        overall(&slo) >= overall(&rr),
+        "slo-aware overall attainment {:.3} must not trail round-robin's {:.3}",
+        overall(&slo),
+        overall(&rr)
+    );
+}
+
+#[test]
+fn custom_mix_round_trips_through_a_toml_file() {
+    // Class names ascend so the parse (which orders sections) reproduces
+    // the construction order exactly.
+    let mix = WorkloadMix::new(
+        "custom",
+        vec![
+            WorkloadClass::new(
+                "alpha",
+                2.0,
+                LenRange::new(32, 64),
+                LenRange::new(4, 8),
+                0.25,
+                SloTarget { ttft: 0.2, tpot: 0.005 },
+            ),
+            WorkloadClass::new(
+                "beta",
+                1.0,
+                LenRange::new(256, 512),
+                LenRange::new(32, 64),
+                0.0,
+                SloTarget::NONE,
+            ),
+        ],
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join("flashpim_workload_roundtrip.toml");
+    std::fs::write(&path, mix.to_toml()).expect("write temp workload file");
+    let loaded = WorkloadMix::from_file(&path).expect("parse written mix");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(mix, loaded, "TOML round-trip must reproduce the mix exactly");
+    // And a run under the loaded mix behaves identically to the original.
+    let a = run_events(&base_cfg(mix, 80, 20.0, 3), "least-loaded");
+    let b = run_events(&base_cfg(loaded, 80, 20.0, 3), "least-loaded");
+    assert_eq!(a, b);
+}

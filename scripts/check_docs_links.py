@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Offline checker for relative links and anchors in the repo's Markdown.
+
+Scans README.md and docs/*.md for inline Markdown links `[text](target)`
+and verifies that:
+
+  * relative file targets exist (files or directories, after stripping a
+    `#fragment` and URL-decoding `%20`-style escapes);
+  * `#fragment` targets (same-file or cross-file) match a heading in the
+    target document, using GitHub's anchor slugification.
+
+External links (http/https/mailto) are ignored — this runs offline in CI
+(`make check-docs-links`, wired into the docs job). Exit code 0 when every
+link resolves, 1 otherwise, with one line per broken link.
+"""
+
+import re
+import sys
+import urllib.parse
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+# Inline links/images: [text](target) — tolerates one level of nested
+# brackets in the text (e.g. [`foo [bar]`](x)); skips fenced code blocks.
+LINK = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def strip_fenced_code(text: str) -> str:
+    """Blank out fenced code blocks so example links are not checked."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            out.append("")
+            continue
+        out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor rule: strip markup-ish punctuation,
+    lowercase, spaces to hyphens (hyphens kept, duplicates NOT collapsed)."""
+    # Inline code/emphasis markers vanish; `[text](url)` keeps only text.
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    heading = heading.replace("`", "").replace("*", "")
+    slug = []
+    for ch in heading.lower():
+        if ch.isalnum() or ch in "-_ ":
+            slug.append("-" if ch == " " else ch)
+    return "".join(slug)
+
+
+def anchors_of(path: Path) -> set:
+    seen, out = {}, set()
+    for line in strip_fenced_code(path.read_text(encoding="utf-8")).splitlines():
+        m = HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def main() -> int:
+    anchor_cache = {}
+    errors = []
+    for doc in DOCS:
+        if not doc.exists():
+            errors.append(f"{doc}: listed document is missing")
+            continue
+        text = strip_fenced_code(doc.read_text(encoding="utf-8"))
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            path_part, _, fragment = target.partition("#")
+            path_part = urllib.parse.unquote(path_part)
+            resolved = (doc.parent / path_part).resolve() if path_part else doc
+            rel = doc.relative_to(REPO)
+            if path_part and not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if fragment:
+                if resolved.is_dir() or resolved.suffix.lower() != ".md":
+                    continue  # only Markdown targets carry heading anchors
+                if resolved not in anchor_cache:
+                    anchor_cache[resolved] = anchors_of(resolved)
+                if fragment.lower() not in anchor_cache[resolved]:
+                    errors.append(f"{rel}: broken anchor -> {target}")
+    for e in errors:
+        print(e)
+    checked = ", ".join(str(d.relative_to(REPO)) for d in DOCS if d.exists())
+    if errors:
+        print(f"{len(errors)} broken link(s) across {checked}")
+        return 1
+    print(f"docs links OK ({checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
