@@ -1,7 +1,7 @@
 # Local targets mirroring the CI jobs (.github/workflows/ci.yml) exactly,
 # so a green `make ci` means a green pipeline.
 
-.PHONY: build test fmt clippy lint bench-check doc doc-test check-docs-links ci
+.PHONY: build test fmt clippy lint bench-check bench-json perf-smoke doc doc-test check-docs-links ci
 
 build:
 	cargo build --release --workspace
@@ -19,6 +19,18 @@ lint: fmt clippy
 
 bench-check:
 	cargo bench --no-run --workspace
+
+# Machine-readable serving-perf metrics (events/s, requests/s, sweep
+# wall-clock). CI runs this on a reduced budget (BENCH_ITERS /
+# BENCH_REQUESTS / BENCH_SWEEP_REQUESTS env knobs) and uploads the JSON.
+# Absolute path: cargo runs bench binaries with cwd = the package root
+# (rust/), not the workspace root.
+bench-json:
+	cargo bench --bench perf_hotpath -- --json $(CURDIR)/BENCH_serving.json
+
+# 1M-request bit-identity smoke test (ignored by default in `make test`).
+perf-smoke:
+	cargo test --release --test perf_equivalence -- --ignored --nocapture
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace

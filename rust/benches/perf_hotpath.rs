@@ -1,16 +1,31 @@
 //! Perf bench: the L3 hot paths — DES engine event throughput, resource
-//! scheduling, tiling search, TPOT estimation, serving simulation, and
-//! (when artifacts exist) the PJRT decode step. Tracked in
-//! EXPERIMENTS.md §Perf.
+//! scheduling, tiling search, TPOT estimation, the serving event backend
+//! (decode coalescing, million-request traces, parallel frontier sweeps),
+//! and (when artifacts exist) the PJRT decode step. The design behind the
+//! serving numbers is documented in docs/ARCHITECTURE.md §"Performance
+//! architecture".
+//!
+//! Machine-readable output: pass `--json PATH` (as `make bench-json`
+//! does) to write the headline metrics — events/s, requests/s, sweep
+//! wall-clock — as `BENCH_serving.json` for per-PR tracking. Budget
+//! knobs for CI: `BENCH_ITERS` (measured iterations of the serving
+//! benches), `BENCH_REQUESTS` (big-trace size, default 1M),
+//! `BENCH_SWEEP_REQUESTS` (requests per sweep point).
 
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
-use flashpim::coordinator::{simulate, Workload};
+use flashpim::coordinator::{
+    DecodeMode, policy_from_name, run_traffic_events_counted, simulate, sweep_rates,
+    TrafficConfig, Workload, WorkloadMix,
+};
 use flashpim::gpu::rtx4090x4_vllm;
 use flashpim::llm::model_config::OptModel;
 use flashpim::llm::schedule::TokenSchedule;
+use flashpim::llm::LatencyTable;
 use flashpim::sim::{Engine, EventQueue, Model, Resource, SimTime};
-use flashpim::util::benchkit::{bench, quick, section, BenchConfig};
+use flashpim::util::benchkit::{bench, quick, section, BenchConfig, JsonEmitter};
+use std::path::PathBuf;
+use std::time::Duration;
 
 /// Self-scheduling event storm for raw queue throughput.
 struct Storm {
@@ -32,7 +47,25 @@ impl Model for Storm {
     }
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `--json PATH` from the bench's own arguments; every other argument
+/// (e.g. the `--bench` cargo appends) is ignored.
+fn json_path() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next().map(PathBuf::from);
+        }
+    }
+    None
+}
+
 fn main() {
+    let mut json = JsonEmitter::new();
+
     section("L3 hot paths");
 
     const EVENTS: u64 = 200_000;
@@ -47,6 +80,7 @@ fn main() {
         "  -> {:.1} M events/s",
         EVENTS as f64 / r.summary.mean / 1e6
     );
+    json.metric("des_storm_events_per_s", EVENTS as f64 / r.summary.mean, "events/s");
 
     let r = bench("resource timeline 1M acquires", &BenchConfig::default(), || {
         let mut res = Resource::new();
@@ -75,6 +109,74 @@ fn main() {
         simulate(&sys, &OptModel::Opt6_7b.shape(), &rtx4090x4_vllm(), &wl)
     });
 
+    section("Serving event backend (decode coalescing, streaming sweeps)");
+
+    let iters = env_usize("BENCH_ITERS", 5);
+    let scfg = BenchConfig { warmup_iters: 1, iters, max_total: Duration::from_secs(60) };
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let ll = || policy_from_name("least-loaded").expect("known policy");
+
+    // Event accounting: the same 20k-request trace under both decode
+    // modes. The reports are bit-identical; only the event count differs.
+    let mut acct = TrafficConfig::default_for(4);
+    acct.requests = 20_000;
+    acct.rate = 30.0;
+    let (rep_c, ev_coalesced) =
+        run_traffic_events_counted(&sys, &model, &table, ll(), &acct, DecodeMode::Coalesced);
+    let (rep_t, ev_per_token) =
+        run_traffic_events_counted(&sys, &model, &table, ll(), &acct, DecodeMode::PerToken);
+    assert_eq!(rep_c, rep_t, "decode modes must agree bit for bit");
+    let ratio = ev_per_token as f64 / ev_coalesced as f64;
+    println!(
+        "events per 20k-request run: coalesced {ev_coalesced} vs per-token {ev_per_token} \
+         ({ratio:.1}x fewer)"
+    );
+    json.metric("serving_events_coalesced_per_run", ev_coalesced as f64, "events");
+    json.metric("serving_events_per_token_per_run", ev_per_token as f64, "events");
+    json.metric("serving_event_coalescing_ratio", ratio, "x");
+
+    // Headline trace: BENCH_REQUESTS (default 1M) requests end to end.
+    // The trace is deterministic, so the event count is captured from the
+    // timed runs themselves — no extra untimed pass.
+    let requests = env_usize("BENCH_REQUESTS", 1_000_000);
+    let mut big = TrafficConfig::default_for(8);
+    big.requests = requests;
+    big.rate = 60.0;
+    let mut big_events = 0u64;
+    let name = format!("serving trace: {requests} requests (coalesced)");
+    let r = bench(&name, &scfg, || {
+        let (rep, ev) =
+            run_traffic_events_counted(&sys, &model, &table, ll(), &big, DecodeMode::Coalesced);
+        big_events = ev;
+        rep
+    });
+    r.print();
+    let req_per_s = requests as f64 / r.summary.mean;
+    let ev_per_s = big_events as f64 / r.summary.mean;
+    println!("  -> {:.2} M requests/s, {:.2} M engine events/s", req_per_s / 1e6, ev_per_s / 1e6);
+    json.result(&r);
+    json.metric("serving_trace_requests", requests as f64, "requests");
+    json.metric("serving_trace_requests_per_s", req_per_s, "requests/s");
+    json.metric("serving_trace_events_per_s", ev_per_s, "events/s");
+
+    // Full SLO-frontier sweep: every policy x 8 rates on a multi-class
+    // mix, fanned out on scoped threads with streaming sinks.
+    let mut sw = TrafficConfig::default_for(4);
+    sw.requests = env_usize("BENCH_SWEEP_REQUESTS", 20_000);
+    sw.workload = Some(WorkloadMix::preset("agentic-burst").expect("built-in preset"));
+    let rates: Vec<f64> = (1..=8).map(|i| 4.0 * i as f64).collect();
+    let all = ["round-robin", "least-loaded", "slo-aware"];
+    let name = format!("frontier sweep: 3 policies x 8 rates x {} req", sw.requests);
+    let r = bench(&name, &scfg, || {
+        sweep_rates(&sys, &model, &table, &sw, &rates, &all).expect("valid sweep grid")
+    });
+    r.print();
+    println!("  -> {:.2} s per full 24-point sweep", r.summary.mean);
+    json.result(&r);
+    json.metric("sweep_frontier_wall_s", r.summary.mean, "s");
+    json.metric("sweep_frontier_points", (rates.len() * all.len()) as f64, "points");
+
     // Functional decode step, only when artifacts are present.
     if flashpim::runtime::ArtifactBundle::available() {
         section("PJRT decode step (artifacts found)");
@@ -91,5 +193,10 @@ fn main() {
         println!("  -> {:.1} tok/s functional", 1.0 / r.summary.mean);
     } else {
         println!("(artifacts missing — run `make artifacts` for the PJRT decode bench)");
+    }
+
+    if let Some(path) = json_path() {
+        json.write(&path).expect("write bench JSON");
+        println!("\nwrote {} bench metrics to {}", json.len(), path.display());
     }
 }

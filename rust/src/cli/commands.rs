@@ -4,9 +4,9 @@ use super::args::Args;
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::{
-    LenRange, policy_from_name, render_slo_frontier, render_sweep, run_traffic_events,
-    run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded, TrafficConfig, Workload,
-    WorkloadMix,
+    DecodeMode, LenRange, policy_from_name, render_slo_frontier, render_sweep,
+    run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded,
+    TrafficConfig, Workload, WorkloadMix,
 };
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
@@ -47,8 +47,10 @@ tools:
                        per-device utilization). Runs on the deterministic
                        event-driven simulator by default (bit-identical
                        reports per seed, prefill prices the PCIe KV
-                       upload); --threaded selects the legacy direct
-                       cross-check backend. Also --policy
+                       upload, decode coalesced to one event per request);
+                       --per-token replays the per-token event chain (the
+                       bit-identity oracle), --threaded selects the legacy
+                       direct cross-check backend. Also --policy
                        round-robin|least-loaded|slo-aware, --queue-cap,
                        --input-min/max, --output-min/max, --followup,
                        --model, --seed. --workload
@@ -59,7 +61,9 @@ tools:
                        docs/WORKLOADS.md). With --sweep, runs every
                        arrival rate (--rates 2,4,8 or --rate-min/
                        --rate-max/--rate-steps) under ALL policies
-                       against one shared latency table and prints the
+                       against one shared latency table, fanning points
+                       out across cores (deterministic: output is
+                       byte-equal to the sequential loop), and prints the
                        throughput-latency curve — plus, with --workload,
                        the max rate sustaining >=99% SLO attainment per
                        class (--policy and --rate are ignored in sweep
@@ -244,7 +248,14 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 
     // Validate sweep/policy flags before paying for the table build.
     let threaded = args.bool_flag("threaded");
+    let per_token = args.bool_flag("per-token");
+    if per_token && threaded {
+        bail!("--per-token is the event backend's oracle mode; it conflicts with --threaded");
+    }
     let sweep = args.bool_flag("sweep");
+    if per_token && sweep {
+        bail!("--per-token applies to single runs (sweeps always run coalesced)");
+    }
     let rates = if sweep { Some(sweep_rate_list(args)?) } else { None };
     let policy = if sweep {
         None // sweep mode runs every policy; --policy is ignored
@@ -290,7 +301,8 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let report = if threaded {
         run_traffic_with_table(&sys, &model.shape(), &table, policy, &cfg)
     } else {
-        run_traffic_events(&sys, &model.shape(), &table, policy, &cfg)
+        let mode = if per_token { DecodeMode::PerToken } else { DecodeMode::Coalesced };
+        run_traffic_events_mode(&sys, &model.shape(), &table, policy, &cfg, mode)
     };
     print!("{}", report.render());
     Ok(())
@@ -409,6 +421,27 @@ mod tests {
             "8".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn serve_sim_per_token_oracle_runs_and_rejects_conflicts() {
+        run(vec![
+            "serve-sim".into(),
+            "--per-token".into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "12".into(),
+            "--output-min".into(),
+            "4".into(),
+            "--output-max".into(),
+            "8".into(),
+        ])
+        .unwrap();
+        assert!(run(vec!["serve-sim".into(), "--per-token".into(), "--threaded".into()]).is_err());
+        assert!(run(vec!["serve-sim".into(), "--per-token".into(), "--sweep".into()]).is_err());
     }
 
     #[test]

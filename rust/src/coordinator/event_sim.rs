@@ -8,7 +8,7 @@
 //! [`PoolReport`]s, and a single thread replays million-request traces —
 //! no locks, no thread-timing jitter, no per-worker state.
 //!
-//! Events, in the life of one request:
+//! Events, in the life of one request (default [`DecodeMode::Coalesced`]):
 //!
 //! 1. [`ServingEvent::Arrive`] — Poisson arrival. Samples the session
 //!    (fresh or follow-up), prompt/output lengths, then runs admission:
@@ -17,39 +17,56 @@
 //!    backpressure check, and SLC KV admission with idle-LRU eviction.
 //!    Rejected arrivals surface immediately as shed load. The handler
 //!    reschedules the next arrival, closing the loop.
-//! 2. [`ServingEvent::PrefillDone`] — the prefill phase finished on a
-//!    device: the GPU-computed prompt KV crossed the host link (priced by
-//!    [`PcieLink::transfer_time`] — the direct backend ignores this
-//!    term), landed in SLC ([`initial_kv_write_time`]), and the first
-//!    decode step produced the first token.
-//! 3. [`ServingEvent::TokenDone`] — one decode step completed; its
-//!    duration came from the shared immutable [`LatencyTable`] at the
-//!    session's current context length.
-//! 4. [`ServingEvent::Retire`] — the session's turn is over: the outcome
+//! 2. [`ServingEvent::DecodeDone`] — the **whole turn** finished: PCIe KV
+//!    upload ([`PcieLink::transfer_time`]), SLC prompt write
+//!    ([`initial_kv_write_time`]), and every decode step. Once service
+//!    starts, each remaining token time is a pure function of the
+//!    immutable [`LatencyTable`] and the FIFO device discipline, so the
+//!    first-token instant and the total service time are computed
+//!    analytically at service start and carried on this one event —
+//!    instead of one [`ServingEvent::TokenDone`] heap event per token.
+//!    Engine events drop from `Σ output_tokens` (hundreds per request)
+//!    to O(1) per request; see `docs/ARCHITECTURE.md` §Performance
+//!    architecture for the invariant that makes this sound and exact.
+//! 3. [`ServingEvent::Retire`] — the session's turn is over: the outcome
 //!    is recorded, the session becomes eligible for follow-up turns (and
 //!    for idle eviction), and the device starts its next queued job.
 //!
+//! [`DecodeMode::PerToken`] keeps the original event chain —
+//! [`ServingEvent::PrefillDone`] then one [`ServingEvent::TokenDone`] per
+//! remaining token — as the cross-check oracle: `tests/perf_equivalence.rs`
+//! asserts both modes produce byte-identical reports, and
+//! `serve-sim --per-token` exposes the oracle on the CLI.
+//!
 //! The legacy direct-replay loop
 //! ([`run_traffic_with_table`][super::loadgen::run_traffic_with_table])
-//! is kept as a cross-check backend (`serve-sim --threaded` selects it,
-//! and its rate sweep still fans out on scoped threads). Both backends
-//! draw from the RNG in the same structural order (gap, class pick,
-//! follow-up chance, session pick, lengths — one shared
-//! `workload::ArrivalSampler`), so with follow-ups disabled their traces agree
-//! *pointwise* up to the PCIe upload term the event model adds (asserted
-//! in `tests/event_sim.rs`); with follow-ups enabled the two idle-session
-//! sets evolve on slightly different timelines, so agreement is
-//! statistical (percentiles within a few percent), not pointwise.
+//! is kept as a second cross-check backend (`serve-sim --threaded`
+//! selects it). Both backends draw from the RNG in the same structural
+//! order (gap, class pick, follow-up chance, session pick, lengths — one
+//! shared `workload::ArrivalSampler`), so with follow-ups disabled their
+//! traces agree *pointwise* up to the PCIe upload term the event model
+//! adds (asserted in `tests/event_sim.rs`); with follow-ups enabled the
+//! two idle-session sets evolve on slightly different timelines, so
+//! agreement is statistical (percentiles within a few percent), not
+//! pointwise.
 //!
 //! Multi-class workloads ([`super::workload::WorkloadMix`] via
 //! [`TrafficConfig::workload`]) ride the same machinery: the sampler
 //! draws each arrival's class, class identity lands in every
 //! [`SimRequest`], and the report gains per-class percentiles and SLO
 //! attainment.
+//!
+//! Outcomes flow through an [`OutcomeSink`]: [`run_traffic_events`]
+//! materializes them ([`CollectSink`]) into a full report, while the
+//! rate sweep's [`run_traffic_point`] folds them incrementally
+//! ([`StreamingSink`]) into one [`SweepPoint`] per (policy, rate) pair —
+//! no per-point outcome vectors.
 
 use super::loadgen::{SimRequest, TrafficConfig};
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
+use super::sink::{CollectSink, OutcomeSink, StreamingSink};
+use super::sweep::SweepPoint;
 use super::workload::ArrivalSampler;
 use crate::config::SystemConfig;
 use crate::controller::PcieLink;
@@ -60,6 +77,19 @@ use crate::sim::{Engine, EventQueue, Model, SimTime};
 use crate::util::rng::Rng;
 use std::collections::{HashMap, VecDeque};
 
+/// How the decode phase is driven on the event queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// One [`ServingEvent::DecodeDone`] per request, carrying the
+    /// analytically precomputed first-token time — O(1) engine events
+    /// per request. The default.
+    #[default]
+    Coalesced,
+    /// One [`ServingEvent::TokenDone`] per decoded token — the original
+    /// event chain, kept as the bit-identity cross-check oracle.
+    PerToken,
+}
+
 /// Event payload of the serving model. One variant per state change in a
 /// request's life; `device` indexes the pool (each device runs at most
 /// one job, so the index identifies the job).
@@ -67,10 +97,15 @@ use std::collections::{HashMap, VecDeque};
 pub enum ServingEvent {
     /// Next Poisson arrival (self-rescheduling).
     Arrive,
-    /// PCIe KV upload + SLC write + first decode step finished.
+    /// PCIe KV upload + SLC write + first decode step finished
+    /// ([`DecodeMode::PerToken`] only).
     PrefillDone { device: usize },
-    /// One decode step finished.
+    /// One decode step finished ([`DecodeMode::PerToken`] only).
     TokenDone { device: usize },
+    /// The whole service finished ([`DecodeMode::Coalesced`] only):
+    /// `first` is the precomputed first-token instant (upload + SLC
+    /// write + first decode step after service start).
+    DecodeDone { device: usize, first: SimTime },
     /// Turn complete: record the outcome, free the device.
     Retire { device: usize },
 }
@@ -113,7 +148,8 @@ struct Device {
     /// job's full service is priced from stateless models at admission,
     /// and the queue is FIFO and work-conserving, so this *prediction*
     /// tracks the event timeline exactly (debug-asserted at retirement) —
-    /// it is what schedulers see as [`DeviceStatus::est_wait`].
+    /// it is what schedulers see as [`DeviceStatus::est_wait`]. The same
+    /// property is what makes [`DecodeMode::Coalesced`] exact.
     free_at: SimTime,
 }
 
@@ -125,11 +161,13 @@ impl Device {
     }
 }
 
-/// The closed-loop serving simulation as a [`Model`] for [`Engine`].
+/// The closed-loop serving simulation as a [`Model`] for [`Engine`],
+/// generic over where finished outcomes go ([`OutcomeSink`]).
 ///
-/// Use [`run_traffic_events`] unless you need to drive the engine
+/// Use [`run_traffic_events`] (full report) or [`run_traffic_point`]
+/// (streamed sweep aggregates) unless you need to drive the engine
 /// yourself (e.g. to interleave other models or stop early).
-pub struct ServingModel<'a> {
+pub struct ServingModel<'a, S: OutcomeSink = CollectSink> {
     cfg: TrafficConfig,
     sys: &'a SystemConfig,
     model: &'a ModelShape,
@@ -139,6 +177,7 @@ pub struct ServingModel<'a> {
     /// Shared arrival-sampling path (class pick, follow-up decision,
     /// session choice, lengths) — also owns the per-class idle lists.
     sampler: ArrivalSampler,
+    mode: DecodeMode,
     devices: Vec<Device>,
     /// Arrival clock accumulated in f64 seconds — the same accumulation
     /// the direct backend uses, so both backends sample identical
@@ -148,17 +187,81 @@ pub struct ServingModel<'a> {
     /// Retirement time per finished session; entries are removed when the
     /// session starts a new turn. Feeds oldest-first idle eviction.
     completed_at: HashMap<u64, SimTime>,
-    outcomes: Vec<SimRequest>,
+    sink: S,
 }
 
-impl<'a> ServingModel<'a> {
+impl<'a> ServingModel<'a, CollectSink> {
+    /// The default model: coalesced decode, every outcome materialized.
     pub fn new(
         sys: &'a SystemConfig,
         model: &'a ModelShape,
         table: &'a LatencyTable,
         policy: Box<dyn Scheduler + Send>,
         cfg: &TrafficConfig,
-    ) -> ServingModel<'a> {
+    ) -> ServingModel<'a, CollectSink> {
+        ServingModel::with_sink(
+            sys,
+            model,
+            table,
+            policy,
+            cfg,
+            DecodeMode::Coalesced,
+            CollectSink::with_capacity(cfg.requests),
+        )
+    }
+
+    /// Reduce the finished simulation to a [`PoolReport`]. Outcomes are
+    /// sorted into arrival (id) order to match the direct backend.
+    pub fn into_report(mut self) -> PoolReport {
+        self.sink.outcomes.sort_by_key(|o| o.id);
+        let makespan = self
+            .sink
+            .outcomes
+            .iter()
+            .filter(|o| !o.rejected)
+            .map(|o| o.completed)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        let device_utilization = self
+            .devices
+            .iter()
+            .map(|d| if makespan == SimTime::ZERO { 0.0 } else { d.busy.secs() / makespan.secs() })
+            .collect();
+        let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
+        PoolReport {
+            backend: "event",
+            policy: self.router.policy_name().to_string(),
+            devices: self.cfg.devices,
+            offered_rate: self.cfg.rate,
+            workload: self.cfg.workload.clone(),
+            outcomes: self.sink.outcomes,
+            makespan,
+            device_utilization,
+            device_jobs,
+        }
+    }
+}
+
+impl ServingModel<'_, StreamingSink> {
+    /// Reduce the finished simulation's streamed aggregates to one
+    /// [`SweepPoint`].
+    pub fn into_point(self) -> SweepPoint {
+        let policy = self.router.policy_name().to_string();
+        self.sink.finish(policy, self.cfg.rate)
+    }
+}
+
+impl<'a, S: OutcomeSink> ServingModel<'a, S> {
+    /// Build with an explicit [`DecodeMode`] and [`OutcomeSink`].
+    pub fn with_sink(
+        sys: &'a SystemConfig,
+        model: &'a ModelShape,
+        table: &'a LatencyTable,
+        policy: Box<dyn Scheduler + Send>,
+        cfg: &TrafficConfig,
+        mode: DecodeMode,
+        sink: S,
+    ) -> ServingModel<'a, S> {
         assert!(cfg.devices > 0, "pool needs at least one device");
         assert!(cfg.rate > 0.0, "arrival rate must be positive");
         assert!(cfg.queue_capacity > 0, "queue capacity must be at least 1");
@@ -183,41 +286,12 @@ impl<'a> ServingModel<'a> {
             router,
             rng: Rng::new(cfg.seed),
             sampler: ArrivalSampler::new(cfg),
+            mode,
             devices,
             clock: 0.0,
             arrivals: 0,
             completed_at: HashMap::new(),
-            outcomes: Vec::with_capacity(cfg.requests),
-        }
-    }
-
-    /// Reduce the finished simulation to a [`PoolReport`]. Outcomes are
-    /// sorted into arrival (id) order to match the direct backend.
-    pub fn into_report(mut self) -> PoolReport {
-        self.outcomes.sort_by_key(|o| o.id);
-        let makespan = self
-            .outcomes
-            .iter()
-            .filter(|o| !o.rejected)
-            .map(|o| o.completed)
-            .max()
-            .unwrap_or(SimTime::ZERO);
-        let device_utilization = self
-            .devices
-            .iter()
-            .map(|d| if makespan == SimTime::ZERO { 0.0 } else { d.busy.secs() / makespan.secs() })
-            .collect();
-        let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
-        PoolReport {
-            backend: "event",
-            policy: self.router.policy_name().to_string(),
-            devices: self.cfg.devices,
-            offered_rate: self.cfg.rate,
-            workload: self.cfg.workload.clone(),
-            outcomes: self.outcomes,
-            makespan,
-            device_utilization,
-            device_jobs,
+            sink,
         }
     }
 
@@ -343,7 +417,7 @@ impl<'a> ServingModel<'a> {
         if self.router.kv(dev).context_len(session).is_none() {
             self.router.forget(session); // placement without resident KV
         }
-        self.outcomes.push(SimRequest {
+        self.sink.record(SimRequest {
             id,
             session,
             class,
@@ -373,9 +447,18 @@ impl<'a> ServingModel<'a> {
         super::loadgen::evict_oldest_idle(&mut self.router, dev, idle, needed);
     }
 
-    /// Begin serving the next queued job on `dev`: schedule its
-    /// [`ServingEvent::PrefillDone`] after the PCIe KV upload, the SLC
-    /// write of the prompt KV, and the first decode step.
+    /// Begin serving the next queued job on `dev`.
+    ///
+    /// Every term of the service is a pure function of immutable inputs
+    /// (the shared [`LatencyTable`], the link model, the job's lengths),
+    /// so both the first-token instant and the completion instant are
+    /// known *now*. [`DecodeMode::Coalesced`] therefore schedules one
+    /// [`ServingEvent::DecodeDone`] carrying that precomputed pair;
+    /// [`DecodeMode::PerToken`] schedules the original
+    /// [`ServingEvent::PrefillDone`] + per-token chain, which sums the
+    /// same integer-picosecond terms in the same order and lands on the
+    /// same instants (u64 addition is associative) — the oracle the
+    /// bit-identity suite replays.
     fn start_service(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
         let (sys, model, table) = (self.sys, self.model, self.table);
         let dev = &mut self.devices[d];
@@ -385,13 +468,24 @@ impl<'a> ServingModel<'a> {
         };
         let upload = dev.pcie.transfer_time(model.kv_bytes(req.l_in, 1.0));
         let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, req.l_in));
-        let first_step = table.step_time(req.ctx0);
-        dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
-        let ready = now + upload + kv_write + first_step;
-        queue.schedule(ready, ServingEvent::PrefillDone { device: d });
+        let first = now + upload + kv_write + table.step_time(req.ctx0);
+        match self.mode {
+            DecodeMode::Coalesced => {
+                // Steps after the first: ctx0+1 .. ctx0+l_out-1 (l_out >= 1
+                // by LenRange's invariant).
+                let rest = table.decode_time(req.ctx0 + 1, req.l_out - 1);
+                dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
+                queue.schedule(first + rest, ServingEvent::DecodeDone { device: d, first });
+            }
+            DecodeMode::PerToken => {
+                dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
+                queue.schedule(first, ServingEvent::PrefillDone { device: d });
+            }
+        }
     }
 
-    /// Schedule the next decode step, or retirement when the turn is done.
+    /// Per-token oracle only: schedule the next decode step, or
+    /// retirement when the turn is done.
     fn advance(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
         let table = self.table;
         let a = self.devices[d].active.as_ref().expect("advance without active job");
@@ -420,7 +514,7 @@ impl<'a> ServingModel<'a> {
         let r = a.req;
         self.completed_at.insert(r.session, now);
         self.sampler.release(r.session, r.class);
-        self.outcomes.push(SimRequest {
+        self.sink.record(SimRequest {
             id: r.id,
             session: r.session,
             class: r.class,
@@ -438,7 +532,7 @@ impl<'a> ServingModel<'a> {
     }
 }
 
-impl Model for ServingModel<'_> {
+impl<S: OutcomeSink> Model for ServingModel<'_, S> {
     type Event = ServingEvent;
 
     fn handle(&mut self, now: SimTime, ev: ServingEvent, queue: &mut EventQueue<ServingEvent>) {
@@ -455,16 +549,65 @@ impl Model for ServingModel<'_> {
                 a.tokens_done += 1;
                 self.advance(device, now, queue);
             }
+            ServingEvent::DecodeDone { device, first } => {
+                let a = self.devices[device].active.as_mut().expect("decode without active job");
+                a.first_token = Some(first);
+                a.tokens_done = a.req.l_out;
+                // Retire at `now`, exactly as the final TokenDone would —
+                // the event-queue fast path makes this heap-free.
+                queue.schedule(now, ServingEvent::Retire { device });
+            }
             ServingEvent::Retire { device } => self.on_retire(device, now, queue),
         }
     }
+}
+
+/// Engine event budget for one run: coalesced traces cost at most 3
+/// events per arrival (Arrive + DecodeDone + Retire); the per-token
+/// oracle pays one more per decoded token.
+fn event_budget(cfg: &TrafficConfig, mode: DecodeMode) -> u64 {
+    match mode {
+        DecodeMode::Coalesced => (cfg.requests as u64).saturating_mul(3).saturating_add(16),
+        DecodeMode::PerToken => (cfg.requests as u64)
+            .saturating_mul(cfg.max_output_tokens() as u64 + 4)
+            .saturating_add(16),
+    }
+}
+
+/// Build, seed, and drain one serving run; returns the finished model and
+/// the number of engine events it took.
+fn run_serving<'a, S: OutcomeSink>(
+    sys: &'a SystemConfig,
+    model: &'a ModelShape,
+    table: &'a LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+    mode: DecodeMode,
+    sink: S,
+) -> (ServingModel<'a, S>, u64) {
+    let serving = ServingModel::with_sink(sys, model, table, policy, cfg, mode, sink);
+    // Steady-state pending events: at most one per device plus the next
+    // arrival — the capacity hint makes the heap allocation-free after
+    // startup.
+    let mut engine = Engine::with_capacity(serving, cfg.devices + 4);
+    engine.max_events = event_budget(cfg, mode);
+    if cfg.requests > 0 {
+        let gap = -(1.0 - engine.model.rng.f64()).ln() / cfg.rate;
+        engine.model.clock = gap;
+        engine.seed(SimTime::from_secs(gap), ServingEvent::Arrive);
+    }
+    engine.run();
+    let events = engine.events_processed();
+    (engine.model, events)
 }
 
 /// Run a closed-loop Poisson trace on the event-driven backend. Same
 /// inputs as [`run_traffic_with_table`][super::loadgen::run_traffic_with_table];
 /// the report additionally prices the prefill PCIe KV upload and is
 /// **bit-identical** across runs with the same configuration
-/// (single-threaded, deterministic event order).
+/// (single-threaded, deterministic event order). Decodes are coalesced
+/// ([`DecodeMode::Coalesced`]); use [`run_traffic_events_mode`] to select
+/// the per-token oracle.
 pub fn run_traffic_events(
     sys: &SystemConfig,
     model: &ModelShape,
@@ -472,20 +615,64 @@ pub fn run_traffic_events(
     policy: Box<dyn Scheduler + Send>,
     cfg: &TrafficConfig,
 ) -> PoolReport {
-    let mut engine = Engine::new(ServingModel::new(sys, model, table, policy, cfg));
-    // Per accepted request: Arrive + PrefillDone + (l_out - 1) TokenDone
-    // + Retire, so requests × (max hi over classes + 4) bounds any trace
-    // with headroom.
-    engine.max_events = (cfg.requests as u64)
-        .saturating_mul(cfg.max_output_tokens() as u64 + 4)
-        .saturating_add(16);
-    if cfg.requests > 0 {
-        let gap = -(1.0 - engine.model.rng.f64()).ln() / cfg.rate;
-        engine.model.clock = gap;
-        engine.seed(SimTime::from_secs(gap), ServingEvent::Arrive);
-    }
-    engine.run();
-    engine.model.into_report()
+    run_traffic_events_mode(sys, model, table, policy, cfg, DecodeMode::Coalesced)
+}
+
+/// [`run_traffic_events`] with an explicit [`DecodeMode`]. Both modes
+/// produce byte-identical reports for the same configuration (asserted
+/// in `tests/perf_equivalence.rs`); coalescing is strictly a change in
+/// how many engine events the same timeline costs. (Caveat, for
+/// completeness: a picosecond-exact tie between an arrival and a
+/// completion could tie-break differently across modes because the two
+/// schedules consume different sequence numbers — f64-derived arrival
+/// instants never collide with summed table steps in practice, and the
+/// equivalence suite compares whole traces.)
+pub fn run_traffic_events_mode(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+    mode: DecodeMode,
+) -> PoolReport {
+    run_traffic_events_counted(sys, model, table, policy, cfg, mode).0
+}
+
+/// [`run_traffic_events_mode`] plus the engine event count — the
+/// instrumented entry point behind the `perf_hotpath` bench's
+/// events-per-request accounting.
+pub fn run_traffic_events_counted(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+    mode: DecodeMode,
+) -> (PoolReport, u64) {
+    let sink = CollectSink::with_capacity(cfg.requests);
+    let (serving, events) = run_serving(sys, model, table, policy, cfg, mode, sink);
+    (serving.into_report(), events)
+}
+
+/// Run one sweep point on the event backend with the streaming sink: no
+/// outcome vector is ever materialized, and the returned [`SweepPoint`]
+/// is bit-identical to `SweepPoint::of` over the same run's full report
+/// (asserted in `tests/perf_equivalence.rs`).
+pub fn run_traffic_point(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    policy: Box<dyn Scheduler + Send>,
+    cfg: &TrafficConfig,
+) -> SweepPoint {
+    let classes = cfg
+        .workload
+        .as_ref()
+        .map(|mix| mix.classes().iter().map(|c| (c.name.clone(), c.slo)).collect())
+        .unwrap_or_default();
+    let sink = StreamingSink::new(classes);
+    let (serving, _) = run_serving(sys, model, table, policy, cfg, DecodeMode::Coalesced, sink);
+    serving.into_point()
 }
 
 #[cfg(test)]
@@ -512,6 +699,10 @@ mod tests {
     }
 
     fn run(cfg: &TrafficConfig, least_loaded: bool) -> PoolReport {
+        run_mode(cfg, least_loaded, DecodeMode::Coalesced).0
+    }
+
+    fn run_mode(cfg: &TrafficConfig, least_loaded: bool, mode: DecodeMode) -> (PoolReport, u64) {
         let policy: Box<dyn Scheduler + Send> = if least_loaded {
             Box::new(LeastLoaded::new())
         } else {
@@ -520,7 +711,7 @@ mod tests {
         let sys = table1_system();
         let model = OptModel::Opt6_7b.shape();
         let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
-        run_traffic_events(&sys, &model, &table, policy, cfg)
+        run_traffic_events_counted(&sys, &model, &table, policy, cfg, mode)
     }
 
     #[test]
@@ -545,6 +736,27 @@ mod tests {
         let mut other = cfg.clone();
         other.seed = 8;
         assert_ne!(a, run(&other, true), "different seeds must differ");
+    }
+
+    #[test]
+    fn per_token_oracle_matches_coalesced_bit_for_bit() {
+        let mut cfg = quick_cfg(3, 80, 25.0, 17);
+        cfg.followup = 0.5;
+        cfg.queue_capacity = 4; // force some rejections into the trace
+        let (coalesced, ev_c) = run_mode(&cfg, true, DecodeMode::Coalesced);
+        let (per_token, ev_t) = run_mode(&cfg, true, DecodeMode::PerToken);
+        assert_eq!(coalesced, per_token, "coalescing must not change the timeline");
+        assert_eq!(coalesced.render(), per_token.render());
+        assert!(ev_t > ev_c, "oracle must pay per-token events ({ev_t} vs {ev_c})");
+    }
+
+    #[test]
+    fn coalesced_event_count_is_three_per_accepted_request() {
+        let cfg = quick_cfg(2, 60, 12.0, 19);
+        let (rep, events) = run_mode(&cfg, false, DecodeMode::Coalesced);
+        // One Arrive per arrival; DecodeDone + Retire per accepted turn.
+        let expect = rep.outcomes.len() as u64 + 2 * rep.accepted() as u64;
+        assert_eq!(events, expect);
     }
 
     #[test]
@@ -612,5 +824,18 @@ mod tests {
         let max = rep.device_jobs.iter().max().unwrap();
         assert_eq!(rep.device_jobs.iter().sum::<usize>(), 80);
         assert!(max - min <= 1, "round-robin imbalance: {:?}", rep.device_jobs);
+    }
+
+    #[test]
+    fn streamed_point_matches_materialized_sweep_point() {
+        let cfg = quick_cfg(2, 50, 18.0, 23);
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let streamed =
+            run_traffic_point(&sys, &model, &table, Box::new(LeastLoaded::new()), &cfg);
+        let report =
+            run_traffic_events(&sys, &model, &table, Box::new(LeastLoaded::new()), &cfg);
+        assert_eq!(streamed, SweepPoint::of(&report), "streamed aggregates must be exact");
     }
 }

@@ -31,7 +31,7 @@
 
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
-use super::workload::{ArrivalSampler, WorkloadClass, WorkloadMix};
+use super::workload::{ArrivalSampler, SloTarget, WorkloadClass, WorkloadMix};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
 use crate::kv::write_overhead::initial_kv_write_time;
@@ -170,6 +170,19 @@ impl SimRequest {
             return None;
         }
         Some((self.completed - first).secs() / (self.output_tokens - 1) as f64)
+    }
+
+    /// Did this outcome meet `slo`? Rejections always miss (the client
+    /// got nothing); served requests need TTFT and TPOT both within
+    /// target (TPOT vacuously for single-token outputs). One definition
+    /// shared by [`PoolReport::class_reports`][super::metrics::PoolReport::class_reports]
+    /// and the streaming sweep sink, so attainment cannot drift between
+    /// the materialized and streamed metric paths.
+    pub fn meets_slo(&self, slo: SloTarget) -> bool {
+        match self.ttft() {
+            Some(ttft) => !self.rejected && slo.met(ttft.secs(), self.tpot()),
+            None => false,
+        }
     }
 }
 

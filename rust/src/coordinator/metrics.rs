@@ -8,7 +8,7 @@ use super::loadgen::SimRequest;
 use super::request::RequestOutcome;
 use super::workload::{SloTarget, WorkloadMix};
 use crate::sim::SimTime;
-use crate::util::stats::Summary;
+use crate::util::stats::{Streaming, Summary};
 use crate::util::table::Table;
 use crate::util::units::fmt_time;
 
@@ -106,10 +106,14 @@ pub struct PoolReport {
 }
 
 /// Per-class slice of a [`PoolReport`]: the class's traffic counts,
-/// latency summaries, and SLO attainment.
+/// latency summaries, and SLO attainment. Borrows the class name from
+/// the report's [`WorkloadMix`] — building the per-class section
+/// allocates no name `String`s (callers that need owned names, like the
+/// sweep's [`ClassAttainment`][super::sweep::ClassAttainment], clone
+/// exactly once at the edge).
 #[derive(Debug, Clone, PartialEq)]
-pub struct ClassReport {
-    pub name: String,
+pub struct ClassReport<'a> {
+    pub name: &'a str,
     /// Normalized arrival share the mix assigns the class.
     pub share: f64,
     /// Arrivals of this class (accepted + rejected).
@@ -172,52 +176,70 @@ impl PoolReport {
         tokens as f64 / self.makespan.secs()
     }
 
-    /// Did this outcome meet `slo`? Rejections always miss; TTFT and TPOT
-    /// must both land within target (TPOT vacuously for 1-token outputs).
-    fn meets_slo(o: &SimRequest, slo: SloTarget) -> bool {
-        match o.ttft() {
-            Some(ttft) => !o.rejected && slo.met(ttft.secs(), o.tpot()),
-            None => false,
-        }
-    }
-
     /// One [`ClassReport`] per mix class, in mix order; empty for
     /// single-class runs without a workload.
-    pub fn class_reports(&self) -> Vec<ClassReport> {
+    ///
+    /// Single pass over the outcomes: every class's counts and metric
+    /// samples accumulate in one sweep (the old shape re-filtered the
+    /// whole outcome vector six times *per class*), then each metric
+    /// flushes through one sort ([`Streaming::finish`]) — bit-identical
+    /// to the old collect-and-`Summary::of` values by construction.
+    pub fn class_reports(&self) -> Vec<ClassReport<'_>> {
         let Some(mix) = &self.workload else {
             return Vec::new();
         };
-        mix.classes()
+        #[derive(Default)]
+        struct Acc {
+            arrivals: usize,
+            rejected: usize,
+            met: usize,
+            ttft: Streaming,
+            tpot: Streaming,
+            latency: Streaming,
+        }
+        let classes = mix.classes();
+        let mut accs: Vec<Acc> = (0..classes.len()).map(|_| Acc::default()).collect();
+        for o in &self.outcomes {
+            // Out-of-range class indices (a hand-built report) are ignored,
+            // as the old per-class filter ignored them.
+            let Some(a) = accs.get_mut(o.class) else {
+                continue;
+            };
+            a.arrivals += 1;
+            if o.rejected {
+                a.rejected += 1;
+            } else {
+                a.latency.push(o.latency().secs());
+            }
+            if o.meets_slo(classes[o.class].slo) {
+                a.met += 1;
+            }
+            if let Some(t) = o.ttft() {
+                a.ttft.push(t.secs());
+            }
+            if let Some(t) = o.tpot() {
+                a.tpot.push(t);
+            }
+        }
+        classes
             .iter()
+            .zip(accs)
             .enumerate()
-            .map(|(i, c)| {
-                let of_class = || self.outcomes.iter().filter(move |o| o.class == i);
-                let arrivals = of_class().count();
-                let rejected = of_class().filter(|o| o.rejected).count();
-                let met = of_class().filter(|o| Self::meets_slo(o, c.slo)).count();
-                ClassReport {
-                    name: c.name.clone(),
-                    share: mix.share(i),
-                    arrivals,
-                    accepted: arrivals - rejected,
-                    rejected,
-                    ttft: Summary::of(
-                        &of_class().filter_map(|o| o.ttft().map(|t| t.secs())).collect::<Vec<_>>(),
-                    ),
-                    tpot: Summary::of(&of_class().filter_map(|o| o.tpot()).collect::<Vec<_>>()),
-                    latency: Summary::of(
-                        &of_class()
-                            .filter(|o| !o.rejected)
-                            .map(|o| o.latency().secs())
-                            .collect::<Vec<_>>(),
-                    ),
-                    slo: c.slo,
-                    slo_attainment: if arrivals == 0 {
-                        1.0
-                    } else {
-                        met as f64 / arrivals as f64
-                    },
-                }
+            .map(|(i, (c, a))| ClassReport {
+                name: &c.name,
+                share: mix.share(i),
+                arrivals: a.arrivals,
+                accepted: a.arrivals - a.rejected,
+                rejected: a.rejected,
+                ttft: a.ttft.finish(),
+                tpot: a.tpot.finish(),
+                latency: a.latency.finish(),
+                slo: c.slo,
+                slo_attainment: if a.arrivals == 0 {
+                    1.0
+                } else {
+                    a.met as f64 / a.arrivals as f64
+                },
             })
             .collect()
     }
@@ -272,7 +294,7 @@ impl PoolReport {
             ]);
             for r in self.class_reports() {
                 c.row(&[
-                    r.name,
+                    r.name.to_string(),
                     format!("{:.0}%", r.share * 100.0),
                     r.arrivals.to_string(),
                     r.rejected.to_string(),
@@ -422,8 +444,8 @@ mod tests {
         let classes = r.class_reports();
         assert_eq!(classes.len(), 2);
         let (even, odd) = (&classes[0], &classes[1]);
-        assert_eq!((even.name.as_str(), even.arrivals, even.rejected), ("even", 2, 0));
-        assert_eq!((odd.name.as_str(), odd.arrivals, odd.rejected), ("odd", 2, 1));
+        assert_eq!((even.name, even.arrivals, even.rejected), ("even", 2, 0));
+        assert_eq!((odd.name, odd.arrivals, odd.rejected), ("odd", 2, 1));
         assert_eq!(even.slo_attainment, 0.0, "1 µs TTFT is unattainable");
         assert!((odd.slo_attainment - 0.5).abs() < 1e-12, "served odd attains, rejected misses");
         assert!(odd.ttft.n == 1 && odd.latency.n == 1, "summaries cover accepted only");

@@ -25,7 +25,13 @@
 //!   traffic model as a deterministic discrete-event [`crate::sim::Model`]
 //!   on [`crate::sim::Engine`]. Single-threaded, bit-reproducible
 //!   [`PoolReport`]s, and the prefill path prices the PCIe KV upload.
-//!   Backs `serve-sim` and the [`sweep`] rate sweeps.
+//!   Decode is *coalesced* — one precomputed event per request instead of
+//!   one per token, with the per-token chain kept as a bit-identity
+//!   oracle ([`DecodeMode`]) — and outcomes fold through an
+//!   [`OutcomeSink`] ([`sink`]), so sweeps stream aggregates instead of
+//!   materializing every request. Backs `serve-sim` and the [`sweep`]
+//!   rate sweeps (which fan points out on scoped threads,
+//!   bit-reproducibly).
 //! * [`loadgen`] — the legacy direct-replay loop over the same traffic
 //!   model (each request's service computed inline at arrival). Kept as
 //!   the `serve-sim --threaded` cross-check; its sweep fans out on scoped
@@ -102,10 +108,14 @@ pub mod request;
 pub mod router;
 pub mod serve;
 pub mod simulate;
+pub mod sink;
 pub mod sweep;
 pub mod workload;
 
-pub use event_sim::{run_traffic_events, ServingEvent, ServingModel};
+pub use event_sim::{
+    DecodeMode, run_traffic_events, run_traffic_events_counted, run_traffic_events_mode,
+    run_traffic_point, ServingEvent, ServingModel,
+};
 pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
 pub use metrics::{ClassReport, PoolReport, ServingReport};
 pub use pool::{DevicePool, PoolJob, PoolServed, SimFlashEngine, SubmitError};
@@ -116,6 +126,7 @@ pub use router::{
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};
+pub use sink::{CollectSink, OutcomeSink, StreamingSink};
 pub use sweep::{
     ClassAttainment, max_sustained_rates, render_slo_frontier, render_sweep, SloFrontier,
     sweep_rates, sweep_rates_threaded, SweepPoint,

@@ -100,6 +100,10 @@ pub struct DevicePool {
     workers: Vec<WorkerHandle>,
     policy: Mutex<Box<dyn Scheduler + Send>>,
     affinity: Mutex<HashMap<u64, usize>>,
+    /// Reused [`DeviceStatus`] buffer for policy picks — the submit hot
+    /// path refills it in place instead of allocating a Vec per job.
+    /// Lock order on every path: affinity → status_scratch → policy.
+    status_scratch: Mutex<Vec<DeviceStatus>>,
     queue_capacity: usize,
 }
 
@@ -159,6 +163,7 @@ impl DevicePool {
             workers,
             policy: Mutex::new(policy),
             affinity: Mutex::new(HashMap::new()),
+            status_scratch: Mutex::new(Vec::with_capacity(n_devices)),
             queue_capacity,
         }
     }
@@ -186,22 +191,22 @@ impl DevicePool {
         self.queue_capacity
     }
 
+    fn device_status(&self, i: usize) -> DeviceStatus {
+        DeviceStatus {
+            device: i,
+            queue_depth: self.workers[i].pending.load(Ordering::SeqCst),
+            est_wait: SimTime::ZERO,
+            kv_used: 0,
+            kv_capacity: 0,
+        }
+    }
+
     /// Current per-device status (queue depths; the functional pool does
     /// not track KV bytes or per-job service estimates — the simulators'
     /// `DeviceRouter` does — so `est_wait` reads zero here and time-based
     /// policies fall through to their queue-depth/index tie-breaks).
     pub fn status(&self) -> Vec<DeviceStatus> {
-        self.workers
-            .iter()
-            .enumerate()
-            .map(|(i, w)| DeviceStatus {
-                device: i,
-                queue_depth: w.pending.load(Ordering::SeqCst),
-                est_wait: SimTime::ZERO,
-                kv_used: 0,
-                kv_capacity: 0,
-            })
-            .collect()
+        (0..self.workers.len()).map(|i| self.device_status(i)).collect()
     }
 
     /// Device an affine session is pinned to, if any.
@@ -223,7 +228,9 @@ impl DevicePool {
     }
 
     fn pick_by_policy(&self) -> usize {
-        let status = self.status();
+        let mut status = self.status_scratch.lock().expect("status lock");
+        status.clear();
+        status.extend((0..self.workers.len()).map(|i| self.device_status(i)));
         self.policy.lock().expect("policy lock").pick(&status, &JobInfo::unconstrained())
     }
 

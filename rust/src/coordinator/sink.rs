@@ -1,0 +1,217 @@
+//! Outcome sinks: where the serving simulators put each finished
+//! [`SimRequest`].
+//!
+//! The event backend produces one outcome per arrival; what the caller
+//! wants to *keep* differs by use case. A single `serve-sim` run renders
+//! a full [`PoolReport`][super::metrics::PoolReport] and needs every
+//! outcome materialized; a rate sweep only needs one
+//! [`SweepPoint`]-worth of aggregates per (policy, rate) pair, and
+//! holding a million `SimRequest`s per point just to reduce them at the
+//! end is what made long sweeps memory- and cache-hungry. The
+//! [`OutcomeSink`] trait lets
+//! [`ServingModel`][super::event_sim::ServingModel] fold outcomes as they
+//! retire:
+//!
+//! * [`CollectSink`] — materialize everything (the report path).
+//! * [`StreamingSink`] — incremental counts, token totals, makespan, and
+//!   per-class SLO attainment, plus per-metric sample accumulators
+//!   ([`Streaming`]: running count/mean/M2, one sorted flush for
+//!   percentiles). The flush reduces each metric exactly as
+//!   [`Summary::of`][crate::util::stats::Summary::of] would, so a
+//!   streamed [`SweepPoint`] is **bit-identical** to one computed from a
+//!   materialized report — asserted in `tests/perf_equivalence.rs`.
+
+use super::loadgen::SimRequest;
+use super::sweep::{ClassAttainment, SweepPoint};
+use super::workload::SloTarget;
+use crate::sim::SimTime;
+use crate::util::stats::Streaming;
+
+/// Consumes each finished (served or rejected) request of a serving
+/// simulation, in retirement order.
+pub trait OutcomeSink {
+    fn record(&mut self, outcome: SimRequest);
+}
+
+/// Materializes every outcome — the sink behind full
+/// [`PoolReport`][super::metrics::PoolReport]s.
+#[derive(Debug, Clone, Default)]
+pub struct CollectSink {
+    pub outcomes: Vec<SimRequest>,
+}
+
+impl CollectSink {
+    pub fn with_capacity(n: usize) -> CollectSink {
+        CollectSink { outcomes: Vec::with_capacity(n) }
+    }
+}
+
+impl OutcomeSink for CollectSink {
+    fn record(&mut self, outcome: SimRequest) {
+        self.outcomes.push(outcome);
+    }
+}
+
+/// Per-class accumulator of the streaming sink: arrival/rejection/SLO
+/// counts only — class percentiles are a report-path (materialized)
+/// concern, the sweep needs attainment.
+#[derive(Debug, Clone)]
+struct ClassAcc {
+    name: String,
+    slo: SloTarget,
+    arrivals: usize,
+    met: usize,
+}
+
+/// Folds outcomes straight into the aggregates one [`SweepPoint`] needs,
+/// without retaining any `SimRequest`. Per outcome it keeps three `f64`
+/// samples at most (TTFT, latency — TPOT is not a sweep column) instead
+/// of the full record, and per class only counters.
+#[derive(Debug, Clone)]
+pub struct StreamingSink {
+    accepted: usize,
+    rejected: usize,
+    /// Output tokens across all outcomes (rejected contribute 0).
+    tokens: usize,
+    /// Latest accepted completion — the horizon throughput divides by.
+    makespan: SimTime,
+    ttft: Streaming,
+    latency: Streaming,
+    /// One entry per workload-mix class, in mix order; empty for
+    /// single-class runs without a mix (matching
+    /// [`class_reports`][super::metrics::PoolReport::class_reports]).
+    classes: Vec<ClassAcc>,
+}
+
+impl StreamingSink {
+    /// Build for a run. `classes` carries the workload mix's (name, SLO)
+    /// pairs in mix order, or is empty for runs without a mix.
+    pub fn new(classes: Vec<(String, SloTarget)>) -> StreamingSink {
+        StreamingSink {
+            accepted: 0,
+            rejected: 0,
+            tokens: 0,
+            makespan: SimTime::ZERO,
+            ttft: Streaming::new(),
+            latency: Streaming::new(),
+            classes: classes
+                .into_iter()
+                .map(|(name, slo)| ClassAcc { name, slo, arrivals: 0, met: 0 })
+                .collect(),
+        }
+    }
+
+    /// Reduce to a sweep point. Bit-identical to
+    /// `SweepPoint::of(&report)` over the same run's materialized report.
+    pub fn finish(self, policy: String, rate: f64) -> SweepPoint {
+        let throughput = if self.makespan == SimTime::ZERO {
+            0.0
+        } else {
+            self.tokens as f64 / self.makespan.secs()
+        };
+        let lat = self.latency.finish();
+        SweepPoint {
+            policy,
+            rate,
+            accepted: self.accepted,
+            rejected: self.rejected,
+            throughput,
+            ttft_p95: self.ttft.finish().p95,
+            latency_p50: lat.p50,
+            latency_p95: lat.p95,
+            latency_p99: lat.p99,
+            class_attainment: self
+                .classes
+                .into_iter()
+                .map(|c| ClassAttainment {
+                    class: c.name,
+                    attainment: if c.arrivals == 0 {
+                        1.0
+                    } else {
+                        c.met as f64 / c.arrivals as f64
+                    },
+                })
+                .collect(),
+        }
+    }
+}
+
+impl OutcomeSink for StreamingSink {
+    fn record(&mut self, o: SimRequest) {
+        if o.rejected {
+            self.rejected += 1;
+        } else {
+            self.accepted += 1;
+            self.makespan = self.makespan.max(o.completed);
+            self.latency.push(o.latency().secs());
+        }
+        self.tokens += o.output_tokens;
+        if let Some(t) = o.ttft() {
+            self.ttft.push(t.secs());
+        }
+        if let Some(c) = self.classes.get_mut(o.class) {
+            c.arrivals += 1;
+            if o.meets_slo(c.slo) {
+                c.met += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, class: usize, device: Option<usize>, tokens: usize) -> SimRequest {
+        SimRequest {
+            id,
+            session: id,
+            class,
+            device,
+            arrival: SimTime::ZERO,
+            first_token: device.map(|_| SimTime::from_us(50.0)),
+            completed: SimTime::from_us(50.0 + 10.0 * tokens as f64),
+            input_tokens: 64,
+            output_tokens: tokens,
+            context: 64,
+            rejected: device.is_none(),
+            followup: false,
+        }
+    }
+
+    #[test]
+    fn collect_sink_materializes_in_order() {
+        let mut sink = CollectSink::with_capacity(2);
+        sink.record(outcome(1, 0, Some(0), 4));
+        sink.record(outcome(0, 0, None, 0));
+        assert_eq!(sink.outcomes.len(), 2);
+        assert_eq!(sink.outcomes[0].id, 1, "sinks preserve record order");
+    }
+
+    #[test]
+    fn streaming_sink_counts_and_attainment() {
+        let tight = SloTarget { ttft: 1e-9, tpot: 1e-9 }; // unattainable
+        let mut sink = StreamingSink::new(vec![
+            ("loose".to_string(), SloTarget::NONE),
+            ("tight".to_string(), tight),
+        ]);
+        sink.record(outcome(0, 0, Some(0), 10)); // loose, served: attains
+        sink.record(outcome(1, 1, Some(1), 10)); // tight, served: misses
+        sink.record(outcome(2, 0, None, 0)); // loose, rejected: misses
+        let p = sink.finish("rr".to_string(), 4.0);
+        assert_eq!((p.accepted, p.rejected), (2, 1));
+        assert!(p.throughput > 0.0);
+        assert!(p.ttft_p95 > 0.0 && p.latency_p95 > 0.0);
+        assert_eq!(p.class_attainment.len(), 2);
+        assert!((p.class_attainment[0].attainment - 0.5).abs() < 1e-12);
+        assert_eq!(p.class_attainment[1].attainment, 0.0);
+    }
+
+    #[test]
+    fn streaming_sink_empty_run() {
+        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0);
+        assert_eq!((p.accepted, p.rejected), (0, 0));
+        assert_eq!(p.throughput, 0.0);
+        assert!(p.class_attainment.is_empty());
+    }
+}

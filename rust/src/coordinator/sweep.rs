@@ -4,13 +4,16 @@
 //! where its latency knee sits as offered load grows).
 //!
 //! One immutable [`LatencyTable`] is built by the caller and shared by
-//! every sweep point. The default [`sweep_rates`] loops the deterministic
-//! event-driven model ([`run_traffic_events`]) point by point on a single
-//! thread — the whole sweep is bit-reproducible, and ordering needs no
-//! joins or locks. [`sweep_rates_threaded`] keeps the legacy cross-check:
-//! the direct-replay backend fanned out on scoped threads (each point
-//! owns its RNG and router, so results are still deterministic and
-//! independent of thread scheduling — just not a single event timeline).
+//! every sweep point. The default [`sweep_rates`] fans the deterministic
+//! event-driven model out on scoped threads: every point owns its RNG,
+//! model, and a streaming [`StreamingSink`][super::sink::StreamingSink]
+//! (no per-point outcome vectors), workers pull (policy, rate) pairs from
+//! a shared index, and results land by index — so the sweep uses every
+//! core yet its output is **byte-equal to the sequential loop** (each
+//! point is an independent deterministic computation; asserted in
+//! `tests/perf_equivalence.rs`). [`sweep_rates_threaded`] keeps the
+//! legacy cross-check: the direct-replay backend over the same worker
+//! scaffold.
 //!
 //! When the base config carries a [`WorkloadMix`][wl], every point also
 //! records per-class SLO attainment, and [`max_sustained_rates`] /
@@ -20,7 +23,7 @@
 //!
 //! [wl]: super::workload::WorkloadMix
 
-use super::event_sim::run_traffic_events;
+use super::event_sim::run_traffic_point;
 use super::loadgen::{run_traffic_with_table, TrafficConfig};
 use super::metrics::PoolReport;
 use super::router::policy_from_name;
@@ -31,6 +34,52 @@ use crate::util::table::Table;
 use crate::util::units::fmt_time;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for a sweep of `points` points: all available cores,
+/// clamped to the number of points so tiny grids never spawn idle scoped
+/// threads, and at least 1. Shared by [`sweep_rates`] and
+/// [`sweep_rates_threaded`].
+fn clamped_width(points: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    cores.min(points.max(1))
+}
+
+/// Fan `pairs` out over a clamped-width pool of scoped workers, running
+/// `point` per (policy, rate) pair and collecting results by index — the
+/// worker scaffold both sweep backends share. Each pair is an independent
+/// deterministic computation (own RNG seeded from the base config), so
+/// the output is identical to the sequential loop regardless of thread
+/// scheduling.
+fn sweep_indexed<F>(pairs: &[(&str, f64)], point: F) -> Vec<SweepPoint>
+where
+    F: Fn(&str, f64) -> SweepPoint + Sync,
+{
+    let next = AtomicUsize::new(0);
+    let mut points: Vec<Option<SweepPoint>> = (0..pairs.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..clamped_width(pairs.len()))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&(p, r)) = pairs.get(i) else {
+                            break;
+                        };
+                        local.push((i, point(p, r)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, sp) in w.join().expect("sweep worker panicked") {
+                points[i] = Some(sp);
+            }
+        }
+    });
+    points.into_iter().map(|p| p.expect("every sweep pair ran")).collect()
+}
 
 /// SLO attainment of one workload class at one sweep point.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,7 +110,11 @@ pub struct SweepPoint {
 }
 
 impl SweepPoint {
-    fn of(report: &PoolReport) -> SweepPoint {
+    /// Reduce a materialized report to its sweep point. The streaming
+    /// path ([`run_traffic_point`]) produces bit-identical points without
+    /// ever materializing the report — `tests/perf_equivalence.rs` holds
+    /// the two together.
+    pub fn of(report: &PoolReport) -> SweepPoint {
         let lat = report.latency_summary();
         SweepPoint {
             policy: report.policy.clone(),
@@ -76,7 +129,10 @@ impl SweepPoint {
             class_attainment: report
                 .class_reports()
                 .into_iter()
-                .map(|c| ClassAttainment { class: c.name, attainment: c.slo_attainment })
+                .map(|c| ClassAttainment {
+                    class: c.name.to_string(),
+                    attainment: c.slo_attainment,
+                })
                 .collect(),
         }
     }
@@ -124,13 +180,13 @@ fn sweep_pairs<'a>(rates: &[f64], policies: &[&'a str]) -> Result<Vec<(&'a str, 
 
 /// Run `base` at every arrival rate in `rates` for every policy in
 /// `policies` on the event-driven backend, sharing one prebuilt latency
-/// table. Points run sequentially on the calling thread — the sweep is a
-/// single deterministic computation with no joins or locks. (Each point
-/// seeds its own RNG, so fanning the same points out over threads would
-/// be bit-identical too; reach for [`sweep_rates_threaded`] when
-/// wall-clock matters more than a single-threaded timeline.) Rates are
-/// sorted ascending and deduplicated, so each policy's block of the
-/// result is a monotone-rate throughput–latency curve.
+/// table. Points fan out over scoped threads (width clamped to the point
+/// count); each point seeds its own RNG and folds outcomes through the
+/// streaming sink ([`run_traffic_point`]) — no per-point outcome vectors
+/// — and results are collected by index, so the output is byte-equal to
+/// running the same points in a sequential loop. Rates are sorted
+/// ascending and deduplicated, so each policy's block of the result is a
+/// monotone-rate throughput–latency curve.
 pub fn sweep_rates(
     sys: &SystemConfig,
     model: &ModelShape,
@@ -140,24 +196,21 @@ pub fn sweep_rates(
     policies: &[&str],
 ) -> Result<Vec<SweepPoint>> {
     let pairs = sweep_pairs(rates, policies)?;
-    Ok(pairs
-        .into_iter()
-        .map(|(p, r)| {
-            let mut cfg = base.clone();
-            cfg.rate = r;
-            let policy = policy_from_name(p).expect("policy validated above");
-            SweepPoint::of(&run_traffic_events(sys, model, table, policy, &cfg))
-        })
-        .collect())
+    Ok(sweep_indexed(&pairs, |p, r| {
+        let mut cfg = base.clone();
+        cfg.rate = r;
+        let policy = policy_from_name(p).expect("policy validated above");
+        run_traffic_point(sys, model, table, policy, &cfg)
+    }))
 }
 
 /// Cross-check sweep: the direct-replay backend
-/// ([`run_traffic_with_table`]) fanned out on scoped threads, behind
-/// `serve-sim --sweep --threaded`. The two backends deliberately share
-/// their arrival-sampling and eviction code (lockstep by construction),
-/// so this cross-checks the *independent* parts — inline `Resource`
-/// timing versus the event timeline — not the shared sampling; it is
-/// also the faster sweep on multi-core machines.
+/// ([`run_traffic_with_table`]) over the same clamped-width worker
+/// scaffold, behind `serve-sim --sweep --threaded`. The two backends
+/// deliberately share their arrival-sampling and eviction code (lockstep
+/// by construction), so this cross-checks the *independent* parts —
+/// inline `Resource` timing versus the event timeline — not the shared
+/// sampling.
 pub fn sweep_rates_threaded(
     sys: &SystemConfig,
     model: &ModelShape,
@@ -167,41 +220,12 @@ pub fn sweep_rates_threaded(
     policies: &[&str],
 ) -> Result<Vec<SweepPoint>> {
     let pairs = sweep_pairs(rates, policies)?;
-
-    // A fixed pool of `width` workers pulls (policy, rate) pairs from a
-    // shared index: in-flight PoolReports (every per-request outcome,
-    // until reduced to a SweepPoint) stay bounded by the core count, and
-    // no core idles waiting on a slow high-rate point.
-    let width = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let next = AtomicUsize::new(0);
-    let mut points: Vec<Option<SweepPoint>> = (0..pairs.len()).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let workers: Vec<_> = (0..width.min(pairs.len()))
-            .map(|_| {
-                scope.spawn(|| {
-                    let mut local = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        let Some(&(p, r)) = pairs.get(i) else {
-                            break;
-                        };
-                        let mut cfg = base.clone();
-                        cfg.rate = r;
-                        let policy = policy_from_name(p).expect("policy validated above");
-                        let report = run_traffic_with_table(sys, model, table, policy, &cfg);
-                        local.push((i, SweepPoint::of(&report)));
-                    }
-                    local
-                })
-            })
-            .collect();
-        for w in workers {
-            for (i, point) in w.join().expect("sweep worker panicked") {
-                points[i] = Some(point);
-            }
-        }
-    });
-    Ok(points.into_iter().map(|p| p.expect("every sweep pair ran")).collect())
+    Ok(sweep_indexed(&pairs, |p, r| {
+        let mut cfg = base.clone();
+        cfg.rate = r;
+        let policy = policy_from_name(p).expect("policy validated above");
+        SweepPoint::of(&run_traffic_with_table(sys, model, table, policy, &cfg))
+    }))
 }
 
 /// Render sweep points as an ASCII throughput–latency table. The final
@@ -387,6 +411,15 @@ mod tests {
         )
         .unwrap();
         check_points(&points);
+    }
+
+    #[test]
+    fn worker_width_clamps_to_point_count() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        assert_eq!(clamped_width(1), 1, "a 1-point grid gets exactly one worker");
+        assert_eq!(clamped_width(2), cores.min(2));
+        assert_eq!(clamped_width(10_000), cores, "wide grids use every core");
+        assert_eq!(clamped_width(0), 1, "degenerate grids still clamp to >= 1");
     }
 
     #[test]

@@ -71,7 +71,7 @@
 //! let report = run_traffic_events(&sys, &model, &table, policy, &cfg);
 //! let classes = report.class_reports();
 //! assert_eq!(classes.len(), 2);
-//! assert_eq!((classes[0].name.as_str(), classes[1].name.as_str()), ("short", "long"));
+//! assert_eq!((classes[0].name, classes[1].name), ("short", "long"));
 //! assert_eq!(classes[0].arrivals + classes[1].arrivals, 40);
 //! for c in &classes {
 //!     assert!((0.0..=1.0).contains(&c.slo_attainment), "{}: {}", c.name, c.slo_attainment);

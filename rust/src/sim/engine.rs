@@ -33,6 +33,19 @@ impl<M: Model> Engine<M> {
         Engine { model, queue: EventQueue::new(), max_events: 100_000_000, events_processed: 0 }
     }
 
+    /// An engine whose queue is pre-sized for `capacity` pending events —
+    /// use when the model's steady-state event population is known (the
+    /// serving model keeps at most one in-flight event per device plus
+    /// the next arrival).
+    pub fn with_capacity(model: M, capacity: usize) -> Engine<M> {
+        Engine {
+            model,
+            queue: EventQueue::with_capacity(capacity),
+            max_events: 100_000_000,
+            events_processed: 0,
+        }
+    }
+
     /// Seed an initial event.
     pub fn seed(&mut self, at: SimTime, ev: M::Event) {
         self.queue.schedule(at, ev);

@@ -1,9 +1,18 @@
 //! Deterministic event queue: min-heap on (time, sequence number) so
 //! simultaneous events pop in insertion order.
+//!
+//! Events scheduled at exactly the current time bypass the heap: they go
+//! to a FIFO side queue (`immediate`) and pop without any sift cost — the
+//! serving model's retirement events are all scheduled "at now", so the
+//! fast path turns their heap push+pop into two `VecDeque` ends. The
+//! (time, seq) pop order is preserved exactly: every immediate entry
+//! carries its globally-assigned sequence number, and [`EventQueue::pop`]
+//! compares the immediate front against the heap top on the same
+//! `(time, seq)` key the single-heap design ordered by.
 
 use super::time::SimTime;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 struct Entry<E> {
     key: Reverse<(SimTime, u64)>,
@@ -30,6 +39,13 @@ impl<E> Ord for Entry<E> {
 /// A time-ordered event queue with FIFO tie-breaking.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
+    /// Pop-min fast path: events scheduled at exactly `now`, FIFO. The
+    /// invariant that makes this sound: time only advances by popping the
+    /// global minimum, and an immediate entry (at `now`) is never greater
+    /// than a heap entry (at `>= now` by the scheduling assert) — so time
+    /// cannot advance while this queue is non-empty, and every entry here
+    /// is always timestamped exactly `now`.
+    immediate: VecDeque<(u64, E)>,
     seq: u64,
     now: SimTime,
 }
@@ -42,7 +58,25 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: SimTime::ZERO }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            immediate: VecDeque::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// A queue whose heap starts with room for `capacity` pending events —
+    /// models that know their steady-state event population (e.g. one
+    /// in-flight event per device plus one arrival) can skip the early
+    /// growth reallocations.
+    pub fn with_capacity(capacity: usize) -> EventQueue<E> {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(capacity),
+            immediate: VecDeque::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+        }
     }
 
     /// Current simulation time (time of the last popped event).
@@ -51,12 +85,17 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `payload` at absolute time `at`. Panics if `at` is in the
-    /// past (events may be scheduled at exactly `now`).
+    /// past (events may be scheduled at exactly `now` — those take the
+    /// heap-free fast path).
     pub fn schedule(&mut self, at: SimTime, payload: E) {
         assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
-        let key = Reverse((at, self.seq));
+        let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { key, payload });
+        if at == self.now {
+            self.immediate.push_back((seq, payload));
+        } else {
+            self.heap.push(Entry { key: Reverse((at, seq)), payload });
+        }
     }
 
     /// Schedule `payload` after a delay from now.
@@ -64,21 +103,37 @@ impl<E> EventQueue<E> {
         self.schedule(self.now + delay, payload);
     }
 
-    /// Pop the earliest event, advancing `now`.
+    /// Pop the earliest event, advancing `now`. Ties at the same
+    /// timestamp break by sequence number (insertion order), whether the
+    /// entries sit on the heap or the immediate fast path.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|e| {
-            let Reverse((t, _)) = e.key;
-            self.now = t;
-            (t, e.payload)
-        })
+        let take_immediate = match (self.immediate.front(), self.heap.peek()) {
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return None,
+            (Some(&(seq_i, _)), Some(top)) => {
+                let Reverse((t_h, seq_h)) = top.key;
+                (self.now, seq_i) < (t_h, seq_h)
+            }
+        };
+        if take_immediate {
+            let (_, payload) = self.immediate.pop_front().expect("checked non-empty");
+            Some((self.now, payload))
+        } else {
+            self.heap.pop().map(|e| {
+                let Reverse((t, _)) = e.key;
+                self.now = t;
+                (t, e.payload)
+            })
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.heap.is_empty() && self.immediate.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + self.immediate.len()
     }
 }
 
@@ -117,6 +172,39 @@ mod tests {
         assert_eq!(q.now(), SimTime(10));
         q.schedule_in(SimTime(5), ());
         assert_eq!(q.pop().unwrap().0, SimTime(15));
+    }
+
+    #[test]
+    fn immediate_fast_path_preserves_seq_order_against_heap() {
+        // Heap entry at t=10 first, then two immediate entries at t=10
+        // scheduled *after* popping to t=10 — but also a heap entry at
+        // t=10 scheduled before them. Pop order must follow sequence
+        // numbers exactly, interleaving heap and fast-path entries.
+        let mut q = EventQueue::new();
+        q.schedule(SimTime(10), "heap-a"); // seq 0
+        q.pop(); // now = 10
+        q.schedule(SimTime(10), "imm-b"); // seq 1, fast path
+        q.schedule(SimTime(12), "heap-d"); // seq 2
+        q.schedule(SimTime(10), "imm-c"); // seq 3, fast path
+        assert_eq!(q.len(), 3);
+        assert!(!q.is_empty());
+        assert_eq!(q.pop().unwrap(), (SimTime(10), "imm-b"));
+        assert_eq!(q.pop().unwrap(), (SimTime(10), "imm-c"));
+        assert_eq!(q.pop().unwrap(), (SimTime(12), "heap-d"));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn immediate_entries_never_outlive_their_instant() {
+        let mut q = EventQueue::with_capacity(8);
+        q.schedule(SimTime(5), 0u32);
+        q.pop(); // now = 5
+        q.schedule(SimTime(7), 1); // heap
+        q.schedule(SimTime(5), 2); // fast path, same instant
+        // The fast-path entry (t=5) pops before the heap's t=7 entry even
+        // though the heap entry was scheduled first.
+        assert_eq!(q.pop().unwrap(), (SimTime(5), 2));
+        assert_eq!(q.pop().unwrap(), (SimTime(7), 1));
     }
 
     #[test]

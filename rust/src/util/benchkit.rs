@@ -1,8 +1,16 @@
 //! A criterion-less micro/macro benchmark harness (the session registry has
 //! no `criterion`). Benches under `rust/benches/` use this to time closures
 //! and print both timing rows and the paper's figure/table series.
+//!
+//! For machine-readable perf tracking, [`JsonEmitter`] collects named
+//! metrics (timing summaries and derived rates like events/s) and writes
+//! them as a dependency-free JSON document — `make bench-json` uses it to
+//! produce `BENCH_serving.json`, which CI uploads per PR so the serving
+//! hot path's trajectory is visible across changes.
 
 use super::stats::Summary;
+use std::io::Write;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Runner configuration.
@@ -77,6 +85,97 @@ pub fn section(title: &str) {
     println!("== {title} ==");
 }
 
+/// One named metric of a bench run: a value and its unit (`"s"`,
+/// `"events/s"`, `"requests/s"`, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Collects metrics and writes them as JSON — no serde in the registry,
+/// so the document is emitted by hand (flat schema, numbers and strings
+/// only). Non-finite values serialize as `null` (JSON has no NaN/inf).
+#[derive(Debug, Clone, Default)]
+pub struct JsonEmitter {
+    metrics: Vec<Metric>,
+}
+
+impl JsonEmitter {
+    pub fn new() -> JsonEmitter {
+        JsonEmitter::default()
+    }
+
+    /// Record one named metric.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        self.metrics.push(Metric { name: name.to_string(), value, unit: unit.to_string() });
+    }
+
+    /// Record a [`BenchResult`]'s timing summary: `<name>_mean_s` and
+    /// `<name>_p50_s` (seconds per iteration).
+    pub fn result(&mut self, r: &BenchResult) {
+        let slug: String = r
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        self.metric(&format!("{slug}_mean_s"), r.summary.mean, "s");
+        self.metric(&format!("{slug}_p50_s"), r.summary.p50, "s");
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Render the JSON document.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"flashpim-bench-v1\",\n  \"metrics\": [\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            let value = if m.value.is_finite() {
+                format!("{:e}", m.value)
+            } else {
+                "null".to_string()
+            };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}{}\n",
+                escape_json(&m.name),
+                value,
+                escape_json(&m.unit),
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the document to `path` (truncating).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// metric names and units are code-controlled, but stay well-formed
+/// regardless.
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +192,38 @@ mod tests {
         });
         assert!(r.summary.mean > 0.0);
         assert!(r.summary.n >= 1);
+    }
+
+    #[test]
+    fn json_emitter_renders_and_writes_valid_document() {
+        let mut j = JsonEmitter::new();
+        assert!(j.is_empty());
+        j.metric("serving_events_per_s", 1.25e6, "events/s");
+        j.metric("sweep_wall_s", 2.5, "s");
+        j.metric("bad \"name\"\\", f64::INFINITY, "s");
+        let doc = j.render();
+        assert!(doc.contains("\"schema\": \"flashpim-bench-v1\""));
+        assert!(doc.contains("\"serving_events_per_s\""));
+        assert!(doc.contains("\"events/s\""));
+        assert!(doc.contains("\\\"name\\\"\\\\"), "quotes and backslashes escape");
+        assert!(doc.contains("null"), "non-finite values serialize as null");
+        // Commas separate entries; the last entry has none.
+        assert_eq!(doc.matches("},\n").count(), 2);
+        let path = std::env::temp_dir().join("flashpim_bench_emit_test.json");
+        j.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), doc);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_emitter_slugs_result_names() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 2, max_total: Duration::from_secs(1) };
+        let r = bench("serving: 1M requests", &cfg, || 1 + 1);
+        let mut j = JsonEmitter::new();
+        j.result(&r);
+        let doc = j.render();
+        assert!(doc.contains("serving__1m_requests_mean_s"), "doc: {doc}");
+        assert!(doc.contains("serving__1m_requests_p50_s"));
     }
 
     #[test]

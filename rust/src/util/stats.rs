@@ -28,7 +28,24 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         let nan = samples.iter().filter(|x| x.is_nan()).count();
         assert!(nan == 0, "Summary::of: {nan} NaN sample(s) among {} values", samples.len());
-        if samples.is_empty() {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        Summary::of_sorted(&sorted)
+    }
+
+    /// Compute a summary from **already sorted** (ascending, NaN-free)
+    /// samples without re-sorting. `Summary::of(xs)` and
+    /// `Summary::of_sorted(&sorted(xs))` are bit-identical by construction
+    /// (both reduce the same sorted array, in the same order), which is
+    /// what lets streaming collectors sort once per metric and still
+    /// reproduce the materialized path byte for byte. Empty input yields
+    /// an all-zero summary.
+    pub fn of_sorted(sorted: &[f64]) -> Summary {
+        debug_assert!(
+            sorted.windows(2).all(|w| w[0] <= w[1]),
+            "Summary::of_sorted requires ascending, NaN-free input"
+        );
+        if sorted.is_empty() {
             return Summary {
                 n: 0,
                 mean: 0.0,
@@ -41,8 +58,6 @@ impl Summary {
                 p99: 0.0,
             };
         }
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -52,11 +67,63 @@ impl Summary {
             stddev: var.sqrt(),
             min: sorted[0],
             max: sorted[n - 1],
-            p50: percentile_sorted(&sorted, 50.0),
-            p90: percentile_sorted(&sorted, 90.0),
-            p95: percentile_sorted(&sorted, 95.0),
-            p99: percentile_sorted(&sorted, 99.0),
+            p50: percentile_sorted(sorted, 50.0),
+            p90: percentile_sorted(sorted, 90.0),
+            p95: percentile_sorted(sorted, 95.0),
+            p99: percentile_sorted(sorted, 99.0),
         }
+    }
+}
+
+/// Streaming sample accumulator: O(1) running count/mean/M2 (Welford) for
+/// mid-stream reads, with the samples retained so [`Self::finish`] can do
+/// one sorted flush into an **exact** [`Summary`] — identical, bit for
+/// bit, to `Summary::of` over the same multiset (percentiles need order
+/// statistics, and a bounded sketch would break the bit-identity the
+/// serving metrics guarantee).
+#[derive(Debug, Clone, Default)]
+pub struct Streaming {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Streaming {
+    pub fn new() -> Streaming {
+        Streaming::default()
+    }
+
+    /// Fold one sample in. Panics on NaN (mirrors [`Summary::of`]).
+    pub fn push(&mut self, x: f64) {
+        assert!(!x.is_nan(), "Streaming::push: NaN sample");
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let d = x - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Running mean — O(1), no flush. (May differ from the flushed
+    /// `Summary::mean` in the last few ulps: Welford folds in insertion
+    /// order, the flush sums in sorted order.)
+    pub fn running_mean(&self) -> f64 {
+        if self.samples.is_empty() { 0.0 } else { self.mean }
+    }
+
+    /// Running population standard deviation (÷ n) — O(1), no flush.
+    pub fn running_stddev(&self) -> f64 {
+        if self.samples.is_empty() { 0.0 } else { (self.m2 / self.samples.len() as f64).sqrt() }
+    }
+
+    /// Sort the retained samples once and reduce them exactly as
+    /// [`Summary::of`] would.
+    pub fn finish(mut self) -> Summary {
+        self.samples.sort_by(f64::total_cmp);
+        Summary::of_sorted(&self.samples)
     }
 }
 
@@ -137,6 +204,38 @@ mod tests {
     #[should_panic(expected = "ascending")]
     fn percentile_rejects_unsorted_in_debug() {
         percentile_sorted(&[3.0, 1.0, 2.0], 50.0);
+    }
+
+    #[test]
+    fn of_sorted_matches_of_bit_for_bit() {
+        let samples = [5.0, 1.0, 4.0, 1.5, 3.0, 2.0, 2.0, 9.5];
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(Summary::of(&samples), Summary::of_sorted(&sorted));
+        assert_eq!(Summary::of(&[]), Summary::of_sorted(&[]));
+    }
+
+    #[test]
+    fn streaming_flush_matches_summary_of() {
+        let samples = [0.25, 7.0, 3.5, 3.5, 1.0, 0.125, 42.0];
+        let mut s = Streaming::new();
+        for x in samples {
+            s.push(x);
+        }
+        assert_eq!(s.n(), samples.len());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((s.running_mean() - mean).abs() < 1e-12);
+        assert!(s.running_stddev() > 0.0);
+        assert_eq!(s.finish(), Summary::of(&samples), "flush must be bit-identical");
+        let empty = Streaming::new();
+        assert_eq!(empty.running_mean(), 0.0);
+        assert_eq!(empty.finish(), Summary::of(&[]));
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN sample")]
+    fn streaming_rejects_nan() {
+        Streaming::new().push(f64::NAN);
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Bit-identity regression suite for the serving perf re-architecture:
+//!
+//! * decode coalescing (one `DecodeDone` event per request) reproduces
+//!   the per-token event chain byte for byte — reports *and* rendered
+//!   text — across all three scheduler policies, single-class and
+//!   multi-class (`agentic-burst`) traffic;
+//! * the streaming metric path (`run_traffic_point` / `StreamingSink`,
+//!   single-pass `class_reports`) is bit-identical to materializing
+//!   every outcome and reducing afterwards;
+//! * the parallel `sweep_rates` fan-out is byte-equal to the sequential
+//!   point-by-point loop;
+//! * the direct-replay backend is untouched by the metrics rewrite;
+//! * (`--ignored`, `make perf-smoke`) a 1M-request trace completes.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::config::SystemConfig;
+use flashpim::coordinator::{
+    DecodeMode, LenRange, policy_from_name, render_sweep, run_traffic_events,
+    run_traffic_events_counted, run_traffic_events_mode, run_traffic_point,
+    run_traffic_with_table, sweep_rates, SweepPoint, TrafficConfig, WorkloadMix,
+};
+use flashpim::llm::model_config::{ModelShape, OptModel};
+use flashpim::llm::LatencyTable;
+use flashpim::util::stats::Summary;
+use std::sync::OnceLock;
+
+const POLICIES: [&str; 3] = ["round-robin", "least-loaded", "slo-aware"];
+
+/// One shared (system, model, latency table) for the whole file — the
+/// table build dominates test wall-clock and is identical everywhere.
+fn setup() -> &'static (SystemConfig, ModelShape, LatencyTable) {
+    static SHARED: OnceLock<(SystemConfig, ModelShape, LatencyTable)> = OnceLock::new();
+    SHARED.get_or_init(|| {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        (sys, model, table)
+    })
+}
+
+fn single_class_cfg(requests: usize, rate: f64, seed: u64) -> TrafficConfig {
+    TrafficConfig {
+        devices: 3,
+        rate,
+        requests,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 8, // tight enough that overload sheds some load
+        followup: 0.4,
+        seed,
+        workload: None,
+    }
+}
+
+/// The two traffic shapes every equivalence below runs under: a legacy
+/// single-class stream and the bursty two-class preset.
+fn scenarios() -> Vec<(&'static str, TrafficConfig)> {
+    let single = single_class_cfg(300, 25.0, 42);
+    let mut burst = single_class_cfg(300, 25.0, 43);
+    burst.workload = Some(WorkloadMix::preset("agentic-burst").expect("built-in preset"));
+    vec![("single-class", single), ("agentic-burst", burst)]
+}
+
+#[test]
+fn coalesced_decode_matches_per_token_oracle_byte_for_byte() {
+    let (sys, model, table) = setup();
+    for (name, cfg) in scenarios() {
+        for policy in POLICIES {
+            let p = || policy_from_name(policy).unwrap();
+            let coalesced = run_traffic_events_mode(
+                sys,
+                model,
+                table,
+                p(),
+                &cfg,
+                DecodeMode::Coalesced,
+            );
+            let per_token =
+                run_traffic_events_mode(sys, model, table, p(), &cfg, DecodeMode::PerToken);
+            assert_eq!(
+                coalesced, per_token,
+                "{name}/{policy}: coalescing changed the simulated timeline"
+            );
+            assert_eq!(
+                coalesced.render(),
+                per_token.render(),
+                "{name}/{policy}: rendered reports must be byte-equal"
+            );
+        }
+    }
+}
+
+#[test]
+fn coalescing_cuts_engine_events_at_least_10x_at_default_lengths() {
+    // Acceptance: >= 10x fewer engine events per serving run at the
+    // default output lengths (the `chat` class, 32-64 output tokens).
+    let (sys, model, table) = setup();
+    let mut cfg = TrafficConfig::default_for(4);
+    cfg.requests = 400;
+    cfg.rate = 12.0;
+    let p = || policy_from_name("least-loaded").unwrap();
+    let (rep_c, coalesced) =
+        run_traffic_events_counted(sys, model, table, p(), &cfg, DecodeMode::Coalesced);
+    let (rep_t, per_token) =
+        run_traffic_events_counted(sys, model, table, p(), &cfg, DecodeMode::PerToken);
+    assert_eq!(rep_c, rep_t);
+    assert!(
+        per_token >= 10 * coalesced,
+        "event reduction below 10x: per-token {per_token} vs coalesced {coalesced}"
+    );
+    // The coalesced count is exactly accountable: one Arrive per arrival
+    // plus DecodeDone + Retire per accepted turn.
+    assert_eq!(coalesced, rep_c.outcomes.len() as u64 + 2 * rep_c.accepted() as u64);
+}
+
+#[test]
+fn streamed_sweep_points_match_materialized_reports() {
+    let (sys, model, table) = setup();
+    for (name, cfg) in scenarios() {
+        for policy in POLICIES {
+            let p = || policy_from_name(policy).unwrap();
+            let streamed = run_traffic_point(sys, model, table, p(), &cfg);
+            let materialized = SweepPoint::of(&run_traffic_events(sys, model, table, p(), &cfg));
+            assert_eq!(
+                streamed, materialized,
+                "{name}/{policy}: streaming sink drifted from the materialized reduction"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_is_byte_equal_to_the_sequential_loop() {
+    let (sys, model, table) = setup();
+    for (name, cfg) in scenarios() {
+        // Pre-sorted unique rates so the manual loop needs no dedup pass.
+        let rates = [5.0, 15.0, 30.0];
+        let parallel = sweep_rates(sys, model, table, &cfg, &rates, &POLICIES).unwrap();
+        let mut sequential = Vec::new();
+        for policy in POLICIES {
+            for r in rates {
+                let mut point_cfg = cfg.clone();
+                point_cfg.rate = r;
+                let p = policy_from_name(policy).unwrap();
+                sequential
+                    .push(SweepPoint::of(&run_traffic_events(sys, model, table, p, &point_cfg)));
+            }
+        }
+        assert_eq!(parallel, sequential, "{name}: thread fan-out changed the sweep");
+        assert_eq!(render_sweep(&parallel), render_sweep(&sequential));
+    }
+}
+
+#[test]
+fn single_pass_class_reports_match_naive_recomputation() {
+    let (sys, model, table) = setup();
+    let (_, cfg) = scenarios().remove(1);
+    let rep =
+        run_traffic_events(sys, model, table, policy_from_name("slo-aware").unwrap(), &cfg);
+    let mix = rep.workload.clone().expect("scenario carries a mix");
+    let classes = rep.class_reports();
+    assert_eq!(classes.len(), mix.classes().len());
+    for (i, (c, spec)) in classes.iter().zip(mix.classes()).enumerate() {
+        assert_eq!(c.name, spec.name, "class {i} name");
+        let of_class: Vec<_> = rep.outcomes.iter().filter(|o| o.class == i).collect();
+        assert_eq!(c.arrivals, of_class.len());
+        assert_eq!(c.rejected, of_class.iter().filter(|o| o.rejected).count());
+        assert_eq!(c.accepted, c.arrivals - c.rejected);
+        let met = of_class.iter().filter(|o| o.meets_slo(spec.slo)).count();
+        let expect = if c.arrivals == 0 { 1.0 } else { met as f64 / c.arrivals as f64 };
+        assert_eq!(c.slo_attainment, expect, "class {i} attainment");
+        // The streamed summaries must equal collect-then-Summary::of
+        // exactly (not approximately).
+        let ttft: Vec<f64> =
+            of_class.iter().filter_map(|o| o.ttft().map(|t| t.secs())).collect();
+        let tpot: Vec<f64> = of_class.iter().filter_map(|o| o.tpot()).collect();
+        let latency: Vec<f64> = of_class
+            .iter()
+            .filter(|o| !o.rejected)
+            .map(|o| o.latency().secs())
+            .collect();
+        assert_eq!(c.ttft, Summary::of(&ttft), "class {i} TTFT summary");
+        assert_eq!(c.tpot, Summary::of(&tpot), "class {i} TPOT summary");
+        assert_eq!(c.latency, Summary::of(&latency), "class {i} latency summary");
+    }
+}
+
+#[test]
+fn direct_backend_reports_unchanged_by_the_metrics_rewrite() {
+    let (sys, model, table) = setup();
+    for (name, cfg) in scenarios() {
+        let run = || {
+            run_traffic_with_table(
+                sys,
+                model,
+                table,
+                policy_from_name("least-loaded").unwrap(),
+                &cfg,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "{name}: direct backend lost determinism");
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.backend, "direct");
+        assert_eq!(SweepPoint::of(&a), SweepPoint::of(&b));
+    }
+}
+
+/// 1M-request smoke test — the scale the coalescing re-architecture
+/// exists for. Ignored by default (seconds of release-mode work, far
+/// more under `cargo test` debug builds); run via `make perf-smoke`.
+#[test]
+#[ignore = "1M-request smoke: run with --ignored (make perf-smoke)"]
+fn million_request_trace_completes() {
+    let (sys, model, table) = setup();
+    let mut cfg = TrafficConfig::default_for(8);
+    cfg.requests = 1_000_000;
+    cfg.rate = 60.0;
+    cfg.seed = 1;
+    let (rep, events) = run_traffic_events_counted(
+        sys,
+        model,
+        table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+        DecodeMode::Coalesced,
+    );
+    assert_eq!(rep.outcomes.len(), 1_000_000);
+    assert_eq!(rep.accepted() + rep.rejected(), 1_000_000);
+    assert!(rep.accepted() > 500_000, "only {} accepted", rep.accepted());
+    assert_eq!(events, rep.outcomes.len() as u64 + 2 * rep.accepted() as u64);
+    let lat = rep.latency_summary();
+    assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+}

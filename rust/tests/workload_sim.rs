@@ -8,8 +8,8 @@ use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
 use flashpim::config::SystemConfig;
 use flashpim::coordinator::{
-    LenRange, policy_from_name, PoolReport, run_traffic_events, run_traffic_with_table, SloTarget,
-    TrafficConfig, WorkloadClass, WorkloadMix,
+    ClassReport, LenRange, policy_from_name, PoolReport, run_traffic_events,
+    run_traffic_with_table, SloTarget, TrafficConfig, WorkloadClass, WorkloadMix,
 };
 use flashpim::llm::model_config::{ModelShape, OptModel};
 use flashpim::llm::LatencyTable;
@@ -166,7 +166,9 @@ fn slo_aware_beats_round_robin_on_adversarial_mix() {
     let cfg = base_cfg(mix, 2400, 14.0, 11);
     let rr = run_events(&cfg, "round-robin");
     let slo = run_events(&cfg, "slo-aware");
-    let chat = |rep: &PoolReport| rep.class_reports()[0].clone();
+    fn chat(rep: &PoolReport) -> ClassReport<'_> {
+        rep.class_reports()[0].clone()
+    }
     let overall = |rep: &PoolReport| {
         let cs = rep.class_reports();
         cs.iter().map(|c| c.slo_attainment * c.arrivals as f64).sum::<f64>()
