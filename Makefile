@@ -1,7 +1,8 @@
 # Local targets mirroring the CI jobs (.github/workflows/ci.yml) exactly,
 # so a green `make ci` means a green pipeline.
 
-.PHONY: build test fmt clippy lint bench-check bench-json perf-smoke doc doc-test check-docs-links ci
+.PHONY: build test fmt clippy lint bench-check bench-json campaign campaign-update-baseline \
+	perf-smoke doc doc-test check-docs-links ci
 
 build:
 	cargo build --release --workspace
@@ -21,12 +22,26 @@ bench-check:
 	cargo bench --no-run --workspace
 
 # Machine-readable serving-perf metrics (events/s, requests/s, sweep
-# wall-clock). CI runs this on a reduced budget (BENCH_ITERS /
+# wall-clock). CI runs the campaign on a reduced budget (BENCH_ITERS /
 # BENCH_REQUESTS / BENCH_SWEEP_REQUESTS env knobs) and uploads the JSON.
-# Absolute path: cargo runs bench binaries with cwd = the package root
-# (rust/), not the workspace root.
+# Override the output path with `make bench-json BENCH_JSON=/tmp/b.json`;
+# the default is absolute because cargo runs bench binaries with cwd =
+# the package root (rust/), not the workspace root.
+BENCH_JSON ?= $(CURDIR)/BENCH_serving.json
 bench-json:
-	cargo bench --bench perf_hotpath -- --json $(CURDIR)/BENCH_serving.json
+	cargo bench --bench perf_hotpath -- --json $(BENCH_JSON)
+
+# Scenario campaign (policies x workload presets x backends x rate grid),
+# gated against the committed baseline — the exact invocation CI's
+# campaign-gate job runs. Deterministic: fixed seed, canonical ordering.
+# Filter with `make campaign CAMPAIGN_FLAGS="--filter 'class(chat)'"`.
+campaign:
+	cargo run --release --bin repro -- campaign --out $(BENCH_JSON) $(CAMPAIGN_FLAGS)
+
+# Refresh bench/BENCH_serving.baseline.json from a full deterministic
+# run (review the diff before committing; see docs/CAMPAIGNS.md).
+campaign-update-baseline:
+	cargo run --release --bin repro -- campaign --update-baseline
 
 # 1M-request bit-identity smoke test (ignored by default in `make test`).
 perf-smoke:

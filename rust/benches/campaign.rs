@@ -1,0 +1,56 @@
+//! Campaign-path bench: filter parsing/selection throughput and a small
+//! end-to-end campaign slice over both backends — keeps the campaign
+//! code path compiling under `cargo bench --no-run` and gives its cost a
+//! number. Budget knob: `BENCH_CAMPAIGN_REQUESTS` (requests/scenario).
+
+use flashpim::campaign::{Backend, CampaignSpec, Expr, run_campaign};
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::llm::LatencyTable;
+use flashpim::llm::model_config::OptModel;
+use flashpim::util::benchkit::{quick, section};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    section("Campaign: filter DSL");
+
+    let src = "policy(slo-aware) & (class(chat) | workload(agentic-burst)) & rate > 5 \
+               & !backend(threaded)";
+    quick("filter parse (5 atoms)", || Expr::parse(src).expect("valid filter"));
+
+    let spec = CampaignSpec::default();
+    let scenarios = spec.expand().expect("default matrix expands");
+    let filter = Expr::parse(src).expect("valid filter");
+    let r = quick("filter select over default matrix", || {
+        scenarios.iter().filter(|s| filter.matches(&s.view())).count()
+    });
+    println!(
+        "  -> {} of {} scenarios selected, {:.1} M scenario-matches/s",
+        scenarios.iter().filter(|s| filter.matches(&s.view())).count(),
+        scenarios.len(),
+        scenarios.len() as f64 / r.summary.mean / 1e6
+    );
+
+    section("Campaign: small end-to-end slice");
+
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    let slice = CampaignSpec {
+        policies: vec!["least-loaded".into(), "slo-aware".into()],
+        workloads: vec!["chat".into()],
+        backends: Backend::ALL.to_vec(),
+        rates: vec![8.0, 32.0],
+        devices: 4,
+        requests: env_usize("BENCH_CAMPAIGN_REQUESTS", 2000),
+        seed: 7,
+    };
+    let n = slice.expand().expect("slice expands").len();
+    let r = quick("campaign slice (2 policies x 2 rates x 2 backends)", || {
+        run_campaign(&sys, &model, &table, &slice, None).expect("campaign runs")
+    });
+    println!("  -> {:.3} s per {n}-scenario slice", r.summary.mean);
+}

@@ -51,13 +51,17 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// `--json PATH` from the bench's own arguments; every other argument
-/// (e.g. the `--bench` cargo appends) is ignored.
+/// `--json [PATH]` from the bench's own arguments; every other argument
+/// (e.g. the `--bench` cargo appends) is ignored. A bare `--json` writes
+/// to `BENCH_serving.json` in the current directory.
 fn json_path() -> Option<PathBuf> {
-    let mut args = std::env::args().skip(1);
+    let mut args = std::env::args().skip(1).peekable();
     while let Some(a) = args.next() {
         if a == "--json" {
-            return args.next().map(PathBuf::from);
+            let explicit = args.peek().filter(|next| !next.starts_with("--"));
+            return Some(PathBuf::from(
+                explicit.map(String::as_str).unwrap_or("BENCH_serving.json"),
+            ));
         }
     }
     None
@@ -196,7 +200,12 @@ fn main() {
     }
 
     if let Some(path) = json_path() {
-        json.write(&path).expect("write bench JSON");
+        // Parent directories are created on demand; an unwritable path
+        // (e.g. a read-only mount) is a clean error, not a panic.
+        if let Err(e) = json.write(&path) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
         println!("\nwrote {} bench metrics to {}", json.len(), path.display());
     }
 }

@@ -1,0 +1,365 @@
+//! Baseline comparison: diff a fresh campaign metrics document against
+//! the committed `bench/BENCH_serving.baseline.json` and gate on
+//! regressions.
+//!
+//! Every metric name maps to a [`Direction`] — whether bigger is better
+//! (throughput, SLO attainment, accepted), worse (latency percentiles,
+//! rejections), or neither (wall-clock and other informational metrics,
+//! which never gate: CI runners are noisy, the simulation is not). A
+//! relative tolerance absorbs cross-platform float-ulp drift; beyond it,
+//! a change in the bad direction is a [`Verdict::Regress`] and
+//! [`BaselineDiff::gate`] returns an error, which is what makes
+//! `repro campaign` exit non-zero and the CI `campaign-gate` job fail.
+
+use crate::util::benchkit::Metric;
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Which way a metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherBetter,
+    LowerBetter,
+    /// Never gates (wall-clock timings, counters without a preference).
+    Info,
+}
+
+/// Classify a metric by its name. Unknown names are informational — a
+/// new metric kind must be classified here before it can gate.
+pub fn direction_of(name: &str) -> Direction {
+    if name.ends_with("_wall_s") || name == "campaign_scenarios" {
+        return Direction::Info;
+    }
+    if name.contains("/slo/")
+        || name.ends_with("/accepted")
+        || name.ends_with("/throughput_tok_s")
+    {
+        return Direction::HigherBetter;
+    }
+    if name.ends_with("/rejected")
+        || name.ends_with("/ttft_p95_s")
+        || name.ends_with("/lat_p50_s")
+        || name.ends_with("/lat_p95_s")
+        || name.ends_with("/lat_p99_s")
+    {
+        return Direction::LowerBetter;
+    }
+    Direction::Info
+}
+
+/// Outcome of comparing one metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within tolerance (or an informational metric present on both sides).
+    Pass,
+    /// Beyond tolerance in the bad direction.
+    Regress,
+    /// Beyond tolerance in the good direction.
+    Improve,
+    /// In the current run but not the baseline (does not gate).
+    New,
+    /// In the baseline but not the current run — a scenario vanished.
+    Missing,
+}
+
+impl Verdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Regress => "REGRESS",
+            Verdict::Improve => "improve",
+            Verdict::New => "new",
+            Verdict::Missing => "MISSING",
+        }
+    }
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub name: String,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// Signed relative change `(cur - base) / |base|`; `None` when either
+    /// side is absent or non-finite.
+    pub rel: Option<f64>,
+    pub verdict: Verdict,
+}
+
+/// The full comparison of a campaign run against a baseline.
+#[derive(Debug, Clone)]
+pub struct BaselineDiff {
+    pub rows: Vec<DiffRow>,
+    /// Relative tolerance the verdicts were computed under.
+    pub rel_tol: f64,
+}
+
+/// Compare `current` against `baseline` under a relative tolerance.
+/// Rows come out in current-document order (the canonical scenario
+/// order), with baseline-only metrics appended as [`Verdict::Missing`].
+/// When `ignore_missing` is set, baseline-only metrics pass instead — the
+/// right semantics for a `--filter`ed partial run, where most of the
+/// baseline is deliberately not re-measured.
+pub fn diff_metrics(
+    current: &[Metric],
+    baseline: &[Metric],
+    rel_tol: f64,
+    ignore_missing: bool,
+) -> BaselineDiff {
+    let base_by_name: BTreeMap<&str, f64> =
+        baseline.iter().map(|m| (m.name.as_str(), m.value)).collect();
+    let mut seen: std::collections::BTreeSet<&str> = Default::default();
+    let mut rows = Vec::with_capacity(current.len());
+    for m in current {
+        seen.insert(m.name.as_str());
+        let base = base_by_name.get(m.name.as_str()).copied();
+        rows.push(compare(&m.name, base, Some(m.value), rel_tol));
+    }
+    for m in baseline {
+        if !seen.contains(m.name.as_str()) {
+            let verdict = if ignore_missing || direction_of(&m.name) == Direction::Info {
+                Verdict::Pass
+            } else {
+                Verdict::Missing
+            };
+            rows.push(DiffRow {
+                name: m.name.clone(),
+                baseline: Some(m.value),
+                current: None,
+                rel: None,
+                verdict,
+            });
+        }
+    }
+    BaselineDiff { rows, rel_tol }
+}
+
+fn compare(name: &str, base: Option<f64>, cur: Option<f64>, rel_tol: f64) -> DiffRow {
+    let direction = direction_of(name);
+    let (verdict, rel) = match (base, cur) {
+        (None, Some(_)) => (Verdict::New, None),
+        (Some(b), Some(c)) => {
+            if direction == Direction::Info {
+                (Verdict::Pass, rel_change(b, c))
+            } else {
+                match rel_change(b, c) {
+                    // Non-finite on either side: only an exact bitwise
+                    // match (e.g. NaN == NaN encodings both null) passes.
+                    None => {
+                        let same = b.to_bits() == c.to_bits() || (b.is_nan() && c.is_nan());
+                        let v = if same { Verdict::Pass } else { Verdict::Regress };
+                        (v, None)
+                    }
+                    Some(r) if r.abs() <= rel_tol => (Verdict::Pass, Some(r)),
+                    Some(r) => {
+                        let worse = match direction {
+                            Direction::HigherBetter => r < 0.0,
+                            Direction::LowerBetter => r > 0.0,
+                            Direction::Info => unreachable!("handled above"),
+                        };
+                        let v = if worse { Verdict::Regress } else { Verdict::Improve };
+                        (v, Some(r))
+                    }
+                }
+            }
+        }
+        // `compare` is only called with a current value; (_, None) rows
+        // are built by the caller.
+        (_, None) => (Verdict::Missing, None),
+    };
+    DiffRow { name: name.to_string(), baseline: base, current: cur, rel, verdict }
+}
+
+/// Signed relative change, `None` when it cannot be computed finitely.
+/// A zero baseline with a zero current is 0; zero → nonzero is infinite
+/// change and comes back as `None` only if non-finite — here it returns
+/// a large sentinel via division by a tiny floor instead, so appearing
+/// rejections (0 → n) still register as a real change.
+fn rel_change(base: f64, cur: f64) -> Option<f64> {
+    if !base.is_finite() || !cur.is_finite() {
+        return None;
+    }
+    if base == cur {
+        return Some(0.0);
+    }
+    Some((cur - base) / base.abs().max(1e-12))
+}
+
+impl BaselineDiff {
+    pub fn regressions(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| matches!(r.verdict, Verdict::Regress | Verdict::Missing))
+            .count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.rows.iter().filter(|r| r.verdict == Verdict::Improve).count()
+    }
+
+    /// Error (→ non-zero process exit) when any metric regressed.
+    pub fn gate(&self) -> Result<()> {
+        let n = self.regressions();
+        if n > 0 {
+            bail!(
+                "{n} metric(s) regressed beyond {:.2}% relative tolerance (see table above); \
+                 if intentional, refresh the baseline with `make campaign-update-baseline`",
+                self.rel_tol * 100.0
+            );
+        }
+        Ok(())
+    }
+
+    /// Render the pass/regress/improve table. `verbose` includes every
+    /// row; otherwise pass and new rows are summarized in the header
+    /// line and only regressions, improvements, and missing metrics are
+    /// listed (a fresh-bootstrap comparison would otherwise print one
+    /// `new` row per metric).
+    pub fn render(&self, verbose: bool) -> String {
+        let count = |v: Verdict| self.rows.iter().filter(|r| r.verdict == v).count();
+        let mut t = Table::new(&["metric", "baseline", "current", "change", "verdict"]);
+        let mut listed = 0usize;
+        for r in &self.rows {
+            if !verbose && matches!(r.verdict, Verdict::Pass | Verdict::New) {
+                continue;
+            }
+            listed += 1;
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.6e}"),
+                None => "-".to_string(),
+            };
+            t.row(&[
+                r.name.clone(),
+                fmt(r.baseline),
+                fmt(r.current),
+                match r.rel {
+                    Some(rel) => format!("{:+.2}%", rel * 100.0),
+                    None => "-".to_string(),
+                },
+                r.verdict.as_str().to_string(),
+            ]);
+        }
+        let mut out = format!(
+            "baseline comparison (relative tolerance {:.2}%): {} pass, {} regressed, {} \
+             improved, {} new, {} missing\n",
+            self.rel_tol * 100.0,
+            count(Verdict::Pass),
+            count(Verdict::Regress),
+            count(Verdict::Improve),
+            count(Verdict::New),
+            count(Verdict::Missing),
+        );
+        if listed > 0 {
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(name: &str, value: f64) -> Metric {
+        Metric { name: name.to_string(), value, unit: "x".to_string() }
+    }
+
+    #[test]
+    fn directions_classify_by_suffix() {
+        let up = Direction::HigherBetter;
+        let down = Direction::LowerBetter;
+        assert_eq!(direction_of("campaign/chat/slo-aware/event/r8/slo/chat"), up);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/throughput_tok_s"), up);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/accepted"), up);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/ttft_p95_s"), down);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/lat_p99_s"), down);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/rejected"), down);
+        assert_eq!(direction_of("campaign_wall_s"), Direction::Info);
+        assert_eq!(direction_of("sweep_frontier_wall_s"), Direction::Info);
+        assert_eq!(direction_of("campaign_scenarios"), Direction::Info);
+        assert_eq!(direction_of("something_else_entirely"), Direction::Info);
+    }
+
+    #[test]
+    fn identical_documents_diff_clean() {
+        let cur = vec![m("a/ttft_p95_s", 0.5), m("a/slo/chat", 0.99), m("campaign_wall_s", 3.0)];
+        let d = diff_metrics(&cur, &cur.clone(), 0.01, false);
+        assert_eq!(d.regressions(), 0);
+        assert_eq!(d.improvements(), 0);
+        assert!(d.gate().is_ok());
+        assert!(d.rows.iter().all(|r| r.verdict == Verdict::Pass));
+        let brief = d.render(false);
+        assert!(brief.contains("3 pass, 0 regressed"), "{brief}");
+        assert!(!brief.contains("a/ttft_p95_s"), "passing rows stay out of the table: {brief}");
+        assert!(d.render(true).contains("a/ttft_p95_s"));
+    }
+
+    #[test]
+    fn regressions_respect_direction_and_tolerance() {
+        let base =
+            vec![m("a/ttft_p95_s", 1.0), m("a/slo/chat", 1.0), m("a/throughput_tok_s", 100.0)];
+        // Latency up 5%, attainment down 5%, throughput up 5%.
+        let cur =
+            vec![m("a/ttft_p95_s", 1.05), m("a/slo/chat", 0.95), m("a/throughput_tok_s", 105.0)];
+        let d = diff_metrics(&cur, &base, 0.02, false);
+        assert_eq!(d.regressions(), 2, "latency up and attainment down regress");
+        assert_eq!(d.improvements(), 1, "throughput up improves");
+        assert!(d.gate().is_err());
+        let msg = d.gate().unwrap_err().to_string();
+        assert!(msg.contains("campaign-update-baseline"), "{msg}");
+        let table = d.render(false);
+        assert!(table.contains("REGRESS") && table.contains("improve"), "{table}");
+
+        // The same deltas inside a 10% tolerance all pass.
+        let d = diff_metrics(&cur, &base, 0.10, false);
+        assert_eq!(d.regressions(), 0);
+        assert!(d.gate().is_ok());
+    }
+
+    #[test]
+    fn wall_clock_metrics_never_gate() {
+        let base = vec![m("campaign_wall_s", 1.0)];
+        let cur = vec![m("campaign_wall_s", 50.0)];
+        let d = diff_metrics(&cur, &base, 0.01, false);
+        assert_eq!(d.regressions(), 0, "wall-clock is informational");
+        assert!(d.gate().is_ok());
+    }
+
+    #[test]
+    fn missing_and_new_metrics() {
+        let base = vec![m("a/ttft_p95_s", 1.0), m("b/ttft_p95_s", 1.0), m("old_wall_s", 2.0)];
+        let cur = vec![m("a/ttft_p95_s", 1.0), m("c/ttft_p95_s", 1.0)];
+        let d = diff_metrics(&cur, &base, 0.01, false);
+        let verdict = |name: &str| d.rows.iter().find(|r| r.name == name).unwrap().verdict;
+        assert_eq!(verdict("b/ttft_p95_s"), Verdict::Missing, "vanished scenarios gate");
+        assert_eq!(verdict("c/ttft_p95_s"), Verdict::New, "new metrics do not gate");
+        assert_eq!(verdict("old_wall_s"), Verdict::Pass, "info metrics may vanish freely");
+        assert_eq!(d.regressions(), 1);
+        assert!(d.gate().is_err());
+
+        // A filtered partial run ignores the unmeasured remainder.
+        let d = diff_metrics(&cur, &base, 0.01, true);
+        assert_eq!(d.regressions(), 0);
+        assert!(d.gate().is_ok());
+    }
+
+    #[test]
+    fn zero_baselines_still_register_change() {
+        let base = vec![m("a/rejected", 0.0)];
+        let cur = vec![m("a/rejected", 3.0)];
+        let d = diff_metrics(&cur, &base, 0.05, false);
+        assert_eq!(d.regressions(), 1, "rejections appearing from zero is a regression");
+        let d = diff_metrics(&base, &base.clone(), 0.05, false);
+        assert_eq!(d.regressions(), 0, "0 == 0 passes");
+    }
+
+    #[test]
+    fn non_finite_values_only_pass_when_identical() {
+        let nan = || vec![m("a/ttft_p95_s", f64::NAN)];
+        let d = diff_metrics(&nan(), &nan(), 0.01, false);
+        assert_eq!(d.regressions(), 0);
+        let d = diff_metrics(&nan(), &[m("a/ttft_p95_s", 1.0)], 0.01, false);
+        assert_eq!(d.regressions(), 1);
+    }
+}

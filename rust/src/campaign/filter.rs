@@ -1,0 +1,561 @@
+//! Scenario filter expressions — the small set-algebra language behind
+//! `repro campaign --filter`.
+//!
+//! Campaign matrices multiply fast (policies × workloads × backends ×
+//! rate grids); selecting slices through ever more CLI flags does not
+//! scale. Instead a filter is one expression over scenario attributes,
+//! in the spirit of the tytanic test-filter design (small AST, hand
+//! lexer, recursive-descent parser, set-algebra evaluation):
+//!
+//! ```text
+//! policy(slo-aware) & class(chat) & rate > 5
+//! workload(summarize-long) | backend(threaded)
+//! !(policy(round-robin) | rate >= 16)
+//! ```
+//!
+//! Grammar (precedence low → high: `|`, `&`, `!`):
+//!
+//! ```text
+//! expr    := or
+//! or      := and ('|' and)*
+//! and     := unary ('&' unary)*
+//! unary   := '!' unary | primary
+//! primary := '(' expr ')' | 'all' | 'none' | atom
+//! atom    := key '(' value ')'        key ∈ {policy, workload, class, backend}
+//!          | 'rate' cmp number        cmp ∈ {<, <=, >, >=, =, !=}
+//! ```
+//!
+//! `workload(x)` matches the mix *name*; `class(x)` matches mixes that
+//! *contain* a class named `x` (the `summarize-long` preset contains a
+//! `chat` class, for example). Parse errors carry byte spans and render
+//! with a caret under the offending input — see [`ParseError`].
+
+use anyhow::{anyhow, Result};
+use std::fmt;
+
+/// Comparison operator of a `rate` atom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    fn apply(self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ne => lhs != rhs,
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+        }
+    }
+}
+
+/// String-valued scenario attributes an atom can test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomKey {
+    Policy,
+    Workload,
+    Class,
+    Backend,
+}
+
+impl AtomKey {
+    fn from_name(name: &str) -> Option<AtomKey> {
+        match name {
+            "policy" => Some(AtomKey::Policy),
+            "workload" => Some(AtomKey::Workload),
+            "class" => Some(AtomKey::Class),
+            "backend" => Some(AtomKey::Backend),
+            _ => None,
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            AtomKey::Policy => "policy",
+            AtomKey::Workload => "workload",
+            AtomKey::Class => "class",
+            AtomKey::Backend => "backend",
+        }
+    }
+}
+
+/// Parsed filter expression. Evaluation is pure set algebra over the
+/// scenario attributes in a [`ScenarioView`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// `all` — matches every scenario (the identity filter).
+    All,
+    /// `none` — matches nothing.
+    None,
+    /// `key(value)` membership test.
+    Atom(AtomKey, String),
+    /// `rate CMP number`.
+    Rate(CmpOp, f64),
+    Not(Box<Expr>),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+}
+
+/// The attributes of one scenario a filter can see — a borrowed view so
+/// the evaluator does not depend on the runner's concrete type.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioView<'a> {
+    pub policy: &'a str,
+    pub workload: &'a str,
+    /// Names of the classes inside the scenario's workload mix.
+    pub classes: &'a [String],
+    pub backend: &'a str,
+    pub rate: f64,
+}
+
+impl Expr {
+    /// Parse a filter expression; errors render with a caret span.
+    pub fn parse(src: &str) -> Result<Expr> {
+        let tokens = lex(src).map_err(|e| anyhow!("{}", e.render(src)))?;
+        let mut p = Parser { tokens: &tokens, pos: 0, src_len: src.len() };
+        let expr = p.or_expr().map_err(|e| anyhow!("{}", e.render(src)))?;
+        if let Some(t) = p.peek() {
+            let err = ParseError::new("expected `&`, `|`, or end of filter", t.span);
+            return Err(anyhow!("{}", err.render(src)));
+        }
+        Ok(expr)
+    }
+
+    /// Does this expression select the scenario?
+    pub fn matches(&self, s: &ScenarioView) -> bool {
+        match self {
+            Expr::All => true,
+            Expr::None => false,
+            Expr::Atom(key, value) => match key {
+                AtomKey::Policy => s.policy == value,
+                AtomKey::Workload => s.workload == value,
+                AtomKey::Class => s.classes.iter().any(|c| c == value),
+                AtomKey::Backend => s.backend == value,
+            },
+            Expr::Rate(op, rhs) => op.apply(s.rate, *rhs),
+            Expr::Not(e) => !e.matches(s),
+            Expr::And(a, b) => a.matches(s) && b.matches(s),
+            Expr::Or(a, b) => a.matches(s) || b.matches(s),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    /// Canonical fully-parenthesized rendering (handy in tests and logs).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::All => write!(f, "all"),
+            Expr::None => write!(f, "none"),
+            Expr::Atom(key, value) => write!(f, "{}({})", key.as_str(), value),
+            Expr::Rate(op, rhs) => write!(f, "rate {} {}", op.as_str(), rhs),
+            Expr::Not(e) => write!(f, "!({e})"),
+            Expr::And(a, b) => write!(f, "({a} & {b})"),
+            Expr::Or(a, b) => write!(f, "({a} | {b})"),
+        }
+    }
+}
+
+/// A lex or parse failure: message plus the byte span it points at.
+/// [`ParseError::render`] draws the offending source with a caret line:
+///
+/// ```text
+/// filter error: unknown atom `polcy` (expected policy, workload, class, backend, rate, all, none)
+///   polcy(x) & rate > 5
+///   ^^^^^
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub msg: String,
+    /// Byte range `[start, end)` into the source expression.
+    pub span: (usize, usize),
+}
+
+impl ParseError {
+    fn new(msg: impl Into<String>, span: (usize, usize)) -> ParseError {
+        ParseError { msg: msg.into(), span }
+    }
+
+    /// Render the message with the source line and a caret underline.
+    pub fn render(&self, src: &str) -> String {
+        let (start, end) = self.span;
+        let width = end.saturating_sub(start).max(1);
+        format!(
+            "filter error: {}\n  {}\n  {}{}",
+            self.msg,
+            src,
+            " ".repeat(start),
+            "^".repeat(width)
+        )
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum TokenKind {
+    Ident(String),
+    Number(f64),
+    And,
+    Or,
+    Not,
+    LParen,
+    RParen,
+    Cmp(CmpOp),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Token {
+    kind: TokenKind,
+    span: (usize, usize),
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | '/')
+}
+
+fn lex(src: &str) -> Result<Vec<Token>, ParseError> {
+    let bytes = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        let start = i;
+        match c {
+            ' ' | '\t' | '\n' | '\r' => {
+                i += 1;
+                continue;
+            }
+            '&' => out.push(Token { kind: TokenKind::And, span: (start, i + 1) }),
+            '|' => out.push(Token { kind: TokenKind::Or, span: (start, i + 1) }),
+            '(' => out.push(Token { kind: TokenKind::LParen, span: (start, i + 1) }),
+            ')' => out.push(Token { kind: TokenKind::RParen, span: (start, i + 1) }),
+            '!' | '<' | '>' | '=' => {
+                let two = bytes.get(i + 1) == Some(&b'=');
+                let kind = match (c, two) {
+                    ('!', true) => TokenKind::Cmp(CmpOp::Ne),
+                    ('!', false) => TokenKind::Not,
+                    ('<', true) => TokenKind::Cmp(CmpOp::Le),
+                    ('<', false) => TokenKind::Cmp(CmpOp::Lt),
+                    ('>', true) => TokenKind::Cmp(CmpOp::Ge),
+                    ('>', false) => TokenKind::Cmp(CmpOp::Gt),
+                    ('=', _) => TokenKind::Cmp(CmpOp::Eq),
+                    _ => unreachable!(),
+                };
+                let len = if two { 2 } else { 1 };
+                i += len - 1;
+                out.push(Token { kind, span: (start, i + 1) });
+            }
+            c if c.is_ascii_digit() => {
+                while i < bytes.len() && matches!(bytes[i] as char, '0'..='9' | '.') {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let n = text.parse::<f64>().map_err(|_| {
+                    ParseError::new(format!("invalid number `{text}`"), (start, i))
+                })?;
+                out.push(Token { kind: TokenKind::Number(n), span: (start, i) });
+                continue;
+            }
+            c if c.is_ascii_alphabetic() => {
+                while i < bytes.len() && ident_char(bytes[i] as char) {
+                    i += 1;
+                }
+                out.push(Token {
+                    kind: TokenKind::Ident(src[start..i].to_string()),
+                    span: (start, i),
+                });
+                continue;
+            }
+            other => {
+                return Err(ParseError::new(
+                    format!("unexpected character `{other}`"),
+                    (start, start + other.len_utf8()),
+                ));
+            }
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    tokens: &'a [Token],
+    pos: usize,
+    src_len: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.pos)
+    }
+
+    fn eof_span(&self) -> (usize, usize) {
+        (self.src_len, self.src_len + 1)
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while matches!(self.peek().map(|t| &t.kind), Some(TokenKind::Or)) {
+            self.pos += 1;
+            let rhs = self.and_expr()?;
+            lhs = Expr::Or(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary()?;
+        while matches!(self.peek().map(|t| &t.kind), Some(TokenKind::And)) {
+            self.pos += 1;
+            let rhs = self.unary()?;
+            lhs = Expr::And(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        if matches!(self.peek().map(|t| &t.kind), Some(TokenKind::Not)) {
+            self.pos += 1;
+            return Ok(Expr::Not(Box::new(self.unary()?)));
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        let Some(tok) = self.peek().cloned() else {
+            return Err(ParseError::new("expected an atom, `!`, or `(`", self.eof_span()));
+        };
+        match tok.kind {
+            TokenKind::LParen => {
+                self.pos += 1;
+                let inner = self.or_expr()?;
+                match self.peek() {
+                    Some(t) if t.kind == TokenKind::RParen => {
+                        self.pos += 1;
+                        Ok(inner)
+                    }
+                    Some(t) => Err(ParseError::new("expected `)`", t.span)),
+                    None => Err(ParseError::new("unclosed `(`", tok.span)),
+                }
+            }
+            TokenKind::Ident(name) => {
+                self.pos += 1;
+                self.atom(&name, tok.span)
+            }
+            _ => Err(ParseError::new("expected an atom, `!`, or `(`", tok.span)),
+        }
+    }
+
+    /// An identifier was consumed; finish the atom it starts.
+    fn atom(&mut self, name: &str, span: (usize, usize)) -> Result<Expr, ParseError> {
+        match name {
+            "all" => return Ok(Expr::All),
+            "none" => return Ok(Expr::None),
+            "rate" => {
+                let op = match self.peek() {
+                    Some(Token { kind: TokenKind::Cmp(op), .. }) => *op,
+                    Some(t) => {
+                        return Err(ParseError::new(
+                            "`rate` needs a comparison (one of < <= > >= = !=)",
+                            t.span,
+                        ))
+                    }
+                    None => {
+                        return Err(ParseError::new(
+                            "`rate` needs a comparison (one of < <= > >= = !=)",
+                            self.eof_span(),
+                        ))
+                    }
+                };
+                self.pos += 1;
+                let rhs = match self.peek() {
+                    Some(Token { kind: TokenKind::Number(n), .. }) => *n,
+                    Some(t) => return Err(ParseError::new("expected a number", t.span)),
+                    None => return Err(ParseError::new("expected a number", self.eof_span())),
+                };
+                self.pos += 1;
+                return Ok(Expr::Rate(op, rhs));
+            }
+            _ => {}
+        }
+        let Some(key) = AtomKey::from_name(name) else {
+            return Err(ParseError::new(
+                format!(
+                    "unknown atom `{name}` (expected policy, workload, class, backend, rate, \
+                     all, none)"
+                ),
+                span,
+            ));
+        };
+        match self.peek() {
+            Some(t) if t.kind == TokenKind::LParen => self.pos += 1,
+            Some(t) => {
+                return Err(ParseError::new(format!("`{name}` needs `({name} NAME)`"), t.span))
+            }
+            None => {
+                return Err(ParseError::new(
+                    format!("`{name}(...)` needs a parenthesized value"),
+                    self.eof_span(),
+                ))
+            }
+        }
+        let value = match self.peek().cloned() {
+            Some(Token { kind: TokenKind::Ident(v), .. }) => {
+                self.pos += 1;
+                v
+            }
+            Some(t) => return Err(ParseError::new("expected a value name", t.span)),
+            None => return Err(ParseError::new("expected a value name", self.eof_span())),
+        };
+        match self.peek() {
+            Some(t) if t.kind == TokenKind::RParen => {
+                self.pos += 1;
+                Ok(Expr::Atom(key, value))
+            }
+            Some(t) => Err(ParseError::new("expected `)`", t.span)),
+            None => Err(ParseError::new("unclosed `(`", self.eof_span())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(
+        policy: &'a str,
+        workload: &'a str,
+        classes: &'a [String],
+        backend: &'a str,
+        rate: f64,
+    ) -> ScenarioView<'a> {
+        ScenarioView { policy, workload, classes, backend, rate }
+    }
+
+    fn classes(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn atoms_match_their_attributes() {
+        let cs = classes(&["chat", "summarize"]);
+        let s = view("slo-aware", "summarize-long", &cs, "event", 8.0);
+        for (src, expect) in [
+            ("policy(slo-aware)", true),
+            ("policy(round-robin)", false),
+            ("workload(summarize-long)", true),
+            ("workload(chat)", false),
+            ("class(chat)", true),
+            ("class(batch)", false),
+            ("backend(event)", true),
+            ("backend(threaded)", false),
+            ("rate > 5", true),
+            ("rate >= 8", true),
+            ("rate < 8", false),
+            ("rate <= 8", true),
+            ("rate = 8", true),
+            ("rate != 8", false),
+            ("all", true),
+            ("none", false),
+        ] {
+            assert_eq!(Expr::parse(src).unwrap().matches(&s), expect, "{src}");
+        }
+    }
+
+    #[test]
+    fn precedence_not_over_and_over_or() {
+        // `a & b | c` parses as `(a & b) | c`.
+        let e = Expr::parse("policy(a) & backend(b) | rate > 1").unwrap();
+        assert_eq!(e.to_string(), "((policy(a) & backend(b)) | rate > 1)");
+        // `!` binds tighter than `&`.
+        let e = Expr::parse("!policy(a) & backend(b)").unwrap();
+        assert_eq!(e.to_string(), "(!(policy(a)) & backend(b))");
+        // `a | b & c` keeps `&` inside the right arm.
+        let e = Expr::parse("policy(a) | backend(b) & rate > 1").unwrap();
+        assert_eq!(e.to_string(), "(policy(a) | (backend(b) & rate > 1))");
+    }
+
+    #[test]
+    fn parens_override_precedence() {
+        let e = Expr::parse("policy(a) & (backend(b) | rate > 1)").unwrap();
+        assert_eq!(e.to_string(), "(policy(a) & (backend(b) | rate > 1))");
+        let cs = classes(&["x"]);
+        let s = view("a", "w", &cs, "c", 0.5);
+        // Without parens the `&` grabs backend(b): policy a, backend c → false | false.
+        assert!(!Expr::parse("policy(a) & backend(b) | rate > 1").unwrap().matches(&s));
+        // With parens: policy(a) & (false | false) is false; flip rate to check true path.
+        let s2 = view("a", "w", &cs, "c", 2.0);
+        assert!(Expr::parse("policy(a) & (backend(b) | rate > 1)").unwrap().matches(&s2));
+    }
+
+    #[test]
+    fn negation_and_nesting() {
+        let cs = classes(&["chat"]);
+        let s = view("slo-aware", "chat", &cs, "event", 4.0);
+        assert!(!Expr::parse("!(policy(slo-aware) | rate >= 16)").unwrap().matches(&s));
+        assert!(Expr::parse("!!policy(slo-aware)").unwrap().matches(&s));
+        assert!(Expr::parse("!rate != 4").unwrap().matches(&s), "! applies to the whole atom");
+    }
+
+    #[test]
+    fn unknown_atom_renders_caret_span() {
+        let err = Expr::parse("policy(slo-aware) & polcy(x)").unwrap_err().to_string();
+        assert!(err.contains("unknown atom `polcy`"), "{err}");
+        // Caret sits under `polcy` (column 20, width 5).
+        let caret_line = err.lines().last().unwrap();
+        assert_eq!(caret_line, format!("  {}^^^^^", " ".repeat(20)), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_an_error() {
+        let err = Expr::parse("policy(a) backend(b)").unwrap_err().to_string();
+        assert!(err.contains("expected `&`, `|`, or end of filter"), "{err}");
+        assert!(err.lines().last().unwrap().contains('^'), "{err}");
+    }
+
+    #[test]
+    fn malformed_expressions_error_cleanly() {
+        for src in [
+            "",
+            "rate",
+            "rate >",
+            "rate > x",
+            "rate(5)",
+            "policy",
+            "policy(",
+            "policy()",
+            "policy(a",
+            "(policy(a)",
+            "policy(a) &",
+            "& policy(a)",
+            "policy(a) @ backend(b)",
+            "rate > 1.2.3",
+        ] {
+            let err = Expr::parse(src);
+            assert!(err.is_err(), "{src:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn lexer_handles_tight_spacing() {
+        let e = Expr::parse("rate>5&policy(x)|rate<=2").unwrap();
+        assert_eq!(e.to_string(), "((rate > 5 & policy(x)) | rate <= 2)");
+    }
+}

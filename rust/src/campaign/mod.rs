@@ -1,0 +1,41 @@
+//! Sweep campaigns: scenario filtering, matrix execution, and perf
+//! baselines — the machinery behind `repro campaign` and the CI
+//! `campaign-gate` job.
+//!
+//! The serving stack sweeps a (policy × workload × backend × rate) grid;
+//! this module turns those sweeps from ad-hoc CLI flag combinations into
+//! a tracked perf trajectory:
+//!
+//! * [`filter`] — a small scenario-filter expression language (`&`, `|`,
+//!   `!`, parens; atoms like `policy(slo-aware)`, `class(chat)`,
+//!   `backend(event)`, `rate > 5`), lexed and parsed by hand into an AST
+//!   evaluated as set algebra over scenario attributes.
+//! * [`runner`] — [`CampaignSpec`] expands the matrix in canonical order
+//!   and [`run_campaign`] executes the filtered selection on the shared
+//!   scoped-thread scaffold, one deterministic [`SweepPoint`] per
+//!   scenario.
+//! * [`report`] — renders outcomes as the human table and as the
+//!   canonical, deterministically-ordered `BENCH_serving.json` metrics
+//!   document (names like `campaign/chat/slo-aware/event/r8/ttft_p95_s`).
+//! * [`baseline`] — diffs a fresh document against the committed
+//!   `bench/BENCH_serving.baseline.json` under direction-aware relative
+//!   tolerances and gates: any regression makes the CLI exit non-zero,
+//!   which is the CI regression gate.
+//!
+//! The workflow (details in `docs/CAMPAIGNS.md`): run
+//! `repro campaign --filter '<expr>'` locally to measure a slice; CI runs
+//! the full matrix with a fixed seed and compares against the committed
+//! baseline; intentional perf changes refresh it via
+//! `make campaign-update-baseline`.
+//!
+//! [`SweepPoint`]: crate::coordinator::SweepPoint
+
+pub mod baseline;
+pub mod filter;
+pub mod report;
+pub mod runner;
+
+pub use baseline::{BaselineDiff, diff_metrics, DiffRow, Direction, direction_of, Verdict};
+pub use filter::{AtomKey, CmpOp, Expr, ParseError, ScenarioView};
+pub use report::{campaign_metrics, render_campaign, scenario_key};
+pub use runner::{Backend, CampaignOutcome, CampaignSpec, DEFAULT_RATES, run_campaign, Scenario};

@@ -1,0 +1,190 @@
+//! Campaign rendering: the human table and the canonical
+//! `BENCH_serving.json` metrics document (report/render split — the
+//! runner produces [`CampaignOutcome`]s, this module turns them into
+//! output, the way the tytanic runner separates execution from report
+//! rendering).
+//!
+//! Metric names are hierarchical and deterministic:
+//!
+//! ```text
+//! campaign/<workload>/<policy>/<backend>/r<rate>/<metric>
+//! ```
+//!
+//! e.g. `campaign/chat/slo-aware/event/r8/ttft_p95_s`. Outcomes arrive in
+//! the runner's canonical scenario order, so two runs of the same spec
+//! render byte-identical documents — the property the committed baseline
+//! and the CI determinism guard rely on.
+
+use super::runner::{CampaignOutcome, Scenario};
+use crate::util::benchkit::JsonEmitter;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+/// Canonical metric-name prefix of one scenario. The rate renders via
+/// `f64`'s shortest-round-trip `Display` (`r8`, `r2.5`), which is
+/// deterministic across platforms.
+pub fn scenario_key(s: &Scenario) -> String {
+    format!("campaign/{}/{}/{}/r{}", s.workload, s.policy, s.backend.as_str(), s.rate)
+}
+
+/// Append one scenario's deterministic metrics to the emitter, under
+/// [`scenario_key`]. Per-class SLO attainment lands as
+/// `<key>/slo/<class>`.
+pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
+    let key = scenario_key(&o.scenario);
+    let p = &o.point;
+    json.metric(&format!("{key}/accepted"), p.accepted as f64, "requests");
+    json.metric(&format!("{key}/rejected"), p.rejected as f64, "requests");
+    json.metric(&format!("{key}/throughput_tok_s"), p.throughput, "tokens/s");
+    json.metric(&format!("{key}/ttft_p95_s"), p.ttft_p95, "s");
+    json.metric(&format!("{key}/lat_p50_s"), p.latency_p50, "s");
+    json.metric(&format!("{key}/lat_p95_s"), p.latency_p95, "s");
+    json.metric(&format!("{key}/lat_p99_s"), p.latency_p99, "s");
+    for c in &p.class_attainment {
+        json.metric(&format!("{key}/slo/{}", c.class), c.attainment, "fraction");
+    }
+}
+
+/// Render the whole campaign as one metrics document. `wall_s`, when
+/// given, is appended as `campaign_wall_s` — a wall-clock metric the
+/// baseline differ treats as informational (CI runners are noisy), so it
+/// belongs in the uploaded artifact but never in a committed baseline
+/// (pass `None` there; see [`super::baseline`]).
+pub fn campaign_metrics(outcomes: &[CampaignOutcome], wall_s: Option<f64>) -> JsonEmitter {
+    let mut json = JsonEmitter::new();
+    for o in outcomes {
+        emit_outcome(&mut json, o);
+    }
+    json.metric("campaign_scenarios", outcomes.len() as f64, "scenarios");
+    if let Some(w) = wall_s {
+        json.metric("campaign_wall_s", w, "s-wall");
+    }
+    json
+}
+
+/// ASCII table of campaign results, one row per scenario in canonical
+/// order — the interactive face of the same data the JSON carries.
+pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
+    let mut t = Table::new(&[
+        "workload",
+        "policy",
+        "backend",
+        "rate req/s",
+        "accepted",
+        "rejected",
+        "tok/s",
+        "TTFT p95",
+        "lat p50",
+        "lat p95",
+        "lat p99",
+        "min SLO",
+    ]);
+    for o in outcomes {
+        let p = &o.point;
+        t.row(&[
+            o.scenario.workload.clone(),
+            o.scenario.policy.clone(),
+            o.scenario.backend.as_str().to_string(),
+            format!("{:.1}", o.scenario.rate),
+            p.accepted.to_string(),
+            p.rejected.to_string(),
+            format!("{:.1}", p.throughput),
+            fmt_time(p.ttft_p95),
+            fmt_time(p.latency_p50),
+            fmt_time(p.latency_p95),
+            fmt_time(p.latency_p99),
+            match p.min_attainment() {
+                Some(a) => format!("{:.1}%", a * 100.0),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::runner::{Backend, CampaignSpec};
+    use crate::coordinator::sweep::{ClassAttainment, SweepPoint};
+    use crate::coordinator::WorkloadMix;
+    use crate::util::benchkit::parse_metrics;
+
+    fn outcome(workload: &str, policy: &str, backend: Backend, rate: f64) -> CampaignOutcome {
+        let mix = WorkloadMix::preset(workload).expect("preset");
+        let class_names = mix.classes().iter().map(|c| c.name.clone()).collect();
+        CampaignOutcome {
+            scenario: Scenario {
+                policy: policy.to_string(),
+                workload: workload.to_string(),
+                backend,
+                rate,
+                mix,
+                class_names,
+            },
+            point: SweepPoint {
+                policy: policy.to_string(),
+                rate,
+                accepted: 90,
+                rejected: 10,
+                throughput: 123.4,
+                ttft_p95: 0.05,
+                latency_p50: 0.1,
+                latency_p95: 0.2,
+                latency_p99: 0.3,
+                class_attainment: vec![ClassAttainment {
+                    class: "chat".into(),
+                    attainment: 0.995,
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn scenario_keys_are_canonical() {
+        let o = outcome("chat", "slo-aware", Backend::Event, 8.0);
+        assert_eq!(scenario_key(&o.scenario), "campaign/chat/slo-aware/event/r8");
+        let o = outcome("chat", "slo-aware", Backend::Threaded, 2.5);
+        assert_eq!(scenario_key(&o.scenario), "campaign/chat/slo-aware/threaded/r2.5");
+    }
+
+    #[test]
+    fn metrics_document_round_trips_and_orders_deterministically() {
+        let outcomes =
+            vec![outcome("chat", "slo-aware", Backend::Event, 8.0), {
+                let mut o = outcome("chat", "round-robin", Backend::Event, 16.0);
+                o.point.rejected = 0;
+                o
+            }];
+        let doc = campaign_metrics(&outcomes, Some(1.25)).render();
+        assert_eq!(doc, campaign_metrics(&outcomes, Some(1.25)).render(), "byte-stable");
+        let metrics = parse_metrics(&doc).unwrap();
+        // 8 metrics per scenario (7 point + 1 class) + count + wall.
+        assert_eq!(metrics.len(), 2 * 8 + 2);
+        assert_eq!(metrics[0].name, "campaign/chat/slo-aware/event/r8/accepted");
+        assert_eq!(metrics[0].value, 90.0);
+        assert!(metrics.iter().any(|m| m.name == "campaign/chat/slo-aware/event/r8/slo/chat"));
+        assert_eq!(metrics.last().unwrap().name, "campaign_wall_s");
+        assert_eq!(metrics.last().unwrap().unit, "s-wall");
+        // Without a wall clock (baseline mode) the document is wall-free.
+        let base = campaign_metrics(&outcomes, None).render();
+        assert!(!base.contains("campaign_wall_s"));
+    }
+
+    #[test]
+    fn table_renders_every_scenario_row() {
+        let outcomes = vec![outcome("chat", "slo-aware", Backend::Event, 8.0)];
+        let s = render_campaign(&outcomes);
+        assert!(s.contains("slo-aware") && s.contains("event") && s.contains("99.5%"), "{s}");
+    }
+
+    #[test]
+    fn emitted_names_match_the_expanded_matrix() {
+        // Every expanded scenario gets a unique key.
+        let spec = CampaignSpec::default();
+        let scenarios = spec.expand().unwrap();
+        let keys: std::collections::BTreeSet<String> =
+            scenarios.iter().map(scenario_key).collect();
+        assert_eq!(keys.len(), scenarios.len(), "scenario keys must be unique");
+    }
+}

@@ -1,0 +1,366 @@
+//! Campaign expansion and execution: a scenario matrix → selected
+//! scenarios → one [`SweepPoint`] each, fanned out on scoped threads.
+//!
+//! A [`CampaignSpec`] names the axes (policies × workloads × backends ×
+//! rate grid) plus the per-scenario traffic budget; [`CampaignSpec::expand`]
+//! multiplies them into a canonically-ordered scenario list, an optional
+//! [`Expr`] filter selects the slice to run, and [`run_campaign`]
+//! executes every selected scenario over the shared worker scaffold
+//! ([`fan_out_indexed`][crate::coordinator::sweep]) with one prebuilt
+//! [`LatencyTable`]. Every scenario is an independent deterministic
+//! computation (own RNG from the fixed seed), so a campaign's results —
+//! and the `BENCH_serving.json` rendered from them by
+//! [`super::report`] — are bit-reproducible for a given spec.
+
+use super::filter::{Expr, ScenarioView};
+use crate::config::SystemConfig;
+use crate::coordinator::event_sim::run_traffic_point;
+use crate::coordinator::loadgen::{run_traffic_with_table, TrafficConfig};
+use crate::coordinator::router::{policy_from_name, POLICY_NAMES};
+use crate::coordinator::sweep::{fan_out_indexed, SweepPoint, validate_rates};
+use crate::coordinator::workload::WorkloadMix;
+use crate::llm::latency_table::LatencyTable;
+use crate::llm::model_config::ModelShape;
+use anyhow::{bail, Result};
+
+/// Which serving backend a scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Backend {
+    /// Deterministic event-driven simulator with coalesced decode and a
+    /// streaming sink — the serving default.
+    Event,
+    /// Direct-replay cross-check backend (`serve-sim --threaded`).
+    Threaded,
+}
+
+impl Backend {
+    pub const ALL: &'static [Backend] = &[Backend::Event, Backend::Threaded];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Event => "event",
+            Backend::Threaded => "threaded",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Backend> {
+        match name {
+            "event" => Some(Backend::Event),
+            "threaded" => Some(Backend::Threaded),
+            _ => None,
+        }
+    }
+}
+
+/// One point of the campaign matrix, fully resolved (the workload mix is
+/// materialized so filters can see class names).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub policy: String,
+    /// Mix name (preset name, or the name inside a custom TOML).
+    pub workload: String,
+    pub backend: Backend,
+    pub rate: f64,
+    pub mix: WorkloadMix,
+    /// Class names of `mix`, cached for filter matching.
+    pub class_names: Vec<String>,
+}
+
+impl Scenario {
+    /// The borrowed attribute view filters evaluate against.
+    pub fn view(&self) -> ScenarioView<'_> {
+        ScenarioView {
+            policy: &self.policy,
+            workload: &self.workload,
+            classes: &self.class_names,
+            backend: self.backend.as_str(),
+            rate: self.rate,
+        }
+    }
+}
+
+/// The axes and budget of a campaign. `expand` turns this into the
+/// canonical scenario list; the default spec is the committed-baseline
+/// matrix CI gates on.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Scheduler policy names ([`policy_from_name`] must accept each).
+    pub policies: Vec<String>,
+    /// Workload preset names or TOML paths ([`WorkloadMix::resolve`]).
+    pub workloads: Vec<String>,
+    pub backends: Vec<Backend>,
+    /// Offered arrival rates (requests/second).
+    pub rates: Vec<f64>,
+    /// Devices in the pool of every scenario.
+    pub devices: usize,
+    /// Closed-loop arrivals per scenario.
+    pub requests: usize,
+    /// RNG seed every scenario derives its stream from.
+    pub seed: u64,
+}
+
+/// Default rate grid of the campaign matrix (requests/second).
+pub const DEFAULT_RATES: &[f64] = &[4.0, 8.0, 16.0, 32.0];
+
+impl Default for CampaignSpec {
+    /// The committed-baseline matrix: every policy × every workload
+    /// preset × [`DEFAULT_RATES`] × both backends, 2000 requests per
+    /// scenario, fixed seed. `bench/BENCH_serving.baseline.json` and the
+    /// CI campaign gate both come from this spec.
+    fn default() -> CampaignSpec {
+        CampaignSpec {
+            policies: POLICY_NAMES.iter().map(|p| p.to_string()).collect(),
+            workloads: WorkloadMix::preset_names().iter().map(|w| w.to_string()).collect(),
+            backends: Backend::ALL.to_vec(),
+            rates: DEFAULT_RATES.to_vec(),
+            devices: 4,
+            requests: 2000,
+            seed: 7,
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// Validate the axes and multiply them into scenarios in canonical
+    /// order: workload ascending, then policy, backend, rate — the order
+    /// every rendering (table, JSON, baseline) uses, so re-runs are
+    /// byte-comparable.
+    pub fn expand(&self) -> Result<Vec<Scenario>> {
+        if self.policies.is_empty()
+            || self.workloads.is_empty()
+            || self.backends.is_empty()
+            || self.rates.is_empty()
+        {
+            bail!("campaign needs at least one policy, workload, backend, and rate");
+        }
+        if self.devices == 0 || self.requests == 0 {
+            bail!("campaign needs positive --devices and --requests");
+        }
+        validate_rates(&self.rates)?;
+        for p in &self.policies {
+            if policy_from_name(p).is_none() {
+                bail!("unknown policy {p:?}; use {}", POLICY_NAMES.join("|"));
+            }
+        }
+        let mut rates = self.rates.clone();
+        rates.sort_by(f64::total_cmp);
+        rates.dedup();
+
+        let mut policies = self.policies.clone();
+        policies.sort();
+        policies.dedup();
+        let mut backends = self.backends.clone();
+        backends.sort();
+        backends.dedup();
+
+        // Resolve each workload once; order mixes by resolved name.
+        let mut mixes = Vec::with_capacity(self.workloads.len());
+        for w in &self.workloads {
+            mixes.push(WorkloadMix::resolve(w)?);
+        }
+        mixes.sort_by(|a, b| a.name().cmp(b.name()));
+        mixes.dedup_by(|a, b| a.name() == b.name());
+
+        let points = mixes.len() * policies.len() * backends.len() * rates.len();
+        let mut out = Vec::with_capacity(points);
+        for mix in &mixes {
+            let class_names: Vec<String> =
+                mix.classes().iter().map(|c| c.name.clone()).collect();
+            for policy in &policies {
+                for backend in &backends {
+                    for &rate in &rates {
+                        out.push(Scenario {
+                            policy: policy.clone(),
+                            workload: mix.name().to_string(),
+                            backend: *backend,
+                            rate,
+                            mix: mix.clone(),
+                            class_names: class_names.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Expand and select: the scenarios a filter keeps, in canonical
+    /// order. Errors when the filter matches nothing (a silent empty
+    /// campaign would read as "everything passed").
+    pub fn select(&self, filter: Option<&Expr>) -> Result<Vec<Scenario>> {
+        let all = self.expand()?;
+        let total = all.len();
+        let selected: Vec<Scenario> = match filter {
+            None => all,
+            Some(f) => all.into_iter().filter(|s| f.matches(&s.view())).collect(),
+        };
+        if selected.is_empty() {
+            bail!(
+                "filter selects none of the {total} scenarios; try `repro campaign --list` to \
+                 see the matrix"
+            );
+        }
+        Ok(selected)
+    }
+
+    /// The traffic configuration of one scenario.
+    fn traffic(&self, s: &Scenario) -> TrafficConfig {
+        let mut cfg = TrafficConfig::default_for(self.devices);
+        cfg.rate = s.rate;
+        cfg.requests = self.requests;
+        cfg.seed = self.seed;
+        cfg.workload = Some(s.mix.clone());
+        cfg
+    }
+}
+
+/// One executed scenario: the point metrics its backend produced.
+#[derive(Debug, Clone)]
+pub struct CampaignOutcome {
+    pub scenario: Scenario,
+    pub point: SweepPoint,
+}
+
+/// Execute the selected scenarios against one shared latency table,
+/// fanned out over scoped worker threads (results land by index, so the
+/// output order is the canonical scenario order regardless of thread
+/// scheduling). Event-backend scenarios stream through a
+/// [`StreamingSink`][crate::coordinator::sink::StreamingSink]; threaded
+/// ones reduce a materialized report — both yield the same
+/// [`SweepPoint`] shape.
+pub fn run_campaign(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    spec: &CampaignSpec,
+    filter: Option<&Expr>,
+) -> Result<Vec<CampaignOutcome>> {
+    let scenarios = spec.select(filter)?;
+    let outcomes = fan_out_indexed(&scenarios, |s| {
+        let cfg = spec.traffic(s);
+        let policy = policy_from_name(&s.policy).expect("policy validated in expand");
+        match s.backend {
+            Backend::Event => run_traffic_point(sys, model, table, policy, &cfg),
+            Backend::Threaded => {
+                SweepPoint::of(&run_traffic_with_table(sys, model, table, policy, &cfg))
+            }
+        }
+    });
+    Ok(scenarios
+        .into_iter()
+        .zip(outcomes)
+        .map(|(scenario, point)| CampaignOutcome { scenario, point })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> CampaignSpec {
+        CampaignSpec {
+            policies: vec!["slo-aware".into(), "round-robin".into()],
+            workloads: vec!["chat".into(), "summarize-long".into()],
+            backends: Backend::ALL.to_vec(),
+            rates: vec![20.0, 5.0],
+            devices: 2,
+            requests: 20,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn expansion_is_canonically_ordered() {
+        let scenarios = tiny_spec().expand().unwrap();
+        assert_eq!(scenarios.len(), 2 * 2 * 2 * 2);
+        // Workloads ascend, then policies, then backends, then rates.
+        assert_eq!(scenarios[0].workload, "chat");
+        assert_eq!(scenarios[0].policy, "round-robin");
+        assert_eq!(scenarios[0].backend, Backend::Event);
+        assert_eq!(scenarios[0].rate, 5.0, "rates sorted ascending");
+        assert_eq!(scenarios[1].rate, 20.0);
+        assert_eq!(scenarios[2].backend, Backend::Threaded);
+        assert_eq!(scenarios[4].policy, "slo-aware");
+        assert_eq!(scenarios[8].workload, "summarize-long");
+        // The summarize-long preset carries both class names for filters.
+        assert!(scenarios[8].class_names.contains(&"chat".to_string()));
+        assert!(scenarios[8].class_names.contains(&"summarize-long".to_string()));
+    }
+
+    #[test]
+    fn default_spec_expands_the_full_matrix() {
+        let scenarios = CampaignSpec::default().expand().unwrap();
+        assert_eq!(scenarios.len(), 3 * 4 * 2 * DEFAULT_RATES.len());
+    }
+
+    #[test]
+    fn filter_selects_the_exact_subset() {
+        let spec = tiny_spec();
+        let f = Expr::parse("policy(slo-aware) & workload(chat) & backend(event)").unwrap();
+        let sel = spec.select(Some(&f)).unwrap();
+        assert_eq!(sel.len(), 2, "one per rate");
+        for s in &sel {
+            assert_eq!(s.policy, "slo-aware");
+            assert_eq!(s.workload, "chat");
+            assert_eq!(s.backend, Backend::Event);
+        }
+
+        // class(chat) also matches the summarize-long mix (it contains a
+        // chat class); workload(chat) does not.
+        let f = Expr::parse("class(chat) & backend(event) & policy(round-robin)").unwrap();
+        assert_eq!(spec.select(Some(&f)).unwrap().len(), 4, "both mixes contain a chat class");
+        let f = Expr::parse("rate > 10").unwrap();
+        assert_eq!(spec.select(Some(&f)).unwrap().len(), 8);
+
+        let none = Expr::parse("policy(least-loaded)").unwrap();
+        assert!(spec.select(Some(&none)).is_err(), "empty selection is an error");
+    }
+
+    #[test]
+    fn expansion_rejects_bad_axes() {
+        let mut spec = tiny_spec();
+        spec.policies = vec!["fifo".into()];
+        assert!(spec.expand().is_err());
+        let mut spec = tiny_spec();
+        spec.rates = vec![-1.0];
+        assert!(spec.expand().is_err());
+        let mut spec = tiny_spec();
+        spec.workloads = vec!["no-such-preset".into()];
+        assert!(spec.expand().is_err());
+        let mut spec = tiny_spec();
+        spec.requests = 0;
+        assert!(spec.expand().is_err());
+        let mut spec = tiny_spec();
+        spec.backends.clear();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn campaign_runs_deterministically() {
+        use crate::circuit::TechParams;
+        use crate::config::presets::table1_system;
+        use crate::llm::model_config::OptModel;
+
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let spec = CampaignSpec {
+            policies: vec!["least-loaded".into()],
+            workloads: vec!["chat".into()],
+            backends: Backend::ALL.to_vec(),
+            rates: vec![30.0],
+            devices: 2,
+            requests: 25,
+            seed: 11,
+        };
+        let a = run_campaign(&sys, &model, &table, &spec, None).unwrap();
+        let b = run_campaign(&sys, &model, &table, &spec, None).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.point, y.point, "same spec, same bytes");
+            assert_eq!(x.point.accepted + x.point.rejected, 25);
+        }
+        assert_eq!(a[0].scenario.backend, Backend::Event);
+        assert_eq!(a[1].scenario.backend, Backend::Threaded);
+    }
+}

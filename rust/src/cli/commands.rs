@@ -1,8 +1,12 @@
 //! CLI command dispatch.
 
 use super::args::Args;
+use crate::campaign::{
+    Backend, campaign_metrics, CampaignSpec, diff_metrics, Expr, render_campaign, run_campaign,
+};
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
+use crate::coordinator::router::POLICY_NAMES;
 use crate::coordinator::{
     DecodeMode, LenRange, policy_from_name, render_slo_frontier, render_sweep,
     run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded,
@@ -18,7 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 const COMMANDS: &[&str] = &[
     "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "tiling",
-    "lifetime", "serve", "serve-sim", "generate", "config", "energy", "all",
+    "lifetime", "serve", "serve-sim", "campaign", "generate", "config", "energy", "all",
 ];
 
 const HELP: &str = "\
@@ -68,6 +72,25 @@ tools:
                        the max rate sustaining >=99% SLO attainment per
                        class (--policy and --rate are ignored in sweep
                        mode)
+  campaign [--filter EXPR] [--baseline PATH] [--update-baseline]
+                       run the scenario campaign matrix (policies x
+                       workload presets x backends x rate grid) and diff
+                       deterministic per-scenario metrics against the
+                       committed bench/BENCH_serving.baseline.json,
+                       exiting non-zero on regression (the CI gate).
+                       --filter selects a slice with a small expression
+                       language: atoms policy(NAME), workload(NAME),
+                       class(NAME), backend(event|threaded), rate CMP N,
+                       combined with & | ! and parens — e.g.
+                       'policy(slo-aware) & class(chat) & rate > 5'.
+                       Also --list (print the matrix, run nothing),
+                       --out PATH (write the fresh metrics JSON),
+                       --tol FRACTION (relative tolerance, default 0.02),
+                       --verbose (list passing rows too), --requests,
+                       --devices, --seed, --model, --rates a,b,c,
+                       --policies, --workloads, --backends. Spelled
+                       `serve-sim campaign ...` equally. Grammar and
+                       baseline workflow: docs/CAMPAIGNS.md
   generate --prompt S [--max-new N]
                        functional generation via the PJRT runtime
                        (requires `make artifacts`)
@@ -99,6 +122,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "energy" => cmd_energy(&args)?,
         "serve" => cmd_serve(&args)?,
         "serve-sim" => cmd_serve_sim(&args)?,
+        "campaign" => cmd_campaign(&args)?,
         "generate" => cmd_generate(&args)?,
         "config" => println!("{:#?}", table1_system()),
         "all" => {
@@ -199,6 +223,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_sim(args: &Args) -> Result<()> {
+    // `serve-sim campaign ...` is the campaign runner's long spelling.
+    if args.positional.first().map(String::as_str) == Some("campaign") {
+        return cmd_campaign(args);
+    }
     let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
         .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
     // Defaults live in one place: TrafficConfig::default_for (whose
@@ -272,11 +300,10 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let sys = table1_system();
     let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
     if let Some(rates) = rates {
-        let all = ["round-robin", "least-loaded", "slo-aware"];
         let points = if threaded {
-            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, &all)?
+            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, POLICY_NAMES)?
         } else {
-            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, &all)?
+            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, POLICY_NAMES)?
         };
         println!(
             "rate sweep ({} backend): {} device(s), {} requests/point, {} ({} buckets, stride {})",
@@ -306,6 +333,132 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     };
     print!("{}", report.render());
     Ok(())
+}
+
+/// Default baseline path of `repro campaign`, relative to the invocation
+/// directory (the Makefile and CI invoke from the repo root, where the
+/// baseline is committed).
+const CAMPAIGN_BASELINE: &str = "bench/BENCH_serving.baseline.json";
+
+/// `repro campaign` — expand the scenario matrix, run the (optionally
+/// filtered) selection, and gate against the committed baseline. See
+/// `docs/CAMPAIGNS.md` for the workflow and the filter grammar.
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
+        .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
+    let filter = match args.flag("filter") {
+        Some(src) => Some(Expr::parse(src)?),
+        None => None,
+    };
+
+    // Matrix axes: the committed-baseline defaults unless overridden.
+    let mut spec = CampaignSpec::default();
+    let list_flag = |name: &str| -> Option<Vec<String>> {
+        args.flag(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    };
+    if let Some(policies) = list_flag("policies") {
+        spec.policies = policies;
+    }
+    if let Some(workloads) = list_flag("workloads") {
+        spec.workloads = workloads;
+    }
+    if let Some(backends) = list_flag("backends") {
+        spec.backends = backends
+            .iter()
+            .map(|b| {
+                Backend::from_name(b)
+                    .ok_or_else(|| anyhow!("unknown backend {b:?}; use event|threaded"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(rates) = args.flag("rates") {
+        spec.rates = rates
+            .split(',')
+            .map(|part| {
+                part.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--rates expects comma-separated numbers, got {part:?}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    spec.devices = args.usize_flag("devices", spec.devices)?;
+    // Budget knob: the same BENCH_* env override CI uses for benches,
+    // still overridable per invocation with --requests.
+    let env_requests = std::env::var("BENCH_SWEEP_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(spec.requests);
+    spec.requests = args.usize_flag("requests", env_requests)?;
+    spec.seed = args.usize_flag("seed", spec.seed as usize)? as u64;
+    let tol = args.f64_flag("tol", 0.02)?;
+    if !tol.is_finite() || tol < 0.0 {
+        bail!("--tol is a relative fraction; need a finite value >= 0, got {tol}");
+    }
+
+    if args.bool_flag("list") {
+        let scenarios = spec.select(filter.as_ref())?;
+        println!(
+            "{} scenario(s){}:",
+            scenarios.len(),
+            filter.as_ref().map(|f| format!(" matching `{f}`")).unwrap_or_default()
+        );
+        for s in &scenarios {
+            println!("  {}", crate::campaign::scenario_key(s));
+        }
+        return Ok(());
+    }
+
+    let sys = table1_system();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
+    let start = std::time::Instant::now();
+    let outcomes = run_campaign(&sys, &model.shape(), &table, &spec, filter.as_ref())?;
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "campaign: {} scenario(s), {} requests each, seed {}, {} ({:.2}s wall)",
+        outcomes.len(),
+        spec.requests,
+        spec.seed,
+        table.model_name(),
+        wall,
+    );
+    print!("{}", render_campaign(&outcomes));
+
+    let baseline_path = std::path::PathBuf::from(args.flag_or("baseline", CAMPAIGN_BASELINE));
+    if let Some(out) = args.flag("out") {
+        let json = campaign_metrics(&outcomes, Some(wall));
+        json.write(std::path::Path::new(out))?;
+        println!("wrote {} campaign metrics to {out}", json.len());
+    }
+    if args.bool_flag("update-baseline") {
+        // Baselines hold only deterministic metrics — no wall clock.
+        let json = campaign_metrics(&outcomes, None);
+        json.write(&baseline_path)?;
+        println!("updated baseline {} ({} metrics)", baseline_path.display(), json.len());
+        return Ok(());
+    }
+    if !baseline_path.exists() {
+        if args.flag("baseline").is_some() {
+            bail!(
+                "baseline {} not found (create it with --update-baseline)",
+                baseline_path.display()
+            );
+        }
+        println!(
+            "no baseline at {} — metrics not gated (commit one with `make \
+             campaign-update-baseline`)",
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let baseline = crate::util::benchkit::read_metrics(&baseline_path)?;
+    let current = campaign_metrics(&outcomes, None);
+    // A filtered run deliberately re-measures a slice; the unmeasured
+    // remainder of the baseline must not read as "missing".
+    let diff = diff_metrics(current.metrics(), &baseline, tol, filter.is_some());
+    println!();
+    print!("{}", diff.render(args.bool_flag("verbose")));
+    diff.gate()
 }
 
 /// Arrival rates for `serve-sim --sweep`: an explicit `--rates a,b,c`
@@ -534,6 +687,29 @@ mod tests {
         ])
         .is_err());
         assert!(run(vec!["serve-sim".into(), "--workload".into(), "bogus-mix".into()]).is_err());
+    }
+
+    #[test]
+    fn campaign_list_selects_without_running() {
+        run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--filter".into(),
+            "policy(slo-aware) & class(chat)".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn campaign_rejects_bad_flags_before_simulating() {
+        assert!(run(vec!["campaign".into(), "--list".into(), "--filter".into(), "polcy(x)".into()])
+            .is_err());
+        assert!(run(vec!["campaign".into(), "--list".into(), "--filter".into(), "rate>99".into()])
+            .is_err());
+        assert!(run(vec!["campaign".into(), "--backends".into(), "bogus".into(), "--list".into()])
+            .is_err());
+        assert!(run(vec!["campaign".into(), "--tol".into(), "-0.5".into(), "--list".into()])
+            .is_err());
     }
 
     #[test]

@@ -229,6 +229,11 @@ impl Scheduler for SloAware {
     }
 }
 
+/// Canonical names of every scheduling policy, ascending — the sweep and
+/// campaign matrices iterate this list so "all policies" has exactly one
+/// definition.
+pub const POLICY_NAMES: &[&str] = &["least-loaded", "round-robin", "slo-aware"];
+
 /// Build a scheduling policy from its CLI name.
 pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
     match name {

@@ -44,41 +44,51 @@ fn clamped_width(points: usize) -> usize {
     cores.min(points.max(1))
 }
 
-/// Fan `pairs` out over a clamped-width pool of scoped workers, running
-/// `point` per (policy, rate) pair and collecting results by index — the
-/// worker scaffold both sweep backends share. Each pair is an independent
-/// deterministic computation (own RNG seeded from the base config), so
-/// the output is identical to the sequential loop regardless of thread
-/// scheduling.
-fn sweep_indexed<F>(pairs: &[(&str, f64)], point: F) -> Vec<SweepPoint>
+/// Fan `items` out over a clamped-width pool of scoped workers, running
+/// `f` per item and collecting results by index — the worker scaffold the
+/// sweep backends and the campaign runner share. Each item must be an
+/// independent deterministic computation (own RNG seeded from its
+/// config), so the output is identical to the sequential loop regardless
+/// of thread scheduling.
+pub(crate) fn fan_out_indexed<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
-    F: Fn(&str, f64) -> SweepPoint + Sync,
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
 {
     let next = AtomicUsize::new(0);
-    let mut points: Vec<Option<SweepPoint>> = (0..pairs.len()).map(|_| None).collect();
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     std::thread::scope(|scope| {
-        let workers: Vec<_> = (0..clamped_width(pairs.len()))
+        let workers: Vec<_> = (0..clamped_width(items.len()))
             .map(|_| {
                 scope.spawn(|| {
                     let mut local = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        let Some(&(p, r)) = pairs.get(i) else {
+                        let Some(item) = items.get(i) else {
                             break;
                         };
-                        local.push((i, point(p, r)));
+                        local.push((i, f(item)));
                     }
                     local
                 })
             })
             .collect();
         for w in workers {
-            for (i, sp) in w.join().expect("sweep worker panicked") {
-                points[i] = Some(sp);
+            for (i, r) in w.join().expect("fan-out worker panicked") {
+                out[i] = Some(r);
             }
         }
     });
-    points.into_iter().map(|p| p.expect("every sweep pair ran")).collect()
+    out.into_iter().map(|r| r.expect("every fan-out item ran")).collect()
+}
+
+/// [`fan_out_indexed`] specialized to the sweep's (policy, rate) pairs.
+fn sweep_indexed<F>(pairs: &[(&str, f64)], point: F) -> Vec<SweepPoint>
+where
+    F: Fn(&str, f64) -> SweepPoint + Sync,
+{
+    fan_out_indexed(pairs, |&(p, r)| point(p, r))
 }
 
 /// SLO attainment of one workload class at one sweep point.

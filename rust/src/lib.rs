@@ -45,6 +45,7 @@
 
 pub mod area;
 pub mod bus;
+pub mod campaign;
 pub mod circuit;
 pub mod cli;
 pub mod config;

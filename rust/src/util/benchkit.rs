@@ -9,6 +9,7 @@
 //! hot path's trajectory is visible across changes.
 
 use super::stats::Summary;
+use anyhow::{Context, Result};
 use std::io::Write;
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -132,6 +133,11 @@ impl JsonEmitter {
         self.metrics.len()
     }
 
+    /// The collected metrics, in emission order.
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
     /// Render the JSON document.
     pub fn render(&self) -> String {
         let mut out = String::from("{\n  \"schema\": \"flashpim-bench-v1\",\n  \"metrics\": [\n");
@@ -153,10 +159,281 @@ impl JsonEmitter {
         out
     }
 
-    /// Write the document to `path` (truncating).
-    pub fn write(&self, path: &Path) -> std::io::Result<()> {
-        let mut f = std::fs::File::create(path)?;
+    /// Write the document to `path` (truncating), creating missing
+    /// parent directories, with the failing path named in any error.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating output directory {}", dir.display()))?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating bench JSON {}", path.display()))?;
         f.write_all(self.render().as_bytes())
+            .with_context(|| format!("writing bench JSON {}", path.display()))
+    }
+}
+
+/// Read a metrics document written by [`JsonEmitter`] (or any JSON with
+/// the same `{"schema", "metrics": [{name, value, unit}]}` shape) back
+/// into [`Metric`]s — the reader half the campaign baseline differ pairs
+/// with the emitter. `null` values (the emitter's encoding for non-finite
+/// numbers) come back as NaN.
+pub fn read_metrics(path: &Path) -> Result<Vec<Metric>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench JSON {}", path.display()))?;
+    parse_metrics(&text).with_context(|| format!("parsing bench JSON {}", path.display()))
+}
+
+/// Parse the emitter's document shape from a string (see [`read_metrics`]).
+pub fn parse_metrics(text: &str) -> Result<Vec<Metric>> {
+    let doc = json::parse(text)?;
+    let metrics = doc
+        .get("metrics")
+        .and_then(json::Value::as_array)
+        .context("document has no \"metrics\" array")?;
+    let mut out = Vec::with_capacity(metrics.len());
+    for (i, m) in metrics.iter().enumerate() {
+        let field = |key: &str| {
+            m.get(key).with_context(|| format!("metric {i} is missing field {key:?}"))
+        };
+        let name = field("name")?.as_str().with_context(|| format!("metric {i}: name"))?;
+        let unit = field("unit")?.as_str().with_context(|| format!("metric {i}: unit"))?;
+        let value = match field("value")? {
+            json::Value::Null => f64::NAN,
+            v => v.as_f64().with_context(|| format!("metric {i} ({name}): numeric value"))?,
+        };
+        out.push(Metric { name: name.to_string(), value, unit: unit.to_string() });
+    }
+    Ok(out)
+}
+
+/// Minimal recursive-descent JSON reader — no serde in the registry, so
+/// the [`JsonEmitter`] documents are read back by hand. Full JSON value
+/// grammar (objects, arrays, strings with escapes, numbers, literals);
+/// errors carry the byte offset.
+mod json {
+    use anyhow::{bail, Result};
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        /// Object field lookup (first match; `None` on non-objects).
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(items) => Some(items),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing content at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        bytes: &'a [u8],
+        pos: usize,
+    }
+
+    impl Parser<'_> {
+        fn skip_ws(&mut self) {
+            while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.pos += 1;
+            }
+        }
+
+        fn eat(&mut self, b: u8) -> Result<()> {
+            if self.bytes.get(self.pos) == Some(&b) {
+                self.pos += 1;
+                Ok(())
+            } else {
+                bail!("expected {:?} at byte {}", b as char, self.pos)
+            }
+        }
+
+        fn value(&mut self) -> Result<Value> {
+            match self.bytes.get(self.pos) {
+                Some(b'{') => self.object(),
+                Some(b'[') => self.array(),
+                Some(b'"') => Ok(Value::Str(self.string()?)),
+                Some(b't') => self.literal("true", Value::Bool(true)),
+                Some(b'f') => self.literal("false", Value::Bool(false)),
+                Some(b'n') => self.literal("null", Value::Null),
+                Some(_) => self.number(),
+                None => bail!("unexpected end of document"),
+            }
+        }
+
+        fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+            if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+                self.pos += word.len();
+                Ok(v)
+            } else {
+                bail!("invalid literal at byte {}", self.pos)
+            }
+        }
+
+        fn number(&mut self) -> Result<Value> {
+            let start = self.pos;
+            while matches!(
+                self.bytes.get(self.pos),
+                Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            ) {
+                self.pos += 1;
+            }
+            let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii digits");
+            match text.parse::<f64>() {
+                Ok(n) => Ok(Value::Num(n)),
+                Err(_) => bail!("invalid number {text:?} at byte {start}"),
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.bytes.get(self.pos) {
+                    None => bail!("unterminated string at byte {}", self.pos),
+                    Some(b'"') => {
+                        self.pos += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.pos += 1;
+                        match self.bytes.get(self.pos) {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'r') => out.push('\r'),
+                            Some(b'b') => out.push('\u{8}'),
+                            Some(b'f') => out.push('\u{c}'),
+                            Some(b'u') => {
+                                let hex = self
+                                    .bytes
+                                    .get(self.pos + 1..self.pos + 5)
+                                    .and_then(|h| std::str::from_utf8(h).ok())
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .and_then(char::from_u32);
+                                match hex {
+                                    Some(c) => {
+                                        out.push(c);
+                                        self.pos += 4;
+                                    }
+                                    None => bail!("invalid \\u escape at byte {}", self.pos),
+                                }
+                            }
+                            _ => bail!("invalid escape at byte {}", self.pos),
+                        }
+                        self.pos += 1;
+                    }
+                    Some(&b) => {
+                        // Multi-byte UTF-8 sequences pass through verbatim.
+                        let len = match b {
+                            0..=0x7f => 1,
+                            0xc0..=0xdf => 2,
+                            0xe0..=0xef => 3,
+                            _ => 4,
+                        };
+                        let end = (self.pos + len).min(self.bytes.len());
+                        let chunk = std::str::from_utf8(&self.bytes[self.pos..end]);
+                        match chunk {
+                            Ok(s) => out.push_str(s),
+                            Err(_) => bail!("invalid UTF-8 in string at byte {}", self.pos),
+                        }
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value> {
+            self.eat(b'[')?;
+            let mut items = Vec::new();
+            self.skip_ws();
+            if self.bytes.get(self.pos) == Some(&b']') {
+                self.pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                self.skip_ws();
+                items.push(self.value()?);
+                self.skip_ws();
+                match self.bytes.get(self.pos) {
+                    Some(b',') => self.pos += 1,
+                    Some(b']') => {
+                        self.pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {}", self.pos),
+                }
+            }
+        }
+
+        fn object(&mut self) -> Result<Value> {
+            self.eat(b'{')?;
+            let mut fields = Vec::new();
+            self.skip_ws();
+            if self.bytes.get(self.pos) == Some(&b'}') {
+                self.pos += 1;
+                return Ok(Value::Obj(fields));
+            }
+            loop {
+                self.skip_ws();
+                let key = self.string()?;
+                self.skip_ws();
+                self.eat(b':')?;
+                self.skip_ws();
+                let value = self.value()?;
+                fields.push((key, value));
+                self.skip_ws();
+                match self.bytes.get(self.pos) {
+                    Some(b',') => self.pos += 1,
+                    Some(b'}') => {
+                        self.pos += 1;
+                        return Ok(Value::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+                }
+            }
+        }
     }
 }
 
@@ -224,6 +501,42 @@ mod tests {
         let doc = j.render();
         assert!(doc.contains("serving__1m_requests_mean_s"), "doc: {doc}");
         assert!(doc.contains("serving__1m_requests_p50_s"));
+    }
+
+    #[test]
+    fn metrics_round_trip_through_reader() {
+        let mut j = JsonEmitter::new();
+        j.metric("campaign/chat/slo-aware/event/r8/ttft_p95_s", 0.0123, "s");
+        j.metric("weird \"name\"", f64::NAN, "x");
+        let back = parse_metrics(&j.render()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], j.metrics[0]);
+        assert_eq!(back[1].name, "weird \"name\"");
+        assert!(back[1].value.is_nan(), "null reads back as NaN");
+
+        let dir = std::env::temp_dir().join("flashpim_benchkit_reader/nested");
+        let path = dir.join("doc.json");
+        std::fs::remove_dir_all(&dir).ok();
+        j.write(&path).unwrap(); // parent dirs are created on demand
+        assert_eq!(read_metrics(&path).unwrap()[0], j.metrics[0]);
+        std::fs::remove_dir_all(std::env::temp_dir().join("flashpim_benchkit_reader")).ok();
+    }
+
+    #[test]
+    fn reader_rejects_malformed_documents() {
+        assert!(parse_metrics("").is_err());
+        assert!(parse_metrics("{\"metrics\": 4}").is_err());
+        assert!(parse_metrics("{\"metrics\": [{\"name\": \"x\"}]}").is_err(), "missing fields");
+        assert!(parse_metrics("{\"metrics\": []} trailing").is_err());
+        assert!(read_metrics(Path::new("/no/such/bench.json")).is_err());
+    }
+
+    #[test]
+    fn write_errors_name_the_path() {
+        let j = JsonEmitter::new();
+        let err = j.write(Path::new("/proc/version/not-a-dir/out.json")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("out.json") || msg.contains("not-a-dir"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Campaign end-to-end: the baseline round trip through the on-disk
+//! JSON (emit → write → read → diff == clean), perturbation gating, and
+//! filtered scenario selection — the library-level version of what the
+//! CI `campaign-gate` job proves with the real binary.
+
+use flashpim::campaign::{
+    Backend, campaign_metrics, CampaignOutcome, CampaignSpec, diff_metrics, Expr, run_campaign,
+};
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::llm::LatencyTable;
+use flashpim::llm::model_config::OptModel;
+use flashpim::util::benchkit::{Metric, read_metrics};
+
+/// A 4-scenario slice small enough to run inside `cargo test`.
+fn tiny_spec() -> CampaignSpec {
+    CampaignSpec {
+        policies: vec!["least-loaded".into(), "slo-aware".into()],
+        workloads: vec!["chat".into()],
+        backends: vec![Backend::Event],
+        rates: vec![8.0, 16.0],
+        devices: 2,
+        requests: 300,
+        seed: 11,
+    }
+}
+
+fn run_tiny() -> Vec<CampaignOutcome> {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    run_campaign(&sys, &model, &table, &tiny_spec(), None).expect("tiny campaign runs")
+}
+
+#[test]
+fn baseline_round_trips_through_disk_as_a_clean_diff() {
+    let outcomes = run_tiny();
+    let doc = campaign_metrics(&outcomes, None);
+    let dir = std::env::temp_dir().join("flashpim_campaign_roundtrip");
+    let path = dir.join("nested").join("baseline.json");
+    doc.write(&path).expect("write baseline (creating parent dirs)");
+    let baseline = read_metrics(&path).expect("read baseline back");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The emitter renders floats shortest-round-trip, so even a zero
+    // tolerance diffs clean after a trip through the file.
+    let diff = diff_metrics(doc.metrics(), &baseline, 0.0, false);
+    assert!(diff.gate().is_ok(), "{}", diff.render(true));
+    assert_eq!(diff.improvements(), 0);
+    assert_eq!(diff.rows.len(), doc.metrics().len(), "no missing, no new");
+}
+
+#[test]
+fn perturbed_baseline_metric_gates_the_run() {
+    let outcomes = run_tiny();
+    let current = campaign_metrics(&outcomes, None);
+    let mut baseline: Vec<Metric> = current.metrics().to_vec();
+    let i = baseline
+        .iter()
+        .position(|m| m.name.ends_with("/accepted") && m.value > 0.0)
+        .expect("an accepted count to perturb");
+    // Doubling the baseline makes the identical current run read ~50%
+    // worse — the same trick CI's gate self-test plays.
+    baseline[i].value *= 2.0;
+
+    let diff = diff_metrics(current.metrics(), &baseline, 0.02, false);
+    assert!(diff.regressions() >= 1, "{}", diff.render(true));
+    assert!(diff.gate().is_err());
+    let table = diff.render(false);
+    assert!(table.contains("REGRESS") && table.contains("/accepted"), "{table}");
+
+    // The unperturbed baseline still passes under the same tolerance.
+    let clean = diff_metrics(current.metrics(), current.metrics(), 0.02, false);
+    assert!(clean.gate().is_ok());
+}
+
+#[test]
+fn campaign_metrics_are_deterministic_across_runs() {
+    let a = campaign_metrics(&run_tiny(), None).render();
+    let b = campaign_metrics(&run_tiny(), None).render();
+    assert_eq!(a, b, "same spec, same seed => byte-identical document");
+}
+
+#[test]
+fn filters_select_the_matching_subset_of_the_default_matrix() {
+    let spec = CampaignSpec::default();
+    let all = spec.expand().expect("default matrix expands");
+
+    // `summarize-long` is the only preset whose mix carries that class.
+    let f = Expr::parse("policy(slo-aware) & class(summarize-long)").expect("valid filter");
+    let selected = spec.select(Some(&f)).expect("filter matches something");
+    assert!(!selected.is_empty() && selected.len() < all.len());
+    for s in &selected {
+        assert_eq!(s.policy, "slo-aware");
+        assert_eq!(s.workload, "summarize-long");
+    }
+    // Selection is exactly the filter applied to the full expansion.
+    let expected = all.iter().filter(|s| f.matches(&s.view())).count();
+    assert_eq!(selected.len(), expected);
+
+    // `class(chat)` is broader than `workload(chat)`: every preset mixes
+    // a chat class in, only one *is* the chat preset.
+    let by_class = spec.select(Some(&Expr::parse("class(chat)").unwrap())).unwrap();
+    let by_workload = spec.select(Some(&Expr::parse("workload(chat)").unwrap())).unwrap();
+    assert_eq!(by_class.len(), all.len());
+    assert!(by_workload.len() < by_class.len());
+    assert!(by_workload.iter().all(|s| s.workload == "chat"));
+
+    // A filter matching nothing is a hard error, not an empty run.
+    assert!(spec.select(Some(&Expr::parse("none").unwrap())).is_err());
+}

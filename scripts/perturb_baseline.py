@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""Perturb one metric in a flashpim-bench-v1 baseline document.
+
+CI's campaign-gate job uses this to prove the regression gate actually
+gates: it scales the baseline value of the first metric matching a
+suffix so that a fresh (unchanged) campaign run reads as a regression,
+then asserts `repro campaign --baseline <perturbed>` exits non-zero.
+
+The default target is the first `/accepted` metric (higher-is-better);
+doubling its baseline makes the identical current run look ~50% worse,
+far outside the default 2% tolerance and robust to the metric's scale.
+
+Usage: perturb_baseline.py IN OUT [--suffix /accepted] [--scale 2.0]
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("infile")
+    ap.add_argument("outfile")
+    ap.add_argument("--suffix", default="/accepted", help="metric-name suffix to perturb")
+    ap.add_argument("--scale", type=float, default=2.0, help="factor applied to the baseline value")
+    args = ap.parse_args()
+
+    with open(args.infile) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "flashpim-bench-v1":
+        print(f"error: {args.infile} is not a flashpim-bench-v1 document", file=sys.stderr)
+        return 2
+
+    for m in doc.get("metrics", []):
+        name, value = m.get("name", ""), m.get("value")
+        if name.endswith(args.suffix) and isinstance(value, (int, float)) and value != 0:
+            m["value"] = value * args.scale
+            print(f"perturbed {name}: {value} -> {m['value']}")
+            break
+    else:
+        print(f"error: no non-zero metric ending in {args.suffix!r}", file=sys.stderr)
+        return 2
+
+    with open(args.outfile, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
