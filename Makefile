@@ -40,8 +40,10 @@ campaign:
 
 # Refresh bench/BENCH_serving.baseline.json from a full deterministic
 # run (review the diff before committing; see docs/CAMPAIGNS.md).
+# Honours the same CAMPAIGN_FLAGS passthrough as `make campaign` so a
+# fleet axis (`--fleets ...`) lands in the gate and the baseline alike.
 campaign-update-baseline:
-	cargo run --release --bin repro -- campaign --update-baseline
+	cargo run --release --bin repro -- campaign --update-baseline $(CAMPAIGN_FLAGS)
 
 # 1M-request bit-identity smoke test (ignored by default in `make test`).
 perf-smoke:

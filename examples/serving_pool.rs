@@ -18,8 +18,8 @@
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
 use flashpim::coordinator::{
-    policy_from_name, render_slo_frontier, render_sweep, run_traffic_events, sweep_rates,
-    TrafficConfig, WorkloadMix,
+    FleetSpec, policy_from_name, render_slo_frontier, render_sweep, run_traffic_events,
+    sweep_rates, TIERED_POLICY_NAMES, TrafficConfig, WorkloadMix,
 };
 use flashpim::llm::LatencyTable;
 use flashpim::llm::model_config::OptModel;
@@ -144,4 +144,31 @@ fn main() {
     )
     .expect("valid sweep");
     print!("{}", render_slo_frontier(&points, 0.99));
+
+    println!();
+    println!("Hybrid fleet: 4 flash-PIM cards + 1 tensor-parallel GPU node on the");
+    println!("same mix. The tier-aware policy routes long summarization prefills");
+    println!("to the GPU tier and keeps short chat turns on flash; the report");
+    println!("gains a per-tier utilization table plus fleet $/Mtok and J/Mtok:");
+    println!();
+    let fleet = FleetSpec::parse("4xflash+1xgpu").expect("valid fleet spec");
+    cfg.devices = fleet.n_devices();
+    cfg.fleet = Some(fleet);
+    let rep = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("tier-aware").unwrap(),
+        &cfg,
+    );
+    print!("{}", rep.render());
+
+    println!();
+    println!("The same fleet swept across rates prices every point — the sweep");
+    println!("table grows $/Mtok and J/Mtok columns, and tier-aware joins the");
+    println!("policy roster:");
+    println!();
+    let points = sweep_rates(&sys, &model, &table, &cfg, &[4.0, 8.0, 12.0], TIERED_POLICY_NAMES)
+        .expect("valid sweep");
+    print!("{}", render_sweep(&points));
 }

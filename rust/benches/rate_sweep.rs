@@ -38,6 +38,7 @@ fn main() {
         followup: 0.3,
         seed: 42,
         workload: None,
+        fleet: None,
     };
     quick("event run: 2k requests, 4 devices", || {
         run_traffic_events(

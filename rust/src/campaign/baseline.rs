@@ -42,6 +42,8 @@ pub fn direction_of(name: &str) -> Direction {
         || name.ends_with("/lat_p50_s")
         || name.ends_with("/lat_p95_s")
         || name.ends_with("/lat_p99_s")
+        || name.ends_with("/cost_per_mtok_usd")
+        || name.ends_with("/energy_per_mtok_j")
     {
         return Direction::LowerBetter;
     }
@@ -275,6 +277,14 @@ mod tests {
         assert_eq!(direction_of("campaign/chat/ll/event/r8/ttft_p95_s"), down);
         assert_eq!(direction_of("campaign/chat/ll/event/r8/lat_p99_s"), down);
         assert_eq!(direction_of("campaign/chat/ll/event/r8/rejected"), down);
+        assert_eq!(
+            direction_of("campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd"),
+            down
+        );
+        assert_eq!(
+            direction_of("campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j"),
+            down
+        );
         assert_eq!(direction_of("campaign_wall_s"), Direction::Info);
         assert_eq!(direction_of("sweep_frontier_wall_s"), Direction::Info);
         assert_eq!(direction_of("campaign_scenarios"), Direction::Info);

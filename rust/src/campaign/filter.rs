@@ -21,14 +21,17 @@
 //! and     := unary ('&' unary)*
 //! unary   := '!' unary | primary
 //! primary := '(' expr ')' | 'all' | 'none' | atom
-//! atom    := key '(' value ')'        key ∈ {policy, workload, class, backend}
+//! atom    := key '(' value ')'        key ∈ {policy, workload, class, backend, tier}
 //!          | 'rate' cmp number        cmp ∈ {<, <=, >, >=, =, !=}
 //! ```
 //!
 //! `workload(x)` matches the mix *name*; `class(x)` matches mixes that
 //! *contain* a class named `x` (the `summarize-long` preset contains a
-//! `chat` class, for example). Parse errors carry byte spans and render
-//! with a caret under the offending input — see [`ParseError`].
+//! `chat` class, for example); `tier(x)` matches scenarios whose fleet
+//! *contains* a device of tier `x` (`flash` or `gpu` — a hybrid
+//! `4xflash+1xgpu` scenario matches both). Parse errors carry byte spans
+//! and render with a caret under the offending input — see
+//! [`ParseError`].
 
 use anyhow::{anyhow, Result};
 use std::fmt;
@@ -75,6 +78,7 @@ pub enum AtomKey {
     Workload,
     Class,
     Backend,
+    Tier,
 }
 
 impl AtomKey {
@@ -84,6 +88,7 @@ impl AtomKey {
             "workload" => Some(AtomKey::Workload),
             "class" => Some(AtomKey::Class),
             "backend" => Some(AtomKey::Backend),
+            "tier" => Some(AtomKey::Tier),
             _ => None,
         }
     }
@@ -94,6 +99,7 @@ impl AtomKey {
             AtomKey::Workload => "workload",
             AtomKey::Class => "class",
             AtomKey::Backend => "backend",
+            AtomKey::Tier => "tier",
         }
     }
 }
@@ -125,6 +131,9 @@ pub struct ScenarioView<'a> {
     pub classes: &'a [String],
     pub backend: &'a str,
     pub rate: f64,
+    /// Names of the device tiers in the scenario's fleet (`"flash"`,
+    /// `"gpu"`); legacy flash-only scenarios carry `["flash"]`.
+    pub tiers: &'a [String],
 }
 
 impl Expr {
@@ -150,6 +159,7 @@ impl Expr {
                 AtomKey::Workload => s.workload == value,
                 AtomKey::Class => s.classes.iter().any(|c| c == value),
                 AtomKey::Backend => s.backend == value,
+                AtomKey::Tier => s.tiers.iter().any(|t| t == value),
             },
             Expr::Rate(op, rhs) => op.apply(s.rate, *rhs),
             Expr::Not(e) => !e.matches(s),
@@ -178,7 +188,7 @@ impl fmt::Display for Expr {
 /// [`ParseError::render`] draws the offending source with a caret line:
 ///
 /// ```text
-/// filter error: unknown atom `polcy` (expected policy, workload, class, backend, rate, all, none)
+/// filter error: unknown atom `polcy` (expected policy, workload, class, backend, tier, rate, all, none)
 ///   polcy(x) & rate > 5
 ///   ^^^^^
 /// ```
@@ -398,8 +408,8 @@ impl Parser<'_> {
         let Some(key) = AtomKey::from_name(name) else {
             return Err(ParseError::new(
                 format!(
-                    "unknown atom `{name}` (expected policy, workload, class, backend, rate, \
-                     all, none)"
+                    "unknown atom `{name}` (expected policy, workload, class, backend, tier, \
+                     rate, all, none)"
                 ),
                 span,
             ));
@@ -439,6 +449,8 @@ impl Parser<'_> {
 mod tests {
     use super::*;
 
+    const FLASH_ONLY: &[String] = &[];
+
     fn view<'a>(
         policy: &'a str,
         workload: &'a str,
@@ -446,7 +458,7 @@ mod tests {
         backend: &'a str,
         rate: f64,
     ) -> ScenarioView<'a> {
-        ScenarioView { policy, workload, classes, backend, rate }
+        ScenarioView { policy, workload, classes, backend, rate, tiers: FLASH_ONLY }
     }
 
     fn classes(names: &[&str]) -> Vec<String> {
@@ -456,7 +468,9 @@ mod tests {
     #[test]
     fn atoms_match_their_attributes() {
         let cs = classes(&["chat", "summarize"]);
-        let s = view("slo-aware", "summarize-long", &cs, "event", 8.0);
+        let tiers = classes(&["flash", "gpu"]);
+        let mut s = view("slo-aware", "summarize-long", &cs, "event", 8.0);
+        s.tiers = &tiers;
         for (src, expect) in [
             ("policy(slo-aware)", true),
             ("policy(round-robin)", false),
@@ -466,6 +480,9 @@ mod tests {
             ("class(batch)", false),
             ("backend(event)", true),
             ("backend(threaded)", false),
+            ("tier(flash)", true),
+            ("tier(gpu)", true),
+            ("tier(tpu)", false),
             ("rate > 5", true),
             ("rate >= 8", true),
             ("rate < 8", false),
@@ -477,6 +494,12 @@ mod tests {
         ] {
             assert_eq!(Expr::parse(src).unwrap().matches(&s), expect, "{src}");
         }
+        // A flash-only scenario matches tier(flash) but not tier(gpu).
+        let flash = classes(&["flash"]);
+        let mut f = view("slo-aware", "chat", &cs, "event", 8.0);
+        f.tiers = &flash;
+        assert!(Expr::parse("tier(flash)").unwrap().matches(&f));
+        assert!(!Expr::parse("tier(gpu)").unwrap().matches(&f));
     }
 
     #[test]

@@ -8,15 +8,18 @@
 //!
 //! * [`filter`] — a small scenario-filter expression language (`&`, `|`,
 //!   `!`, parens; atoms like `policy(slo-aware)`, `class(chat)`,
-//!   `backend(event)`, `rate > 5`), lexed and parsed by hand into an AST
-//!   evaluated as set algebra over scenario attributes.
+//!   `backend(event)`, `tier(gpu)`, `rate > 5`), lexed and parsed by
+//!   hand into an AST evaluated as set algebra over scenario attributes.
 //! * [`runner`] — [`CampaignSpec`] expands the matrix in canonical order
+//!   (optionally over a fleet axis, e.g. `8xflash` vs `4xflash+1xgpu`)
 //!   and [`run_campaign`] executes the filtered selection on the shared
 //!   scoped-thread scaffold, one deterministic [`SweepPoint`] per
 //!   scenario.
 //! * [`report`] — renders outcomes as the human table and as the
 //!   canonical, deterministically-ordered `BENCH_serving.json` metrics
-//!   document (names like `campaign/chat/slo-aware/event/r8/ttft_p95_s`).
+//!   document (names like `campaign/chat/slo-aware/event/r8/ttft_p95_s`;
+//!   fleet campaigns key as
+//!   `campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd`).
 //! * [`baseline`] — diffs a fresh document against the committed
 //!   `bench/BENCH_serving.baseline.json` under direction-aware relative
 //!   tolerances and gates: any regression makes the CLI exit non-zero,

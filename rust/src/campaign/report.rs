@@ -7,13 +7,18 @@
 //! Metric names are hierarchical and deterministic:
 //!
 //! ```text
-//! campaign/<workload>/<policy>/<backend>/r<rate>/<metric>
+//! campaign/<workload>/<policy>/<backend>/r<rate>/<metric>           (legacy)
+//! campaign/<fleet>/<workload>/<policy>/<backend>/r<rate>/<metric>   (fleet axis)
 //! ```
 //!
-//! e.g. `campaign/chat/slo-aware/event/r8/ttft_p95_s`. Outcomes arrive in
-//! the runner's canonical scenario order, so two runs of the same spec
-//! render byte-identical documents — the property the committed baseline
-//! and the CI determinism guard rely on.
+//! e.g. `campaign/chat/slo-aware/event/r8/ttft_p95_s`, or
+//! `campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd`
+//! for a fleet campaign. The fleet segment appears **only** when the
+//! campaign swept a fleet axis, so legacy flash-only documents are
+//! byte-identical to pre-fleet builds. Outcomes arrive in the runner's
+//! canonical scenario order, so two runs of the same spec render
+//! byte-identical documents — the property the committed baseline and
+//! the CI determinism guard rely on.
 
 use super::runner::{CampaignOutcome, Scenario};
 use crate::util::benchkit::JsonEmitter;
@@ -22,14 +27,28 @@ use crate::util::units::fmt_time;
 
 /// Canonical metric-name prefix of one scenario. The rate renders via
 /// `f64`'s shortest-round-trip `Display` (`r8`, `r2.5`), which is
-/// deterministic across platforms.
+/// deterministic across platforms. Fleet scenarios gain a fleet segment
+/// right after `campaign/`; legacy scenarios keep the pre-fleet shape.
 pub fn scenario_key(s: &Scenario) -> String {
-    format!("campaign/{}/{}/{}/r{}", s.workload, s.policy, s.backend.as_str(), s.rate)
+    match &s.fleet {
+        Some(f) => format!(
+            "campaign/{}/{}/{}/{}/r{}",
+            f.name(),
+            s.workload,
+            s.policy,
+            s.backend.as_str(),
+            s.rate
+        ),
+        None => {
+            format!("campaign/{}/{}/{}/r{}", s.workload, s.policy, s.backend.as_str(), s.rate)
+        }
+    }
 }
 
 /// Append one scenario's deterministic metrics to the emitter, under
 /// [`scenario_key`]. Per-class SLO attainment lands as
-/// `<key>/slo/<class>`.
+/// `<key>/slo/<class>`; fleet scenarios add `cost_per_mtok_usd` and
+/// `energy_per_mtok_j`.
 pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     let key = scenario_key(&o.scenario);
     let p = &o.point;
@@ -40,6 +59,12 @@ pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     json.metric(&format!("{key}/lat_p50_s"), p.latency_p50, "s");
     json.metric(&format!("{key}/lat_p95_s"), p.latency_p95, "s");
     json.metric(&format!("{key}/lat_p99_s"), p.latency_p99, "s");
+    if let Some(c) = p.cost_per_mtok {
+        json.metric(&format!("{key}/cost_per_mtok_usd"), c, "usd/Mtok");
+    }
+    if let Some(e) = p.energy_per_mtok {
+        json.metric(&format!("{key}/energy_per_mtok_j"), e, "J/Mtok");
+    }
     for c in &p.class_attainment {
         json.metric(&format!("{key}/slo/{}", c.class), c.attainment, "fraction");
     }
@@ -64,8 +89,15 @@ pub fn campaign_metrics(outcomes: &[CampaignOutcome], wall_s: Option<f64>) -> Js
 
 /// ASCII table of campaign results, one row per scenario in canonical
 /// order — the interactive face of the same data the JSON carries.
+/// Fleet campaigns lead with a fleet column and append `$/Mtok`; legacy
+/// campaigns render byte-identically to pre-fleet builds.
 pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
-    let mut t = Table::new(&[
+    let fleeted = outcomes.iter().any(|o| o.scenario.fleet.is_some());
+    let mut headers: Vec<&str> = Vec::new();
+    if fleeted {
+        headers.push("fleet");
+    }
+    headers.extend([
         "workload",
         "policy",
         "backend",
@@ -77,11 +109,21 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
         "lat p50",
         "lat p95",
         "lat p99",
-        "min SLO",
     ]);
+    if fleeted {
+        headers.push("$/Mtok");
+    }
+    headers.push("min SLO");
+    let mut t = Table::new(&headers);
     for o in outcomes {
         let p = &o.point;
-        t.row(&[
+        let mut cells: Vec<String> = Vec::new();
+        if fleeted {
+            cells.push(
+                o.scenario.fleet.as_ref().map_or_else(|| "-".to_string(), |f| f.name()),
+            );
+        }
+        cells.extend([
             o.scenario.workload.clone(),
             o.scenario.policy.clone(),
             o.scenario.backend.as_str().to_string(),
@@ -93,11 +135,18 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
             fmt_time(p.latency_p50),
             fmt_time(p.latency_p95),
             fmt_time(p.latency_p99),
-            match p.min_attainment() {
-                Some(a) => format!("{:.1}%", a * 100.0),
-                None => "-".to_string(),
-            },
         ]);
+        if fleeted {
+            cells.push(match p.cost_per_mtok {
+                Some(c) => format!("{c:.2}"),
+                None => "-".to_string(),
+            });
+        }
+        cells.push(match p.min_attainment() {
+            Some(a) => format!("{:.1}%", a * 100.0),
+            None => "-".to_string(),
+        });
+        t.row(&cells);
     }
     t.render()
 }
@@ -121,6 +170,8 @@ mod tests {
                 rate,
                 mix,
                 class_names,
+                fleet: None,
+                tier_names: vec!["flash".to_string()],
             },
             point: SweepPoint {
                 policy: policy.to_string(),
@@ -132,6 +183,8 @@ mod tests {
                 latency_p50: 0.1,
                 latency_p95: 0.2,
                 latency_p99: 0.3,
+                cost_per_mtok: None,
+                energy_per_mtok: None,
                 class_attainment: vec![ClassAttainment {
                     class: "chat".into(),
                     attainment: 0.995,
@@ -140,12 +193,51 @@ mod tests {
         }
     }
 
+    /// A hybrid-fleet variant of [`outcome`] with priced columns.
+    fn fleet_outcome(policy: &str, rate: f64) -> CampaignOutcome {
+        use crate::coordinator::device::FleetSpec;
+        let mut o = outcome("chat", policy, Backend::Event, rate);
+        let spec = FleetSpec::parse("4xflash+1xgpu").unwrap();
+        o.scenario.tier_names = vec!["flash".to_string(), "gpu".to_string()];
+        o.scenario.fleet = Some(spec);
+        o.point.cost_per_mtok = Some(1.75);
+        o.point.energy_per_mtok = Some(420.5);
+        o
+    }
+
     #[test]
     fn scenario_keys_are_canonical() {
         let o = outcome("chat", "slo-aware", Backend::Event, 8.0);
         assert_eq!(scenario_key(&o.scenario), "campaign/chat/slo-aware/event/r8");
         let o = outcome("chat", "slo-aware", Backend::Threaded, 2.5);
         assert_eq!(scenario_key(&o.scenario), "campaign/chat/slo-aware/threaded/r2.5");
+        let o = fleet_outcome("tier-aware", 8.0);
+        assert_eq!(
+            scenario_key(&o.scenario),
+            "campaign/4xflash+1xgpu/chat/tier-aware/event/r8",
+            "fleet campaigns key under their fleet segment"
+        );
+    }
+
+    #[test]
+    fn fleet_outcomes_emit_priced_metrics_and_column() {
+        let outcomes = vec![fleet_outcome("tier-aware", 8.0)];
+        let doc = campaign_metrics(&outcomes, None).render();
+        let metrics = parse_metrics(&doc).unwrap();
+        let cost = metrics
+            .iter()
+            .find(|m| {
+                m.name == "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd"
+            })
+            .expect("cost metric emitted");
+        assert_eq!(cost.value, 1.75);
+        assert_eq!(cost.unit, "usd/Mtok");
+        assert!(metrics.iter().any(|m| m.name.ends_with("/energy_per_mtok_j")));
+        let s = render_campaign(&outcomes);
+        assert!(s.contains("4xflash+1xgpu") && s.contains("$/Mtok") && s.contains("1.75"), "{s}");
+        // Legacy outcomes render without the fleet columns.
+        let legacy = render_campaign(&[outcome("chat", "slo-aware", Backend::Event, 8.0)]);
+        assert!(!legacy.contains("$/Mtok") && !legacy.contains("fleet"), "{legacy}");
     }
 
     #[test]

@@ -14,9 +14,10 @@
 
 use super::filter::{Expr, ScenarioView};
 use crate::config::SystemConfig;
+use crate::coordinator::device::{FleetSpec, Tier};
 use crate::coordinator::event_sim::run_traffic_point;
 use crate::coordinator::loadgen::{run_traffic_with_table, TrafficConfig};
-use crate::coordinator::router::{policy_from_name, POLICY_NAMES};
+use crate::coordinator::router::{policy_from_name, POLICY_NAMES, TIERED_POLICY_NAMES};
 use crate::coordinator::sweep::{fan_out_indexed, SweepPoint, validate_rates};
 use crate::coordinator::workload::WorkloadMix;
 use crate::llm::latency_table::LatencyTable;
@@ -64,6 +65,13 @@ pub struct Scenario {
     pub mix: WorkloadMix,
     /// Class names of `mix`, cached for filter matching.
     pub class_names: Vec<String>,
+    /// Fleet composition when the campaign sweeps a fleet axis; `None`
+    /// for legacy flash-only campaigns (whose scenario keys and metric
+    /// names stay byte-identical to pre-fleet builds).
+    pub fleet: Option<FleetSpec>,
+    /// Tier names of `fleet` (legacy scenarios read `["flash"]`), cached
+    /// for `tier(...)` filter matching.
+    pub tier_names: Vec<String>,
 }
 
 impl Scenario {
@@ -75,7 +83,21 @@ impl Scenario {
             classes: &self.class_names,
             backend: self.backend.as_str(),
             rate: self.rate,
+            tiers: &self.tier_names,
         }
+    }
+}
+
+/// Tier names present in a fleet (canonical flash-then-gpu order);
+/// legacy (`None`) scenarios are all-flash pools.
+fn tier_names_of(fleet: Option<&FleetSpec>) -> Vec<String> {
+    match fleet {
+        None => vec![Tier::Flash.as_str().to_string()],
+        Some(spec) => [Tier::Flash, Tier::Gpu]
+            .iter()
+            .filter(|&&t| spec.has_tier(t))
+            .map(|t| t.as_str().to_string())
+            .collect(),
     }
 }
 
@@ -91,7 +113,13 @@ pub struct CampaignSpec {
     pub backends: Vec<Backend>,
     /// Offered arrival rates (requests/second).
     pub rates: Vec<f64>,
-    /// Devices in the pool of every scenario.
+    /// Fleet compositions to sweep (the outermost axis when non-empty,
+    /// e.g. `8xflash` vs `4xflash+1xgpu`). Empty = legacy flash-only
+    /// campaign: no fleet axis, `devices` homogeneous flash devices, and
+    /// scenario keys without a fleet segment.
+    pub fleets: Vec<FleetSpec>,
+    /// Devices in the pool of every scenario (ignored when `fleets` is
+    /// non-empty — each fleet spec fixes its own device count).
     pub devices: usize,
     /// Closed-loop arrivals per scenario.
     pub requests: usize,
@@ -113,6 +141,7 @@ impl Default for CampaignSpec {
             workloads: WorkloadMix::preset_names().iter().map(|w| w.to_string()).collect(),
             backends: Backend::ALL.to_vec(),
             rates: DEFAULT_RATES.to_vec(),
+            fleets: Vec::new(),
             devices: 4,
             requests: 2000,
             seed: 7,
@@ -122,8 +151,9 @@ impl Default for CampaignSpec {
 
 impl CampaignSpec {
     /// Validate the axes and multiply them into scenarios in canonical
-    /// order: workload ascending, then policy, backend, rate — the order
-    /// every rendering (table, JSON, baseline) uses, so re-runs are
+    /// order: fleet (name ascending, when the axis is present), then
+    /// workload ascending, then policy, backend, rate — the order every
+    /// rendering (table, JSON, baseline) uses, so re-runs are
     /// byte-comparable.
     pub fn expand(&self) -> Result<Vec<Scenario>> {
         if self.policies.is_empty()
@@ -139,7 +169,7 @@ impl CampaignSpec {
         validate_rates(&self.rates)?;
         for p in &self.policies {
             if policy_from_name(p).is_none() {
-                bail!("unknown policy {p:?}; use {}", POLICY_NAMES.join("|"));
+                bail!("unknown policy {p:?}; use {}", TIERED_POLICY_NAMES.join("|"));
             }
         }
         let mut rates = self.rates.clone();
@@ -153,6 +183,17 @@ impl CampaignSpec {
         backends.sort();
         backends.dedup();
 
+        // The fleet axis: `None` alone for legacy flash-only campaigns,
+        // otherwise the deduplicated specs in canonical-name order.
+        let fleets: Vec<Option<FleetSpec>> = if self.fleets.is_empty() {
+            vec![None]
+        } else {
+            let mut f = self.fleets.clone();
+            f.sort_by(|a, b| a.name().cmp(&b.name()));
+            f.dedup();
+            f.into_iter().map(Some).collect()
+        };
+
         // Resolve each workload once; order mixes by resolved name.
         let mut mixes = Vec::with_capacity(self.workloads.len());
         for w in &self.workloads {
@@ -161,22 +202,27 @@ impl CampaignSpec {
         mixes.sort_by(|a, b| a.name().cmp(b.name()));
         mixes.dedup_by(|a, b| a.name() == b.name());
 
-        let points = mixes.len() * policies.len() * backends.len() * rates.len();
+        let points = fleets.len() * mixes.len() * policies.len() * backends.len() * rates.len();
         let mut out = Vec::with_capacity(points);
-        for mix in &mixes {
-            let class_names: Vec<String> =
-                mix.classes().iter().map(|c| c.name.clone()).collect();
-            for policy in &policies {
-                for backend in &backends {
-                    for &rate in &rates {
-                        out.push(Scenario {
-                            policy: policy.clone(),
-                            workload: mix.name().to_string(),
-                            backend: *backend,
-                            rate,
-                            mix: mix.clone(),
-                            class_names: class_names.clone(),
-                        });
+        for fleet in &fleets {
+            let tier_names = tier_names_of(fleet.as_ref());
+            for mix in &mixes {
+                let class_names: Vec<String> =
+                    mix.classes().iter().map(|c| c.name.clone()).collect();
+                for policy in &policies {
+                    for backend in &backends {
+                        for &rate in &rates {
+                            out.push(Scenario {
+                                policy: policy.clone(),
+                                workload: mix.name().to_string(),
+                                backend: *backend,
+                                rate,
+                                mix: mix.clone(),
+                                class_names: class_names.clone(),
+                                fleet: fleet.clone(),
+                                tier_names: tier_names.clone(),
+                            });
+                        }
                     }
                 }
             }
@@ -203,13 +249,16 @@ impl CampaignSpec {
         Ok(selected)
     }
 
-    /// The traffic configuration of one scenario.
+    /// The traffic configuration of one scenario. Fleet scenarios size
+    /// the pool from their spec and carry it into the simulators.
     fn traffic(&self, s: &Scenario) -> TrafficConfig {
-        let mut cfg = TrafficConfig::default_for(self.devices);
+        let devices = s.fleet.as_ref().map_or(self.devices, |f| f.n_devices());
+        let mut cfg = TrafficConfig::default_for(devices);
         cfg.rate = s.rate;
         cfg.requests = self.requests;
         cfg.seed = self.seed;
         cfg.workload = Some(s.mix.clone());
+        cfg.fleet = s.fleet.clone();
         cfg
     }
 }
@@ -263,6 +312,7 @@ mod tests {
             workloads: vec!["chat".into(), "summarize-long".into()],
             backends: Backend::ALL.to_vec(),
             rates: vec![20.0, 5.0],
+            fleets: Vec::new(),
             devices: 2,
             requests: 20,
             seed: 3,
@@ -317,6 +367,44 @@ mod tests {
     }
 
     #[test]
+    fn fleet_axis_expands_outermost_and_filters_by_tier() {
+        let mut spec = tiny_spec();
+        spec.fleets = vec![
+            FleetSpec::parse("4xflash").unwrap(),
+            FleetSpec::parse("1xflash+1xgpu").unwrap(),
+        ];
+        let scenarios = spec.expand().unwrap();
+        assert_eq!(scenarios.len(), 2 * 2 * 2 * 2 * 2, "fleet doubles the matrix");
+        // Fleets order by canonical name: 1xflash+1xgpu < 4xflash.
+        assert_eq!(scenarios[0].fleet.as_ref().unwrap().name(), "1xflash+1xgpu");
+        assert_eq!(scenarios[0].tier_names, vec!["flash", "gpu"]);
+        assert_eq!(scenarios[16].fleet.as_ref().unwrap().name(), "4xflash");
+        assert_eq!(scenarios[16].tier_names, vec!["flash"]);
+        // Inner order is unchanged: workload, then policy, backend, rate.
+        assert_eq!(scenarios[0].workload, "chat");
+        assert_eq!(scenarios[0].policy, "round-robin");
+        assert_eq!(scenarios[0].rate, 5.0);
+        // tier(gpu) keeps only the hybrid half; tier(flash) keeps all.
+        let gpu = Expr::parse("tier(gpu)").unwrap();
+        assert_eq!(spec.select(Some(&gpu)).unwrap().len(), 16);
+        let flash = Expr::parse("tier(flash)").unwrap();
+        assert_eq!(spec.select(Some(&flash)).unwrap().len(), 32);
+        // Fleet scenarios size their pool from the spec, not --devices.
+        let hybrid = &scenarios[0];
+        let cfg = spec.traffic(hybrid);
+        assert_eq!(cfg.devices, 2);
+        assert_eq!(cfg.fleet.as_ref().unwrap().name(), "1xflash+1xgpu");
+        let legacy = tiny_spec();
+        let cfg = legacy.traffic(&legacy.expand().unwrap()[0]);
+        assert_eq!(cfg.devices, 2);
+        assert!(cfg.fleet.is_none(), "legacy campaigns carry no fleet");
+        // tier-aware is a valid campaign policy.
+        let mut spec = tiny_spec();
+        spec.policies = vec!["tier-aware".into()];
+        assert!(spec.expand().is_ok());
+    }
+
+    #[test]
     fn expansion_rejects_bad_axes() {
         let mut spec = tiny_spec();
         spec.policies = vec!["fifo".into()];
@@ -349,6 +437,7 @@ mod tests {
             workloads: vec!["chat".into()],
             backends: Backend::ALL.to_vec(),
             rates: vec![30.0],
+            fleets: Vec::new(),
             devices: 2,
             requests: 25,
             seed: 11,

@@ -6,9 +6,9 @@ use crate::campaign::{
 };
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
-use crate::coordinator::router::POLICY_NAMES;
+use crate::coordinator::router::{POLICY_NAMES, TIERED_POLICY_NAMES};
 use crate::coordinator::{
-    DecodeMode, LenRange, policy_from_name, render_slo_frontier, render_sweep,
+    DecodeMode, FleetSpec, LenRange, policy_from_name, render_slo_frontier, render_sweep,
     run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded,
     TrafficConfig, Workload, WorkloadMix,
 };
@@ -54,10 +54,18 @@ tools:
                        upload, decode coalesced to one event per request);
                        --per-token replays the per-token event chain (the
                        bit-identity oracle), --threaded selects the legacy
-                       direct cross-check backend. Also --policy
-                       round-robin|least-loaded|slo-aware, --queue-cap,
-                       --input-min/max, --output-min/max, --followup,
-                       --model, --seed. --workload
+                       direct cross-check backend. --fleet
+                       COUNTxTIER(+COUNTxTIER)* — e.g. 4xflash+1xgpu —
+                       replaces --devices with a typed roster mixing
+                       flash-PIM cards (tier `flash`) and tensor-parallel
+                       GPU nodes (tier `gpu`, priced by the gpu roofline);
+                       the report gains per-tier utilization and fleet
+                       cost/energy per Mtok, and the tier-aware policy
+                       (long prefills -> GPU, short chat -> flash) becomes
+                       available. Also --policy
+                       round-robin|least-loaded|slo-aware|tier-aware,
+                       --queue-cap, --input-min/max, --output-min/max,
+                       --followup, --model, --seed. --workload
                        chat|summarize-long|agentic-burst|batch-offline|
                        FILE.toml replaces the single token-range stream
                        with a multi-class mix (per-class TTFT/TPOT
@@ -80,9 +88,13 @@ tools:
                        exiting non-zero on regression (the CI gate).
                        --filter selects a slice with a small expression
                        language: atoms policy(NAME), workload(NAME),
-                       class(NAME), backend(event|threaded), rate CMP N,
-                       combined with & | ! and parens — e.g.
-                       'policy(slo-aware) & class(chat) & rate > 5'.
+                       class(NAME), backend(event|threaded), tier(NAME),
+                       rate CMP N, combined with & | ! and parens — e.g.
+                       'policy(slo-aware) & class(chat) & rate > 5' or
+                       'tier(gpu) | tier(flash)'. --fleets a,b (e.g.
+                       8xflash,4xflash+1xgpu) adds an outermost
+                       fleet-composition axis; fleet scenarios key as
+                       campaign/FLEET/... and emit cost/energy per Mtok.
                        Also --list (print the matrix, run nothing),
                        --out PATH (write the fresh metrics JSON),
                        --tol FRACTION (relative tolerance, default 0.02),
@@ -231,7 +243,21 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
     // Defaults live in one place: TrafficConfig::default_for (whose
     // traffic shape is the `chat` workload-class preset).
-    let mut cfg = TrafficConfig::default_for(args.usize_flag("devices", 4)?);
+    let fleet = match args.flag("fleet") {
+        Some(spec) => {
+            if args.flag("devices").is_some() {
+                bail!("--fleet defines the device roster; it conflicts with --devices");
+            }
+            Some(FleetSpec::parse(spec)?)
+        }
+        None => None,
+    };
+    let devices = match &fleet {
+        Some(f) => f.n_devices(),
+        None => args.usize_flag("devices", 4)?,
+    };
+    let mut cfg = TrafficConfig::default_for(devices);
+    cfg.fleet = fleet;
     cfg.rate = args.f64_flag("rate", cfg.rate)?;
     cfg.requests = args.usize_flag("requests", cfg.requests)?;
     if cfg.devices == 0 || cfg.rate <= 0.0 {
@@ -291,9 +317,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         let name = args.flag_or("policy", "least-loaded");
         Some(
             policy_from_name(&name)
-                .context("unknown policy; use round-robin|least-loaded|slo-aware")?,
+                .context("unknown policy; use round-robin|least-loaded|slo-aware|tier-aware")?,
         )
     };
+    // Flash-only sweeps keep the legacy policy list (byte-identical
+    // output); a typed fleet adds the tier-aware policy to the sweep.
+    let sweep_policies: &[&str] =
+        if cfg.fleet.is_some() { TIERED_POLICY_NAMES } else { POLICY_NAMES };
 
     // One offline table build serves every run below (single run or the
     // whole rate sweep across all policies).
@@ -301,9 +331,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let table = LatencyTable::build(&sys, &TechParams::default(), model.shape());
     if let Some(rates) = rates {
         let points = if threaded {
-            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, POLICY_NAMES)?
+            sweep_rates_threaded(&sys, &model.shape(), &table, &cfg, &rates, sweep_policies)?
         } else {
-            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, POLICY_NAMES)?
+            sweep_rates(&sys, &model.shape(), &table, &cfg, &rates, sweep_policies)?
         };
         println!(
             "rate sweep ({} backend): {} device(s), {} requests/point, {} ({} buckets, stride {})",
@@ -314,6 +344,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             table.max_context() / table.stride() + 1,
             table.stride(),
         );
+        if let Some(f) = &cfg.fleet {
+            println!("fleet: {}", f.name());
+        }
         if let Some(mix) = &cfg.workload {
             println!("workload mix: {}", mix.name());
         }
@@ -362,6 +395,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     }
     if let Some(workloads) = list_flag("workloads") {
         spec.workloads = workloads;
+    }
+    if let Some(fleets) = list_flag("fleets") {
+        spec.fleets =
+            fleets.iter().map(|f| FleetSpec::parse(f)).collect::<Result<Vec<_>>>()?;
     }
     if let Some(backends) = list_flag("backends") {
         spec.backends = backends
@@ -687,6 +724,58 @@ mod tests {
         ])
         .is_err());
         assert!(run(vec!["serve-sim".into(), "--workload".into(), "bogus-mix".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_sim_fleet_runs_and_rejects_conflicts() {
+        run(vec![
+            "serve-sim".into(),
+            "--fleet".into(),
+            "1xflash+1xgpu".into(),
+            "--policy".into(),
+            "tier-aware".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "8".into(),
+            "--output-min".into(),
+            "2".into(),
+            "--output-max".into(),
+            "4".into(),
+        ])
+        .unwrap();
+        // --fleet owns the roster; an explicit --devices contradicts it.
+        assert!(run(vec![
+            "serve-sim".into(),
+            "--fleet".into(),
+            "2xflash".into(),
+            "--devices".into(),
+            "2".into(),
+        ])
+        .is_err());
+        assert!(run(vec!["serve-sim".into(), "--fleet".into(), "3xtpu".into()]).is_err());
+    }
+
+    #[test]
+    fn campaign_fleets_list_expands_the_fleet_axis() {
+        run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--fleets".into(),
+            "4xflash+1xgpu".into(),
+            "--policies".into(),
+            "tier-aware".into(),
+            "--filter".into(),
+            "tier(gpu)".into(),
+        ])
+        .unwrap();
+        assert!(run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--fleets".into(),
+            "9xtpu".into(),
+        ])
+        .is_err());
     }
 
     #[test]

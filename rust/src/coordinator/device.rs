@@ -1,0 +1,580 @@
+//! Typed device tiers for heterogeneous serving fleets.
+//!
+//! The serving stack historically assumed every device in the pool was a
+//! flash-PIM card priced by one [`LatencyTable`]. The paper's headline
+//! claims are comparative, though — flash decode vs 4×RTX4090 (vLLM) and
+//! 4×A100 (AttAcc) — and the interesting production shape is a *hybrid*
+//! fleet that sends long prefills to GPUs and long-tail single-batch
+//! decode to flash. [`DeviceModel`] is the seam that makes that
+//! expressible: one enum giving prefill time, per-token decode time,
+//! KV-upload pricing, capacity fit, and per-token energy/cost for each
+//! tier, backed by the existing flash path ([`LatencyTable`] +
+//! [`PcieLink`] + [`initial_kv_write_time`]) and an adapter over
+//! [`GpuSystem`]'s roofline (`prefill`/`tpot`/`fits`).
+//!
+//! # Backend-exact pricing
+//!
+//! Both serving backends must keep producing bit-identical reports, and
+//! flash-only fleets must stay byte-identical with the pre-tier code, so
+//! the flash arm reproduces each backend's historical expressions
+//! *exactly* — including their asymmetry: the event backend prices the
+//! host-side PCIe KV upload and estimates TTFT via a `SimTime`
+//! round-trip, while the threaded backend prices only the NAND KV write
+//! and estimates TTFT in raw `f64`. Hence the paired methods
+//! ([`DeviceModel::prefill_cost`] / [`DeviceModel::prefill_cost_direct`]
+//! and [`DeviceModel::est_prefill`] / [`DeviceModel::est_prefill_direct`]).
+//! The GPU arm defines the event and direct flavors identically (KV is
+//! born in VRAM; there is no host upload), which is what makes GPU-only
+//! fleets agree across backends to the bit.
+//!
+//! # Capacity-fit and totality
+//!
+//! [`GpuSystem::tpot`] returns `None` on OOM. Rather than threading that
+//! option through the hot decode path, the GPU tier derives its KV
+//! capacity from the same VRAM inequality `fits` checks
+//! (`0.90·n·vram − weights·overhead − workspace`), so any context the
+//! KV-cache manager admits is a context the roofline prices: `tpot` is
+//! total over admitted requests by construction, and a model that does
+//! not fit at all yields capacity 0 (every request rejected — the OOM
+//! rows of Fig. 14a, in serving form).
+
+use anyhow::{bail, Result};
+
+use crate::circuit::TechParams;
+use crate::config::SystemConfig;
+use crate::controller::PcieLink;
+use crate::gpu::{a100x4_attacc, GpuSystem};
+use crate::kv::write_overhead::initial_kv_write_time;
+use crate::llm::energy::EnergySchedule;
+use crate::llm::latency_table::LatencyTable;
+use crate::llm::model_config::ModelShape;
+use crate::sim::SimTime;
+
+/// Amortized cost of one flash-PIM card (USD/hour) — PIM-AI-style TCO
+/// framing: an enterprise SSD-class device amortized over 5 years.
+const FLASH_COST_PER_DEVICE_HOUR: f64 = 0.40;
+/// Cloud-rate cost per data-center GPU (USD/hour per GPU in the node).
+const GPU_COST_PER_GPU_HOUR: f64 = 2.0;
+/// Board power per data-center GPU during decode (W) — the baseline the
+/// energy comparison in [`EnergySchedule::gpu_energy_per_token`] uses.
+const GPU_POWER_W_PER_GPU: f64 = 400.0;
+
+/// Device tier of one pool slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Flash-PIM card priced by a [`LatencyTable`].
+    Flash,
+    /// Tensor-parallel GPU node priced by a [`GpuSystem`] roofline.
+    Gpu,
+}
+
+impl Tier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Flash => "flash",
+            Tier::Gpu => "gpu",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Tier> {
+        match name {
+            "flash" => Some(Tier::Flash),
+            "gpu" => Some(Tier::Gpu),
+            _ => None,
+        }
+    }
+}
+
+/// The GPU system a `gpu` fleet slot models. A100s fit every OPT model,
+/// so hybrid sweeps exercise routing rather than OOM rejections.
+pub fn default_gpu_system() -> GpuSystem {
+    a100x4_attacc()
+}
+
+/// A fleet composition: ordered groups of same-tier devices, parsed from
+/// specs like `8xflash` or `4xflash+1xgpu`. Device indices follow spec
+/// order, so `4xflash+1xgpu` puts flash at devices 0–3 and GPU at 4.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FleetSpec {
+    groups: Vec<(usize, Tier)>,
+}
+
+impl FleetSpec {
+    /// All-flash fleet of `n` devices (the legacy pool shape).
+    pub fn flash_only(n: usize) -> FleetSpec {
+        FleetSpec { groups: vec![(n.max(1), Tier::Flash)] }
+    }
+
+    /// Parse a `COUNTxTIER(+COUNTxTIER)*` spec; a bare tier name means
+    /// one device (`gpu` ≡ `1xgpu`).
+    pub fn parse(spec: &str) -> Result<FleetSpec> {
+        let mut groups = Vec::new();
+        for part in spec.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty fleet group in {spec:?} (use e.g. 4xflash+1xgpu)");
+            }
+            let (count, tier_name) = match part.split_once('x') {
+                Some((n, t)) => {
+                    let n: usize = n.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad device count {n:?} in fleet spec {spec:?}")
+                    })?;
+                    (n, t.trim())
+                }
+                None => (1, part),
+            };
+            if count == 0 {
+                bail!("zero-device group {part:?} in fleet spec {spec:?}");
+            }
+            let Some(tier) = Tier::from_name(tier_name) else {
+                bail!("unknown tier {tier_name:?} in fleet spec {spec:?}; use flash|gpu");
+            };
+            groups.push((count, tier));
+        }
+        Ok(FleetSpec { groups })
+    }
+
+    /// Canonical name (`4xflash+1xgpu`) — stable for metric keys.
+    pub fn name(&self) -> String {
+        self.groups
+            .iter()
+            .map(|(n, t)| format!("{n}x{}", t.as_str()))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.groups.iter().map(|(n, _)| n).sum()
+    }
+
+    /// Per-device tier, in device-index order.
+    pub fn tiers(&self) -> Vec<Tier> {
+        let mut out = Vec::with_capacity(self.n_devices());
+        for &(n, t) in &self.groups {
+            out.extend(std::iter::repeat(t).take(n));
+        }
+        out
+    }
+
+    /// Does the fleet contain this tier?
+    pub fn has_tier(&self, tier: Tier) -> bool {
+        self.groups.iter().any(|&(_, t)| t == tier)
+    }
+}
+
+/// Flash-tier pricing: the exact expressions the serving backends used
+/// before tiers existed, plus a per-context energy table.
+#[derive(Debug, Clone)]
+pub struct FlashDevice<'a> {
+    sys: &'a SystemConfig,
+    model: &'a ModelShape,
+    table: &'a LatencyTable,
+    pcie: PcieLink,
+    /// `token_energy(ctx).total()` for ctx 0..=max_context (clamped above).
+    energy_at: Vec<f64>,
+}
+
+/// GPU-tier pricing over the [`GpuSystem`] roofline.
+#[derive(Debug, Clone)]
+pub struct GpuDevice<'a> {
+    gpu: GpuSystem,
+    model: &'a ModelShape,
+}
+
+/// One pool slot's pricing model. See the module docs for the
+/// backend-exact contract each method upholds.
+#[derive(Debug, Clone)]
+pub enum DeviceModel<'a> {
+    Flash(FlashDevice<'a>),
+    Gpu(GpuDevice<'a>),
+}
+
+impl<'a> DeviceModel<'a> {
+    pub fn flash(
+        sys: &'a SystemConfig,
+        model: &'a ModelShape,
+        table: &'a LatencyTable,
+    ) -> DeviceModel<'a> {
+        let sched = EnergySchedule::new(sys, &TechParams::default(), model.clone());
+        let energy_at =
+            (0..=table.max_context()).map(|c| sched.token_energy(c).total()).collect();
+        DeviceModel::Flash(FlashDevice {
+            sys,
+            model,
+            table,
+            pcie: PcieLink::new(&sys.ctrl),
+            energy_at,
+        })
+    }
+
+    pub fn gpu(gpu: GpuSystem, model: &'a ModelShape) -> DeviceModel<'a> {
+        DeviceModel::Gpu(GpuDevice { gpu, model })
+    }
+
+    /// Build one model per device for a fleet over a shared flash system
+    /// and latency table; GPU slots use [`default_gpu_system`].
+    pub fn fleet(
+        spec: &FleetSpec,
+        sys: &'a SystemConfig,
+        model: &'a ModelShape,
+        table: &'a LatencyTable,
+    ) -> Vec<DeviceModel<'a>> {
+        spec.tiers()
+            .into_iter()
+            .map(|t| match t {
+                Tier::Flash => DeviceModel::flash(sys, model, table),
+                Tier::Gpu => DeviceModel::gpu(default_gpu_system(), model),
+            })
+            .collect()
+    }
+
+    pub fn tier(&self) -> Tier {
+        match self {
+            DeviceModel::Flash(_) => Tier::Flash,
+            DeviceModel::Gpu(_) => Tier::Gpu,
+        }
+    }
+
+    /// Prefill cost charged on the service timeline by the event backend:
+    /// flash pays the host→device KV upload plus the NAND KV write; GPU
+    /// runs the compute-roofline prefill (KV is born in VRAM).
+    pub fn prefill_cost(&self, l_in: usize) -> SimTime {
+        match self {
+            DeviceModel::Flash(d) => {
+                let upload = d.pcie.transfer_time(d.model.kv_bytes(l_in, 1.0));
+                let kv_write =
+                    SimTime::from_secs(initial_kv_write_time(d.sys, d.model, l_in));
+                upload + kv_write
+            }
+            DeviceModel::Gpu(d) => SimTime::from_secs(d.gpu.prefill(d.model, l_in)),
+        }
+    }
+
+    /// Prefill cost as the threaded (direct) backend prices it: the flash
+    /// path historically charged only the NAND KV write (no host upload);
+    /// the GPU path is identical to the event flavor by design.
+    pub fn prefill_cost_direct(&self, l_in: usize) -> SimTime {
+        match self {
+            DeviceModel::Flash(d) => {
+                SimTime::from_secs(initial_kv_write_time(d.sys, d.model, l_in))
+            }
+            DeviceModel::Gpu(_) => self.prefill_cost(l_in),
+        }
+    }
+
+    /// Scheduler's TTFT estimate (seconds), event-backend flavor: prefill
+    /// cost plus the first decode step.
+    pub fn est_prefill(&self, l_in: usize) -> f64 {
+        match self {
+            DeviceModel::Flash(d) => self.prefill_cost(l_in).secs() + d.table.tpot(l_in),
+            DeviceModel::Gpu(d) => d.gpu.prefill(d.model, l_in) + self.tpot(l_in),
+        }
+    }
+
+    /// Scheduler's TTFT estimate, threaded-backend flavor: the flash path
+    /// historically summed raw `f64` terms with no `SimTime` round-trip
+    /// (and no upload term); GPU is identical to [`Self::est_prefill`].
+    pub fn est_prefill_direct(&self, l_in: usize) -> f64 {
+        match self {
+            DeviceModel::Flash(d) => {
+                initial_kv_write_time(d.sys, d.model, l_in) + d.table.tpot(l_in)
+            }
+            DeviceModel::Gpu(_) => self.est_prefill(l_in),
+        }
+    }
+
+    /// Per-token decode time (seconds) at context length `ctx`.
+    pub fn tpot(&self, ctx: usize) -> f64 {
+        match self {
+            DeviceModel::Flash(d) => d.table.tpot(ctx),
+            DeviceModel::Gpu(d) => d
+                .gpu
+                .tpot(d.model, 1.0, ctx)
+                .expect("context fits the GPU KV budget by construction"),
+        }
+    }
+
+    /// One decode step on the integer timeline.
+    pub fn step_time(&self, ctx: usize) -> SimTime {
+        match self {
+            DeviceModel::Flash(d) => d.table.step_time(ctx),
+            DeviceModel::Gpu(_) => SimTime::from_secs(self.tpot(ctx)),
+        }
+    }
+
+    /// Decode `l_out` tokens starting from context `ctx0` — the same
+    /// step-sum both backends use, so coalescing stays exact per tier.
+    pub fn decode_time(&self, ctx0: usize, l_out: usize) -> SimTime {
+        match self {
+            DeviceModel::Flash(d) => d.table.decode_time(ctx0, l_out),
+            DeviceModel::Gpu(_) => {
+                let mut total = SimTime::ZERO;
+                for step in 0..l_out {
+                    total += self.step_time(ctx0 + step);
+                }
+                total
+            }
+        }
+    }
+
+    /// Energy (J) to decode `l_out` tokens from context `ctx0`: the PIM
+    /// energy rollup per flash token, HBM traffic plus board power per
+    /// GPU token.
+    pub fn decode_energy(&self, ctx0: usize, l_out: usize) -> f64 {
+        match self {
+            DeviceModel::Flash(d) => {
+                let mut total = 0.0;
+                for step in 0..l_out {
+                    let ctx = (ctx0 + step).min(d.energy_at.len() - 1);
+                    total += d.energy_at[ctx];
+                }
+                total
+            }
+            DeviceModel::Gpu(d) => {
+                let power = d.gpu.n_gpus as f64 * GPU_POWER_W_PER_GPU;
+                let traffic = d.model.weight_bytes(1.0) * 7.0e-12;
+                let mut total = 0.0;
+                for step in 0..l_out {
+                    total += traffic + power * self.tpot(ctx0 + step);
+                }
+                total
+            }
+        }
+    }
+
+    /// KV capacity (bytes) this device can hold. Flash uses the SLC
+    /// region (same math as [`crate::kv::KvCacheManager::new`]); GPU uses
+    /// the VRAM left after weights and workspace under the same 0.90
+    /// ceiling [`GpuSystem::fits`] checks.
+    pub fn kv_capacity(&self) -> u64 {
+        match self {
+            DeviceModel::Flash(d) => crate::kv::KvCacheManager::new(d.sys, d.model).capacity,
+            DeviceModel::Gpu(d) => {
+                let usable = d.gpu.n_gpus as f64 * d.gpu.vram * 0.90;
+                let fixed = d.model.weight_bytes(1.0) * d.gpu.weight_overhead
+                    + d.gpu.workspace;
+                (usable - fixed).max(0.0) as u64
+            }
+        }
+    }
+
+    /// KV bytes per token (same model shape on every tier).
+    pub fn kv_per_token(&self) -> u64 {
+        match self {
+            DeviceModel::Flash(d) => d.model.kv_bytes_per_token(1.0) as u64,
+            DeviceModel::Gpu(d) => d.model.kv_bytes_per_token(1.0) as u64,
+        }
+    }
+
+    /// Amortized device cost (USD/hour) — a GPU slot is a whole
+    /// tensor-parallel node.
+    pub fn cost_per_hour(&self) -> f64 {
+        match self {
+            DeviceModel::Flash(_) => FLASH_COST_PER_DEVICE_HOUR,
+            DeviceModel::Gpu(d) => d.gpu.n_gpus as f64 * GPU_COST_PER_GPU_HOUR,
+        }
+    }
+}
+
+/// Per-tier TTFT estimates for a [`super::router::JobInfo`], event
+/// flavor: `(flash, gpu)` seconds from the first device of each tier; a
+/// missing tier mirrors the other so single-tier fleets see one value.
+pub fn tier_estimates(models: &[DeviceModel], l_in: usize) -> (f64, f64) {
+    let flash = models.iter().find(|m| m.tier() == Tier::Flash);
+    let gpu = models.iter().find(|m| m.tier() == Tier::Gpu);
+    let f = flash.map(|m| m.est_prefill(l_in));
+    let g = gpu.map(|m| m.est_prefill(l_in));
+    (f.or(g).unwrap_or(0.0), g.or(f).unwrap_or(0.0))
+}
+
+/// Threaded-backend flavor of [`tier_estimates`].
+pub fn tier_estimates_direct(models: &[DeviceModel], l_in: usize) -> (f64, f64) {
+    let flash = models.iter().find(|m| m.tier() == Tier::Flash);
+    let gpu = models.iter().find(|m| m.tier() == Tier::Gpu);
+    let f = flash.map(|m| m.est_prefill_direct(l_in));
+    let g = gpu.map(|m| m.est_prefill_direct(l_in));
+    (f.or(g).unwrap_or(0.0), g.or(f).unwrap_or(0.0))
+}
+
+/// Fleet-level rollup attached to a `PoolReport` when a fleet spec is in
+/// play: composition, fleet cost rate, and total decode energy. Both the
+/// materialized and streaming report paths derive cost/energy per
+/// million tokens through the same two methods, so the two stay
+/// bit-identical for the same run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSummary {
+    /// Canonical fleet name (`4xflash+1xgpu`).
+    pub name: String,
+    /// Per-device tier, in device-index order.
+    pub tiers: Vec<Tier>,
+    /// Summed amortized fleet cost (USD/hour).
+    pub cost_per_hour: f64,
+    /// Total decode energy over the run (J).
+    pub energy_j: f64,
+}
+
+impl FleetSummary {
+    /// Build from the fleet spec and the per-device models it produced.
+    pub fn of(spec: &FleetSpec, models: &[DeviceModel], energy_j: f64) -> FleetSummary {
+        FleetSummary {
+            name: spec.name(),
+            tiers: models.iter().map(|m| m.tier()).collect(),
+            cost_per_hour: models.iter().map(|m| m.cost_per_hour()).sum(),
+            energy_j,
+        }
+    }
+
+    /// USD per million generated tokens at the run's makespan.
+    pub fn cost_per_mtok(&self, tokens: u64, makespan_s: f64) -> Option<f64> {
+        if tokens == 0 {
+            return None;
+        }
+        Some(self.cost_per_hour / 3600.0 * makespan_s / tokens as f64 * 1e6)
+    }
+
+    /// Joules per million generated tokens.
+    pub fn energy_per_mtok(&self, tokens: u64) -> Option<f64> {
+        if tokens == 0 {
+            return None;
+        }
+        Some(self.energy_j / tokens as f64 * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::table1_system;
+    use crate::llm::model_config::OptModel;
+
+    fn fixtures() -> (SystemConfig, ModelShape, LatencyTable) {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        (sys, model, table)
+    }
+
+    #[test]
+    fn fleet_spec_parses_and_round_trips() {
+        let f = FleetSpec::parse("4xflash+1xgpu").unwrap();
+        assert_eq!(f.name(), "4xflash+1xgpu");
+        assert_eq!(f.n_devices(), 5);
+        assert_eq!(
+            f.tiers(),
+            vec![Tier::Flash, Tier::Flash, Tier::Flash, Tier::Flash, Tier::Gpu]
+        );
+        assert!(f.has_tier(Tier::Gpu) && f.has_tier(Tier::Flash));
+        // Bare tier names mean one device.
+        let g = FleetSpec::parse("gpu").unwrap();
+        assert_eq!(g.name(), "1xgpu");
+        assert_eq!(g.tiers(), vec![Tier::Gpu]);
+        assert!(!g.has_tier(Tier::Flash));
+        assert_eq!(FleetSpec::flash_only(8).name(), "8xflash");
+    }
+
+    #[test]
+    fn fleet_spec_rejects_malformed_input() {
+        for bad in ["", "+", "0xflash", "4xtpu", "4flash+1xgpu", "x", "-1xgpu"] {
+            assert!(FleetSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn flash_estimates_match_the_legacy_expressions() {
+        let (sys, model, table) = fixtures();
+        let d = DeviceModel::flash(&sys, &model, &table);
+        let l_in = 256;
+        // Event flavor: PCIe upload + KV write, rounded through SimTime.
+        let pcie = PcieLink::new(&sys.ctrl);
+        let upload = pcie.transfer_time(model.kv_bytes(l_in, 1.0));
+        let kv_write = SimTime::from_secs(initial_kv_write_time(&sys, &model, l_in));
+        assert_eq!(d.prefill_cost(l_in), upload + kv_write);
+        assert_eq!(d.est_prefill(l_in), (upload + kv_write).secs() + table.tpot(l_in));
+        // Direct flavor: KV write only, raw f64 sum.
+        assert_eq!(d.prefill_cost_direct(l_in), kv_write);
+        assert_eq!(
+            d.est_prefill_direct(l_in),
+            initial_kv_write_time(&sys, &model, l_in) + table.tpot(l_in)
+        );
+        assert_eq!(d.decode_time(100, 8), table.decode_time(100, 8));
+        assert_eq!(d.tier(), Tier::Flash);
+    }
+
+    #[test]
+    fn gpu_pricing_matches_the_roofline_and_both_backends_agree() {
+        let (_, model, _) = fixtures();
+        let g = default_gpu_system();
+        let d = DeviceModel::gpu(g.clone(), &model);
+        assert_eq!(d.tier(), Tier::Gpu);
+        assert_eq!(d.prefill_cost(1024), SimTime::from_secs(g.prefill(&model, 1024)));
+        assert_eq!(d.prefill_cost_direct(1024), d.prefill_cost(1024));
+        assert_eq!(d.est_prefill_direct(1024), d.est_prefill(1024));
+        assert_eq!(d.tpot(512), g.tpot(&model, 1.0, 512).unwrap());
+        // decode_time is the step-sum, so coalescing stays exact.
+        let sum = d.step_time(100) + d.step_time(101) + d.step_time(102);
+        assert_eq!(d.decode_time(100, 3), sum);
+    }
+
+    #[test]
+    fn gpu_kv_capacity_guarantees_tpot_is_total() {
+        let (_, model, _) = fixtures();
+        let g = default_gpu_system();
+        let d = DeviceModel::gpu(g.clone(), &model);
+        let max_tokens = (d.kv_capacity() / d.kv_per_token()) as usize;
+        assert!(max_tokens > 1024, "A100 node holds a long context");
+        assert!(g.fits(&model, 1.0, max_tokens), "admitted contexts always fit");
+        // A model that does not fit at all yields zero capacity.
+        let big = OptModel::Opt175b.shape();
+        let small = crate::gpu::rtx4090x4_vllm();
+        assert_eq!(DeviceModel::gpu(small, &big).kv_capacity(), 0);
+    }
+
+    #[test]
+    fn energy_and_cost_separate_the_tiers() {
+        let (sys, model, table) = fixtures();
+        let flash = DeviceModel::flash(&sys, &model, &table);
+        let gpu = DeviceModel::gpu(default_gpu_system(), &model);
+        let ef = flash.decode_energy(1024, 16);
+        let eg = gpu.decode_energy(1024, 16);
+        assert!(ef > 0.0 && eg > ef * 10.0, "flash {ef:e} vs gpu {eg:e}");
+        assert!(gpu.cost_per_hour() > 10.0 * flash.cost_per_hour());
+        // Context beyond the table clamps instead of panicking.
+        let clamped = flash.decode_energy(table.max_context() + 10, 4);
+        assert!(clamped > 0.0);
+    }
+
+    #[test]
+    fn tier_estimates_mirror_missing_tiers() {
+        let (sys, model, table) = fixtures();
+        let spec = FleetSpec::parse("2xflash+1xgpu").unwrap();
+        let models = DeviceModel::fleet(&spec, &sys, &model, &table);
+        assert_eq!(models.len(), 3);
+        let (f, g) = tier_estimates(&models, 512);
+        assert_eq!(f, models[0].est_prefill(512));
+        assert_eq!(g, models[2].est_prefill(512));
+        // Flash-only: the GPU slot mirrors flash, so schedulers that read
+        // either field behave identically to the pre-tier code.
+        let flash_only = &models[..2];
+        assert_eq!(tier_estimates(flash_only, 512), (f, f));
+        let gpu_only = &models[2..];
+        assert_eq!(tier_estimates_direct(gpu_only, 512), (g, g));
+    }
+
+    #[test]
+    fn fleet_summary_cost_and_energy_per_mtok() {
+        let (sys, model, table) = fixtures();
+        let spec = FleetSpec::parse("4xflash+1xgpu").unwrap();
+        let models = DeviceModel::fleet(&spec, &sys, &model, &table);
+        let s = FleetSummary::of(&spec, &models, 123.0);
+        assert_eq!(s.name, "4xflash+1xgpu");
+        assert_eq!(s.tiers.len(), 5);
+        let node = default_gpu_system().n_gpus as f64 * GPU_COST_PER_GPU_HOUR;
+        assert_eq!(s.cost_per_hour, 0.40 * 4.0 + node);
+        // 1M tokens in an hour costs exactly the fleet-hour rate.
+        let c = s.cost_per_mtok(1_000_000, 3600.0).unwrap();
+        assert!((c - s.cost_per_hour).abs() < 1e-9);
+        assert_eq!(s.energy_per_mtok(1_000_000).unwrap(), 123.0);
+        assert_eq!(s.cost_per_mtok(0, 10.0), None);
+        assert_eq!(s.energy_per_mtok(0), None);
+    }
+}

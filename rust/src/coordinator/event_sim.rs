@@ -62,6 +62,7 @@
 //! ([`StreamingSink`]) into one [`SweepPoint`] per (policy, rate) pair —
 //! no per-point outcome vectors.
 
+use super::device::{tier_estimates, DeviceModel, FleetSummary};
 use super::loadgen::{SimRequest, TrafficConfig};
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
@@ -69,8 +70,6 @@ use super::sink::{CollectSink, OutcomeSink, StreamingSink};
 use super::sweep::SweepPoint;
 use super::workload::ArrivalSampler;
 use crate::config::SystemConfig;
-use crate::controller::PcieLink;
-use crate::kv::write_overhead::initial_kv_write_time;
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
 use crate::sim::{Engine, EventQueue, Model, SimTime};
@@ -135,15 +134,15 @@ struct Active {
     tokens_done: usize,
 }
 
-/// One pool device: a bounded FIFO of admitted jobs, at most one active,
-/// and its own host link for prefill KV uploads.
+/// One pool device: a bounded FIFO of admitted jobs and at most one
+/// active job. Pricing (prefill, per-token decode, energy) lives in the
+/// device's [`DeviceModel`], held in `ServingModel::models`.
 #[derive(Debug, Clone)]
 struct Device {
     queue: VecDeque<Pending>,
     active: Option<Active>,
     busy: SimTime,
     jobs: usize,
-    pcie: PcieLink,
     /// When the device drains everything admitted so far. Every admitted
     /// job's full service is priced from stateless models at admission,
     /// and the queue is FIFO and work-conserving, so this *prediction*
@@ -169,9 +168,6 @@ impl Device {
 /// yourself (e.g. to interleave other models or stop early).
 pub struct ServingModel<'a, S: OutcomeSink = CollectSink> {
     cfg: TrafficConfig,
-    sys: &'a SystemConfig,
-    model: &'a ModelShape,
-    table: &'a LatencyTable,
     router: DeviceRouter,
     rng: Rng,
     /// Shared arrival-sampling path (class pick, follow-up decision,
@@ -179,6 +175,12 @@ pub struct ServingModel<'a, S: OutcomeSink = CollectSink> {
     sampler: ArrivalSampler,
     mode: DecodeMode,
     devices: Vec<Device>,
+    /// Per-device pricing model — flash for every slot unless
+    /// [`TrafficConfig::fleet`] says otherwise.
+    models: Vec<DeviceModel<'a>>,
+    /// Total decode energy (J) accumulated at retirement, in record
+    /// order — the single source both report paths read.
+    energy_j: f64,
     /// Arrival clock accumulated in f64 seconds — the same accumulation
     /// the direct backend uses, so both backends sample identical
     /// arrival instants from identical seeds.
@@ -228,6 +230,7 @@ impl<'a> ServingModel<'a, CollectSink> {
             .map(|d| if makespan == SimTime::ZERO { 0.0 } else { d.busy.secs() / makespan.secs() })
             .collect();
         let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
+        let fleet = self.fleet_summary();
         PoolReport {
             backend: "event",
             policy: self.router.policy_name().to_string(),
@@ -238,6 +241,7 @@ impl<'a> ServingModel<'a, CollectSink> {
             makespan,
             device_utilization,
             device_jobs,
+            fleet,
         }
     }
 }
@@ -247,7 +251,8 @@ impl ServingModel<'_, StreamingSink> {
     /// [`SweepPoint`].
     pub fn into_point(self) -> SweepPoint {
         let policy = self.router.policy_name().to_string();
-        self.sink.finish(policy, self.cfg.rate)
+        let fleet = self.fleet_summary();
+        self.sink.finish(policy, self.cfg.rate, fleet)
     }
 }
 
@@ -267,32 +272,57 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         assert!(cfg.queue_capacity > 0, "queue capacity must be at least 1");
         assert_eq!(table.model_name(), model.name, "latency table built for a different model");
         assert_eq!(table.system_name(), sys.name, "latency table built for a different system");
-        let router = DeviceRouter::new(cfg.devices, sys, model, policy);
+        let models = match &cfg.fleet {
+            Some(spec) => {
+                assert_eq!(
+                    spec.n_devices(),
+                    cfg.devices,
+                    "fleet spec {} sizes {} devices but cfg.devices = {}",
+                    spec.name(),
+                    spec.n_devices(),
+                    cfg.devices
+                );
+                DeviceModel::fleet(spec, sys, model, table)
+            }
+            None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
+        };
+        let router = match &cfg.fleet {
+            Some(_) => DeviceRouter::with_fleet(&models, policy),
+            None => DeviceRouter::new(cfg.devices, sys, model, policy),
+        };
         let devices = (0..cfg.devices)
             .map(|_| Device {
                 queue: VecDeque::new(),
                 active: None,
                 busy: SimTime::ZERO,
                 jobs: 0,
-                pcie: PcieLink::new(&sys.ctrl),
                 free_at: SimTime::ZERO,
             })
             .collect();
         ServingModel {
             cfg: cfg.clone(),
-            sys,
-            model,
-            table,
             router,
             rng: Rng::new(cfg.seed),
             sampler: ArrivalSampler::new(cfg),
             mode,
             devices,
+            models,
+            energy_j: 0.0,
             clock: 0.0,
             arrivals: 0,
             completed_at: HashMap::new(),
             sink,
         }
+    }
+
+    /// Fleet rollup for reports — present only when a fleet spec was
+    /// given, so flash-only runs render byte-identically to the
+    /// pre-tier output.
+    fn fleet_summary(&self) -> Option<FleetSummary> {
+        self.cfg
+            .fleet
+            .as_ref()
+            .map(|spec| FleetSummary::of(spec, &self.models, self.energy_j))
     }
 
     fn on_arrive(&mut self, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
@@ -328,14 +358,17 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
                 est_wait: d.free_at.saturating_sub(now),
                 kv_used: self.router.kv(i).used(),
                 kv_capacity: self.router.kv(i).capacity,
+                tier: self.models[i].tier(),
             })
             .collect();
-        // Fresh-session prefill estimate (the policy never sees pinned
-        // follow-ups): PCIe KV upload + SLC prompt write + first step.
-        let upload = self.devices[0].pcie.transfer_time(self.model.kv_bytes(l_in, 1.0));
-        let kv_write = SimTime::from_secs(initial_kv_write_time(self.sys, self.model, l_in));
+        // Fresh-session prefill estimates per tier (the policy never sees
+        // pinned follow-ups): for flash, PCIe KV upload + SLC prompt
+        // write + first step; for GPU, roofline prefill + first step.
+        let (est_flash, est_gpu) = tier_estimates(&self.models, l_in);
         let job = JobInfo {
-            est_prefill: (upload + kv_write).secs() + self.table.tpot(l_in),
+            est_prefill: est_flash,
+            est_prefill_gpu: est_gpu,
+            prompt_tokens: l_in,
             ttft_target: self.sampler.classes()[class].slo.ttft,
         };
         let dev = self.router.assign(session, &status, &job);
@@ -378,8 +411,10 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
 
         // Price the whole service now (stateless models, FIFO queue), so
         // `free_at` predicts this job's completion exactly — the
-        // scheduler-visible backlog clock.
-        let service = upload + kv_write + self.table.decode_time(ctx0, l_out);
+        // scheduler-visible backlog clock. Pricing is per the assigned
+        // device's tier.
+        let service =
+            self.models[dev].prefill_cost(l_in) + self.models[dev].decode_time(ctx0, l_out);
         let d = &mut self.devices[dev];
         d.free_at = d.free_at.max(now) + service;
 
@@ -430,6 +465,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             context: 0,
             rejected: true,
             followup: reuse,
+            energy_j: 0.0,
         });
     }
 
@@ -460,20 +496,18 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
     /// same instants (u64 addition is associative) — the oracle the
     /// bit-identity suite replays.
     fn start_service(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
-        let (sys, model, table) = (self.sys, self.model, self.table);
+        let m = &self.models[d];
         let dev = &mut self.devices[d];
         debug_assert!(dev.active.is_none(), "device {d} already serving");
         let Some(req) = dev.queue.pop_front() else {
             return;
         };
-        let upload = dev.pcie.transfer_time(model.kv_bytes(req.l_in, 1.0));
-        let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, req.l_in));
-        let first = now + upload + kv_write + table.step_time(req.ctx0);
+        let first = now + m.prefill_cost(req.l_in) + m.step_time(req.ctx0);
         match self.mode {
             DecodeMode::Coalesced => {
                 // Steps after the first: ctx0+1 .. ctx0+l_out-1 (l_out >= 1
                 // by LenRange's invariant).
-                let rest = table.decode_time(req.ctx0 + 1, req.l_out - 1);
+                let rest = m.decode_time(req.ctx0 + 1, req.l_out - 1);
                 dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
                 queue.schedule(first + rest, ServingEvent::DecodeDone { device: d, first });
             }
@@ -487,12 +521,11 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
     /// Per-token oracle only: schedule the next decode step, or
     /// retirement when the turn is done.
     fn advance(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
-        let table = self.table;
         let a = self.devices[d].active.as_ref().expect("advance without active job");
         if a.tokens_done == a.req.l_out {
             queue.schedule(now, ServingEvent::Retire { device: d });
         } else {
-            let step = table.step_time(a.req.ctx0 + a.tokens_done);
+            let step = self.models[d].step_time(a.req.ctx0 + a.tokens_done);
             queue.schedule(now + step, ServingEvent::TokenDone { device: d });
         }
     }
@@ -512,6 +545,11 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             now
         );
         let r = a.req;
+        // Per-request decode energy is a pure function of the device
+        // tier and the turn's shape, so it is identical across backends;
+        // the running total feeds the fleet rollup.
+        let energy = self.models[d].decode_energy(r.ctx0, r.l_out);
+        self.energy_j += energy;
         self.completed_at.insert(r.session, now);
         self.sampler.release(r.session, r.class);
         self.sink.record(SimRequest {
@@ -527,6 +565,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             context: r.ctx0,
             rejected: false,
             followup: r.followup,
+            energy_j: energy,
         });
         self.start_service(d, now, queue);
     }
@@ -695,6 +734,7 @@ mod tests {
             followup: 0.3,
             seed,
             workload: None,
+            fleet: None,
         }
     }
 

@@ -29,12 +29,12 @@
 //! run in seconds — the old per-arrival scans over every session ever
 //! seen capped the simulator at toy request counts.
 
+use super::device::{tier_estimates_direct, DeviceModel, FleetSpec, FleetSummary};
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
 use super::workload::{ArrivalSampler, SloTarget, WorkloadClass, WorkloadMix};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
-use crate::kv::write_overhead::initial_kv_write_time;
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
 use crate::sim::{Resource, SimTime};
@@ -98,6 +98,13 @@ pub struct TrafficConfig {
     /// [`PoolReport::class_reports`][super::metrics::PoolReport::class_reports]
     /// gains per-class percentiles and SLO attainment.
     pub workload: Option<WorkloadMix>,
+    /// Heterogeneous fleet composition (e.g. `4xflash+1xgpu`). When set,
+    /// [`Self::devices`] must equal the spec's device count, each device
+    /// is priced by its tier's [`DeviceModel`], and reports gain a
+    /// [`FleetSummary`] (per-tier utilization, cost and energy per
+    /// million tokens). `None` keeps the legacy all-flash pool —
+    /// byte-identical behavior to pre-fleet versions.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl TrafficConfig {
@@ -117,6 +124,7 @@ impl TrafficConfig {
             followup: chat.followup,
             seed: 42,
             workload: None,
+            fleet: None,
         }
     }
 
@@ -150,6 +158,10 @@ pub struct SimRequest {
     pub context: usize,
     pub rejected: bool,
     pub followup: bool,
+    /// Decode energy of the turn (J) — a pure function of the assigned
+    /// device's tier and the turn's shape (zero for rejections), so it is
+    /// identical across simulation backends.
+    pub energy_j: f64,
 }
 
 impl SimRequest {
@@ -237,7 +249,24 @@ pub fn run_traffic_with_table(
     assert_eq!(table.model_name(), model.name, "latency table built for a different model");
     assert_eq!(table.system_name(), sys.name, "latency table built for a different system");
     let policy_name = policy.name().to_string();
-    let mut router = DeviceRouter::new(cfg.devices, sys, model, policy);
+    let models = match &cfg.fleet {
+        Some(spec) => {
+            assert_eq!(
+                spec.n_devices(),
+                cfg.devices,
+                "fleet spec {} sizes {} devices but cfg.devices = {}",
+                spec.name(),
+                spec.n_devices(),
+                cfg.devices
+            );
+            DeviceModel::fleet(spec, sys, model, table)
+        }
+        None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
+    };
+    let mut router = match &cfg.fleet {
+        Some(_) => DeviceRouter::with_fleet(&models, policy),
+        None => DeviceRouter::new(cfg.devices, sys, model, policy),
+    };
     let mut rng = Rng::new(cfg.seed);
     let mut sampler = ArrivalSampler::new(cfg);
     let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.devices];
@@ -250,6 +279,7 @@ pub fn run_traffic_with_table(
     // seen on each arrival, which capped traces at toy sizes.
     let mut busy: BinaryHeap<Reverse<(SimTime, u64, usize)>> = BinaryHeap::new();
     let mut outcomes: Vec<SimRequest> = Vec::with_capacity(cfg.requests);
+    let mut energy_total = 0.0f64;
     let mut clock = 0.0f64;
 
     for id in 0..cfg.requests as u64 {
@@ -277,13 +307,18 @@ pub fn run_traffic_with_table(
                 est_wait: d.res.free_at().saturating_sub(now),
                 kv_used: router.kv(i).used(),
                 kv_capacity: router.kv(i).capacity,
+                tier: models[i].tier(),
             })
             .collect();
-        // Prefill estimate for a fresh session (the policy only runs for
-        // those — follow-ups are pinned by KV affinity). This backend
-        // does not price the PCIe upload, so neither does its estimate.
+        // Prefill estimates per tier for a fresh session (the policy only
+        // runs for those — follow-ups are pinned by KV affinity). This
+        // backend's flash estimate does not price the PCIe upload, so
+        // neither does its pricing below.
+        let (est_flash, est_gpu) = tier_estimates_direct(&models, l_in);
         let job = JobInfo {
-            est_prefill: initial_kv_write_time(sys, model, l_in) + table.tpot(l_in),
+            est_prefill: est_flash,
+            est_prefill_gpu: est_gpu,
+            prompt_tokens: l_in,
             ttft_target: sampler.classes()[class].slo.ttft,
         };
         let dev = router.assign(session, &status, &job);
@@ -310,6 +345,7 @@ pub fn run_traffic_with_table(
                 context: 0,
                 rejected: true,
                 followup: reuse,
+                energy_j: 0.0,
             });
         };
 
@@ -343,14 +379,14 @@ pub fn run_traffic_with_table(
         }
         let l_ctx0 = resident.unwrap_or(0) + l_in;
 
-        // Service time on the flash device: initial SLC write of the new
-        // prompt KV, then the per-token decode latency from the shared
-        // table (O(1) per step, `&self` — no schedule cache to warm).
-        let kv_write = SimTime::from_secs(initial_kv_write_time(sys, model, l_in));
-        let mut service = kv_write;
+        // Service time per the assigned device's tier: its prefill cost
+        // (flash: initial SLC write of the new prompt KV; GPU: roofline
+        // prefill), then the per-token decode latency (O(1) per step).
+        let m = &models[dev];
+        let mut service = m.prefill_cost_direct(l_in);
         let mut first_offset = SimTime::ZERO;
         for step in 0..l_out {
-            service += table.step_time(l_ctx0 + step);
+            service += m.step_time(l_ctx0 + step);
             if step == 0 {
                 first_offset = service;
             }
@@ -361,6 +397,8 @@ pub fn run_traffic_with_table(
         devices[dev].inflight.push_back(completed);
         completion.insert(session, completed);
         busy.push(Reverse((completed, session, class)));
+        let energy = m.decode_energy(l_ctx0, l_out);
+        energy_total += energy;
         outcomes.push(SimRequest {
             id,
             session,
@@ -374,6 +412,7 @@ pub fn run_traffic_with_table(
             context: l_ctx0,
             rejected: false,
             followup: reuse,
+            energy_j: energy,
         });
     }
 
@@ -382,6 +421,8 @@ pub fn run_traffic_with_table(
     let device_utilization =
         devices.iter().map(|d| d.res.utilization(makespan)).collect::<Vec<_>>();
     let device_jobs = devices.iter().map(|d| d.res.jobs() as usize).collect::<Vec<_>>();
+    let fleet =
+        cfg.fleet.as_ref().map(|spec| FleetSummary::of(spec, &models, energy_total));
     PoolReport {
         backend: "direct",
         policy: policy_name,
@@ -392,6 +433,7 @@ pub fn run_traffic_with_table(
         makespan,
         device_utilization,
         device_jobs,
+        fleet,
     }
 }
 
@@ -460,6 +502,7 @@ mod tests {
             followup: 0.3,
             seed,
             workload: None,
+            fleet: None,
         }
     }
 

@@ -4,6 +4,7 @@
 //! percentiles and SLO attainment via [`ClassReport`] when the run
 //! carried a [`WorkloadMix`]).
 
+use super::device::{FleetSummary, Tier};
 use super::loadgen::SimRequest;
 use super::request::RequestOutcome;
 use super::workload::{SloTarget, WorkloadMix};
@@ -103,6 +104,11 @@ pub struct PoolReport {
     pub device_utilization: Vec<f64>,
     /// Jobs served per device.
     pub device_jobs: Vec<usize>,
+    /// Fleet composition and pricing, when the run was launched with a
+    /// heterogeneous [`FleetSpec`][super::device::FleetSpec]. `None` for
+    /// legacy flash-only runs, which keeps their rendered reports
+    /// byte-identical to pre-fleet builds.
+    pub fleet: Option<FleetSummary>,
 }
 
 /// Per-class slice of a [`PoolReport`]: the class's traffic counts,
@@ -278,6 +284,37 @@ impl PoolReport {
             d.row(&[format!("dev{i}"), j.to_string(), format!("{:.1}%", u * 100.0)]);
         }
         out.push_str(&d.render());
+        if let Some(f) = &self.fleet {
+            out.push_str(&format!("\nfleet: {}   ${:.2}/h\n", f.name, f.cost_per_hour));
+            let mut t = Table::new(&["tier", "devices", "jobs", "utilization"]);
+            for tier in [Tier::Flash, Tier::Gpu] {
+                let idx: Vec<usize> =
+                    (0..f.tiers.len()).filter(|&i| f.tiers[i] == tier).collect();
+                if idx.is_empty() {
+                    continue;
+                }
+                let jobs: usize =
+                    idx.iter().map(|&i| self.device_jobs.get(i).copied().unwrap_or(0)).sum();
+                let util = idx
+                    .iter()
+                    .map(|&i| self.device_utilization.get(i).copied().unwrap_or(0.0))
+                    .sum::<f64>()
+                    / idx.len() as f64;
+                t.row(&[
+                    tier.as_str().to_string(),
+                    idx.len().to_string(),
+                    jobs.to_string(),
+                    format!("{:.1}%", util * 100.0),
+                ]);
+            }
+            out.push_str(&t.render());
+            let tokens: u64 = self.outcomes.iter().map(|o| o.output_tokens as u64).sum();
+            if let (Some(cost), Some(energy)) =
+                (f.cost_per_mtok(tokens, self.makespan.secs()), f.energy_per_mtok(tokens))
+            {
+                out.push_str(&format!("cost ${cost:.2}/Mtok   energy {energy:.1} J/Mtok\n"));
+            }
+        }
         if let Some(mix) = &self.workload {
             out.push_str(&format!("\nworkload mix: {}\n", mix.name()));
             let mut c = Table::new(&[
@@ -359,6 +396,7 @@ mod tests {
             context: 64,
             rejected: device.is_none(),
             followup: false,
+            energy_j: 0.0,
         }
     }
 
@@ -378,6 +416,7 @@ mod tests {
             makespan: SimTime::from_secs(1.0),
             device_utilization: vec![0.5, 0.25],
             device_jobs: vec![1, 1],
+            fleet: None,
         };
         assert_eq!(r.accepted(), 2);
         assert_eq!(r.rejected(), 1);
@@ -440,6 +479,7 @@ mod tests {
             makespan: SimTime::from_secs(1.0),
             device_utilization: vec![0.5, 0.25],
             device_jobs: vec![2, 1],
+            fleet: None,
         };
         let classes = r.class_reports();
         assert_eq!(classes.len(), 2);

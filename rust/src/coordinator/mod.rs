@@ -4,13 +4,18 @@
 //! initial-KV transfer over PCIe and freeing the GPUs for further
 //! summarization requests.
 //!
-//! The production-scale path is a *device pool*: N flash-PIM devices
-//! behind one scheduler. [`router`] hosts the [`Scheduler`] policies
-//! (round-robin, least-loaded, and the SLO-aware bin-packer
-//! [`SloAware`]) plus [`DeviceRouter`] — KV affinity pins a session's
-//! follow-up turns to the device holding its SLC KV cache — and every
-//! device queue is bounded, so overload is surfaced as backpressure
-//! instead of unbounded buffering.
+//! The production-scale path is a *device pool*: N devices behind one
+//! scheduler. A pool need not be homogeneous — [`device`] defines the
+//! [`DeviceModel`] tier abstraction (flash-PIM cards priced by the
+//! latency table, GPU nodes priced by the
+//! [`gpu::roofline`][crate::gpu::roofline] model) and [`FleetSpec`]
+//! compositions like `4xflash+1xgpu`. [`router`] hosts the
+//! [`Scheduler`] policies (round-robin, least-loaded, the SLO-aware
+//! bin-packer [`SloAware`], and the tier-splitting [`TierAware`]) plus
+//! [`DeviceRouter`] — KV affinity pins a session's follow-up turns to
+//! the device holding its KV cache — and every device queue is bounded,
+//! so overload is surfaced as backpressure instead of unbounded
+//! buffering.
 //!
 //! Traffic need not be one homogeneous stream: [`workload`] defines
 //! multi-class scenarios ([`WorkloadMix`] — chat, long-context
@@ -92,6 +97,7 @@
 //!     followup: 0.0,
 //!     seed: 1,
 //!     workload: None,
+//!     fleet: None,
 //! };
 //! let policy = || policy_from_name("least-loaded").unwrap();
 //! let a = run_traffic_events(&sys, &model, &table, policy(), &cfg);
@@ -100,6 +106,7 @@
 //! assert_eq!(a.accepted() + a.rejected(), 10);
 //! ```
 
+pub mod device;
 pub mod event_sim;
 pub mod loadgen;
 pub mod metrics;
@@ -112,17 +119,20 @@ pub mod sink;
 pub mod sweep;
 pub mod workload;
 
+pub use device::{default_gpu_system, DeviceModel, FleetSpec, FleetSummary, Tier};
 pub use event_sim::{
     DecodeMode, run_traffic_events, run_traffic_events_counted, run_traffic_events_mode,
     run_traffic_point, ServingEvent, ServingModel,
 };
 pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
 pub use metrics::{ClassReport, PoolReport, ServingReport};
-pub use pool::{DevicePool, PoolJob, PoolServed, SimFlashEngine, SubmitError};
+pub use pool::{
+    DevicePool, PoolJob, PoolServed, SimFlashEngine, SimGpuEngine, SimPoolEngine, SubmitError,
+};
 pub use request::{Request, RequestKind, RequestOutcome};
 pub use router::{
     DeviceRouter, DeviceStatus, JobInfo, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
-    Scheduler, SloAware,
+    Scheduler, SloAware, TierAware, GPU_PROMPT_SPLIT, TIERED_POLICY_NAMES,
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};

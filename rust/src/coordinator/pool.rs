@@ -16,9 +16,12 @@
 //! (bounded queues, [`Scheduler`] policies, KV affinity) on a simulated
 //! timeline.
 
+use super::device::{FleetSpec, Tier};
 use super::router::{DeviceStatus, JobInfo, Scheduler};
 use super::serve::{Engine, Job};
+use crate::gpu::GpuSystem;
 use crate::llm::latency_table::LatencyTable;
+use crate::llm::model_config::ModelShape;
 use crate::sim::SimTime;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -105,6 +108,10 @@ pub struct DevicePool {
     /// Lock order on every path: affinity → status_scratch → policy.
     status_scratch: Mutex<Vec<DeviceStatus>>,
     queue_capacity: usize,
+    /// Per-device tier, in worker order. [`DevicePool::new`] builds an
+    /// all-flash pool; [`DevicePool::simulated_fleet`] follows its
+    /// [`FleetSpec`], so tier-aware policies can split traffic.
+    tiers: Vec<Tier>,
 }
 
 impl DevicePool {
@@ -165,6 +172,7 @@ impl DevicePool {
             affinity: Mutex::new(HashMap::new()),
             status_scratch: Mutex::new(Vec::with_capacity(n_devices)),
             queue_capacity,
+            tiers: vec![Tier::Flash; n_devices],
         }
     }
 
@@ -183,6 +191,38 @@ impl DevicePool {
         })
     }
 
+    /// Heterogeneous pool following a [`FleetSpec`]: flash workers run
+    /// [`SimFlashEngine`]s over one shared table, GPU workers run
+    /// [`SimGpuEngine`]s priced by the roofline, and the pool's status
+    /// rows carry each device's tier so tier-aware policies can split.
+    pub fn simulated_fleet(
+        spec: &FleetSpec,
+        queue_capacity: usize,
+        policy: Box<dyn Scheduler + Send>,
+        table: Arc<LatencyTable>,
+        gpu: GpuSystem,
+        model: ModelShape,
+    ) -> DevicePool {
+        let tiers = spec.tiers();
+        let factory_tiers = tiers.clone();
+        let mut pool =
+            DevicePool::new(spec.n_devices(), queue_capacity, policy, move |device| {
+                match factory_tiers[device] {
+                    Tier::Flash => SimPoolEngine::Flash(SimFlashEngine::new(Arc::clone(&table))),
+                    Tier::Gpu => {
+                        SimPoolEngine::Gpu(SimGpuEngine::new(gpu.clone(), model.clone()))
+                    }
+                }
+            });
+        pool.tiers = tiers;
+        pool
+    }
+
+    /// Per-device tier, in worker order.
+    pub fn tiers(&self) -> &[Tier] {
+        &self.tiers
+    }
+
     pub fn n_devices(&self) -> usize {
         self.workers.len()
     }
@@ -198,6 +238,7 @@ impl DevicePool {
             est_wait: SimTime::ZERO,
             kv_used: 0,
             kv_capacity: 0,
+            tier: self.tiers[i],
         }
     }
 
@@ -304,6 +345,74 @@ impl Engine for SimFlashEngine {
 
     fn sim_job_time(&self, l_in: usize, n_out: usize) -> Option<SimTime> {
         Some(self.table.decode_time(l_in, n_out))
+    }
+}
+
+/// GPU-tier counterpart of [`SimFlashEngine`]: the same echo token
+/// stream, with simulated timing answered by the [`GpuSystem`] roofline
+/// (per-step `tpot` over the growing context). `sim_job_time` is `None`
+/// when the model does not fit the node — the pool-level analogue of the
+/// roofline's OOM rows.
+pub struct SimGpuEngine {
+    gpu: GpuSystem,
+    model: ModelShape,
+}
+
+impl SimGpuEngine {
+    pub fn new(gpu: GpuSystem, model: ModelShape) -> SimGpuEngine {
+        SimGpuEngine { gpu, model }
+    }
+}
+
+impl Engine for SimGpuEngine {
+    fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        let base = *prompt.last().unwrap_or(&0);
+        let out: Vec<u32> = (0..max_new as u32).map(|i| base.wrapping_add(i)).collect();
+        for t in &out {
+            on_token(*t);
+        }
+        Ok(out)
+    }
+
+    fn sim_job_time(&self, l_in: usize, n_out: usize) -> Option<SimTime> {
+        let mut total = 0.0;
+        for step in 0..n_out {
+            total += self.gpu.tpot(&self.model, 1.0, l_in + step)?;
+        }
+        Some(SimTime::from_secs(total))
+    }
+}
+
+/// Worker-engine sum type for heterogeneous pools — the factory must
+/// return one concrete type, and a fleet mixes flash and GPU workers.
+pub enum SimPoolEngine {
+    Flash(SimFlashEngine),
+    Gpu(SimGpuEngine),
+}
+
+impl Engine for SimPoolEngine {
+    fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        match self {
+            SimPoolEngine::Flash(e) => e.generate(prompt, max_new, on_token),
+            SimPoolEngine::Gpu(e) => e.generate(prompt, max_new, on_token),
+        }
+    }
+
+    fn sim_job_time(&self, l_in: usize, n_out: usize) -> Option<SimTime> {
+        match self {
+            SimPoolEngine::Flash(e) => e.sim_job_time(l_in, n_out),
+            SimPoolEngine::Gpu(e) => e.sim_job_time(l_in, n_out),
+        }
     }
 }
 
@@ -472,5 +581,37 @@ mod tests {
         assert!(expect > SimTime::ZERO);
         assert_eq!(a.sim, Some(expect));
         assert_eq!(b.sim, Some(expect));
+    }
+
+    #[test]
+    fn simulated_fleet_mixes_engine_tiers() {
+        use crate::circuit::TechParams;
+        use crate::config::presets::table1_system;
+        use crate::coordinator::device::default_gpu_system;
+        use crate::llm::model_config::OptModel;
+
+        let model = OptModel::Opt6_7b.shape();
+        let table = Arc::new(LatencyTable::build(
+            &table1_system(),
+            &TechParams::default(),
+            model.clone(),
+        ));
+        let spec = FleetSpec::parse("1xflash+1xgpu").unwrap();
+        let pool = DevicePool::simulated_fleet(
+            &spec,
+            4,
+            Box::new(RoundRobin::new()),
+            Arc::clone(&table),
+            default_gpu_system(),
+            model.clone(),
+        );
+        assert_eq!(pool.tiers(), &[Tier::Flash, Tier::Gpu]);
+        let a = pool.run(PoolJob::new(job(1))).unwrap();
+        let b = pool.run(PoolJob::new(job(2))).unwrap();
+        assert_eq!((a.device, b.device), (0, 1), "round-robin across the fleet");
+        assert_eq!(a.sim, Some(table.decode_time(1, 2)), "flash worker answers from the table");
+        let gpu = default_gpu_system();
+        let expect = gpu.tpot(&model, 1.0, 1).unwrap() + gpu.tpot(&model, 1.0, 2).unwrap();
+        assert_eq!(b.sim, Some(SimTime::from_secs(expect)), "gpu worker answers the roofline");
     }
 }

@@ -17,6 +17,7 @@
 //! what lets [`SloAware`] place a job by whether a queue endangers its
 //! class's first-token deadline.
 
+use super::device::{DeviceModel, Tier};
 use super::request::{Request, RequestKind};
 use crate::config::SystemConfig;
 use crate::kv::cache::KvCacheManager;
@@ -97,6 +98,9 @@ pub struct DeviceStatus {
     pub kv_used: u64,
     /// Capacity of the device's SLC KV region.
     pub kv_capacity: u64,
+    /// Device tier — lets tier-sensitive policies ([`TierAware`]) and
+    /// per-tier feasibility checks see what kind of device this is.
+    pub tier: Tier,
 }
 
 /// What a [`Scheduler`] knows about the arriving job beyond the pool
@@ -104,9 +108,17 @@ pub struct DeviceStatus {
 /// tight its class's first-token deadline is.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JobInfo {
-    /// Estimated prefill time on an idle device, seconds (KV upload +
-    /// SLC prompt write + first decode step, for a fresh session).
+    /// Estimated prefill time on an idle *flash* device, seconds (KV
+    /// upload + SLC prompt write + first decode step, for a fresh
+    /// session). Single-tier callers fill only this field and
+    /// [`JobInfo::est_prefill_gpu`] mirrors it.
     pub est_prefill: f64,
+    /// Estimated prefill time on an idle *GPU* device, seconds. Equal to
+    /// `est_prefill` on single-tier fleets so tier-blind policies behave
+    /// identically either way.
+    pub est_prefill_gpu: f64,
+    /// Prompt length of the arriving turn — what [`TierAware`] splits on.
+    pub prompt_tokens: usize,
     /// TTFT SLO target of the arriving class, seconds;
     /// `f64::INFINITY` when the class (or a classless run) has none.
     pub ttft_target: f64,
@@ -116,7 +128,20 @@ impl JobInfo {
     /// No deadline and no footprint — what callers outside the traffic
     /// simulators (e.g. the functional pool) pass.
     pub fn unconstrained() -> JobInfo {
-        JobInfo { est_prefill: 0.0, ttft_target: f64::INFINITY }
+        JobInfo {
+            est_prefill: 0.0,
+            est_prefill_gpu: 0.0,
+            prompt_tokens: 0,
+            ttft_target: f64::INFINITY,
+        }
+    }
+
+    /// The prefill estimate that applies on a device of `tier`.
+    pub fn est_prefill_on(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Flash => self.est_prefill,
+            Tier::Gpu => self.est_prefill_gpu,
+        }
     }
 }
 
@@ -212,7 +237,7 @@ impl Scheduler for SloAware {
     fn pick(&mut self, status: &[DeviceStatus], job: &JobInfo) -> usize {
         let feasible = status
             .iter()
-            .filter(|s| s.est_wait.secs() + job.est_prefill <= job.ttft_target)
+            .filter(|s| s.est_wait.secs() + job.est_prefill_on(s.tier) <= job.ttft_target)
             // Deepest feasible backlog (by time, then by queue depth),
             // then least KV, then lowest index.
             .max_by_key(|s| {
@@ -229,10 +254,69 @@ impl Scheduler for SloAware {
     }
 }
 
+/// Prompt length (tokens) at which [`TierAware`] starts preferring the
+/// GPU tier: prefill is compute-bound and the GPU roofline wins long
+/// prompts, while flash wins the per-token decode that dominates short
+/// chat turns (the paper's §I split, as a scheduling policy).
+pub const GPU_PROMPT_SPLIT: usize = 512;
+
+/// Tier-splitting placement for heterogeneous fleets: long prefills (≥
+/// [`GPU_PROMPT_SPLIT`] prompt tokens) and jobs whose flash prefill
+/// alone would already blow the class TTFT target prefer the GPU tier;
+/// everything else — short, decode-heavy chat — prefers flash. Within
+/// the preferred tier it falls back to full [`SloAware`] bin-packing,
+/// and when the preferred tier is absent (single-tier fleet) it degrades
+/// to plain `SloAware` over the whole pool.
+#[derive(Debug, Clone, Default)]
+pub struct TierAware {
+    inner: SloAware,
+}
+
+impl TierAware {
+    pub fn new() -> TierAware {
+        TierAware::default()
+    }
+
+    /// Which tier this job wants, before availability is considered.
+    pub fn preferred_tier(job: &JobInfo) -> Tier {
+        if job.prompt_tokens >= GPU_PROMPT_SPLIT || job.est_prefill > job.ttft_target {
+            Tier::Gpu
+        } else {
+            Tier::Flash
+        }
+    }
+}
+
+impl Scheduler for TierAware {
+    fn name(&self) -> &'static str {
+        "tier-aware"
+    }
+
+    fn pick(&mut self, status: &[DeviceStatus], job: &JobInfo) -> usize {
+        assert!(!status.is_empty(), "pick over empty pool");
+        let want = TierAware::preferred_tier(job);
+        let subset: Vec<DeviceStatus> =
+            status.iter().copied().filter(|s| s.tier == want).collect();
+        if subset.is_empty() {
+            self.inner.pick(status, job)
+        } else {
+            // `pick` returns the chosen row's `.device`, so filtering the
+            // slice is safe — indices survive the subset.
+            self.inner.pick(&subset, job)
+        }
+    }
+}
+
 /// Canonical names of every scheduling policy, ascending — the sweep and
 /// campaign matrices iterate this list so "all policies" has exactly one
-/// definition.
+/// definition. Excludes [`TierAware`], which only makes sense on a
+/// heterogeneous fleet — tiered callers iterate [`TIERED_POLICY_NAMES`].
 pub const POLICY_NAMES: &[&str] = &["least-loaded", "round-robin", "slo-aware"];
+
+/// Every policy including [`TierAware`] — the "all policies" list for
+/// sweeps and campaigns that carry a fleet axis.
+pub const TIERED_POLICY_NAMES: &[&str] =
+    &["least-loaded", "round-robin", "slo-aware", "tier-aware"];
 
 /// Build a scheduling policy from its CLI name.
 pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
@@ -240,6 +324,7 @@ pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
         "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
         "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
         "slo-aware" | "slo" => Some(Box::new(SloAware::new())),
+        "tier-aware" | "tier" => Some(Box::new(TierAware::new())),
         _ => None,
     }
 }
@@ -263,6 +348,18 @@ impl DeviceRouter {
     ) -> DeviceRouter {
         assert!(n_devices > 0, "pool needs at least one device");
         let devices = (0..n_devices).map(|_| KvCacheManager::new(sys, model)).collect();
+        DeviceRouter { devices, sessions: HashMap::new(), policy }
+    }
+
+    /// Router over a heterogeneous fleet: each device's KV region is
+    /// sized by its [`DeviceModel`] (SLC geometry for flash, the VRAM
+    /// budget for GPU), so capacity-fit is per tier.
+    pub fn with_fleet(models: &[DeviceModel], policy: Box<dyn Scheduler + Send>) -> DeviceRouter {
+        assert!(!models.is_empty(), "pool needs at least one device");
+        let devices = models
+            .iter()
+            .map(|m| KvCacheManager::with_capacity(m.kv_capacity(), m.kv_per_token()))
+            .collect();
         DeviceRouter { devices, sessions: HashMap::new(), policy }
     }
 
@@ -385,12 +482,19 @@ mod tests {
                 est_wait: SimTime::from_secs(q as f64),
                 kv_used: 0,
                 kv_capacity: 1 << 30,
+                tier: Tier::Flash,
             })
             .collect()
     }
 
     fn any_job() -> JobInfo {
         JobInfo::unconstrained()
+    }
+
+    /// A single-tier job: both tier estimates carry the same value, as
+    /// the traffic simulators produce for flash-only fleets.
+    fn job(est_prefill: f64, ttft_target: f64) -> JobInfo {
+        JobInfo { est_prefill, est_prefill_gpu: est_prefill, prompt_tokens: 0, ttft_target }
     }
 
     #[test]
@@ -432,15 +536,15 @@ mod tests {
     fn slo_aware_packs_feasible_and_sheds_infeasible() {
         let mut slo = SloAware::new();
         // Deadline admits devices waiting <= 2.5 s (prefill 0.5, target 3).
-        let job = JobInfo { est_prefill: 0.5, ttft_target: 3.0 };
+        let loose = job(0.5, 3.0);
         // Feasible: waits 0, 1, 2 (devices 0, 1, 2); device 3 (wait 5) is
         // not. Bin-packing picks the *deepest* feasible backlog: device 2.
-        assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &job), 2);
+        assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &loose), 2);
         // A tight deadline shrinks the feasible set to the idle device.
-        let tight = JobInfo { est_prefill: 0.5, ttft_target: 0.6 };
+        let tight = job(0.5, 0.6);
         assert_eq!(slo.pick(&status(&[0, 1, 2, 5]), &tight), 0);
         // No device feasible: fall back to least wait (device 1 here).
-        let hopeless = JobInfo { est_prefill: 0.5, ttft_target: 0.1 };
+        let hopeless = job(0.5, 0.1);
         assert_eq!(slo.pick(&status(&[3, 1, 2, 5]), &hopeless), 1);
         // Without a deadline every device is feasible: pack onto the
         // busiest outright.
@@ -448,8 +552,8 @@ mod tests {
         // Feasibility ties break by KV usage, then index.
         let mut s = status(&[2, 2]);
         s[0].kv_used = 100;
-        assert_eq!(slo.pick(&s, &job), 1);
-        assert_eq!(slo.pick(&status(&[2, 2]), &job), 0);
+        assert_eq!(slo.pick(&s, &loose), 1);
+        assert_eq!(slo.pick(&status(&[2, 2]), &loose), 0);
         // A status source with no time estimate (the functional pool
         // reports est_wait zero) still packs by real queue depth instead
         // of collapsing onto device 0.
@@ -460,6 +564,62 @@ mod tests {
         assert_eq!(slo.pick(&flat, &any_job()), 1);
     }
 
+    /// Mixed-fleet status: first `flash` devices flash, rest GPU.
+    fn mixed_status(depths: &[usize], flash: usize) -> Vec<DeviceStatus> {
+        let mut s = status(depths);
+        for d in &mut s[flash..] {
+            d.tier = Tier::Gpu;
+        }
+        s
+    }
+
+    #[test]
+    fn tier_aware_splits_by_prompt_length_and_deadline() {
+        let mut ta = TierAware::new();
+        // Short prompt, loose deadline: prefers flash (devices 0–1).
+        let chat =
+            JobInfo { est_prefill: 0.1, est_prefill_gpu: 0.2, prompt_tokens: 128, ttft_target: 3.0 };
+        let s = mixed_status(&[1, 0, 0], 2);
+        assert!(ta.pick(&s, &chat) < 2, "chat goes to a flash device");
+        // Long prompt: prefers the GPU tier even though it is busier.
+        let long =
+            JobInfo { est_prefill: 2.0, est_prefill_gpu: 0.3, prompt_tokens: 1024, ttft_target: 3.0 };
+        let s = mixed_status(&[0, 0, 4], 2);
+        assert_eq!(ta.pick(&s, &long), 2, "long prefill goes to the GPU device");
+        // Short prompt whose flash prefill blows the deadline also prefers GPU.
+        let tight =
+            JobInfo { est_prefill: 2.0, est_prefill_gpu: 0.3, prompt_tokens: 64, ttft_target: 1.0 };
+        assert_eq!(TierAware::preferred_tier(&tight), Tier::Gpu);
+        // Preferred tier absent (flash-only pool): degrades to SloAware
+        // over the whole pool instead of panicking.
+        let flash_only = status(&[0, 1]);
+        assert_eq!(ta.pick(&flash_only, &long), SloAware::new().pick(&flash_only, &long));
+        // Within the preferred tier, SloAware bin-packing applies: the
+        // deepest feasible flash backlog wins.
+        let s = mixed_status(&[0, 2, 9], 2);
+        assert_eq!(ta.pick(&s, &chat), 1);
+    }
+
+    #[test]
+    fn device_router_with_fleet_sizes_kv_per_tier() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = crate::llm::LatencyTable::build(
+            &sys,
+            &crate::circuit::TechParams::default(),
+            model.clone(),
+        );
+        let spec = super::super::device::FleetSpec::parse("1xflash+1xgpu").unwrap();
+        let models = DeviceModel::fleet(&spec, &sys, &model, &table);
+        let dr = DeviceRouter::with_fleet(&models, Box::new(TierAware::new()));
+        assert_eq!(dr.n_devices(), 2);
+        assert_eq!(dr.policy_name(), "tier-aware");
+        // Flash slot matches the SLC geometry capacity; GPU slot the VRAM budget.
+        assert_eq!(dr.kv(0).capacity, KvCacheManager::new(&sys, &model).capacity);
+        assert_eq!(dr.kv(1).capacity, models[1].kv_capacity());
+        assert_eq!(dr.kv(1).per_token, models[1].kv_per_token());
+    }
+
     #[test]
     fn policy_names_resolve() {
         assert_eq!(policy_from_name("round-robin").unwrap().name(), "round-robin");
@@ -467,7 +627,12 @@ mod tests {
         assert_eq!(policy_from_name("least-loaded").unwrap().name(), "least-loaded");
         assert_eq!(policy_from_name("slo-aware").unwrap().name(), "slo-aware");
         assert_eq!(policy_from_name("slo").unwrap().name(), "slo-aware");
+        assert_eq!(policy_from_name("tier-aware").unwrap().name(), "tier-aware");
+        assert_eq!(policy_from_name("tier").unwrap().name(), "tier-aware");
         assert!(policy_from_name("bogus").is_none());
+        // The tiered list is the base list plus tier-aware.
+        assert_eq!(&TIERED_POLICY_NAMES[..POLICY_NAMES.len()], POLICY_NAMES);
+        assert_eq!(TIERED_POLICY_NAMES.last(), Some(&"tier-aware"));
     }
 
     #[test]

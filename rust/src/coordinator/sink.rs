@@ -21,6 +21,7 @@
 //!   streamed [`SweepPoint`] is **bit-identical** to one computed from a
 //!   materialized report — asserted in `tests/perf_equivalence.rs`.
 
+use super::device::FleetSummary;
 use super::loadgen::SimRequest;
 use super::sweep::{ClassAttainment, SweepPoint};
 use super::workload::SloTarget;
@@ -102,13 +103,20 @@ impl StreamingSink {
     }
 
     /// Reduce to a sweep point. Bit-identical to
-    /// `SweepPoint::of(&report)` over the same run's materialized report.
-    pub fn finish(self, policy: String, rate: f64) -> SweepPoint {
+    /// `SweepPoint::of(&report)` over the same run's materialized report
+    /// — including the fleet-priced columns, which both paths derive
+    /// from the same token total and makespan through the same
+    /// [`FleetSummary`] methods.
+    pub fn finish(self, policy: String, rate: f64, fleet: Option<FleetSummary>) -> SweepPoint {
         let throughput = if self.makespan == SimTime::ZERO {
             0.0
         } else {
             self.tokens as f64 / self.makespan.secs()
         };
+        let tokens = self.tokens as u64;
+        let cost_per_mtok =
+            fleet.as_ref().and_then(|f| f.cost_per_mtok(tokens, self.makespan.secs()));
+        let energy_per_mtok = fleet.as_ref().and_then(|f| f.energy_per_mtok(tokens));
         let lat = self.latency.finish();
         SweepPoint {
             policy,
@@ -120,6 +128,8 @@ impl StreamingSink {
             latency_p50: lat.p50,
             latency_p95: lat.p95,
             latency_p99: lat.p99,
+            cost_per_mtok,
+            energy_per_mtok,
             class_attainment: self
                 .classes
                 .into_iter()
@@ -176,6 +186,7 @@ mod tests {
             context: 64,
             rejected: device.is_none(),
             followup: false,
+            energy_j: 0.0,
         }
     }
 
@@ -198,7 +209,7 @@ mod tests {
         sink.record(outcome(0, 0, Some(0), 10)); // loose, served: attains
         sink.record(outcome(1, 1, Some(1), 10)); // tight, served: misses
         sink.record(outcome(2, 0, None, 0)); // loose, rejected: misses
-        let p = sink.finish("rr".to_string(), 4.0);
+        let p = sink.finish("rr".to_string(), 4.0, None);
         assert_eq!((p.accepted, p.rejected), (2, 1));
         assert!(p.throughput > 0.0);
         assert!(p.ttft_p95 > 0.0 && p.latency_p95 > 0.0);
@@ -209,7 +220,7 @@ mod tests {
 
     #[test]
     fn streaming_sink_empty_run() {
-        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0);
+        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0, None);
         assert_eq!((p.accepted, p.rejected), (0, 0));
         assert_eq!(p.throughput, 0.0);
         assert!(p.class_attainment.is_empty());

@@ -115,6 +115,12 @@ pub struct SweepPoint {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// USD per million generated tokens at this point's makespan; `None`
+    /// for legacy runs without a [`FleetSpec`][super::device::FleetSpec].
+    pub cost_per_mtok: Option<f64>,
+    /// Joules of decode energy per million generated tokens; `None`
+    /// without a fleet spec.
+    pub energy_per_mtok: Option<f64>,
     /// Per-class SLO attainment, in mix order; empty without a workload.
     pub class_attainment: Vec<ClassAttainment>,
 }
@@ -126,6 +132,8 @@ impl SweepPoint {
     /// the two together.
     pub fn of(report: &PoolReport) -> SweepPoint {
         let lat = report.latency_summary();
+        let tokens: u64 = report.outcomes.iter().map(|o| o.output_tokens as u64).sum();
+        let fleet = report.fleet.as_ref();
         SweepPoint {
             policy: report.policy.clone(),
             rate: report.offered_rate,
@@ -136,6 +144,8 @@ impl SweepPoint {
             latency_p50: lat.p50,
             latency_p95: lat.p95,
             latency_p99: lat.p99,
+            cost_per_mtok: fleet.and_then(|f| f.cost_per_mtok(tokens, report.makespan.secs())),
+            energy_per_mtok: fleet.and_then(|f| f.energy_per_mtok(tokens)),
             class_attainment: report
                 .class_reports()
                 .into_iter()
@@ -179,7 +189,7 @@ fn sweep_pairs<'a>(rates: &[f64], policies: &[&'a str]) -> Result<Vec<(&'a str, 
     }
     for p in policies {
         if policy_from_name(p).is_none() {
-            bail!("unknown policy {p:?}; use round-robin|least-loaded|slo-aware");
+            bail!("unknown policy {p:?}; use round-robin|least-loaded|slo-aware|tier-aware");
         }
     }
     let mut rates = rates.to_vec();
@@ -240,8 +250,13 @@ pub fn sweep_rates_threaded(
 
 /// Render sweep points as an ASCII throughput–latency table. The final
 /// column is the worst per-class SLO attainment (`-` without a workload).
+/// Fleet-priced sweeps (any point carrying cost/energy) gain `$/Mtok`
+/// and `J/Mtok` columns; flash-only sweeps render byte-identically to
+/// pre-fleet builds.
 pub fn render_sweep(points: &[SweepPoint]) -> String {
-    let mut t = Table::new(&[
+    let priced =
+        points.iter().any(|p| p.cost_per_mtok.is_some() || p.energy_per_mtok.is_some());
+    let mut headers = vec![
         "policy",
         "rate req/s",
         "accepted",
@@ -251,10 +266,15 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
         "lat p50",
         "lat p95",
         "lat p99",
-        "min SLO",
-    ]);
+    ];
+    if priced {
+        headers.push("$/Mtok");
+        headers.push("J/Mtok");
+    }
+    headers.push("min SLO");
+    let mut t = Table::new(&headers);
     for p in points {
-        t.row(&[
+        let mut cells = vec![
             p.policy.clone(),
             format!("{:.1}", p.rate),
             p.accepted.to_string(),
@@ -264,11 +284,22 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
             fmt_time(p.latency_p50),
             fmt_time(p.latency_p95),
             fmt_time(p.latency_p99),
-            match p.min_attainment() {
-                Some(a) => format!("{:.1}%", a * 100.0),
+        ];
+        if priced {
+            cells.push(match p.cost_per_mtok {
+                Some(c) => format!("{c:.2}"),
                 None => "-".to_string(),
-            },
-        ]);
+            });
+            cells.push(match p.energy_per_mtok {
+                Some(e) => format!("{e:.1}"),
+                None => "-".to_string(),
+            });
+        }
+        cells.push(match p.min_attainment() {
+            Some(a) => format!("{:.1}%", a * 100.0),
+            None => "-".to_string(),
+        });
+        t.row(&cells);
     }
     t.render()
 }
@@ -359,6 +390,7 @@ mod tests {
             followup: 0.3,
             seed: 5,
             workload: None,
+            fleet: None,
         }
     }
 
@@ -444,6 +476,8 @@ mod tests {
             latency_p50: 0.1,
             latency_p95: 0.2,
             latency_p99: 0.3,
+            cost_per_mtok: None,
+            energy_per_mtok: None,
             class_attainment: vec![
                 ClassAttainment { class: "chat".into(), attainment: chat },
                 ClassAttainment { class: "batch".into(), attainment: batch },

@@ -25,7 +25,14 @@
 //! [`PoolReport::class_reports`][super::metrics::PoolReport::class_reports]
 //! summarizes TTFT/TPOT/latency percentiles and SLO attainment per class,
 //! and the `slo-aware` scheduler ([`super::router::SloAware`]) uses the
-//! arriving class's TTFT target to place jobs.
+//! arriving class's TTFT target to place jobs. On heterogeneous fleets
+//! ([`TrafficConfig::fleet`]) the `tier-aware` scheduler
+//! ([`super::router::TierAware`]) additionally steers each *fresh* turn
+//! by prompt length and TTFT budget — but only fresh turns: a follow-up
+//! reuses the session's resident KV, so a session is pinned to the
+//! device (and therefore the tier) that served its first turn for its
+//! whole lifetime. Class→tier splits in reports are thus exact only
+//! when every class's fresh turns prefer one tier.
 //!
 //! # Example
 //!

@@ -47,6 +47,19 @@ impl KvCacheManager {
         }
     }
 
+    /// Manager over an explicit byte budget — used for non-flash tiers
+    /// (a GPU device's KV pool is whatever VRAM is left after weights
+    /// and workspace) where the SLC geometry math does not apply.
+    pub fn with_capacity(capacity: u64, per_token: u64) -> KvCacheManager {
+        KvCacheManager {
+            capacity,
+            per_token,
+            used: 0,
+            sequences: HashMap::new(),
+            total_written: 0,
+        }
+    }
+
     /// Admit a sequence with `initial_tokens` of prefilled KV.
     pub fn admit(&mut self, seq_id: u64, initial_tokens: usize) -> Result<()> {
         let bytes = self.per_token * initial_tokens as u64;

@@ -92,6 +92,7 @@ fn traffic(devices: usize, rate: f64, requests: usize, seed: u64) -> TrafficConf
         followup: 0.35,
         seed,
         workload: None,
+        fleet: None,
     }
 }
 

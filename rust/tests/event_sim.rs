@@ -26,6 +26,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         followup: 0.5,
         seed,
         workload: None,
+        fleet: None,
     }
 }
 
@@ -68,6 +69,7 @@ fn event_backend_matches_direct_backend_plus_pcie_upload() {
         followup: 0.0, // fresh sessions only: identical routing either way
         seed: 11,
         workload: None,
+        fleet: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
@@ -118,6 +120,7 @@ fn latency_percentiles_within_5pct_of_direct_backend_on_10k_trace() {
         followup: 0.3,
         seed: 123,
         workload: None,
+        fleet: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
@@ -145,6 +148,7 @@ fn event_backend_completes_100k_requests_single_threaded() {
         followup: 0.4,
         seed: 7,
         workload: None,
+        fleet: None,
     };
     let rep =
         run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg);
@@ -177,6 +181,7 @@ fn ttft_decomposes_into_upload_write_and_first_step() {
         followup: 0.0,
         seed: 3,
         workload: None,
+        fleet: None,
     };
     let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     assert_eq!(rep.accepted(), 1);

@@ -1,0 +1,238 @@
+//! Heterogeneous-fleet acceptance tests: typed device tiers behind one
+//! scheduler.
+//!
+//! Covers the fleet refactor end to end: per-seed bit-identity on a
+//! mixed flash+GPU fleet (including the per-token oracle), tier-aware
+//! routing on the adversarial chat+summarize mix, GPU-only agreement
+//! between the event and direct backends (the flash tier's historical
+//! upload-pricing asymmetry does not exist on the GPU tier, so the two
+//! backends agree pointwise there), and the GPU tier reproducing the
+//! `gpu::roofline` numbers end to end through the serving stack.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::coordinator::{
+    default_gpu_system, policy_from_name, run_traffic_events, run_traffic_events_mode,
+    run_traffic_point, run_traffic_with_table, DecodeMode, DeviceModel, FleetSpec, LenRange,
+    SweepPoint, Tier, TrafficConfig, WorkloadMix, GPU_PROMPT_SPLIT,
+};
+use flashpim::llm::model_config::OptModel;
+use flashpim::llm::LatencyTable;
+use flashpim::sim::SimTime;
+
+type Fixtures =
+    (flashpim::config::SystemConfig, flashpim::llm::model_config::ModelShape, LatencyTable);
+
+fn fixtures() -> Fixtures {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    (sys, model, table)
+}
+
+/// A single-class config over a fleet spec; scalar shape fields are the
+/// caller's to adjust.
+fn fleet_cfg(spec: &str, requests: usize, rate: f64, seed: u64) -> TrafficConfig {
+    let fleet = FleetSpec::parse(spec).expect("valid fleet spec");
+    let mut cfg = TrafficConfig::default_for(fleet.n_devices());
+    cfg.fleet = Some(fleet);
+    cfg.requests = requests;
+    cfg.rate = rate;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn mixed_fleet_reports_are_bit_identical_and_coalescing_stays_exact() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = fleet_cfg("2xflash+1xgpu", 160, 20.0, 7);
+    // Prompts spanning the tier split so both tiers see traffic.
+    cfg.input_tokens = LenRange::new(64, 1024);
+    cfg.output_tokens = LenRange::new(4, 12);
+    cfg.followup = 0.4;
+    let run = |mode| {
+        run_traffic_events_mode(
+            &sys,
+            &model,
+            &table,
+            policy_from_name("tier-aware").unwrap(),
+            &cfg,
+            mode,
+        )
+    };
+    let a = run(DecodeMode::Coalesced);
+    let b = run(DecodeMode::Coalesced);
+    assert_eq!(a, b, "same seed must reproduce the mixed-fleet report byte for byte");
+    let oracle = run(DecodeMode::PerToken);
+    assert_eq!(a, oracle, "per-token oracle must match coalesced decode on every tier");
+    assert_eq!(a.render(), oracle.render());
+
+    // The fleet rollup is present, correctly shaped, and rendered.
+    let fleet = a.fleet.as_ref().expect("fleet run carries a summary");
+    assert_eq!(fleet.name, "2xflash+1xgpu");
+    assert_eq!(fleet.tiers, vec![Tier::Flash, Tier::Flash, Tier::Gpu]);
+    let r = a.render();
+    assert!(r.contains("fleet: 2xflash+1xgpu"), "{r}");
+    assert!(r.contains("/Mtok"), "{r}");
+
+    // KV affinity: a session never changes device (hence never tier)
+    // across its turns.
+    let mut seen = std::collections::HashMap::new();
+    let mut followups = 0;
+    for o in a.outcomes.iter().filter(|o| !o.rejected) {
+        if let Some(prev) = seen.get(&o.session) {
+            followups += 1;
+            assert_eq!(o.device, *prev, "follow-up of session {} switched devices", o.session);
+        }
+        seen.insert(o.session, o.device);
+    }
+    assert!(followups > 0, "trace produced no follow-up turns");
+}
+
+#[test]
+fn tier_aware_splits_the_adversarial_mix_by_class() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = fleet_cfg("2xflash+1xgpu", 240, 6.0, 11);
+    // The adversarial blend: interactive chat (128-256-token prompts,
+    // 150 ms TTFT) behind 1K+-token summarization prefills.
+    let mix = WorkloadMix::preset("summarize-long").expect("built-in preset");
+    let classes = mix.classes();
+    assert_eq!(classes[0].name, "chat");
+    assert_eq!(classes[1].name, "summarize-long");
+    // Scenario preconditions that make the routing fully deterministic:
+    // chat prompts sit below the prompt split AND their flash prefill
+    // meets the chat TTFT target (so chat always prefers flash), while
+    // every summarization prompt is at or past the split (prefers GPU).
+    assert!(classes[0].input_tokens.hi < GPU_PROMPT_SPLIT);
+    assert!(classes[1].input_tokens.lo >= GPU_PROMPT_SPLIT);
+    let flash = DeviceModel::flash(&sys, &model, &table);
+    assert!(
+        flash.est_prefill(classes[0].input_tokens.hi) <= classes[0].slo.ttft,
+        "chat flash prefill must fit its TTFT budget for this scenario"
+    );
+    cfg.workload = Some(mix);
+
+    let rep = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("tier-aware").unwrap(),
+        &cfg,
+    );
+    let tiers = cfg.fleet.as_ref().unwrap().tiers();
+    let mut per_tier = [0usize; 2];
+    for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+        let tier = tiers[o.device.expect("accepted outcome has a device")];
+        // Fresh chat prefers flash and follow-ups pin to the session's
+        // device, so the partition is exact: chat on flash, long
+        // summarization prefills on the GPU node.
+        let want = if o.class == 0 { Tier::Flash } else { Tier::Gpu };
+        assert_eq!(tier, want, "class {} outcome ran on the wrong tier", o.class);
+        per_tier[(tier == Tier::Gpu) as usize] += 1;
+    }
+    assert!(per_tier[0] > 0, "no chat turns reached the flash tier");
+    assert!(per_tier[1] > 0, "no summarization turns reached the GPU tier");
+    assert!(rep.device_jobs[2] > 0, "GPU device sat idle: {:?}", rep.device_jobs);
+}
+
+#[test]
+fn gpu_only_fleet_agrees_across_backends_pointwise() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = fleet_cfg("2xgpu", 80, 30.0, 13);
+    cfg.input_tokens = LenRange::new(64, 128);
+    cfg.output_tokens = LenRange::new(8, 16);
+    // Follow-ups disabled: the two backends' idle-session timelines
+    // differ slightly, which is the one statistical (not pointwise)
+    // part of their contract.
+    cfg.followup = 0.0;
+    let event = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+    );
+    let direct = run_traffic_with_table(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+    );
+    // GPU pricing defines the event and direct flavors identically (KV
+    // is born in VRAM — no host upload to price), so the two backends
+    // agree to the bit, outcome for outcome.
+    assert_eq!(event.outcomes, direct.outcomes);
+    assert_eq!(event.makespan, direct.makespan);
+    assert_eq!(event.device_jobs, direct.device_jobs);
+    assert_eq!(event.device_utilization, direct.device_utilization);
+    let (ef, df) = (event.fleet.as_ref().unwrap(), direct.fleet.as_ref().unwrap());
+    assert_eq!(ef.name, df.name);
+    assert_eq!(ef.tiers, df.tiers);
+    assert_eq!(ef.cost_per_hour, df.cost_per_hour);
+    // Totals accumulate in each backend's record order; the per-outcome
+    // terms are identical, so the sums agree up to float reassociation.
+    assert!((ef.energy_j - df.energy_j).abs() <= 1e-9 * ef.energy_j.abs());
+}
+
+#[test]
+fn gpu_tier_reproduces_the_roofline_end_to_end() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = fleet_cfg("1xgpu", 1, 10.0, 3);
+    cfg.input_tokens = LenRange::fixed(256);
+    cfg.output_tokens = LenRange::fixed(4);
+    cfg.followup = 0.0;
+    let rep = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("least-loaded").unwrap(),
+        &cfg,
+    );
+    assert_eq!(rep.outcomes.len(), 1);
+    let o = &rep.outcomes[0];
+    assert!(!o.rejected);
+
+    // TTFT on an idle GPU device is exactly roofline prefill + the first
+    // decode step at the prompt's context length.
+    let g = default_gpu_system();
+    let prefill = SimTime::from_secs(g.prefill(&model, 256));
+    let first_step = SimTime::from_secs(g.tpot(&model, 1.0, 256).unwrap());
+    assert_eq!(o.ttft().unwrap(), prefill + first_step);
+    // The decode tail is the step-sum over the growing context.
+    let mut tail = SimTime::ZERO;
+    for ctx in 257..260 {
+        tail += SimTime::from_secs(g.tpot(&model, 1.0, ctx).unwrap());
+    }
+    assert_eq!(o.completed - o.first_token.unwrap(), tail);
+
+    // Fleet pricing: one A100 node at the cloud per-GPU rate.
+    let fleet = rep.fleet.as_ref().unwrap();
+    assert_eq!(fleet.cost_per_hour, g.n_gpus as f64 * 2.0);
+    assert!(rep.render().contains("fleet: 1xgpu"));
+}
+
+#[test]
+fn streamed_fleet_point_matches_the_materialized_report() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = fleet_cfg("2xflash+1xgpu", 120, 18.0, 23);
+    cfg.input_tokens = LenRange::new(64, 1024);
+    cfg.output_tokens = LenRange::new(4, 12);
+    let streamed = run_traffic_point(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("tier-aware").unwrap(),
+        &cfg,
+    );
+    let report = run_traffic_events(
+        &sys,
+        &model,
+        &table,
+        policy_from_name("tier-aware").unwrap(),
+        &cfg,
+    );
+    assert_eq!(streamed, SweepPoint::of(&report), "streamed fleet pricing must be exact");
+    assert!(streamed.cost_per_mtok.is_some(), "fleet point carries $/Mtok");
+    assert!(streamed.energy_per_mtok.is_some(), "fleet point carries J/Mtok");
+}

@@ -74,6 +74,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         followup: 0.5,
         seed,
         workload: None,
+        fleet: None,
     }
 }
 
@@ -107,6 +108,7 @@ fn serve_sim_completes_100k_requests() {
         followup: 0.4,
         seed: 7,
         workload: None,
+        fleet: None,
     };
     let rep = run_traffic_with_table(
         &sys,

@@ -50,6 +50,7 @@ fn single_class_cfg(requests: usize, rate: f64, seed: u64) -> TrafficConfig {
         followup: 0.4,
         seed,
         workload: None,
+        fleet: None,
     }
 }
 

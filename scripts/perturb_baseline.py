@@ -10,7 +10,14 @@ The default target is the first `/accepted` metric (higher-is-better);
 doubling its baseline makes the identical current run look ~50% worse,
 far outside the default 2% tolerance and robust to the metric's scale.
 
+Matching is by *suffix*, so it is agnostic to the key prefix shape —
+legacy `campaign/chat/slo-aware/event/r8/accepted` and fleet-segmented
+`campaign/4xflash+1xgpu/chat/tier-aware/event/r8/accepted` both match
+`/accepted`. `--self-test` proves that property against a fixture
+document containing both shapes (no files touched).
+
 Usage: perturb_baseline.py IN OUT [--suffix /accepted] [--scale 2.0]
+       perturb_baseline.py --self-test
 """
 
 import argparse
@@ -18,13 +25,87 @@ import json
 import sys
 
 
+def perturb(doc: dict, suffix: str, scale: float):
+    """Scale the first non-zero metric whose name ends in `suffix`.
+
+    Returns the (name, old, new) triple, or None if nothing matched.
+    """
+    for m in doc.get("metrics", []):
+        name, value = m.get("name", ""), m.get("value")
+        if name.endswith(suffix) and isinstance(value, (int, float)) and value != 0:
+            m["value"] = value * scale
+            return name, value, m["value"]
+    return None
+
+
+def self_test() -> int:
+    """Exercise suffix matching on legacy and tier-segmented key shapes."""
+    def fixture() -> dict:
+        return {
+            "schema": "flashpim-bench-v1",
+            "metrics": [
+                {"name": "campaign_scenarios", "value": 2.0, "unit": "scenarios"},
+                # Legacy flash-only shape (no fleet segment).
+                {"name": "campaign/chat/slo-aware/event/r8/accepted", "value": 1900.0, "unit": "requests"},
+                {"name": "campaign/chat/slo-aware/event/r8/slo/chat", "value": 0.99, "unit": "fraction"},
+                # Fleet-segmented shape, including the priced metrics.
+                {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/accepted", "value": 1950.0, "unit": "requests"},
+                {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd", "value": 1.75, "unit": "usd/Mtok"},
+                {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j", "value": 420.5, "unit": "J/Mtok"},
+            ],
+        }
+
+    failures = []
+
+    def check(cond, what):
+        if not cond:
+            failures.append(what)
+
+    # /accepted matches the first metric in document order — the legacy
+    # key — regardless of the fleet segment the later keys carry.
+    hit = perturb(fixture(), "/accepted", 2.0)
+    check(hit is not None and hit[0] == "campaign/chat/slo-aware/event/r8/accepted",
+          f"/accepted resolved to {hit}")
+    check(hit is not None and hit[2] == 3800.0, f"/accepted scaled to {hit}")
+
+    # Tier-segmented priced metrics are reachable by their own suffixes.
+    for suffix, want in [
+        ("/cost_per_mtok_usd", "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd"),
+        ("/energy_per_mtok_j", "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j"),
+        ("/slo/chat", "campaign/chat/slo-aware/event/r8/slo/chat"),
+    ]:
+        hit = perturb(fixture(), suffix, 2.0)
+        check(hit is not None and hit[0] == want, f"{suffix} resolved to {hit}")
+
+    # A full fleet-keyed path also works as a (maximally specific) suffix.
+    hit = perturb(fixture(), "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/accepted", 0.5)
+    check(hit is not None and hit[2] == 975.0, f"fleet-keyed suffix gave {hit}")
+
+    # And a suffix present in no key shape still reports failure.
+    check(perturb(fixture(), "/no_such_metric", 2.0) is None, "bogus suffix matched")
+
+    if failures:
+        for f in failures:
+            print(f"self-test FAIL: {f}", file=sys.stderr)
+        return 1
+    print("self-test OK: 6 suffix-matching cases over legacy and fleet-segmented keys")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("infile")
-    ap.add_argument("outfile")
+    ap.add_argument("infile", nargs="?")
+    ap.add_argument("outfile", nargs="?")
     ap.add_argument("--suffix", default="/accepted", help="metric-name suffix to perturb")
     ap.add_argument("--scale", type=float, default=2.0, help="factor applied to the baseline value")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify suffix matching against legacy and fleet-segmented key fixtures")
     args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.infile or not args.outfile:
+        ap.error("IN and OUT are required unless --self-test is given")
 
     with open(args.infile) as f:
         doc = json.load(f)
@@ -32,15 +113,11 @@ def main() -> int:
         print(f"error: {args.infile} is not a flashpim-bench-v1 document", file=sys.stderr)
         return 2
 
-    for m in doc.get("metrics", []):
-        name, value = m.get("name", ""), m.get("value")
-        if name.endswith(args.suffix) and isinstance(value, (int, float)) and value != 0:
-            m["value"] = value * args.scale
-            print(f"perturbed {name}: {value} -> {m['value']}")
-            break
-    else:
+    hit = perturb(doc, args.suffix, args.scale)
+    if hit is None:
         print(f"error: no non-zero metric ending in {args.suffix!r}", file=sys.stderr)
         return 2
+    print(f"perturbed {hit[0]}: {hit[1]} -> {hit[2]}")
 
     with open(args.outfile, "w") as f:
         json.dump(doc, f, indent=2)
