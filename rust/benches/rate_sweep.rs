@@ -39,6 +39,8 @@ fn main() {
         seed: 42,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     quick("event run: 2k requests, 4 devices", || {
         run_traffic_events(

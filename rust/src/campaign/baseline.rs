@@ -44,6 +44,9 @@ pub fn direction_of(name: &str) -> Direction {
         || name.ends_with("/lat_p99_s")
         || name.ends_with("/cost_per_mtok_usd")
         || name.ends_with("/energy_per_mtok_j")
+        || name.ends_with("/wear_max_erases")
+        || name.ends_with("/wear_total_erases")
+        || name.ends_with("/wear_retirements")
     {
         return Direction::LowerBetter;
     }
@@ -285,6 +288,9 @@ mod tests {
             direction_of("campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j"),
             down
         );
+        assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_max_erases"), down);
+        assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_total_erases"), down);
+        assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_retirements"), down);
         assert_eq!(direction_of("campaign_wall_s"), Direction::Info);
         assert_eq!(direction_of("sweep_frontier_wall_s"), Direction::Info);
         assert_eq!(direction_of("campaign_scenarios"), Direction::Info);

@@ -48,7 +48,9 @@ pub fn scenario_key(s: &Scenario) -> String {
 /// Append one scenario's deterministic metrics to the emitter, under
 /// [`scenario_key`]. Per-class SLO attainment lands as
 /// `<key>/slo/<class>`; fleet scenarios add `cost_per_mtok_usd` and
-/// `energy_per_mtok_j`.
+/// `energy_per_mtok_j`; wear-enabled scenarios add `wear_max_erases`,
+/// `wear_total_erases`, and `wear_retirements` (absent — not zero — when
+/// wear accounting is off, so legacy documents stay byte-identical).
 pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     let key = scenario_key(&o.scenario);
     let p = &o.point;
@@ -64,6 +66,15 @@ pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     }
     if let Some(e) = p.energy_per_mtok {
         json.metric(&format!("{key}/energy_per_mtok_j"), e, "J/Mtok");
+    }
+    if let Some(e) = p.wear_max_erases {
+        json.metric(&format!("{key}/wear_max_erases"), e as f64, "erases");
+    }
+    if let Some(e) = p.wear_total_erases {
+        json.metric(&format!("{key}/wear_total_erases"), e as f64, "erases");
+    }
+    if let Some(r) = p.wear_retirements {
+        json.metric(&format!("{key}/wear_retirements"), r as f64, "devices");
     }
     for c in &p.class_attainment {
         json.metric(&format!("{key}/slo/{}", c.class), c.attainment, "fraction");
@@ -93,6 +104,7 @@ pub fn campaign_metrics(outcomes: &[CampaignOutcome], wall_s: Option<f64>) -> Js
 /// campaigns render byte-identically to pre-fleet builds.
 pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
     let fleeted = outcomes.iter().any(|o| o.scenario.fleet.is_some());
+    let weared = outcomes.iter().any(|o| o.point.wear_max_erases.is_some());
     let mut headers: Vec<&str> = Vec::new();
     if fleeted {
         headers.push("fleet");
@@ -112,6 +124,10 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
     ]);
     if fleeted {
         headers.push("$/Mtok");
+    }
+    if weared {
+        headers.push("max erases");
+        headers.push("retired");
     }
     headers.push("min SLO");
     let mut t = Table::new(&headers);
@@ -139,6 +155,16 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
         if fleeted {
             cells.push(match p.cost_per_mtok {
                 Some(c) => format!("{c:.2}"),
+                None => "-".to_string(),
+            });
+        }
+        if weared {
+            cells.push(match p.wear_max_erases {
+                Some(e) => e.to_string(),
+                None => "-".to_string(),
+            });
+            cells.push(match p.wear_retirements {
+                Some(r) => r.to_string(),
                 None => "-".to_string(),
             });
         }
@@ -185,6 +211,9 @@ mod tests {
                 latency_p99: 0.3,
                 cost_per_mtok: None,
                 energy_per_mtok: None,
+                wear_max_erases: None,
+                wear_total_erases: None,
+                wear_retirements: None,
                 class_attainment: vec![ClassAttainment {
                     class: "chat".into(),
                     attainment: 0.995,
@@ -238,6 +267,31 @@ mod tests {
         // Legacy outcomes render without the fleet columns.
         let legacy = render_campaign(&[outcome("chat", "slo-aware", Backend::Event, 8.0)]);
         assert!(!legacy.contains("$/Mtok") && !legacy.contains("fleet"), "{legacy}");
+    }
+
+    #[test]
+    fn wear_outcomes_emit_gated_metrics_and_columns() {
+        let mut o = outcome("chat", "wear-aware", Backend::Event, 8.0);
+        o.point.wear_max_erases = Some(37);
+        o.point.wear_total_erases = Some(120);
+        o.point.wear_retirements = Some(1);
+        let doc = campaign_metrics(&[o.clone()], None).render();
+        let metrics = parse_metrics(&doc).unwrap();
+        let max = metrics
+            .iter()
+            .find(|m| m.name == "campaign/chat/wear-aware/event/r8/wear_max_erases")
+            .expect("wear metric emitted");
+        assert_eq!(max.value, 37.0);
+        assert_eq!(max.unit, "erases");
+        assert!(metrics.iter().any(|m| m.name.ends_with("/wear_total_erases")));
+        assert!(metrics.iter().any(|m| m.name.ends_with("/wear_retirements")));
+        let s = render_campaign(&[o]);
+        assert!(s.contains("max erases") && s.contains("retired") && s.contains("37"), "{s}");
+        // Wear-blind outcomes emit no wear keys and no wear columns.
+        let legacy = outcome("chat", "slo-aware", Backend::Event, 8.0);
+        let doc = campaign_metrics(&[legacy.clone()], None).render();
+        assert!(!doc.contains("wear_"), "{doc}");
+        assert!(!render_campaign(&[legacy]).contains("max erases"));
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::filter::{Expr, ScenarioView};
 use crate::config::SystemConfig;
 use crate::coordinator::device::{FleetSpec, Tier};
 use crate::coordinator::event_sim::run_traffic_point;
-use crate::coordinator::loadgen::{run_traffic_with_table, TrafficConfig};
+use crate::coordinator::loadgen::{run_traffic_with_table, TrafficConfig, WearConfig};
 use crate::coordinator::router::{policy_from_name, POLICY_NAMES, TIERED_POLICY_NAMES};
 use crate::coordinator::sweep::{fan_out_indexed, SweepPoint, validate_rates};
 use crate::coordinator::workload::WorkloadMix;
@@ -125,6 +125,12 @@ pub struct CampaignSpec {
     pub requests: usize,
     /// RNG seed every scenario derives its stream from.
     pub seed: u64,
+    /// Per-device P/E erase budget. `None` (the default matrix) leaves
+    /// wear accounting off and every scenario byte-identical to
+    /// wear-unaware builds; `Some(budget)` charges every scenario's KV
+    /// writes against [`WearConfig::new`]-shaped meters and adds
+    /// `wear_*` metric keys to the rendered document.
+    pub wear: Option<u64>,
 }
 
 /// Default rate grid of the campaign matrix (requests/second).
@@ -145,6 +151,7 @@ impl Default for CampaignSpec {
             devices: 4,
             requests: 2000,
             seed: 7,
+            wear: None,
         }
     }
 }
@@ -259,6 +266,7 @@ impl CampaignSpec {
         cfg.seed = self.seed;
         cfg.workload = Some(s.mix.clone());
         cfg.fleet = s.fleet.clone();
+        cfg.wear = self.wear.map(WearConfig::new);
         cfg
     }
 }
@@ -316,6 +324,7 @@ mod tests {
             devices: 2,
             requests: 20,
             seed: 3,
+            wear: None,
         }
     }
 
@@ -405,6 +414,20 @@ mod tests {
     }
 
     #[test]
+    fn wear_knob_threads_into_every_scenario() {
+        let spec = tiny_spec();
+        let scenarios = spec.expand().unwrap();
+        assert!(spec.traffic(&scenarios[0]).wear.is_none(), "default campaigns are wear-blind");
+        let mut spec = tiny_spec();
+        spec.wear = Some(500);
+        let cfg = spec.traffic(&scenarios[0]);
+        assert_eq!(cfg.wear, Some(WearConfig::new(500)));
+        // wear-aware is a valid campaign policy (opt-in by name).
+        spec.policies = vec!["wear-aware".into()];
+        assert!(spec.expand().is_ok());
+    }
+
+    #[test]
     fn expansion_rejects_bad_axes() {
         let mut spec = tiny_spec();
         spec.policies = vec!["fifo".into()];
@@ -441,6 +464,7 @@ mod tests {
             devices: 2,
             requests: 25,
             seed: 11,
+            wear: None,
         };
         let a = run_campaign(&sys, &model, &table, &spec, None).unwrap();
         let b = run_campaign(&sys, &model, &table, &spec, None).unwrap();

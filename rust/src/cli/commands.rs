@@ -8,9 +8,9 @@ use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::router::{POLICY_NAMES, TIERED_POLICY_NAMES};
 use crate::coordinator::{
-    DecodeMode, FleetSpec, LenRange, policy_from_name, render_slo_frontier, render_sweep,
-    run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates, sweep_rates_threaded,
-    TrafficConfig, Workload, WorkloadMix,
+    ArrivalProcess, DecodeMode, FleetSpec, LenRange, policy_from_name, render_slo_frontier,
+    render_sweep, run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates,
+    sweep_rates_threaded, TrafficConfig, WearConfig, Workload, WorkloadMix,
 };
 use crate::exp;
 use crate::gpu::rtx4090x4_vllm;
@@ -62,9 +62,25 @@ tools:
                        the report gains per-tier utilization and fleet
                        cost/energy per Mtok, and the tier-aware policy
                        (long prefills -> GPU, short chat -> flash) becomes
-                       available. Also --policy
-                       round-robin|least-loaded|slo-aware|tier-aware,
-                       --queue-cap, --input-min/max, --output-min/max,
+                       available. --wear PE enables endurance
+                       accounting: every flash KV write is charged
+                       against a per-device P/E erase budget
+                       (--wear-blocks, default 64, sets erase-block
+                       granularity; --spares N adds hot spares that
+                       join the roster when a device exhausts its
+                       budget, drains, and retires mid-trace). The
+                       report gains a wear section (programs, erases,
+                       retirements, projected lifetime) and the
+                       wear-aware policy routes fresh sessions to the
+                       least-worn feasible device. --arrival
+                       DUR_S:MULT,... layers an open-loop diurnal /
+                       bursty phase schedule over the Poisson rate
+                       (e.g. 28800:0.4,43200:1.6,14400:0.7; a 1.0
+                       multiplier reproduces the legacy stream
+                       byte-for-byte). Also --policy
+                       round-robin|least-loaded|slo-aware|tier-aware|
+                       wear-aware, --queue-cap, --input-min/max,
+                       --output-min/max,
                        --followup, --model, --seed. --workload
                        chat|summarize-long|agentic-burst|batch-offline|
                        FILE.toml replaces the single token-range stream
@@ -95,6 +111,12 @@ tools:
                        8xflash,4xflash+1xgpu) adds an outermost
                        fleet-composition axis; fleet scenarios key as
                        campaign/FLEET/... and emit cost/energy per Mtok.
+                       --wear PE charges every scenario's flash KV
+                       writes against a per-device P/E erase budget and
+                       adds wear_max_erases / wear_total_erases /
+                       wear_retirements metric keys (absent, not zero,
+                       in wear-blind runs, keeping legacy documents
+                       byte-identical).
                        Also --list (print the matrix, run nothing),
                        --out PATH (write the fresh metrics JSON),
                        --tol FRACTION (relative tolerance, default 0.02),
@@ -299,6 +321,27 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         bail!("--queue-cap must be at least 1");
     }
     cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
+    if let Some(pe) = args.flag("wear") {
+        let pe: u64 = pe
+            .parse()
+            .map_err(|_| anyhow!("--wear expects a per-device P/E erase budget, got {pe:?}"))?;
+        let mut wear = WearConfig::new(pe);
+        wear.blocks_per_device = args.usize_flag("wear-blocks", wear.blocks_per_device)?;
+        wear.spares = args.usize_flag("spares", wear.spares)?;
+        if wear.blocks_per_device == 0 {
+            bail!("--wear-blocks must be at least 1");
+        }
+        cfg.wear = Some(wear);
+    } else {
+        for flag in ["wear-blocks", "spares"] {
+            if args.flag(flag).is_some() {
+                bail!("--{flag} requires --wear (the per-device P/E erase budget)");
+            }
+        }
+    }
+    if let Some(spec) = args.flag("arrival") {
+        cfg.arrival = Some(ArrivalProcess::parse(spec)?);
+    }
 
     // Validate sweep/policy flags before paying for the table build.
     let threaded = args.bool_flag("threaded");
@@ -315,10 +358,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         None // sweep mode runs every policy; --policy is ignored
     } else {
         let name = args.flag_or("policy", "least-loaded");
-        Some(
-            policy_from_name(&name)
-                .context("unknown policy; use round-robin|least-loaded|slo-aware|tier-aware")?,
-        )
+        Some(policy_from_name(&name).context(
+            "unknown policy; use round-robin|least-loaded|slo-aware|tier-aware|wear-aware",
+        )?)
     };
     // Flash-only sweeps keep the legacy policy list (byte-identical
     // output); a typed fleet adds the tier-aware policy to the sweep.
@@ -428,6 +470,12 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .unwrap_or(spec.requests);
     spec.requests = args.usize_flag("requests", env_requests)?;
     spec.seed = args.usize_flag("seed", spec.seed as usize)? as u64;
+    if let Some(pe) = args.flag("wear") {
+        let pe: u64 = pe
+            .parse()
+            .map_err(|_| anyhow!("--wear expects a per-device P/E erase budget, got {pe:?}"))?;
+        spec.wear = Some(pe);
+    }
     let tol = args.f64_flag("tol", 0.02)?;
     if !tol.is_finite() || tol < 0.0 {
         bail!("--tol is a relative fraction; need a finite value >= 0, got {tol}");
@@ -727,6 +775,47 @@ mod tests {
     }
 
     #[test]
+    fn serve_sim_wear_and_arrival_run_and_reject_bad_flags() {
+        run(vec![
+            "serve-sim".into(),
+            "--wear".into(),
+            "50".into(),
+            "--wear-blocks".into(),
+            "8".into(),
+            "--spares".into(),
+            "1".into(),
+            "--policy".into(),
+            "wear-aware".into(),
+            "--arrival".into(),
+            "60:0.5,60:1.5".into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "12".into(),
+            "--output-min".into(),
+            "4".into(),
+            "--output-max".into(),
+            "8".into(),
+        ])
+        .unwrap();
+        // Wear shape flags without the budget are silent no-ops otherwise.
+        assert!(run(vec!["serve-sim".into(), "--spares".into(), "1".into()]).is_err());
+        assert!(run(vec!["serve-sim".into(), "--wear-blocks".into(), "8".into()]).is_err());
+        assert!(run(vec!["serve-sim".into(), "--wear".into(), "lots".into()]).is_err());
+        assert!(run(vec![
+            "serve-sim".into(),
+            "--wear".into(),
+            "50".into(),
+            "--wear-blocks".into(),
+            "0".into(),
+        ])
+        .is_err());
+        assert!(run(vec!["serve-sim".into(), "--arrival".into(), "60:-1".into()]).is_err());
+    }
+
+    #[test]
     fn serve_sim_fleet_runs_and_rejects_conflicts() {
         run(vec![
             "serve-sim".into(),
@@ -776,6 +865,23 @@ mod tests {
             "9xtpu".into(),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn campaign_wear_flag_parses_and_rejects_garbage() {
+        run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--wear".into(),
+            "1000".into(),
+            "--policies".into(),
+            "wear-aware".into(),
+            "--filter".into(),
+            "backend(event)".into(),
+        ])
+        .unwrap();
+        assert!(run(vec!["campaign".into(), "--list".into(), "--wear".into(), "many".into()])
+            .is_err());
     }
 
     #[test]

@@ -62,8 +62,8 @@
 //! ([`StreamingSink`]) into one [`SweepPoint`] per (policy, rate) pair —
 //! no per-point outcome vectors.
 
-use super::device::{tier_estimates, DeviceModel, FleetSummary};
-use super::loadgen::{SimRequest, TrafficConfig};
+use super::device::{tier_estimates, DeviceModel, FleetSummary, Tier};
+use super::loadgen::{arrival_gap, rehome_sessions, FleetWear, SimRequest, TrafficConfig};
 use super::metrics::PoolReport;
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
 use super::sink::{CollectSink, OutcomeSink, StreamingSink};
@@ -178,6 +178,10 @@ pub struct ServingModel<'a, S: OutcomeSink = CollectSink> {
     /// Per-device pricing model — flash for every slot unless
     /// [`TrafficConfig::fleet`] says otherwise.
     models: Vec<DeviceModel<'a>>,
+    /// Per-slot wear meters + roster state when wear accounting is
+    /// enabled ([`TrafficConfig::wear`]); `None` leaves every serving
+    /// path byte-identical to the wear-free simulator.
+    wear: Option<FleetWear>,
     /// Total decode energy (J) accumulated at retirement, in record
     /// order — the single source both report paths read.
     energy_j: f64,
@@ -231,6 +235,7 @@ impl<'a> ServingModel<'a, CollectSink> {
             .collect();
         let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
         let fleet = self.fleet_summary();
+        let wear = self.wear.as_ref().map(|w| w.summary());
         PoolReport {
             backend: "event",
             policy: self.router.policy_name().to_string(),
@@ -242,6 +247,7 @@ impl<'a> ServingModel<'a, CollectSink> {
             device_utilization,
             device_jobs,
             fleet,
+            wear,
         }
     }
 }
@@ -252,7 +258,8 @@ impl ServingModel<'_, StreamingSink> {
     pub fn into_point(self) -> SweepPoint {
         let policy = self.router.policy_name().to_string();
         let fleet = self.fleet_summary();
-        self.sink.finish(policy, self.cfg.rate, fleet)
+        let wear = self.wear.as_ref().map(|w| w.summary());
+        self.sink.finish(policy, self.cfg.rate, fleet, wear)
     }
 }
 
@@ -286,11 +293,18 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             }
             None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
         };
+        let mut models = models;
+        // Wear spares are flash slots (flash is the tier that wears out),
+        // provisioned up front and activated as devices retire.
+        for _ in cfg.devices..cfg.n_slots() {
+            models.push(DeviceModel::flash(sys, model, table));
+        }
         let router = match &cfg.fleet {
             Some(_) => DeviceRouter::with_fleet(&models, policy),
-            None => DeviceRouter::new(cfg.devices, sys, model, policy),
+            None => DeviceRouter::new(cfg.n_slots(), sys, model, policy),
         };
-        let devices = (0..cfg.devices)
+        let wear = cfg.wear.as_ref().map(|w| FleetWear::new(w, &models, cfg.devices));
+        let devices = (0..cfg.n_slots())
             .map(|_| Device {
                 queue: VecDeque::new(),
                 active: None,
@@ -307,6 +321,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             mode,
             devices,
             models,
+            wear,
             energy_j: 0.0,
             clock: 0.0,
             arrivals: 0,
@@ -322,7 +337,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         self.cfg
             .fleet
             .as_ref()
-            .map(|spec| FleetSummary::of(spec, &self.models, self.energy_j))
+            .map(|spec| FleetSummary::of(spec, &self.models[..self.cfg.devices], self.energy_j))
     }
 
     fn on_arrive(&mut self, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
@@ -332,7 +347,8 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         // Close the loop *after* this arrival's draws — the exact order
         // the direct backend consumes the stream in.
         if self.arrivals < self.cfg.requests {
-            self.clock += -(1.0 - self.rng.f64()).ln() / self.cfg.rate; // exponential gap
+            let u = self.rng.f64();
+            self.clock += arrival_gap(&self.cfg, self.clock, u); // exponential gap
             queue.schedule(SimTime::from_secs(self.clock), ServingEvent::Arrive);
         }
     }
@@ -352,6 +368,10 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             .devices
             .iter()
             .enumerate()
+            .filter(|(i, _)| match &self.wear {
+                Some(w) => w.eligible(*i),
+                None => true,
+            })
             .map(|(i, d)| DeviceStatus {
                 device: i,
                 queue_depth: d.depth(),
@@ -359,8 +379,34 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
                 kv_used: self.router.kv(i).used(),
                 kv_capacity: self.router.kv(i).capacity,
                 tier: self.models[i].tier(),
+                wear_used: self.wear.as_ref().map_or(0, |w| w.devices[i].erases()),
+                wear_budget: self.wear.as_ref().map_or(0, |w| w.erase_capacity()),
             })
             .collect();
+        // Graceful end of fleet life: every device retired and no spare
+        // left. Shed the arrival instead of panicking in the scheduler.
+        if status.is_empty() {
+            if reuse {
+                self.sampler.release(session, class);
+            }
+            self.router.forget(session);
+            self.sink.record(SimRequest {
+                id,
+                session,
+                class,
+                device: None,
+                arrival: now,
+                first_token: None,
+                completed: now,
+                input_tokens: l_in,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                followup: reuse,
+                energy_j: 0.0,
+            });
+            return;
+        }
         // Fresh-session prefill estimates per tier (the policy never sees
         // pinned follow-ups): for flash, PCIe KV upload + SLC prompt
         // write + first step; for GPU, roofline prefill + first step.
@@ -373,8 +419,15 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         };
         let dev = self.router.assign(session, &status, &job);
 
-        // Bounded admission: the picked device's queue may be full.
-        if status[dev].queue_depth >= self.cfg.queue_capacity {
+        // Bounded admission: the picked device's queue may be full. The
+        // status vector excludes retired slots, so look the device up by
+        // id rather than by index.
+        let depth = status.iter().find(|s| s.device == dev).map(|s| s.queue_depth);
+        let queue_full = match depth {
+            Some(d) => d >= self.cfg.queue_capacity,
+            None => true, // assigned slot left the roster: shed the arrival
+        };
+        if queue_full {
             self.reject(id, now, session, class, dev, l_in, reuse);
             return;
         }
@@ -385,7 +438,13 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         let resident = self.router.kv(dev).context_len(session);
         let needed = (l_in + l_out) as u64 * per_token;
         if self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
+            let before = self.router.kv(dev).active_sequences();
             self.evict_idle(dev, session, needed);
+            if let Some(w) = self.wear.as_mut() {
+                for _ in self.router.kv(dev).active_sequences()..before {
+                    w.devices[dev].note_eviction();
+                }
+            }
         }
         if self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
             self.reject(id, now, session, class, dev, l_in, reuse);
@@ -408,6 +467,20 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         self.router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
         // Running again: no longer an idle-eviction candidate.
         self.completed_at.remove(&session);
+        // Wear: the turn wrote `needed` KV bytes ((l_in + l_out) tokens)
+        // to the device. GPU slots hold KV in DRAM and never wear. A
+        // newly exhausted device retires inline — its queue (including
+        // this job) drains normally, its sessions re-home, and the next
+        // spare joins the roster — so no extra engine events are spent
+        // and the coalesced event-count invariant holds.
+        if let Some(w) = self.wear.as_mut() {
+            if self.models[dev].tier() == Tier::Flash
+                && w.charge(dev, (l_in + l_out) as u64, needed, now)
+            {
+                rehome_sessions(&mut self.router, dev);
+                w.retire(dev, now);
+            }
+        }
 
         // Price the whole service now (stateless models, FIFO queue), so
         // `free_at` predicts this job's completion exactly — the
@@ -631,7 +704,8 @@ fn run_serving<'a, S: OutcomeSink>(
     let mut engine = Engine::with_capacity(serving, cfg.devices + 4);
     engine.max_events = event_budget(cfg, mode);
     if cfg.requests > 0 {
-        let gap = -(1.0 - engine.model.rng.f64()).ln() / cfg.rate;
+        let u = engine.model.rng.f64();
+        let gap = arrival_gap(cfg, 0.0, u);
         engine.model.clock = gap;
         engine.seed(SimTime::from_secs(gap), ServingEvent::Arrive);
     }
@@ -735,6 +809,8 @@ mod tests {
             seed,
             workload: None,
             fleet: None,
+            wear: None,
+            arrival: None,
         }
     }
 

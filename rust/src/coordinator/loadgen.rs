@@ -29,16 +29,18 @@
 //! run in seconds — the old per-arrival scans over every session ever
 //! seen capped the simulator at toy request counts.
 
-use super::device::{tier_estimates_direct, DeviceModel, FleetSpec, FleetSummary};
-use super::metrics::PoolReport;
+use super::device::{tier_estimates_direct, DeviceModel, FleetSpec, FleetSummary, Tier};
+use super::metrics::{DeviceWearStats, PoolReport, WearSummary};
 use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
 use super::workload::{ArrivalSampler, SloTarget, WorkloadClass, WorkloadMix};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
+use crate::kv::wear::DeviceWear;
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
 use crate::sim::{Resource, SimTime};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
@@ -69,6 +71,127 @@ impl LenRange {
             rng.range(self.lo, self.hi + 1)
         }
     }
+}
+
+/// Per-device write-wear budget for a wear-enabled serving run. When
+/// attached to a [`TrafficConfig`], every accepted request charges its
+/// KV writes (prompt admit + output append) against the assigned
+/// device's erase budget through a [`DeviceWear`] meter; a device whose
+/// budget exhausts mid-trace retires (drains its queue, re-homes its
+/// sessions' KV affinity) and the next provisioned spare joins the
+/// roster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WearConfig {
+    /// P/E-cycle budget per erase block before a device retires.
+    pub pe_budget: u64,
+    /// Erase blocks the per-device wear leveler rotates over.
+    pub blocks_per_device: usize,
+    /// Spare devices provisioned beyond [`TrafficConfig::devices`],
+    /// activated one at a time as worn devices retire.
+    pub spares: usize,
+}
+
+impl WearConfig {
+    /// Budget with the default block count and no spares.
+    pub fn new(pe_budget: u64) -> WearConfig {
+        WearConfig { pe_budget, blocks_per_device: 64, spares: 0 }
+    }
+}
+
+/// One phase of an open-loop diurnal arrival schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPhase {
+    /// Phase length in seconds of simulated time.
+    pub duration_s: f64,
+    /// Rate multiplier applied to [`TrafficConfig::rate`] while the
+    /// phase is in force.
+    pub rate_mul: f64,
+}
+
+/// Open-loop arrival-rate modulation layered on the Poisson sampler: the
+/// schedule cycles through its phases by simulated clock time, scaling
+/// the configured mean rate by each phase's multiplier (a Markov-
+/// modulated Poisson process with a deterministic phase chain — the
+/// diurnal shape production traffic has and a stationary lab load does
+/// not). The modulation reuses the *same single uniform draw* per
+/// arrival as the legacy sampler, so a schedule whose multipliers are
+/// all `1.0` reproduces the legacy Poisson stream bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalProcess {
+    pub phases: Vec<ArrivalPhase>,
+}
+
+impl ArrivalProcess {
+    pub fn new(phases: Vec<ArrivalPhase>) -> Result<ArrivalProcess> {
+        if phases.is_empty() {
+            bail!("arrival process needs at least one phase");
+        }
+        for p in &phases {
+            let good = |x: f64| x.is_finite() && x > 0.0;
+            if !good(p.duration_s) || !good(p.rate_mul) {
+                bail!(
+                    "arrival phase needs positive duration and multiplier (got {}s x{})",
+                    p.duration_s,
+                    p.rate_mul
+                );
+            }
+        }
+        Ok(ArrivalProcess { phases })
+    }
+
+    /// Parse a `DURATION_S:MULT(,DURATION_S:MULT)*` schedule, e.g.
+    /// `3600:0.5,3600:2.0` for alternating hour-long trough/peak phases.
+    pub fn parse(spec: &str) -> Result<ArrivalProcess> {
+        let mut phases = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let Some((dur, mul)) = part.split_once(':') else {
+                bail!("bad arrival phase {part:?} (use DURATION_S:MULT, e.g. 3600:0.5)");
+            };
+            let duration_s: f64 = dur
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad phase duration {dur:?} in {spec:?}"))?;
+            let rate_mul: f64 = mul
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad rate multiplier {mul:?} in {spec:?}"))?;
+            phases.push(ArrivalPhase { duration_s, rate_mul });
+        }
+        ArrivalProcess::new(phases)
+    }
+
+    /// Total cycle length (seconds).
+    pub fn cycle_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Rate multiplier in force at simulated time `clock_s`.
+    pub fn multiplier_at(&self, clock_s: f64) -> f64 {
+        let mut t = clock_s.rem_euclid(self.cycle_s());
+        for p in &self.phases {
+            if t < p.duration_s {
+                return p.rate_mul;
+            }
+            t -= p.duration_s;
+        }
+        self.phases[self.phases.len() - 1].rate_mul
+    }
+}
+
+/// Draw one open-loop inter-arrival gap (seconds) from the uniform
+/// sample `u`: an exponential at the rate in force at simulated time
+/// `clock`. All three arrival sites (both event-backend draws and the
+/// direct loop) share this one helper so diurnal modulation cannot
+/// drift between backends. With no arrival process — or one whose
+/// multipliers are all `1.0` — the expression reduces bit-for-bit to
+/// the legacy `-(1 - u).ln() / rate`.
+pub(super) fn arrival_gap(cfg: &TrafficConfig, clock: f64, u: f64) -> f64 {
+    let rate = match &cfg.arrival {
+        Some(a) => cfg.rate * a.multiplier_at(clock),
+        None => cfg.rate,
+    };
+    -(1.0 - u).ln() / rate
 }
 
 /// Traffic and pool configuration for one closed-loop run.
@@ -105,6 +228,13 @@ pub struct TrafficConfig {
     /// million tokens). `None` keeps the legacy all-flash pool —
     /// byte-identical behavior to pre-fleet versions.
     pub fleet: Option<FleetSpec>,
+    /// Per-device P/E budgets, retirement + hot-swap, and wear columns in
+    /// the report. `None` (the default) disables all wear accounting —
+    /// wear-disabled runs stay byte-identical to pre-wear versions.
+    pub wear: Option<WearConfig>,
+    /// Open-loop diurnal/MMPP rate modulation. `None` (the default)
+    /// keeps the stationary Poisson stream, byte-identically.
+    pub arrival: Option<ArrivalProcess>,
 }
 
 impl TrafficConfig {
@@ -125,7 +255,15 @@ impl TrafficConfig {
             seed: 42,
             workload: None,
             fleet: None,
+            wear: None,
+            arrival: None,
         }
+    }
+
+    /// Pool slots the run actually provisions: the primary devices plus
+    /// any wear spares.
+    pub fn n_slots(&self) -> usize {
+        self.devices + self.wear.as_ref().map_or(0, |w| w.spares)
     }
 
     /// Largest output-length upper bound an arrival can draw — sizes the
@@ -218,6 +356,113 @@ impl DeviceState {
     }
 }
 
+/// Which role a pool slot currently plays in a wear-enabled run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// In the roster: receives traffic and wear charges.
+    Active,
+    /// Provisioned but idle; joins the roster when a device retires.
+    Spare,
+    /// Budget exhausted: queue drained, no new traffic.
+    Retired,
+}
+
+/// Fleet-wide wear state shared by both serving backends: one
+/// [`DeviceWear`] meter per pool slot (primaries then spares), slot
+/// roles, and the retirement counter. Charging and retirement decisions
+/// live here so the two backends cannot drift.
+#[derive(Debug)]
+pub(super) struct FleetWear {
+    cfg: WearConfig,
+    pub devices: Vec<DeviceWear>,
+    state: Vec<SlotState>,
+    /// Primary roster size (slots `>= primary` were provisioned spare).
+    primary: usize,
+    pub retirements: usize,
+}
+
+impl FleetWear {
+    /// Build meters for `models` (primaries first, then spares): each
+    /// slot's erase blocks split its KV capacity evenly.
+    pub fn new(cfg: &WearConfig, models: &[DeviceModel], primary: usize) -> FleetWear {
+        let devices = models
+            .iter()
+            .map(|m| {
+                let block_bytes = m.kv_capacity() / cfg.blocks_per_device.max(1) as u64;
+                DeviceWear::new(cfg.blocks_per_device, cfg.pe_budget, block_bytes)
+            })
+            .collect::<Vec<_>>();
+        let state = (0..models.len())
+            .map(|i| if i < primary { SlotState::Active } else { SlotState::Spare })
+            .collect();
+        FleetWear { cfg: *cfg, devices, state, primary, retirements: 0 }
+    }
+
+    /// Is this slot in the roster (schedulable for fresh sessions)?
+    pub fn eligible(&self, dev: usize) -> bool {
+        self.state[dev] == SlotState::Active
+    }
+
+    /// Total erase budget of one slot (blocks × per-block P/E).
+    pub fn erase_capacity(&self) -> u64 {
+        self.cfg.blocks_per_device as u64 * self.cfg.pe_budget
+    }
+
+    /// Charge `tokens` KV token writes totalling `bytes` to `dev`;
+    /// returns `true` when the charge newly exhausted the device.
+    pub fn charge(&mut self, dev: usize, tokens: u64, bytes: u64, now: SimTime) -> bool {
+        self.devices[dev].charge(tokens, bytes, now) && self.state[dev] == SlotState::Active
+    }
+
+    /// Retire `dev` and activate the next provisioned spare, if any.
+    pub fn retire(&mut self, dev: usize, now: SimTime) -> Option<usize> {
+        self.state[dev] = SlotState::Retired;
+        self.devices[dev].retired_at = Some(now);
+        self.retirements += 1;
+        let spare = self.state.iter().position(|s| *s == SlotState::Spare)?;
+        self.state[spare] = SlotState::Active;
+        Some(spare)
+    }
+
+    /// Fold the meters into the report-facing rollup.
+    pub fn summary(&self) -> WearSummary {
+        WearSummary {
+            pe_budget: self.cfg.pe_budget,
+            blocks_per_device: self.cfg.blocks_per_device,
+            spares: self.cfg.spares,
+            retirements: self.retirements,
+            devices: self
+                .devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| DeviceWearStats {
+                    programs: d.programs,
+                    bytes_written: d.bytes_written,
+                    erases: d.erases(),
+                    evictions: d.evictions,
+                    block_bytes: d.block_bytes,
+                    retired_at_s: d.retired_at.map(|t| t.secs()),
+                    spare: i >= self.primary,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Re-home every session pinned to `dev`: release its resident KV and
+/// clear its placement, so follow-up turns re-enter the scheduler as
+/// fresh sessions on the surviving roster. Queued and in-flight requests
+/// on `dev` are untouched — the queue drains at its own pace; only
+/// *future* affinity moves.
+pub(super) fn rehome_sessions(router: &mut DeviceRouter, dev: usize) {
+    let mut sessions = router.sessions_on(dev);
+    // Deterministic order (sessions_on iterates a HashMap).
+    sessions.sort_unstable();
+    for s in sessions {
+        let _ = router.evict(s);
+    }
+}
+
 /// Run a closed-loop Poisson trace against a simulated device pool,
 /// building the per-token latency table internally. Deterministic for a
 /// given config. Prefer [`run_traffic_with_table`] when running several
@@ -263,13 +508,20 @@ pub fn run_traffic_with_table(
         }
         None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
     };
+    let mut models = models;
+    // Wear spares are flash slots (flash is the tier that wears out),
+    // provisioned up front and activated as devices retire.
+    for _ in cfg.devices..cfg.n_slots() {
+        models.push(DeviceModel::flash(sys, model, table));
+    }
     let mut router = match &cfg.fleet {
         Some(_) => DeviceRouter::with_fleet(&models, policy),
-        None => DeviceRouter::new(cfg.devices, sys, model, policy),
+        None => DeviceRouter::new(cfg.n_slots(), sys, model, policy),
     };
+    let mut wear = cfg.wear.as_ref().map(|w| FleetWear::new(w, &models, cfg.devices));
     let mut rng = Rng::new(cfg.seed);
     let mut sampler = ArrivalSampler::new(cfg);
-    let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.devices];
+    let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.n_slots()];
     // Latest-turn completion per session ever scheduled.
     let mut completion: HashMap<u64, SimTime> = HashMap::new();
     // Sessions whose latest turn is still running, keyed by completion
@@ -283,7 +535,8 @@ pub fn run_traffic_with_table(
     let mut clock = 0.0f64;
 
     for id in 0..cfg.requests as u64 {
-        clock += -(1.0 - rng.f64()).ln() / cfg.rate; // exponential gap
+        let u = rng.f64();
+        clock += arrival_gap(cfg, clock, u); // exponential gap
         let now = SimTime::from_secs(clock);
         while let Some(Reverse((done, s, c))) = busy.peek().copied() {
             if done > now {
@@ -301,6 +554,10 @@ pub fn run_traffic_with_table(
         let status: Vec<DeviceStatus> = devices
             .iter_mut()
             .enumerate()
+            .filter(|(i, _)| match &wear {
+                Some(w) => w.eligible(*i),
+                None => true,
+            })
             .map(|(i, d)| DeviceStatus {
                 device: i,
                 queue_depth: d.depth(now),
@@ -308,8 +565,34 @@ pub fn run_traffic_with_table(
                 kv_used: router.kv(i).used(),
                 kv_capacity: router.kv(i).capacity,
                 tier: models[i].tier(),
+                wear_used: wear.as_ref().map_or(0, |w| w.devices[i].erases()),
+                wear_budget: wear.as_ref().map_or(0, |w| w.erase_capacity()),
             })
             .collect();
+        // Graceful end of fleet life: every device retired and no spare
+        // left. Shed the arrival instead of panicking in the scheduler.
+        if status.is_empty() {
+            if reuse {
+                sampler.release(session, class);
+            }
+            router.forget(session);
+            outcomes.push(SimRequest {
+                id,
+                session,
+                class,
+                device: None,
+                arrival: now,
+                first_token: None,
+                completed: now,
+                input_tokens: l_in,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                followup: reuse,
+                energy_j: 0.0,
+            });
+            continue;
+        }
         // Prefill estimates per tier for a fresh session (the policy only
         // runs for those — follow-ups are pinned by KV affinity). This
         // backend's flash estimate does not price the PCIe upload, so
@@ -349,8 +632,15 @@ pub fn run_traffic_with_table(
             });
         };
 
-        // Bounded admission: the picked device's queue may be full.
-        if status[dev].queue_depth >= cfg.queue_capacity {
+        // Bounded admission: the picked device's queue may be full. The
+        // status vector excludes retired slots, so look the device up by
+        // id rather than by index.
+        let depth = status.iter().find(|s| s.device == dev).map(|s| s.queue_depth);
+        let queue_full = match depth {
+            Some(d) => d >= cfg.queue_capacity,
+            None => true, // assigned slot left the roster: shed the arrival
+        };
+        if queue_full {
             reject(&mut router, &mut sampler, &mut outcomes);
             continue;
         }
@@ -361,7 +651,13 @@ pub fn run_traffic_with_table(
         let resident = router.kv(dev).context_len(session);
         let needed = (l_in + l_out) as u64 * per_token;
         if router.kv(dev).used() + needed > router.kv(dev).capacity {
+            let before = router.kv(dev).active_sequences();
             evict_idle(&mut router, dev, &completion, now, session, needed);
+            if let Some(w) = wear.as_mut() {
+                for _ in router.kv(dev).active_sequences()..before {
+                    w.devices[dev].note_eviction();
+                }
+            }
         }
         if router.kv(dev).used() + needed > router.kv(dev).capacity {
             reject(&mut router, &mut sampler, &mut outcomes);
@@ -392,6 +688,16 @@ pub fn run_traffic_with_table(
             }
         }
         router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
+        // Wear: the turn wrote `needed` KV bytes ((l_in + l_out) tokens)
+        // to the device. GPU slots hold KV in DRAM and never wear.
+        if let Some(w) = wear.as_mut() {
+            if models[dev].tier() == Tier::Flash
+                && w.charge(dev, (l_in + l_out) as u64, needed, now)
+            {
+                rehome_sessions(&mut router, dev);
+                w.retire(dev, now);
+            }
+        }
         let start = devices[dev].res.acquire(now, service);
         let completed = start + service;
         devices[dev].inflight.push_back(completed);
@@ -421,8 +727,10 @@ pub fn run_traffic_with_table(
     let device_utilization =
         devices.iter().map(|d| d.res.utilization(makespan)).collect::<Vec<_>>();
     let device_jobs = devices.iter().map(|d| d.res.jobs() as usize).collect::<Vec<_>>();
-    let fleet =
-        cfg.fleet.as_ref().map(|spec| FleetSummary::of(spec, &models, energy_total));
+    let fleet = cfg
+        .fleet
+        .as_ref()
+        .map(|spec| FleetSummary::of(spec, &models[..cfg.devices], energy_total));
     PoolReport {
         backend: "direct",
         policy: policy_name,
@@ -434,6 +742,7 @@ pub fn run_traffic_with_table(
         device_utilization,
         device_jobs,
         fleet,
+        wear: wear.map(|w| w.summary()),
     }
 }
 
@@ -503,6 +812,8 @@ mod tests {
             seed,
             workload: None,
             fleet: None,
+            wear: None,
+            arrival: None,
         }
     }
 
@@ -513,6 +824,34 @@ mod tests {
             Box::new(RoundRobin::new())
         };
         run_traffic(&table1_system(), &OptModel::Opt6_7b.shape(), policy, cfg)
+    }
+
+    #[test]
+    fn arrival_process_parses_and_cycles() {
+        let a = ArrivalProcess::parse("10:0.5, 20:2").unwrap();
+        assert_eq!(a.phases.len(), 2);
+        assert_eq!(a.cycle_s(), 30.0);
+        assert_eq!(a.multiplier_at(0.0), 0.5);
+        assert_eq!(a.multiplier_at(9.999), 0.5);
+        assert_eq!(a.multiplier_at(10.0), 2.0);
+        assert_eq!(a.multiplier_at(31.0), 0.5, "schedule wraps around the cycle");
+        for bad in ["", "10", "x:1", "10:x", "-5:1", "10:0", "10:nan"] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn unit_multiplier_gap_is_bitwise_legacy() {
+        let mut cfg = quick_cfg(1, 1, 8.0, 1);
+        for u in [0.1, 0.5, 0.9999] {
+            let legacy = -(1.0f64 - u).ln() / cfg.rate;
+            assert_eq!(arrival_gap(&cfg, 123.0, u), legacy);
+            cfg.arrival = Some(ArrivalProcess::parse("3600:1.0").unwrap());
+            assert_eq!(arrival_gap(&cfg, 123.0, u), legacy, "x1.0 schedule is bit-identical");
+            cfg.arrival = Some(ArrivalProcess::parse("60:2.0").unwrap());
+            assert_eq!(arrival_gap(&cfg, 30.0, u), legacy / 2.0);
+            cfg.arrival = None;
+        }
     }
 
     #[test]

@@ -109,6 +109,92 @@ pub struct PoolReport {
     /// legacy flash-only runs, which keeps their rendered reports
     /// byte-identical to pre-fleet builds.
     pub fleet: Option<FleetSummary>,
+    /// Write-wear accounting, when the run was launched with a
+    /// [`WearConfig`][super::loadgen::WearConfig]. `None` for
+    /// wear-disabled runs, which keeps their rendered reports
+    /// byte-identical to pre-wear builds.
+    pub wear: Option<WearSummary>,
+}
+
+/// One pool slot's wear meters (see
+/// [`crate::kv::wear::DeviceWear`]), snapshotted into the report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceWearStats {
+    /// KV token programs charged (one per token written).
+    pub programs: u64,
+    /// Total KV bytes written.
+    pub bytes_written: u64,
+    /// Erase operations charged through the wear leveler.
+    pub erases: u64,
+    /// Idle-session KV evictions on this slot.
+    pub evictions: u64,
+    /// Bytes per erase block on this slot.
+    pub block_bytes: u64,
+    /// When the slot's P/E budget exhausted (seconds), if it did.
+    pub retired_at_s: Option<f64>,
+    /// Was the slot provisioned as a spare (index past the primary
+    /// roster)?
+    pub spare: bool,
+}
+
+/// Fleet-wide wear rollup attached to a [`PoolReport`] of a
+/// wear-enabled run: per-slot meters (primaries then spares), the
+/// budget they were charged against, and the retirement count. Both
+/// serving backends charge identical meters from identical admission
+/// bookkeeping, so two backends' summaries for the same trace agree
+/// exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WearSummary {
+    /// P/E-cycle budget per erase block.
+    pub pe_budget: u64,
+    /// Erase blocks per device.
+    pub blocks_per_device: usize,
+    /// Spare slots provisioned.
+    pub spares: usize,
+    /// Devices that exhausted their budget mid-trace.
+    pub retirements: usize,
+    /// Per-slot meters, device-index order (primaries then spares).
+    pub devices: Vec<DeviceWearStats>,
+}
+
+impl WearSummary {
+    /// Total erases across the fleet.
+    pub fn total_erases(&self) -> u64 {
+        self.devices.iter().map(|d| d.erases).sum()
+    }
+
+    /// Worst per-device erase count — the fleet-lifetime metric a
+    /// wear-spreading scheduler minimizes.
+    pub fn max_erases(&self) -> u64 {
+        self.devices.iter().map(|d| d.erases).max().unwrap_or(0)
+    }
+
+    /// Total KV token programs across the fleet.
+    pub fn total_programs(&self) -> u64 {
+        self.devices.iter().map(|d| d.programs).sum()
+    }
+
+    /// Total KV bytes written across the fleet.
+    pub fn total_bytes_written(&self) -> u64 {
+        self.devices.iter().map(|d| d.bytes_written).sum()
+    }
+
+    /// Projected fleet lifetime (years) at the trace's observed write
+    /// rate: total erase endurance (every slot's blocks × block bytes ×
+    /// P/E budget) over bytes written per second. Infinite for an idle
+    /// trace or a zero-length makespan.
+    pub fn projected_years(&self, makespan_s: f64) -> f64 {
+        if makespan_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        let capacity: u64 = self
+            .devices
+            .iter()
+            .map(|d| d.block_bytes * self.blocks_per_device as u64)
+            .sum();
+        let rate = self.total_bytes_written() as f64 / makespan_s;
+        crate::kv::lifetime::lifetime_years_at_rate(capacity, self.pe_budget, rate)
+    }
 }
 
 /// Per-class slice of a [`PoolReport`]: the class's traffic counts,
@@ -315,6 +401,34 @@ impl PoolReport {
                 out.push_str(&format!("cost ${cost:.2}/Mtok   energy {energy:.1} J/Mtok\n"));
             }
         }
+        if let Some(w) = &self.wear {
+            let years = w.projected_years(self.makespan.secs());
+            out.push_str(&format!(
+                "\nwear: {} P/E x {} blocks/device   {} retirement(s), {} spare(s)   \
+                 projected lifetime {}\n",
+                w.pe_budget,
+                w.blocks_per_device,
+                w.retirements,
+                w.spares,
+                if years.is_finite() { format!("{years:.2} yr") } else { "-".to_string() },
+            ));
+            let cols = ["device", "programs", "MiB written", "erases", "evictions", "retired"];
+            let mut t = Table::new(&cols);
+            for (i, d) in w.devices.iter().enumerate() {
+                t.row(&[
+                    if d.spare { format!("dev{i} (spare)") } else { format!("dev{i}") },
+                    d.programs.to_string(),
+                    format!("{:.1}", d.bytes_written as f64 / (1u64 << 20) as f64),
+                    d.erases.to_string(),
+                    d.evictions.to_string(),
+                    match d.retired_at_s {
+                        Some(t) => fmt_time(t),
+                        None => "-".to_string(),
+                    },
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         if let Some(mix) = &self.workload {
             out.push_str(&format!("\nworkload mix: {}\n", mix.name()));
             let mut c = Table::new(&[
@@ -417,6 +531,7 @@ mod tests {
             device_utilization: vec![0.5, 0.25],
             device_jobs: vec![1, 1],
             fleet: None,
+            wear: None,
         };
         assert_eq!(r.accepted(), 2);
         assert_eq!(r.rejected(), 1);
@@ -480,6 +595,7 @@ mod tests {
             device_utilization: vec![0.5, 0.25],
             device_jobs: vec![2, 1],
             fleet: None,
+            wear: None,
         };
         let classes = r.class_reports();
         assert_eq!(classes.len(), 2);
@@ -492,5 +608,56 @@ mod tests {
         let s = r.render();
         assert!(s.contains("workload mix: t"));
         assert!(s.contains("SLO met") && s.contains("odd") && s.contains("even"));
+    }
+
+    #[test]
+    fn wear_summary_rollups_and_render_section() {
+        let stats = |erases, spare| DeviceWearStats {
+            programs: 100,
+            bytes_written: 2 << 20,
+            erases,
+            evictions: 1,
+            block_bytes: 1 << 20,
+            retired_at_s: if spare { None } else { Some(0.5) },
+            spare,
+        };
+        let w = WearSummary {
+            pe_budget: 10,
+            blocks_per_device: 4,
+            spares: 1,
+            retirements: 1,
+            devices: vec![stats(7, false), stats(3, true)],
+        };
+        assert_eq!(w.total_erases(), 10);
+        assert_eq!(w.max_erases(), 7);
+        assert_eq!(w.total_programs(), 200);
+        assert_eq!(w.total_bytes_written(), 4 << 20);
+        // Capacity 2 devices × 4 MiB × 10 P/E = 80 MiB endurance; the
+        // trace wrote 4 MiB over 2 s → 20× the trace horizon remains.
+        let years = w.projected_years(2.0);
+        assert!((years - 40.0 / (365.25 * 24.0 * 3600.0)).abs() < 1e-12, "{years}");
+        assert_eq!(w.projected_years(0.0), f64::INFINITY);
+
+        let mut r = PoolReport {
+            backend: "event",
+            policy: "wear-aware".to_string(),
+            devices: 1,
+            offered_rate: 8.0,
+            workload: None,
+            outcomes: vec![sim_request(1, Some(0), 10)],
+            makespan: SimTime::from_secs(2.0),
+            device_utilization: vec![0.5, 0.0],
+            device_jobs: vec![1, 0],
+            fleet: None,
+            wear: None,
+        };
+        let plain = r.render();
+        assert!(!plain.contains("wear:"), "wear-disabled reports carry no wear section");
+        r.wear = Some(w);
+        let s = r.render();
+        assert!(s.contains("wear: 10 P/E x 4 blocks/device"), "{s}");
+        assert!(s.contains("1 retirement(s), 1 spare(s)"), "{s}");
+        assert!(s.contains("(spare)"), "{s}");
+        assert!(s.contains("projected lifetime"), "{s}");
     }
 }

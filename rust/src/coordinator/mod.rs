@@ -11,11 +11,11 @@
 //! [`gpu::roofline`][crate::gpu::roofline] model) and [`FleetSpec`]
 //! compositions like `4xflash+1xgpu`. [`router`] hosts the
 //! [`Scheduler`] policies (round-robin, least-loaded, the SLO-aware
-//! bin-packer [`SloAware`], and the tier-splitting [`TierAware`]) plus
-//! [`DeviceRouter`] — KV affinity pins a session's follow-up turns to
-//! the device holding its KV cache — and every device queue is bounded,
-//! so overload is surfaced as backpressure instead of unbounded
-//! buffering.
+//! bin-packer [`SloAware`], the tier-splitting [`TierAware`], and the
+//! erase-budget-spreading [`WearAware`]) plus [`DeviceRouter`] — KV
+//! affinity pins a session's follow-up turns to the device holding its
+//! KV cache — and every device queue is bounded, so overload is
+//! surfaced as backpressure instead of unbounded buffering.
 //!
 //! Traffic need not be one homogeneous stream: [`workload`] defines
 //! multi-class scenarios ([`WorkloadMix`] — chat, long-context
@@ -98,6 +98,8 @@
 //!     seed: 1,
 //!     workload: None,
 //!     fleet: None,
+//!     wear: None,
+//!     arrival: None,
 //! };
 //! let policy = || policy_from_name("least-loaded").unwrap();
 //! let a = run_traffic_events(&sys, &model, &table, policy(), &cfg);
@@ -124,15 +126,18 @@ pub use event_sim::{
     DecodeMode, run_traffic_events, run_traffic_events_counted, run_traffic_events_mode,
     run_traffic_point, ServingEvent, ServingModel,
 };
-pub use loadgen::{LenRange, run_traffic, run_traffic_with_table, SimRequest, TrafficConfig};
-pub use metrics::{ClassReport, PoolReport, ServingReport};
+pub use loadgen::{
+    ArrivalPhase, ArrivalProcess, LenRange, run_traffic, run_traffic_with_table, SimRequest,
+    TrafficConfig, WearConfig,
+};
+pub use metrics::{ClassReport, DeviceWearStats, PoolReport, ServingReport, WearSummary};
 pub use pool::{
     DevicePool, PoolJob, PoolServed, SimFlashEngine, SimGpuEngine, SimPoolEngine, SubmitError,
 };
 pub use request::{Request, RequestKind, RequestOutcome};
 pub use router::{
     DeviceRouter, DeviceStatus, JobInfo, LeastLoaded, policy_from_name, RoundRobin, Route, Router,
-    Scheduler, SloAware, TierAware, GPU_PROMPT_SPLIT, TIERED_POLICY_NAMES,
+    Scheduler, SloAware, TierAware, WearAware, GPU_PROMPT_SPLIT, TIERED_POLICY_NAMES,
 };
 pub use serve::Coordinator;
 pub use simulate::{simulate, Workload};

@@ -239,6 +239,8 @@ impl DevicePool {
             kv_used: 0,
             kv_capacity: 0,
             tier: self.tiers[i],
+            wear_used: 0,
+            wear_budget: 0,
         }
     }
 

@@ -101,6 +101,13 @@ pub struct DeviceStatus {
     /// Device tier — lets tier-sensitive policies ([`TierAware`]) and
     /// per-tier feasibility checks see what kind of device this is.
     pub tier: Tier,
+    /// Erases charged against the device's P/E budget so far. Zero when
+    /// wear accounting is disabled (and for GPU devices, which have no
+    /// erase budget) — wear-blind policies never read it.
+    pub wear_used: u64,
+    /// Total erase capacity (`blocks × pe_budget`); zero when wear
+    /// accounting is disabled.
+    pub wear_budget: u64,
 }
 
 /// What a [`Scheduler`] knows about the arriving job beyond the pool
@@ -307,10 +314,53 @@ impl Scheduler for TierAware {
     }
 }
 
+/// Endurance-first placement for wear-budgeted fleets: among the devices
+/// whose backlog still lets the arriving job meet its class TTFT target
+/// (the same feasibility test as [`SloAware`]), pick the one with the
+/// **fewest erases charged** so the program/erase budget drains evenly
+/// across the fleet instead of concentrating on whichever device the
+/// load balancer favours. Latency is bounded — infeasible devices are
+/// never preferred — but within the feasible set wear spread wins over
+/// queue depth, trading a little p95 for fleet lifetime. When no device
+/// is feasible it sheds damage minimally, exactly like `SloAware`.
+///
+/// Ties break by queue depth, then KV usage, then index — deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct WearAware;
+
+impl WearAware {
+    pub fn new() -> WearAware {
+        WearAware
+    }
+}
+
+impl Scheduler for WearAware {
+    fn name(&self) -> &'static str {
+        "wear-aware"
+    }
+
+    fn pick(&mut self, status: &[DeviceStatus], job: &JobInfo) -> usize {
+        let feasible = status
+            .iter()
+            .filter(|s| s.est_wait.secs() + job.est_prefill_on(s.tier) <= job.ttft_target)
+            .min_by_key(|s| (s.wear_used, s.queue_depth, s.kv_used, s.device));
+        match feasible {
+            Some(s) => s.device,
+            None => status
+                .iter()
+                .min_by_key(|s| (s.est_wait, s.queue_depth, s.kv_used, s.device))
+                .expect("pick over empty pool")
+                .device,
+        }
+    }
+}
+
 /// Canonical names of every scheduling policy, ascending — the sweep and
 /// campaign matrices iterate this list so "all policies" has exactly one
 /// definition. Excludes [`TierAware`], which only makes sense on a
-/// heterogeneous fleet — tiered callers iterate [`TIERED_POLICY_NAMES`].
+/// heterogeneous fleet — tiered callers iterate [`TIERED_POLICY_NAMES`] —
+/// and [`WearAware`], which needs wear accounting enabled to differ from
+/// `least-loaded` (opt in by name via [`policy_from_name`]).
 pub const POLICY_NAMES: &[&str] = &["least-loaded", "round-robin", "slo-aware"];
 
 /// Every policy including [`TierAware`] — the "all policies" list for
@@ -325,6 +375,7 @@ pub fn policy_from_name(name: &str) -> Option<Box<dyn Scheduler + Send>> {
         "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
         "slo-aware" | "slo" => Some(Box::new(SloAware::new())),
         "tier-aware" | "tier" => Some(Box::new(TierAware::new())),
+        "wear-aware" | "wear" => Some(Box::new(WearAware::new())),
         _ => None,
     }
 }
@@ -483,6 +534,8 @@ mod tests {
                 kv_used: 0,
                 kv_capacity: 1 << 30,
                 tier: Tier::Flash,
+                wear_used: 0,
+                wear_budget: 0,
             })
             .collect()
     }
@@ -629,10 +682,39 @@ mod tests {
         assert_eq!(policy_from_name("slo").unwrap().name(), "slo-aware");
         assert_eq!(policy_from_name("tier-aware").unwrap().name(), "tier-aware");
         assert_eq!(policy_from_name("tier").unwrap().name(), "tier-aware");
+        assert_eq!(policy_from_name("wear-aware").unwrap().name(), "wear-aware");
+        assert_eq!(policy_from_name("wear").unwrap().name(), "wear-aware");
         assert!(policy_from_name("bogus").is_none());
+        // Wear-aware is opt-in only: never part of the sweep matrices.
+        assert!(!TIERED_POLICY_NAMES.contains(&"wear-aware"));
         // The tiered list is the base list plus tier-aware.
         assert_eq!(&TIERED_POLICY_NAMES[..POLICY_NAMES.len()], POLICY_NAMES);
         assert_eq!(TIERED_POLICY_NAMES.last(), Some(&"tier-aware"));
+    }
+
+    #[test]
+    fn wear_aware_spreads_budget_within_feasible_set() {
+        let mut wa = WearAware::new();
+        // All feasible (no deadline): the least-worn device wins even when
+        // it is not the least loaded.
+        let mut s = status(&[0, 2, 1]);
+        s[0].wear_used = 50;
+        s[1].wear_used = 10;
+        s[2].wear_used = 30;
+        for d in &mut s {
+            d.wear_budget = 100;
+        }
+        assert_eq!(wa.pick(&s, &any_job()), 1);
+        // A deadline excludes the least-worn device (wait 2 s > 1 s slack):
+        // next-least-worn feasible device wins.
+        let tight = job(0.5, 1.5);
+        assert_eq!(wa.pick(&s, &tight), 2);
+        // No device feasible: sheds like SloAware (minimum est_wait).
+        let hopeless = job(0.5, 0.1);
+        assert_eq!(wa.pick(&s, &hopeless), 0);
+        // Wear ties break by queue depth, then index.
+        let flat = status(&[3, 1, 1]);
+        assert_eq!(wa.pick(&flat, &any_job()), 1);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 use super::device::FleetSummary;
 use super::loadgen::SimRequest;
+use super::metrics::WearSummary;
 use super::sweep::{ClassAttainment, SweepPoint};
 use super::workload::SloTarget;
 use crate::sim::SimTime;
@@ -106,8 +107,15 @@ impl StreamingSink {
     /// `SweepPoint::of(&report)` over the same run's materialized report
     /// — including the fleet-priced columns, which both paths derive
     /// from the same token total and makespan through the same
-    /// [`FleetSummary`] methods.
-    pub fn finish(self, policy: String, rate: f64, fleet: Option<FleetSummary>) -> SweepPoint {
+    /// [`FleetSummary`] methods, and the wear columns, which both paths
+    /// fold from the same [`WearSummary`].
+    pub fn finish(
+        self,
+        policy: String,
+        rate: f64,
+        fleet: Option<FleetSummary>,
+        wear: Option<WearSummary>,
+    ) -> SweepPoint {
         let throughput = if self.makespan == SimTime::ZERO {
             0.0
         } else {
@@ -130,6 +138,9 @@ impl StreamingSink {
             latency_p99: lat.p99,
             cost_per_mtok,
             energy_per_mtok,
+            wear_max_erases: wear.as_ref().map(|w| w.max_erases()),
+            wear_total_erases: wear.as_ref().map(|w| w.total_erases()),
+            wear_retirements: wear.as_ref().map(|w| w.retirements as u64),
             class_attainment: self
                 .classes
                 .into_iter()
@@ -209,7 +220,7 @@ mod tests {
         sink.record(outcome(0, 0, Some(0), 10)); // loose, served: attains
         sink.record(outcome(1, 1, Some(1), 10)); // tight, served: misses
         sink.record(outcome(2, 0, None, 0)); // loose, rejected: misses
-        let p = sink.finish("rr".to_string(), 4.0, None);
+        let p = sink.finish("rr".to_string(), 4.0, None, None);
         assert_eq!((p.accepted, p.rejected), (2, 1));
         assert!(p.throughput > 0.0);
         assert!(p.ttft_p95 > 0.0 && p.latency_p95 > 0.0);
@@ -220,7 +231,7 @@ mod tests {
 
     #[test]
     fn streaming_sink_empty_run() {
-        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0, None);
+        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0, None, None);
         assert_eq!((p.accepted, p.rejected), (0, 0));
         assert_eq!(p.throughput, 0.0);
         assert!(p.class_attainment.is_empty());

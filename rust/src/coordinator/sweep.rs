@@ -121,6 +121,14 @@ pub struct SweepPoint {
     /// Joules of decode energy per million generated tokens; `None`
     /// without a fleet spec.
     pub energy_per_mtok: Option<f64>,
+    /// Maximum per-device erase count across the fleet — the wear-spread
+    /// quality metric [`WearAware`][super::router::WearAware] minimizes;
+    /// `None` when wear accounting is disabled.
+    pub wear_max_erases: Option<u64>,
+    /// Total erases charged across the fleet; `None` without wear.
+    pub wear_total_erases: Option<u64>,
+    /// Devices retired mid-trace; `None` without wear.
+    pub wear_retirements: Option<u64>,
     /// Per-class SLO attainment, in mix order; empty without a workload.
     pub class_attainment: Vec<ClassAttainment>,
 }
@@ -134,6 +142,7 @@ impl SweepPoint {
         let lat = report.latency_summary();
         let tokens: u64 = report.outcomes.iter().map(|o| o.output_tokens as u64).sum();
         let fleet = report.fleet.as_ref();
+        let wear = report.wear.as_ref();
         SweepPoint {
             policy: report.policy.clone(),
             rate: report.offered_rate,
@@ -146,6 +155,9 @@ impl SweepPoint {
             latency_p99: lat.p99,
             cost_per_mtok: fleet.and_then(|f| f.cost_per_mtok(tokens, report.makespan.secs())),
             energy_per_mtok: fleet.and_then(|f| f.energy_per_mtok(tokens)),
+            wear_max_erases: wear.map(|w| w.max_erases()),
+            wear_total_erases: wear.map(|w| w.total_erases()),
+            wear_retirements: wear.map(|w| w.retirements as u64),
             class_attainment: report
                 .class_reports()
                 .into_iter()
@@ -189,7 +201,9 @@ fn sweep_pairs<'a>(rates: &[f64], policies: &[&'a str]) -> Result<Vec<(&'a str, 
     }
     for p in policies {
         if policy_from_name(p).is_none() {
-            bail!("unknown policy {p:?}; use round-robin|least-loaded|slo-aware|tier-aware");
+            bail!(
+                "unknown policy {p:?}; use round-robin|least-loaded|slo-aware|tier-aware|wear-aware"
+            );
         }
     }
     let mut rates = rates.to_vec();
@@ -251,11 +265,13 @@ pub fn sweep_rates_threaded(
 /// Render sweep points as an ASCII throughput–latency table. The final
 /// column is the worst per-class SLO attainment (`-` without a workload).
 /// Fleet-priced sweeps (any point carrying cost/energy) gain `$/Mtok`
-/// and `J/Mtok` columns; flash-only sweeps render byte-identically to
+/// and `J/Mtok` columns, wear-enabled sweeps gain `max erases` and
+/// `retired`; flash-only wear-free sweeps render byte-identically to
 /// pre-fleet builds.
 pub fn render_sweep(points: &[SweepPoint]) -> String {
     let priced =
         points.iter().any(|p| p.cost_per_mtok.is_some() || p.energy_per_mtok.is_some());
+    let weared = points.iter().any(|p| p.wear_max_erases.is_some());
     let mut headers = vec![
         "policy",
         "rate req/s",
@@ -270,6 +286,10 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
     if priced {
         headers.push("$/Mtok");
         headers.push("J/Mtok");
+    }
+    if weared {
+        headers.push("max erases");
+        headers.push("retired");
     }
     headers.push("min SLO");
     let mut t = Table::new(&headers);
@@ -292,6 +312,16 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
             });
             cells.push(match p.energy_per_mtok {
                 Some(e) => format!("{e:.1}"),
+                None => "-".to_string(),
+            });
+        }
+        if weared {
+            cells.push(match p.wear_max_erases {
+                Some(e) => e.to_string(),
+                None => "-".to_string(),
+            });
+            cells.push(match p.wear_retirements {
+                Some(r) => r.to_string(),
                 None => "-".to_string(),
             });
         }
@@ -391,6 +421,8 @@ mod tests {
             seed: 5,
             workload: None,
             fleet: None,
+            wear: None,
+            arrival: None,
         }
     }
 
@@ -478,6 +510,9 @@ mod tests {
             latency_p99: 0.3,
             cost_per_mtok: None,
             energy_per_mtok: None,
+            wear_max_erases: None,
+            wear_total_erases: None,
+            wear_retirements: None,
             class_attainment: vec![
                 ClassAttainment { class: "chat".into(), attainment: chat },
                 ClassAttainment { class: "batch".into(), attainment: batch },

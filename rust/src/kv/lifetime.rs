@@ -35,6 +35,23 @@ pub fn lifetime_of_region(
     LifetimeReport { region_bytes, effective_pe, write_rate, years: seconds / (365.25 * 24.0 * 3600.0) }
 }
 
+/// Lifetime projection from an observed serving trace rather than a
+/// continuous-generation assumption: `capacity_bytes × pe_budget` total
+/// endurance divided by the trace's measured write rate. Returns
+/// `f64::INFINITY` when the trace wrote nothing (an idle fleet never
+/// wears out).
+pub fn lifetime_years_at_rate(
+    capacity_bytes: u64,
+    pe_budget: u64,
+    write_rate_bytes_per_s: f64,
+) -> f64 {
+    if write_rate_bytes_per_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    let endurance_bytes = capacity_bytes as f64 * pe_budget as f64;
+    endurance_bytes / write_rate_bytes_per_s / (365.25 * 24.0 * 3600.0)
+}
+
 /// Lifetime using the paper's quoted 32 GiB KV region.
 pub fn lifetime_years(model: &ModelShape, tpot: f64) -> LifetimeReport {
     lifetime_of_region(32.0 * (1u64 << 30) as f64, model, tpot)
@@ -74,6 +91,16 @@ mod tests {
     fn effective_pe_is_500k() {
         let r = lifetime_years(&OptModel::Opt30b.shape(), 7.0e-3);
         assert!((r.effective_pe - 500_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn trace_rate_projection_matches_hand_math() {
+        // 1 GiB region, 100 P/E, writing 1 GiB/day → 100 days ≈ 0.274 yr.
+        let gib = 1u64 << 30;
+        let rate = gib as f64 / (24.0 * 3600.0);
+        let years = lifetime_years_at_rate(gib, 100, rate);
+        assert!((years - 100.0 / 365.25).abs() < 1e-9, "{years}");
+        assert_eq!(lifetime_years_at_rate(gib, 100, 0.0), f64::INFINITY);
     }
 
     #[test]

@@ -56,9 +56,14 @@ impl WearLeveler {
         None
     }
 
-    /// Free a block (sequence finished; its KV is dropped).
+    /// Free a block (sequence finished; its KV is dropped). Releasing an
+    /// index that was never allocated (or is out of range) is a no-op —
+    /// callers fold eviction streams through here without tracking which
+    /// allocations are still live.
     pub fn release(&mut self, idx: usize) {
-        self.blocks[idx].live = false;
+        if let Some(b) = self.blocks.get_mut(idx) {
+            b.live = false;
+        }
     }
 
     /// Blocks whose data exceeded the relaxed retention window and must
@@ -86,6 +91,87 @@ impl WearLeveler {
 
     pub fn exhausted(&self) -> bool {
         self.blocks.iter().all(|b| b.erases >= self.pe_budget)
+    }
+}
+
+/// Analytic erase count for `allocations` round-robin allocations over
+/// `blocks` blocks of `pe_budget` erases each when no block is ever
+/// released (the serving append stream): the first pass programs free
+/// blocks without erasing, every later allocation erases exactly one
+/// block, and the total saturates at the device's erase capacity — the
+/// conservation law the wear test suite checks fleet totals against.
+pub fn expected_erases(allocations: u64, blocks: u64, pe_budget: u64) -> u64 {
+    allocations.saturating_sub(blocks).min(blocks * pe_budget)
+}
+
+/// Per-device serving wear meter: KV token programs and bytes written,
+/// folded into erases through a [`WearLeveler`] at erase-block
+/// granularity. Both serving backends charge the same meter from the
+/// same admission bookkeeping, so fleet wear totals agree bit-for-bit
+/// across the event and direct backends.
+#[derive(Debug)]
+pub struct DeviceWear {
+    leveler: WearLeveler,
+    /// Bytes per erase block (device KV capacity / block count).
+    pub block_bytes: u64,
+    /// Bytes written but not yet amounting to a full block.
+    carry: u64,
+    /// KV token programs charged (one per token written).
+    pub programs: u64,
+    /// Total KV bytes written.
+    pub bytes_written: u64,
+    /// Idle-session evictions charged against this device.
+    pub evictions: u64,
+    /// Simulated time at which the P/E budget exhausted, if it did.
+    pub retired_at: Option<SimTime>,
+}
+
+impl DeviceWear {
+    /// Retention plays no role in the serving wear meter, so the leveler
+    /// gets one it can never exceed.
+    pub fn new(blocks: usize, pe_budget: u64, block_bytes: u64) -> DeviceWear {
+        DeviceWear {
+            leveler: WearLeveler::new(blocks.max(1), pe_budget, SimTime(u64::MAX)),
+            block_bytes: block_bytes.max(1),
+            carry: 0,
+            programs: 0,
+            bytes_written: 0,
+            evictions: 0,
+            retired_at: None,
+        }
+    }
+
+    /// Charge `tokens` KV token writes totalling `bytes` at time `now`.
+    /// Whole erase blocks' worth of bytes are allocated through the
+    /// leveler (erase-before-write past the first pass); the remainder
+    /// carries to the next charge. Returns `true` when this charge
+    /// exhausted the device's erase budget.
+    pub fn charge(&mut self, tokens: u64, bytes: u64, now: SimTime) -> bool {
+        let was_exhausted = self.exhausted();
+        self.programs += tokens;
+        self.bytes_written += bytes;
+        self.carry += bytes;
+        while self.carry >= self.block_bytes {
+            self.carry -= self.block_bytes;
+            let _ = self.leveler.allocate(now);
+        }
+        !was_exhausted && self.exhausted()
+    }
+
+    /// Record an idle-session KV eviction. The freed blocks are erased
+    /// lazily on reallocation (the leveler's erase-before-write), so no
+    /// budget is charged here — evictions are reported, not priced.
+    pub fn note_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    /// Total erases charged so far.
+    pub fn erases(&self) -> u64 {
+        self.leveler.total_erases()
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.leveler.exhausted()
     }
 }
 
@@ -127,6 +213,88 @@ mod tests {
         let now = SimTime::from_secs(300_000.0); // b0 is 3.47 days old
         let stale = w.stale_blocks(now);
         assert_eq!(stale, vec![b0]);
+    }
+
+    #[test]
+    fn zero_pe_budget_is_exhausted_from_birth() {
+        let mut w = WearLeveler::new(4, 0, SimTime::from_secs(1.0));
+        assert!(w.exhausted(), "no budget means no usable blocks");
+        assert_eq!(w.allocate(SimTime::ZERO), None, "even the first free write is refused");
+        assert_eq!(w.total_erases(), 0);
+    }
+
+    #[test]
+    fn allocate_after_exhaustion_stays_none_and_charges_nothing() {
+        let mut w = WearLeveler::new(2, 1, SimTime::from_secs(1.0));
+        while w.allocate(SimTime::ZERO).is_some() {}
+        assert!(w.exhausted());
+        let before = w.total_erases();
+        for _ in 0..10 {
+            assert_eq!(w.allocate(SimTime(5)), None);
+        }
+        assert_eq!(w.total_erases(), before, "post-exhaustion attempts never erase");
+    }
+
+    #[test]
+    fn release_of_never_allocated_block_is_a_no_op() {
+        let mut w = WearLeveler::new(2, 10, SimTime::from_secs(1.0));
+        w.release(0); // in range, never allocated
+        w.release(99); // out of range entirely
+        let idx = w.allocate(SimTime::ZERO).unwrap();
+        w.release(idx);
+        assert_eq!(w.total_erases(), 0);
+        // The released block recycles without an erase (it is not live).
+        w.release(idx);
+        assert_eq!(w.total_erases(), 0);
+    }
+
+    #[test]
+    fn retention_boundary_is_exclusive() {
+        let retention = SimTime::from_secs(3.0);
+        let mut w = WearLeveler::new(2, 10, retention);
+        let b = w.allocate(SimTime::ZERO).unwrap();
+        // Exactly at the retention age: not yet stale (strict `>`).
+        assert!(w.stale_blocks(SimTime::from_secs(3.0)).is_empty());
+        // One picosecond past it: stale.
+        assert_eq!(w.stale_blocks(SimTime(SimTime::from_secs(3.0).0 + 1)), vec![b]);
+    }
+
+    #[test]
+    fn device_wear_charges_block_granular_erases() {
+        let mut d = DeviceWear::new(4, 1000, 100);
+        // 250 bytes = 2 whole blocks + 50 carried.
+        assert!(!d.charge(25, 250, SimTime::ZERO));
+        assert_eq!(d.programs, 25);
+        assert_eq!(d.bytes_written, 250);
+        assert_eq!(d.erases(), expected_erases(2, 4, 1000));
+        // 350 more: carry reaches 400 total → 4 blocks allocated overall.
+        assert!(!d.charge(35, 350, SimTime::ZERO));
+        assert_eq!(d.erases(), expected_erases(6, 4, 1000));
+        assert_eq!(d.erases(), 2, "first pass over 4 blocks is erase-free");
+        assert!(!d.exhausted());
+        d.note_eviction();
+        assert_eq!(d.evictions, 1);
+    }
+
+    #[test]
+    fn device_wear_reports_exhaustion_exactly_once() {
+        let mut d = DeviceWear::new(2, 2, 10);
+        // Capacity: 2 blocks × 2 P/E + 2 free first writes = 6 allocations.
+        assert!(!d.charge(1, 50, SimTime::ZERO)); // 5 allocations
+        assert!(d.charge(1, 10, SimTime::ZERO), "6th allocation exhausts");
+        assert!(d.exhausted());
+        assert!(!d.charge(1, 10, SimTime::ZERO), "already exhausted: not newly so");
+        assert_eq!(d.erases(), expected_erases(7, 2, 2));
+        assert_eq!(d.erases(), 4, "erases saturate at blocks × budget");
+    }
+
+    #[test]
+    fn expected_erases_formula_edges() {
+        assert_eq!(expected_erases(0, 4, 10), 0);
+        assert_eq!(expected_erases(4, 4, 10), 0, "first pass is free");
+        assert_eq!(expected_erases(5, 4, 10), 1);
+        assert_eq!(expected_erases(1000, 4, 10), 40, "caps at capacity");
+        assert_eq!(expected_erases(1000, 4, 0), 0, "zero budget never erases");
     }
 
     #[test]

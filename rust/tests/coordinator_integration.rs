@@ -93,6 +93,8 @@ fn traffic(devices: usize, rate: f64, requests: usize, seed: u64) -> TrafficConf
         seed,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     }
 }
 

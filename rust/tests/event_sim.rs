@@ -27,6 +27,8 @@ fn traffic(seed: u64) -> TrafficConfig {
         seed,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     }
 }
 
@@ -70,6 +72,8 @@ fn event_backend_matches_direct_backend_plus_pcie_upload() {
         seed: 11,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
@@ -121,6 +125,8 @@ fn latency_percentiles_within_5pct_of_direct_backend_on_10k_trace() {
         seed: 123,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
@@ -149,6 +155,8 @@ fn event_backend_completes_100k_requests_single_threaded() {
         seed: 7,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     let rep =
         run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg);
@@ -182,6 +190,8 @@ fn ttft_decomposes_into_upload_write_and_first_step() {
         seed: 3,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     assert_eq!(rep.accepted(), 1);

@@ -75,6 +75,8 @@ fn traffic(seed: u64) -> TrafficConfig {
         seed,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     }
 }
 
@@ -109,6 +111,8 @@ fn serve_sim_completes_100k_requests() {
         seed: 7,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     };
     let rep = run_traffic_with_table(
         &sys,

@@ -51,6 +51,8 @@ fn single_class_cfg(requests: usize, rate: f64, seed: u64) -> TrafficConfig {
         seed,
         workload: None,
         fleet: None,
+        wear: None,
+        arrival: None,
     }
 }
 

@@ -1,0 +1,408 @@
+//! Endurance-aware serving, locked down end to end: fleet wear totals
+//! must match the analytic expectation recoverable from the accepted
+//! request trace (the conservation law in [`flashpim::kv::wear`]), agree
+//! across decode modes and serving backends, survive mid-trace device
+//! retirement + spare hot-swap without losing accepted requests, and the
+//! diurnal open-loop arrival schedule must shape the stream without
+//! perturbing a single byte of wear-disabled or unit-multiplier runs.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::config::SystemConfig;
+use flashpim::coordinator::{
+    ArrivalProcess, DecodeMode, LenRange, policy_from_name, PoolReport, run_traffic_events,
+    run_traffic_events_counted, run_traffic_events_mode, run_traffic_point, run_traffic_with_table,
+    TrafficConfig, WearConfig, WorkloadMix,
+};
+use flashpim::kv::wear::expected_erases;
+use flashpim::llm::model_config::{ModelShape, OptModel};
+use flashpim::llm::LatencyTable;
+
+fn fixtures() -> (SystemConfig, ModelShape, LatencyTable) {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    (sys, model, table)
+}
+
+/// The wear-conservation law: every per-slot meter in the summary must be
+/// recoverable from the accepted request trace alone. Programs count the
+/// KV tokens written ((l_in + l_out) per accepted turn on the slot),
+/// bytes price those tokens at the model's KV footprint, and erases obey
+/// [`expected_erases`] over the block-granular allocation count — for
+/// *any* routing policy, follow-up share, eviction history, or
+/// retirement schedule.
+fn assert_wear_conserved(rep: &PoolReport, per_token: u64) {
+    let w = rep.wear.as_ref().expect("wear-enabled run must attach a summary");
+    for (d, stats) in w.devices.iter().enumerate() {
+        let tokens: u64 = rep
+            .outcomes
+            .iter()
+            .filter(|o| !o.rejected && o.device == Some(d))
+            .map(|o| (o.input_tokens + o.output_tokens) as u64)
+            .sum();
+        assert_eq!(stats.programs, tokens, "device {d}: programs vs accepted trace");
+        assert_eq!(stats.bytes_written, tokens * per_token, "device {d}: bytes vs programs");
+        let allocations = stats.bytes_written / stats.block_bytes;
+        assert_eq!(
+            stats.erases,
+            expected_erases(allocations, w.blocks_per_device as u64, w.pe_budget),
+            "device {d}: erases vs the wear-leveler conservation law"
+        );
+    }
+}
+
+/// Large turns at low rate: enough KV volume to cycle every device's
+/// erase blocks several times over, so the conservation law is exercised
+/// with nonzero erase counts (not just the trivial sub-capacity case).
+fn erase_heavy_cfg(seed: u64) -> TrafficConfig {
+    TrafficConfig {
+        devices: 2,
+        rate: 0.4,
+        requests: 1600,
+        input_tokens: LenRange::new(1024, 1536),
+        output_tokens: LenRange::new(4, 8),
+        queue_capacity: 64,
+        followup: 0.0,
+        seed,
+        workload: None,
+        fleet: None,
+        wear: Some(WearConfig::new(100_000)),
+        arrival: None,
+    }
+}
+
+#[test]
+fn wear_totals_match_the_accepted_trace_on_both_backends() {
+    let (sys, model, table) = fixtures();
+    let cfg = erase_heavy_cfg(7);
+    let per_token = model.kv_bytes_per_token(1.0) as u64;
+    let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    for rep in [&ev, &di] {
+        assert_wear_conserved(rep, per_token);
+        let w = rep.wear.as_ref().unwrap();
+        assert!(w.total_erases() > 0, "{}: trace must overwrite the SLC region", rep.backend);
+        assert_eq!(w.retirements, 0, "{}: ample budget must not retire", rep.backend);
+        let accepted_tokens: u64 = rep
+            .outcomes
+            .iter()
+            .filter(|o| !o.rejected)
+            .map(|o| (o.input_tokens + o.output_tokens) as u64)
+            .sum();
+        assert_eq!(w.total_programs(), accepted_tokens, "{}: fleet rollup", rep.backend);
+        assert_eq!(w.total_bytes_written(), accepted_tokens * per_token);
+    }
+}
+
+#[test]
+fn wear_meters_agree_across_decode_modes_and_reruns() {
+    let (sys, model, table) = fixtures();
+    let cfg = erase_heavy_cfg(13);
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let coalesced =
+        run_traffic_events_mode(&sys, &model, &table, ll(), &cfg, DecodeMode::Coalesced);
+    let per_token = run_traffic_events_mode(&sys, &model, &table, ll(), &cfg, DecodeMode::PerToken);
+    // The per-token chain is the coalesced path's bit-identity oracle —
+    // including every wear meter, not just latencies.
+    assert_eq!(coalesced, per_token);
+    assert!(coalesced.wear.as_ref().unwrap().total_erases() > 0);
+    let rerun = run_traffic_events_mode(&sys, &model, &table, ll(), &cfg, DecodeMode::Coalesced);
+    assert_eq!(coalesced, rerun, "same seed must reproduce wear meters bit-for-bit");
+}
+
+/// Below KV pressure the two backends admit the exact same trace (no
+/// eviction-timing skew), so their wear summaries must be *equal*, not
+/// merely both self-consistent.
+#[test]
+fn event_and_direct_backends_charge_identical_wear_below_kv_pressure() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 2,
+        rate: 5.0,
+        requests: 400,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 64,
+        followup: 0.0,
+        seed: 11,
+        workload: None,
+        fleet: None,
+        wear: Some(WearConfig::new(1_000)),
+        arrival: None,
+    };
+    let per_token = model.kv_bytes_per_token(1.0) as u64;
+    let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    assert_eq!(ev.rejected(), 0, "lightly loaded pool must accept everything");
+    assert_eq!(di.rejected(), 0);
+    assert_eq!(ev.wear, di.wear, "backends must charge identical meters");
+    assert!(ev.wear.as_ref().unwrap().total_programs() > 0);
+    assert_wear_conserved(&ev, per_token);
+}
+
+/// Exhaust the only primary device mid-trace: it must drain, its sessions
+/// must re-home, the provisioned spare must take over the remainder of
+/// the trace, and not a single arrival may be lost from the books.
+#[test]
+fn worn_device_retires_drains_and_hands_over_to_spare() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 1,
+        rate: 0.2,
+        requests: 1500,
+        input_tokens: LenRange::new(1024, 1536),
+        output_tokens: LenRange::new(4, 8),
+        queue_capacity: 32,
+        followup: 0.3,
+        seed: 21,
+        workload: None,
+        fleet: None,
+        // 4 blocks x 1 P/E: the primary exhausts after rewriting its SLC
+        // region once over; the spare sees less than that and survives.
+        wear: Some(WearConfig { pe_budget: 1, blocks_per_device: 4, spares: 1 }),
+        arrival: None,
+    };
+    let per_token = model.kv_bytes_per_token(1.0) as u64;
+    let policy = || policy_from_name("least-loaded").unwrap();
+    let (rep, events) =
+        run_traffic_events_counted(&sys, &model, &table, policy(), &cfg, DecodeMode::Coalesced);
+
+    let w = rep.wear.as_ref().expect("wear summary");
+    assert_eq!(w.retirements, 1, "exactly the primary must exhaust");
+    assert_eq!(w.devices.len(), 2, "primary + spare in the summary");
+    assert!(w.devices[0].retired_at_s.is_some(), "primary records its retirement time");
+    assert!(!w.devices[0].spare);
+    assert!(w.devices[1].spare);
+    assert!(w.devices[1].retired_at_s.is_none(), "spare must outlive the trace");
+    assert!(w.devices[1].programs > 0, "spare must absorb the post-retirement stream");
+    assert_eq!(w.devices[0].erases, 4, "retired at blocks x P/E exactly");
+
+    // No arrival lost: every request is accounted accepted or rejected,
+    // accepted ones ran somewhere and finished after arriving.
+    assert_eq!(rep.accepted() + rep.rejected(), cfg.requests);
+    for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+        assert!(o.device.is_some(), "request {}: accepted without a device", o.id);
+        assert!(o.first_token.is_some() && o.completed >= o.arrival, "request {}", o.id);
+    }
+    assert!(
+        rep.outcomes.iter().any(|o| !o.rejected && o.device == Some(1)),
+        "hot-swapped spare must serve accepted requests"
+    );
+    assert_eq!(rep.device_utilization.len(), 2, "report covers the spare slot");
+    assert!(rep.device_utilization[1] > 0.0, "spare utilization shows up in the report");
+
+    // The coalesced event budget is unchanged by retirement/hot-swap:
+    // one arrival per request plus decode-done + retire per acceptance.
+    assert_eq!(events, rep.outcomes.len() as u64 + 2 * rep.accepted() as u64);
+    assert_wear_conserved(&rep, per_token);
+
+    // The direct backend walks the same trace shape through the same
+    // meters: same retirement, same conservation law.
+    let di = run_traffic_with_table(&sys, &model, &table, policy(), &cfg);
+    assert_eq!(di.wear.as_ref().unwrap().retirements, 1);
+    assert!(di.wear.as_ref().unwrap().devices[0].retired_at_s.is_some());
+    assert_wear_conserved(&di, per_token);
+}
+
+/// Multi-class traffic under wear accounting: per-class books must still
+/// close (arrivals = accepted + rejected per class, attainment a valid
+/// fraction) and the conservation law must hold with class-specific
+/// token ranges in the mix.
+#[test]
+fn per_class_accounting_stays_consistent_under_wear() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 2,
+        rate: 4.0,
+        requests: 600,
+        input_tokens: LenRange::new(64, 128),
+        output_tokens: LenRange::new(8, 16),
+        queue_capacity: 32,
+        followup: 0.2,
+        seed: 5,
+        workload: Some(WorkloadMix::preset("chat").expect("built-in preset")),
+        fleet: None,
+        wear: Some(WearConfig::new(10_000)),
+        arrival: None,
+    };
+    let per_token = model.kv_bytes_per_token(1.0) as u64;
+    let rep =
+        run_traffic_events(&sys, &model, &table, policy_from_name("slo-aware").unwrap(), &cfg);
+    assert_wear_conserved(&rep, per_token);
+    let classes = rep.class_reports();
+    assert!(!classes.is_empty());
+    assert_eq!(classes.iter().map(|c| c.arrivals).sum::<usize>(), rep.outcomes.len());
+    assert_eq!(classes.iter().map(|c| c.accepted).sum::<usize>(), rep.accepted());
+    for c in &classes {
+        assert_eq!(c.arrivals, c.accepted + c.rejected, "class {}", c.name);
+        assert!((0.0..=1.0).contains(&c.slo_attainment), "class {}", c.name);
+    }
+}
+
+#[test]
+fn diurnal_phases_shape_the_arrival_stream() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 20.0,
+        requests: 4000,
+        input_tokens: LenRange::new(8, 16),
+        output_tokens: LenRange::new(1, 4),
+        queue_capacity: 64,
+        followup: 0.0,
+        seed: 33,
+        workload: None,
+        fleet: None,
+        wear: None,
+        arrival: Some(ArrivalProcess::parse("40:0.25,40:2.0").expect("valid schedule")),
+    };
+    let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
+    assert_eq!(rep.outcomes.len(), cfg.requests);
+    let horizon =
+        rep.outcomes.iter().map(|o| o.arrival.secs()).fold(0.0f64, f64::max);
+    assert!(horizon > 160.0, "trace must span multiple 80 s cycles, got {horizon:.1} s");
+
+    // Seconds of [0, horizon) covered by the phase window [lo, hi) of an
+    // 80 s cycle, so per-phase empirical rates have exact denominators.
+    let covered = |lo: f64, hi: f64| -> f64 {
+        let cycles = (horizon / 80.0).floor();
+        let rem = horizon - cycles * 80.0;
+        cycles * (hi - lo) + (rem.min(hi) - lo).max(0.0)
+    };
+    for (lo, hi, mul) in [(0.0, 40.0, 0.25), (40.0, 80.0, 2.0)] {
+        let n = rep
+            .outcomes
+            .iter()
+            .filter(|o| {
+                let t = o.arrival.secs().rem_euclid(80.0);
+                (lo..hi).contains(&t)
+            })
+            .count() as f64;
+        let expect = cfg.rate * mul * covered(lo, hi);
+        let rel = (n - expect).abs() / expect;
+        assert!(
+            rel < 0.2,
+            "phase x{mul}: {n} arrivals vs {expect:.0} expected ({:.0}% apart)",
+            rel * 100.0
+        );
+    }
+}
+
+/// A schedule whose every phase multiplies by 1.0 must reproduce the
+/// stationary Poisson stream *byte for byte* — the gating invariant that
+/// keeps legacy invocations out of the new arrival-process code's blast
+/// radius.
+#[test]
+fn unit_multiplier_schedule_is_byte_identical_to_legacy_poisson() {
+    let (sys, model, table) = fixtures();
+    let mut cfg = TrafficConfig {
+        devices: 3,
+        rate: 20.0,
+        requests: 400,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 32,
+        followup: 0.5,
+        seed: 99,
+        workload: None,
+        fleet: None,
+        wear: None,
+        arrival: None,
+    };
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let legacy = run_traffic_events(&sys, &model, &table, ll(), &cfg);
+    cfg.arrival = Some(ArrivalProcess::parse("25:1.0,35:1.0").expect("valid schedule"));
+    let flat = run_traffic_events(&sys, &model, &table, ll(), &cfg);
+    assert_eq!(legacy, flat, "x1.0 phases must not move a single byte");
+    let di_legacy = {
+        let mut c = cfg.clone();
+        c.arrival = None;
+        run_traffic_with_table(&sys, &model, &table, ll(), &c)
+    };
+    let di_flat = run_traffic_with_table(&sys, &model, &table, ll(), &cfg);
+    assert_eq!(di_legacy, di_flat, "direct backend: same invariant");
+}
+
+/// The PR 7 regression guard: with wear off, nothing about a report —
+/// struct, render, or sweep point — may betray that wear accounting
+/// exists at all.
+#[test]
+fn wear_disabled_runs_report_exactly_as_before() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 2,
+        rate: 10.0,
+        requests: 300,
+        input_tokens: LenRange::new(32, 64),
+        output_tokens: LenRange::new(4, 8),
+        queue_capacity: 32,
+        followup: 0.3,
+        seed: 17,
+        workload: None,
+        fleet: None,
+        wear: None,
+        arrival: None,
+    };
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let rep = run_traffic_events(&sys, &model, &table, ll(), &cfg);
+    assert!(rep.wear.is_none());
+    assert!(!rep.render().contains("wear"), "wear-disabled render must not mention wear");
+    let point = run_traffic_point(&sys, &model, &table, ll(), &cfg);
+    assert!(point.wear_max_erases.is_none());
+    assert!(point.wear_total_erases.is_none());
+    assert!(point.wear_retirements.is_none());
+
+    // Flipping wear on populates all three — and only changes *additions*
+    // (the underlying trace is untouched: wear charges draw no RNG).
+    let mut weared = cfg.clone();
+    weared.wear = Some(WearConfig::new(100_000));
+    let wrep = run_traffic_events(&sys, &model, &table, ll(), &weared);
+    assert!(wrep.wear.is_some());
+    assert!(wrep.render().contains("wear:"));
+    assert_eq!(wrep.outcomes, rep.outcomes, "wear meters must not perturb the trace");
+    let wpoint = run_traffic_point(&sys, &model, &table, ll(), &weared);
+    assert!(wpoint.wear_max_erases.is_some() && wpoint.wear_retirements.is_some());
+}
+
+/// Acceptance: on a multi-day diurnal trace, `wear-aware` routing spreads
+/// erase load where `least-loaded` concentrates it (post-eviction slack
+/// makes the freshly-evicted device the standing KV minimum, so an idle
+/// fleet funnels fresh sessions at whichever device is already churning),
+/// extending fleet lifetime — max per-device erases strictly drop — for
+/// bounded p95 cost.
+#[test]
+fn wear_aware_extends_fleet_lifetime_on_a_diurnal_trace() {
+    let (sys, model, table) = fixtures();
+    let cfg = TrafficConfig {
+        devices: 4,
+        rate: 0.05,
+        requests: 9000,
+        input_tokens: LenRange::new(1024, 1536),
+        output_tokens: LenRange::new(4, 8),
+        queue_capacity: 64,
+        followup: 0.0,
+        seed: 42,
+        workload: None,
+        fleet: None,
+        wear: Some(WearConfig::new(1_000_000)),
+        arrival: Some(ArrivalProcess::parse("43200:0.5,43200:1.5").expect("valid schedule")),
+    };
+    let ll = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
+    let wa =
+        run_traffic_events(&sys, &model, &table, policy_from_name("wear-aware").unwrap(), &cfg);
+    assert!(ll.makespan.secs() > 150_000.0, "trace must span multiple diurnal cycles");
+
+    let (lw, ww) = (ll.wear.as_ref().unwrap(), wa.wear.as_ref().unwrap());
+    assert!(lw.max_erases() > 0 && ww.max_erases() > 0, "both traces must reach erase volume");
+    assert!(
+        ww.max_erases() < lw.max_erases(),
+        "wear-aware must lower the fleet-lifetime bound: {} vs {} max erases",
+        ww.max_erases(),
+        lw.max_erases()
+    );
+    // The stated latency bound for that lifetime win: p95 within 1.5x of
+    // least-loaded's on the same trace.
+    let (lp, wp) = (ll.latency_summary().p95, wa.latency_summary().p95);
+    assert!(wp <= lp * 1.5, "wear-aware p95 {wp:.3} s vs least-loaded {lp:.3} s exceeds 1.5x");
+}

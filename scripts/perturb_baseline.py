@@ -52,6 +52,9 @@ def self_test() -> int:
                 {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/accepted", "value": 1950.0, "unit": "requests"},
                 {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd", "value": 1.75, "unit": "usd/Mtok"},
                 {"name": "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j", "value": 420.5, "unit": "J/Mtok"},
+                # Wear-enabled shape (campaign --wear), lower-is-better keys.
+                {"name": "campaign/chat/wear-aware/event/r8/wear_max_erases", "value": 37.0, "unit": "erases"},
+                {"name": "campaign/chat/wear-aware/event/r8/wear_retirements", "value": 1.0, "unit": "devices"},
             ],
         }
 
@@ -73,6 +76,10 @@ def self_test() -> int:
         ("/cost_per_mtok_usd", "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/cost_per_mtok_usd"),
         ("/energy_per_mtok_j", "campaign/4xflash+1xgpu/chat/tier-aware/event/r8/energy_per_mtok_j"),
         ("/slo/chat", "campaign/chat/slo-aware/event/r8/slo/chat"),
+        # Wear metrics from `campaign --wear` runs are reachable too
+        # (lower-is-better: scaling one *down* would fake a regression).
+        ("/wear_max_erases", "campaign/chat/wear-aware/event/r8/wear_max_erases"),
+        ("/wear_retirements", "campaign/chat/wear-aware/event/r8/wear_retirements"),
     ]:
         hit = perturb(fixture(), suffix, 2.0)
         check(hit is not None and hit[0] == want, f"{suffix} resolved to {hit}")
@@ -88,7 +95,7 @@ def self_test() -> int:
         for f in failures:
             print(f"self-test FAIL: {f}", file=sys.stderr)
         return 1
-    print("self-test OK: 6 suffix-matching cases over legacy and fleet-segmented keys")
+    print("self-test OK: 8 suffix-matching cases over legacy, fleet-segmented, and wear keys")
     return 0
 
 
