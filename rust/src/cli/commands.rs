@@ -7,6 +7,7 @@ use crate::campaign::{
 use crate::circuit::TechParams;
 use crate::config::presets::table1_system;
 use crate::coordinator::router::{POLICY_NAMES, TIERED_POLICY_NAMES};
+use crate::dse::{codesign_metrics, render_codesign, run_codesign, run_codesign_seq, CodesignSpec};
 use crate::coordinator::{
     ArrivalProcess, DecodeMode, FleetSpec, LenRange, policy_from_name, render_slo_frontier,
     render_sweep, run_traffic_events_mode, run_traffic_with_table, simulate, sweep_rates,
@@ -21,8 +22,8 @@ use crate::runtime::{ArtifactBundle, ByteTokenizer, DecodeExecutor};
 use anyhow::{anyhow, bail, Context, Result};
 
 const COMMANDS: &[&str] = &[
-    "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "tiling",
-    "lifetime", "serve", "serve-sim", "campaign", "generate", "config", "energy", "all",
+    "help", "fig1", "fig5", "fig6", "fig9", "fig12", "fig14", "table2", "dse", "codesign",
+    "tiling", "lifetime", "serve", "serve-sim", "campaign", "generate", "config", "energy", "all",
 ];
 
 const HELP: &str = "\
@@ -39,6 +40,27 @@ experiments (regenerate the paper's tables/figures):
 
 tools:
   dse                  design-space selection (paper §III-B)
+  codesign [--rows LO:HI --cols LO:HI --stacks LO:HI]
+                       SLO-frontier-driven co-design campaign: for every
+                       plane geometry in the power-of-two grid (default:
+                       the §III-B selection grid, 84 candidates) derive
+                       the Table-I system, build its exact latency table,
+                       sweep serving rates (--rates 2,4,8,16,32) for
+                       --workload (default chat) under --policies
+                       (default least-loaded,round-robin,slo-aware),
+                       score each candidate by the max offered rate whose
+                       worst class still attains its SLOs >=
+                       --attainment (default 0.99), price die array area
+                       (--budget-mm2 overrides the paper's 7.5 mm2
+                       package budget) and decode energy per Mtok, and
+                       Pareto-rank over {sustained rate up, die mm2 down,
+                       J/Mtok down}. Prints the top --top N candidates
+                       (default 12, frontier first); --json PATH writes
+                       canonical codesign/<RxCxS>/<workload>/<metric>
+                       keys; --seq runs candidates sequentially
+                       (byte-identical to the parallel default). Also
+                       --devices, --requests, --seed, --model. See
+                       docs/CODESIGN.md
   tiling --m M --n N   search the best tiling for an MVM shape
   lifetime             SLC KV-region endurance projection
   energy [--model NAME --tokens L]
@@ -151,6 +173,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         }
         "table2" => print!("{}", exp::table2::render()),
         "dse" => cmd_dse(),
+        "codesign" => cmd_codesign(&args)?,
         "tiling" => cmd_tiling(&args)?,
         "lifetime" => cmd_lifetime(&args)?,
         "energy" => cmd_energy(&args)?,
@@ -181,6 +204,90 @@ fn cmd_dse() {
         crate::util::units::fmt_time(sel.t_pim),
         sel.density
     );
+}
+
+/// Parse a `--rows/--cols/--stacks` grid bound: `LO:HI`, both powers of
+/// two, `LO <= HI`.
+fn grid_bound(args: &Args, name: &str, default: (usize, usize)) -> Result<(usize, usize)> {
+    let Some(spec) = args.flag(name) else {
+        return Ok(default);
+    };
+    let Some((lo, hi)) = spec.split_once(':') else {
+        bail!("--{name} expects LO:HI (e.g. 256:2048), got {spec:?}");
+    };
+    let lo: usize =
+        lo.trim().parse().map_err(|_| anyhow!("bad --{name} low bound {lo:?} in {spec:?}"))?;
+    let hi: usize =
+        hi.trim().parse().map_err(|_| anyhow!("bad --{name} high bound {hi:?} in {spec:?}"))?;
+    if !lo.is_power_of_two() || !hi.is_power_of_two() || lo > hi {
+        bail!("--{name} needs power-of-two bounds with LO <= HI, got {lo}:{hi}");
+    }
+    Ok((lo, hi))
+}
+
+/// `repro codesign` — the SLO-frontier-driven co-design campaign
+/// ([`crate::dse::codesign`]; see `docs/CODESIGN.md`).
+fn cmd_codesign(args: &Args) -> Result<()> {
+    let model = OptModel::from_name(&args.flag_or("model", "opt-6.7b"))
+        .context("unknown model; use opt-{6.7b,13b,30b,66b,175b}")?;
+    let mut spec = CodesignSpec::new(model.shape());
+    spec.criteria.rows = grid_bound(args, "rows", spec.criteria.rows)?;
+    spec.criteria.cols = grid_bound(args, "cols", spec.criteria.cols)?;
+    spec.criteria.stacks = grid_bound(args, "stacks", spec.criteria.stacks)?;
+    spec.workload = args.flag_or("workload", &spec.workload);
+    if let Some(rates) = args.flag("rates") {
+        spec.rates = rates
+            .split(',')
+            .map(|part| {
+                part.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--rates expects comma-separated numbers, got {part:?}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(policies) = args.flag("policies") {
+        spec.policies =
+            policies.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    }
+    spec.attainment = args.f64_flag("attainment", spec.attainment)?;
+    if let Some(b) = args.flag("budget-mm2") {
+        spec.budget_mm2 =
+            Some(b.parse().map_err(|_| anyhow!("--budget-mm2 expects a number, got {b:?}"))?);
+    }
+    spec.devices = args.usize_flag("devices", spec.devices)?;
+    spec.requests = args.usize_flag("requests", spec.requests)?;
+    spec.seed = args.usize_flag("seed", spec.seed as usize)? as u64;
+    let top = args.usize_flag("top", 12)?;
+
+    let tech = TechParams::default();
+    let start = std::time::Instant::now();
+    let report = if args.bool_flag("seq") {
+        run_codesign_seq(&spec, &tech)?
+    } else {
+        run_codesign(&spec, &tech)?
+    };
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "co-design campaign: rows {}:{} x cols {}:{} x stacks {}:{}, {}, {} requests/point, \
+         seed {} ({:.2}s wall)",
+        spec.criteria.rows.0,
+        spec.criteria.rows.1,
+        spec.criteria.cols.0,
+        spec.criteria.cols.1,
+        spec.criteria.stacks.0,
+        spec.criteria.stacks.1,
+        model.shape().name,
+        spec.requests,
+        spec.seed,
+        wall,
+    );
+    print!("{}", render_codesign(&report, top));
+    if let Some(out) = args.flag("json") {
+        let json = codesign_metrics(&report);
+        json.write(std::path::Path::new(out))?;
+        println!("wrote {} codesign metrics to {out}", json.len());
+    }
+    Ok(())
 }
 
 fn cmd_tiling(args: &Args) -> Result<()> {
@@ -617,6 +724,61 @@ mod tests {
     #[test]
     fn dse_command_runs() {
         run(vec!["dse".into()]).unwrap();
+    }
+
+    fn codesign_tiny(extra: &[&str]) -> Vec<String> {
+        let mut argv: Vec<String> = vec![
+            "codesign".into(),
+            "--rows".into(),
+            "256:256".into(),
+            "--cols".into(),
+            "1024:2048".into(),
+            "--stacks".into(),
+            "128:128".into(),
+            "--rates".into(),
+            "8".into(),
+            "--policies".into(),
+            "least-loaded".into(),
+            "--devices".into(),
+            "2".into(),
+            "--requests".into(),
+            "20".into(),
+            "--top".into(),
+            "4".into(),
+        ];
+        argv.extend(extra.iter().map(|s| s.to_string()));
+        argv
+    }
+
+    #[test]
+    fn codesign_command_runs_parallel_and_sequential() {
+        run(codesign_tiny(&[])).unwrap();
+        run(codesign_tiny(&["--seq"])).unwrap();
+    }
+
+    #[test]
+    fn codesign_writes_json_metrics() {
+        let out = std::env::temp_dir().join("repro-codesign-cli-test.json");
+        let path = out.to_str().unwrap().to_string();
+        run(codesign_tiny(&["--json", &path])).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        assert!(text.contains("codesign/256x1024x128/chat/sustained_rate_req_s"), "{text}");
+        assert!(text.contains("codesign/256x2048x128/chat/die_mm2"), "{text}");
+        assert!(text.contains("codesign_frontier_size"), "{text}");
+    }
+
+    #[test]
+    fn codesign_rejects_bad_flags() {
+        assert!(run(vec!["codesign".into(), "--rows".into(), "256".into()]).is_err());
+        assert!(run(vec!["codesign".into(), "--rows".into(), "300:600".into()]).is_err());
+        assert!(run(vec!["codesign".into(), "--rows".into(), "512:256".into()]).is_err());
+        assert!(run(codesign_tiny(&["--rates", "abc"])).is_err());
+        assert!(run(codesign_tiny(&["--attainment", "1.5"])).is_err());
+        assert!(run(codesign_tiny(&["--budget-mm2", "-2"])).is_err());
+        assert!(run(codesign_tiny(&["--workload", "bogus-mix"])).is_err());
+        assert!(run(codesign_tiny(&["--policies", "fifo"])).is_err());
+        assert!(run(codesign_tiny(&["--model", "gpt-9"])).is_err());
     }
 
     #[test]

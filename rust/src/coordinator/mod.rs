@@ -144,6 +144,6 @@ pub use simulate::{simulate, Workload};
 pub use sink::{CollectSink, OutcomeSink, StreamingSink};
 pub use sweep::{
     ClassAttainment, max_sustained_rates, render_slo_frontier, render_sweep, SloFrontier,
-    sweep_rates, sweep_rates_threaded, SweepPoint,
+    sweep_rates, sweep_rates_seq, sweep_rates_threaded, SweepPoint,
 };
 pub use workload::{SloTarget, WorkloadClass, WorkloadMix};

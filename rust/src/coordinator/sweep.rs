@@ -238,6 +238,34 @@ pub fn sweep_rates(
     }))
 }
 
+/// Sequential twin of [`sweep_rates`]: the same validated (policy, rate)
+/// pairs through the same streaming event backend, in a plain loop. Each
+/// point is an independent deterministic computation, so the result is
+/// byte-equal to [`sweep_rates`] — asserted in this module's tests. The
+/// co-design campaign ([`crate::dse::codesign`]) uses this inside its
+/// per-candidate fan-out so parallelism lives at exactly one level
+/// (candidates, not candidate × point), avoiding nested scoped-thread
+/// oversubscription.
+pub fn sweep_rates_seq(
+    sys: &SystemConfig,
+    model: &ModelShape,
+    table: &LatencyTable,
+    base: &TrafficConfig,
+    rates: &[f64],
+    policies: &[&str],
+) -> Result<Vec<SweepPoint>> {
+    let pairs = sweep_pairs(rates, policies)?;
+    Ok(pairs
+        .iter()
+        .map(|&(p, r)| {
+            let mut cfg = base.clone();
+            cfg.rate = r;
+            let policy = policy_from_name(p).expect("policy validated above");
+            run_traffic_point(sys, model, table, policy, &cfg)
+        })
+        .collect())
+}
+
 /// Cross-check sweep: the direct-replay backend
 /// ([`run_traffic_with_table`]) over the same clamped-width worker
 /// scaffold, behind `serve-sim --sweep --threaded`. The two backends
@@ -468,6 +496,20 @@ mod tests {
         )
         .unwrap();
         assert_eq!(points, again);
+    }
+
+    #[test]
+    fn sequential_sweep_is_byte_equal_to_parallel() {
+        let sys = table1_system();
+        let model = OptModel::Opt6_7b.shape();
+        let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+        let rates = [20.0, 5.0, 10.0];
+        let policies = ["round-robin", "least-loaded"];
+        let par = sweep_rates(&sys, &model, &table, &base_cfg(), &rates, &policies).unwrap();
+        let seq = sweep_rates_seq(&sys, &model, &table, &base_cfg(), &rates, &policies).unwrap();
+        assert_eq!(par, seq);
+        check_points(&seq);
+        assert!(sweep_rates_seq(&sys, &model, &table, &base_cfg(), &[], &["rr"]).is_err());
     }
 
     #[test]

@@ -1,0 +1,453 @@
+//! SLO-frontier-driven co-design: close the loop between the plane-size
+//! DSE (paper §III-B) and the serving stack.
+//!
+//! The classic selection in [`super::select`] ranks candidate geometries
+//! by a kernel-latency proxy (`t_pim` under a budget, then density). The
+//! co-design campaign evaluates each candidate by what the paper's
+//! deployment actually cares about: for every plane geometry in a
+//! [`SelectionCriteria`] grid it derives a full [`SystemConfig`], builds
+//! the exact [`LatencyTable`], runs the serving rate sweep for a workload
+//! mix, reduces it with [`max_sustained_rates`] to the *max offered rate
+//! sustaining ≥ X% SLO attainment*, prices die area through
+//! [`AreaModel::die_array_mm2`] / [`DieBudget`], prices energy through
+//! the per-token [`EnergySchedule`], and Pareto-ranks the candidates
+//! over {sustained rate ↑, die mm² ↓, J/Mtok ↓} with the generic
+//! k-objective frontier in [`super::frontier`].
+//!
+//! `criteria.max_t_pim` is deliberately **not** applied here: a slow
+//! plane already pays for its latency through the latency table (it
+//! sustains a lower rate or misses its TPOT SLOs outright), so pruning
+//! by the kernel proxy would beg the question the campaign exists to
+//! answer.
+//!
+//! Candidates are embarrassingly parallel, so [`run_codesign`] fans them
+//! out on the shared [`fan_out_indexed`] scoped-thread scaffold with
+//! results landed by grid index; each candidate's internal rate sweep
+//! runs sequentially ([`sweep_rates_seq`]) so parallelism lives at
+//! exactly one level. The output is byte-equal to the sequential
+//! [`run_codesign_seq`] (asserted in `tests/codesign.rs`). Exposed as
+//! `repro codesign`; see `docs/CODESIGN.md`.
+
+use super::frontier::pareto_indices;
+use super::select::SelectionCriteria;
+use super::sweep::{sweep_grid, DsePoint};
+use crate::area::{AreaModel, DieBudget};
+use crate::circuit::TechParams;
+use crate::config::presets::table1_system;
+use crate::config::{PlaneConfig, SystemConfig};
+use crate::coordinator::router::{policy_from_name, POLICY_NAMES};
+use crate::coordinator::sweep::{
+    fan_out_indexed, max_sustained_rates, sweep_rates_seq, validate_rates, SloFrontier,
+};
+use crate::coordinator::{TrafficConfig, WorkloadMix};
+use crate::llm::{EnergySchedule, LatencyTable, ModelShape};
+use crate::util::benchkit::JsonEmitter;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+use anyhow::{bail, Result};
+
+/// One co-design campaign: the candidate grid plus the serving scenario
+/// every candidate is judged under.
+#[derive(Debug, Clone)]
+pub struct CodesignSpec {
+    /// Grid bounds (the `max_t_pim` field is ignored — see module docs).
+    pub criteria: SelectionCriteria,
+    /// Workload preset name or TOML path ([`WorkloadMix::resolve`]).
+    pub workload: String,
+    /// Offered arrival rates swept per candidate (requests/s).
+    pub rates: Vec<f64>,
+    /// Scheduling policies swept per candidate.
+    pub policies: Vec<String>,
+    /// Minimum per-class SLO attainment defining "sustained" (e.g. 0.99).
+    pub attainment: f64,
+    /// Die-area budget in mm²; `None` uses the paper's package budget
+    /// ([`DieBudget::default`], high end ≈ 7.5 mm²).
+    pub budget_mm2: Option<f64>,
+    pub devices: usize,
+    /// Requests simulated per (policy, rate) point.
+    pub requests: usize,
+    pub seed: u64,
+    pub model: ModelShape,
+}
+
+impl CodesignSpec {
+    /// Defaults mirroring `serve-sim --sweep`: the full §III-B grid, the
+    /// chat preset, all flash policies, 99% attainment, the paper budget.
+    pub fn new(model: ModelShape) -> CodesignSpec {
+        CodesignSpec {
+            criteria: SelectionCriteria::default(),
+            workload: "chat".to_string(),
+            rates: vec![2.0, 4.0, 8.0, 16.0, 32.0],
+            policies: POLICY_NAMES.iter().map(|p| p.to_string()).collect(),
+            attainment: 0.99,
+            budget_mm2: None,
+            devices: 4,
+            requests: 400,
+            seed: 42,
+            model,
+        }
+    }
+
+    /// Effective budget threshold in mm².
+    pub fn budget(&self) -> f64 {
+        self.budget_mm2.unwrap_or(DieBudget::default().per_die_mm2().1)
+    }
+
+    fn validate(&self) -> Result<()> {
+        validate_rates(&self.rates)?;
+        if self.policies.is_empty() {
+            bail!("codesign needs at least one policy");
+        }
+        for p in &self.policies {
+            if policy_from_name(p).is_none() {
+                bail!("unknown policy {p:?}");
+            }
+        }
+        if !(self.attainment > 0.0 && self.attainment <= 1.0) {
+            bail!("--attainment is a fraction; need 0 < a <= 1, got {}", self.attainment);
+        }
+        if let Some(b) = self.budget_mm2 {
+            if !(b.is_finite() && b > 0.0) {
+                bail!("--budget-mm2 must be positive and finite, got {b}");
+            }
+        }
+        if self.devices == 0 || self.requests == 0 {
+            bail!("--devices and --requests must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// One evaluated candidate geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodesignPoint {
+    pub plane: PlaneConfig,
+    /// Kernel-latency proxy (s), kept for comparison with the §III-B
+    /// ranking — not an objective here.
+    pub t_pim: f64,
+    /// Cell density (Gb/mm²).
+    pub density: f64,
+    /// Objective ↓: array area of one die at this geometry (mm²).
+    pub die_mm2: f64,
+    pub fits_budget: bool,
+    /// Objective ↓: decode energy per million tokens (J/Mtok) at the
+    /// mix's mean decode context.
+    pub energy_per_mtok: f64,
+    /// Objective ↑: best policy's worst-class max sustained rate
+    /// (requests/s); 0.0 when no swept rate sustains the attainment.
+    pub sustained_rate: f64,
+    /// Policy achieving `sustained_rate` (first in spec order on ties);
+    /// `"-"` when nothing sustains.
+    pub best_policy: String,
+    /// Full per-(policy, class) reduction of the candidate's sweep — the
+    /// same rows `serve-sim --sweep` prints as its SLO frontier.
+    pub frontiers: Vec<SloFrontier>,
+    /// Member of the {rate ↑, mm² ↓, J/Mtok ↓} Pareto frontier.
+    pub on_frontier: bool,
+}
+
+impl CodesignPoint {
+    /// Canonical `RxCxS` geometry key (e.g. `256x2048x128`).
+    pub fn geometry(&self) -> String {
+        format!("{}x{}x{}", self.plane.n_row, self.plane.n_col, self.plane.n_stack)
+    }
+}
+
+/// Campaign result: every candidate in grid order plus the frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodesignReport {
+    /// Resolved mix name (preset or TOML `name`).
+    pub workload: String,
+    pub attainment: f64,
+    pub budget_mm2: f64,
+    /// Candidates in canonical grid order (rows ↑, cols ↑, stacks ↑).
+    pub points: Vec<CodesignPoint>,
+    /// Ascending indices into `points` of the Pareto frontier.
+    pub frontier: Vec<usize>,
+}
+
+/// Derive the candidate's full system: the Table-I organization with its
+/// plane swapped — the same organization every candidate shares, so the
+/// geometry is the only moving part.
+pub fn derive_system(plane: PlaneConfig) -> SystemConfig {
+    SystemConfig {
+        name: format!("codesign-{}x{}x{}", plane.n_row, plane.n_col, plane.n_stack),
+        plane,
+        ..table1_system()
+    }
+}
+
+/// Share-weighted mean decode context of a mix (mean prompt plus half
+/// the mean output), the context the energy objective is priced at.
+pub fn representative_context(mix: &WorkloadMix) -> usize {
+    let total: f64 = mix.classes().iter().map(|c| c.share).sum();
+    let l = mix
+        .classes()
+        .iter()
+        .map(|c| {
+            let l_in = (c.input_tokens.lo + c.input_tokens.hi) as f64 / 2.0;
+            let l_out = (c.output_tokens.lo + c.output_tokens.hi) as f64 / 2.0;
+            c.share * (l_in + l_out / 2.0)
+        })
+        .sum::<f64>()
+        / total;
+    l.round() as usize
+}
+
+/// Evaluate one candidate end to end: latency table → rate sweep → SLO
+/// frontier → area and energy pricing.
+fn evaluate(dse: &DsePoint, spec: &CodesignSpec, tech: &TechParams, mix: &WorkloadMix) -> CodesignPoint {
+    let sys = derive_system(dse.plane);
+    let table = LatencyTable::build(&sys, tech, spec.model.clone());
+    let mut cfg = TrafficConfig::default_for(spec.devices);
+    cfg.requests = spec.requests;
+    cfg.seed = spec.seed;
+    cfg.workload = Some(mix.clone());
+    let policies: Vec<&str> = spec.policies.iter().map(String::as_str).collect();
+    let points = sweep_rates_seq(&sys, &spec.model, &table, &cfg, &spec.rates, &policies)
+        .expect("spec validated before the campaign ran");
+    let frontiers = max_sustained_rates(&points, spec.attainment);
+
+    // A policy sustains the rate its *worst* class still attains at;
+    // the candidate scores its best policy (first in spec order on ties).
+    let mut sustained_rate = 0.0;
+    let mut best_policy = "-".to_string();
+    for p in &spec.policies {
+        let worst = frontiers
+            .iter()
+            .filter(|f| f.policy == *p)
+            .map(|f| f.max_rate.unwrap_or(0.0))
+            .min_by(f64::total_cmp)
+            .unwrap_or(0.0);
+        if worst > sustained_rate {
+            sustained_rate = worst;
+            best_policy = p.clone();
+        }
+    }
+
+    let die_mm2 = AreaModel::new(tech).die_array_mm2(&sys);
+    let energy = EnergySchedule::new(&sys, tech, spec.model.clone());
+    let energy_per_mtok = energy.token_energy(representative_context(mix)).total() * 1e6;
+    CodesignPoint {
+        plane: dse.plane,
+        t_pim: dse.t_pim,
+        density: dse.density,
+        die_mm2,
+        fits_budget: die_mm2 <= spec.budget(),
+        energy_per_mtok,
+        sustained_rate,
+        best_policy,
+        frontiers,
+        on_frontier: false, // ranked below, over the whole grid
+    }
+}
+
+/// Pareto-rank evaluated candidates over {rate ↑, mm² ↓, J/Mtok ↓} and
+/// assemble the report.
+fn rank(spec: &CodesignSpec, mix_name: &str, mut points: Vec<CodesignPoint>) -> Result<CodesignReport> {
+    let objectives: Vec<[f64; 3]> =
+        points.iter().map(|p| [-p.sustained_rate, p.die_mm2, p.energy_per_mtok]).collect();
+    let frontier = pareto_indices(&objectives)?;
+    for &i in &frontier {
+        points[i].on_frontier = true;
+    }
+    Ok(CodesignReport {
+        workload: mix_name.to_string(),
+        attainment: spec.attainment,
+        budget_mm2: spec.budget(),
+        points,
+        frontier,
+    })
+}
+
+fn candidates(spec: &CodesignSpec, tech: &TechParams) -> Result<(Vec<DsePoint>, WorkloadMix)> {
+    spec.validate()?;
+    let mix = WorkloadMix::resolve(&spec.workload)?;
+    let c = &spec.criteria;
+    let grid = sweep_grid(c.rows, c.cols, c.stacks, tech);
+    if grid.is_empty() {
+        bail!(
+            "empty candidate grid for rows {:?} cols {:?} stacks {:?} (bounds must be powers of two)",
+            c.rows,
+            c.cols,
+            c.stacks
+        );
+    }
+    Ok((grid, mix))
+}
+
+/// Run the campaign, candidates fanned out over scoped threads with
+/// results landed by grid index — byte-equal to [`run_codesign_seq`].
+pub fn run_codesign(spec: &CodesignSpec, tech: &TechParams) -> Result<CodesignReport> {
+    let (grid, mix) = candidates(spec, tech)?;
+    let points = fan_out_indexed(&grid, |d| evaluate(d, spec, tech, &mix));
+    rank(spec, mix.name(), points)
+}
+
+/// Sequential twin of [`run_codesign`] — the determinism oracle.
+pub fn run_codesign_seq(spec: &CodesignSpec, tech: &TechParams) -> Result<CodesignReport> {
+    let (grid, mix) = candidates(spec, tech)?;
+    let points = grid.iter().map(|d| evaluate(d, spec, tech, &mix)).collect();
+    rank(spec, mix.name(), points)
+}
+
+/// Display order of the human table: frontier first, then sustained rate
+/// ↓, area ↑, energy ↑, geometry key — a deterministic total order.
+fn display_order(points: &[CodesignPoint]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&i, &j| {
+        let (a, b) = (&points[i], &points[j]);
+        b.on_frontier
+            .cmp(&a.on_frontier)
+            .then(b.sustained_rate.total_cmp(&a.sustained_rate))
+            .then(a.die_mm2.total_cmp(&b.die_mm2))
+            .then(a.energy_per_mtok.total_cmp(&b.energy_per_mtok))
+            .then(a.geometry().cmp(&b.geometry()))
+    });
+    order
+}
+
+/// Render the campaign as an ASCII table of the top `top` candidates in
+/// [`display_order`], with a one-line summary header.
+pub fn render_codesign(report: &CodesignReport, top: usize) -> String {
+    let mut out = format!(
+        "codesign: {} candidate(s), {} on the {{rate, mm2, J/Mtok}} frontier \
+         (workload {}, >= {:.0}% SLO attainment, budget {:.2} mm2)\n",
+        report.points.len(),
+        report.frontier.len(),
+        report.workload,
+        report.attainment * 100.0,
+        report.budget_mm2,
+    );
+    let mut t = Table::new(&[
+        "geometry",
+        "frontier",
+        "rate req/s",
+        "policy",
+        "die mm2",
+        "fits",
+        "J/Mtok",
+        "T_PIM",
+        "Gb/mm2",
+    ]);
+    for &i in display_order(&report.points).iter().take(top) {
+        let p = &report.points[i];
+        t.row(&[
+            p.geometry(),
+            if p.on_frontier { "*".to_string() } else { "".to_string() },
+            if p.sustained_rate > 0.0 { format!("{:.1}", p.sustained_rate) } else { "none".into() },
+            p.best_policy.clone(),
+            format!("{:.2}", p.die_mm2),
+            if p.fits_budget { "yes".to_string() } else { "no".to_string() },
+            format!("{:.1}", p.energy_per_mtok),
+            fmt_time(p.t_pim),
+            format!("{:.2}", p.density),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Canonical metrics document: per candidate, in grid order,
+/// `codesign/<RxCxS>/<workload>/<metric>` keys, followed by the campaign
+/// summary counts — deterministic byte-for-byte for a given spec (the CI
+/// codesign-smoke guard `cmp`s two runs).
+pub fn codesign_metrics(report: &CodesignReport) -> JsonEmitter {
+    let mut json = JsonEmitter::new();
+    for p in &report.points {
+        let key = format!("codesign/{}/{}", p.geometry(), report.workload);
+        json.metric(&format!("{key}/sustained_rate_req_s"), p.sustained_rate, "requests/s");
+        json.metric(&format!("{key}/die_mm2"), p.die_mm2, "mm2");
+        json.metric(&format!("{key}/energy_per_mtok_j"), p.energy_per_mtok, "J/Mtok");
+        json.metric(&format!("{key}/t_pim_s"), p.t_pim, "s");
+        json.metric(&format!("{key}/density_gb_mm2"), p.density, "Gb/mm2");
+        json.metric(&format!("{key}/fits_budget"), if p.fits_budget { 1.0 } else { 0.0 }, "bool");
+        json.metric(&format!("{key}/on_frontier"), if p.on_frontier { 1.0 } else { 0.0 }, "bool");
+    }
+    json.metric("codesign_candidates", report.points.len() as f64, "geometries");
+    json.metric("codesign_frontier_size", report.frontier.len() as f64, "geometries");
+    json
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::size_a_plane;
+    use crate::llm::OptModel;
+
+    /// A one-geometry, one-policy spec small enough for unit tests; the
+    /// cross-grid properties live in `tests/codesign.rs`.
+    fn tiny_spec() -> CodesignSpec {
+        CodesignSpec {
+            criteria: SelectionCriteria {
+                rows: (256, 256),
+                cols: (2048, 2048),
+                stacks: (128, 128),
+                ..Default::default()
+            },
+            rates: vec![8.0],
+            policies: vec!["least-loaded".to_string()],
+            devices: 2,
+            requests: 30,
+            ..CodesignSpec::new(OptModel::Opt6_7b.shape())
+        }
+    }
+
+    #[test]
+    fn single_candidate_campaign_is_its_own_frontier() {
+        let report = run_codesign(&tiny_spec(), &TechParams::default()).unwrap();
+        assert_eq!(report.points.len(), 1);
+        assert_eq!(report.frontier, vec![0]);
+        let p = &report.points[0];
+        assert_eq!(p.plane, size_a_plane());
+        assert_eq!(p.geometry(), "256x2048x128");
+        assert!(p.on_frontier);
+        assert!(p.die_mm2 > 0.0 && p.energy_per_mtok > 0.0 && p.t_pim > 0.0);
+        assert!(p.fits_budget, "Size A must fit the paper budget, got {} mm2", p.die_mm2);
+        assert_eq!(p.frontiers.len(), 1, "one policy x one chat class");
+        let rendered = render_codesign(&report, 10);
+        assert!(rendered.contains("256x2048x128") && rendered.contains("frontier"), "{rendered}");
+        let json = codesign_metrics(&report);
+        assert_eq!(json.len(), 7 + 2);
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_input() {
+        let tech = TechParams::default();
+        let mut s = tiny_spec();
+        s.rates.clear();
+        assert!(run_codesign(&s, &tech).is_err());
+        let mut s = tiny_spec();
+        s.policies = vec!["fifo".to_string()];
+        assert!(run_codesign(&s, &tech).is_err());
+        let mut s = tiny_spec();
+        s.attainment = 1.5;
+        assert!(run_codesign(&s, &tech).is_err());
+        let mut s = tiny_spec();
+        s.budget_mm2 = Some(-1.0);
+        assert!(run_codesign(&s, &tech).is_err());
+        let mut s = tiny_spec();
+        s.workload = "bogus-mix".to_string();
+        assert!(run_codesign(&s, &tech).is_err());
+        let mut s = tiny_spec();
+        s.criteria.rows = (300, 300); // not a power of two -> empty grid
+        assert!(run_codesign(&s, &tech).is_err());
+    }
+
+    #[test]
+    fn representative_context_weights_by_share() {
+        let mix = WorkloadMix::preset("chat").unwrap();
+        // chat: mean input 192, mean output 48 -> 192 + 24 = 216.
+        assert_eq!(representative_context(&mix), 216);
+    }
+
+    #[test]
+    fn derived_system_keeps_the_table1_organization() {
+        let sys = derive_system(size_a_plane());
+        let base = table1_system();
+        assert_eq!(sys.org, base.org);
+        assert_eq!(sys.plane, base.plane);
+        assert_eq!(sys.name, "codesign-256x2048x128");
+        sys.validate().unwrap();
+    }
+}

@@ -1,0 +1,170 @@
+//! Generic k-objective Pareto dominance frontier.
+//!
+//! Every objective is **minimized**; callers negate maximize objectives
+//! (the co-design campaign ranks {sustained rate ↑, die mm² ↓, J/Mtok ↓}
+//! as `[-rate, mm2, j_per_mtok]`). Two entry points:
+//!
+//! * [`dominates`] — weak Pareto dominance of one vector over another.
+//! * [`pareto_indices`] — indices of the non-dominated points of a set,
+//!   in ascending input order. Two-objective inputs take an
+//!   O(n log n) sort + scan; higher dimensions fall back to the pairwise
+//!   check (the grids here are tens-to-hundreds of candidates).
+//!
+//! NaN objectives are rejected with an error rather than ordered
+//! arbitrarily: dominance is not meaningful against NaN, and the legacy
+//! frontier's `partial_cmp(..).unwrap()` panic is exactly the failure
+//! mode this module replaces. Infinities are legal and compare by IEEE
+//! order (an unattainable objective simply never dominates there).
+//!
+//! The result is a pure function of the *multiset* of points: it is
+//! invariant under input permutation (up to the index relabeling), and
+//! duplicate points are all kept — equal vectors never dominate each
+//! other, since dominance requires strict improvement somewhere
+//! (`tests/codesign.rs` holds both properties under seeded random
+//! vectors).
+
+use anyhow::{bail, Result};
+
+/// Weak Pareto dominance under minimization: `a` is no worse than `b` in
+/// every objective and strictly better in at least one. `false` for
+/// vectors of unequal length and for `a == b` (never self-dominating).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x <= y)
+        && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+/// Validate a point set: every vector the same arity, no NaN.
+fn validate<P: AsRef<[f64]>>(points: &[P]) -> Result<()> {
+    let Some(first) = points.first() else {
+        return Ok(());
+    };
+    let k = first.as_ref().len();
+    for (i, p) in points.iter().enumerate() {
+        let p = p.as_ref();
+        if p.len() != k {
+            bail!("objective vector {i} has {} objectives, expected {k}", p.len());
+        }
+        if p.iter().any(|v| v.is_nan()) {
+            bail!("objective vector {i} contains NaN: {p:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Indices of the non-dominated points, ascending. Errors on NaN
+/// objectives or mismatched vector lengths; the empty set yields an
+/// empty frontier.
+pub fn pareto_indices<P: AsRef<[f64]>>(points: &[P]) -> Result<Vec<usize>> {
+    validate(points)?;
+    let k = points.first().map_or(0, |p| p.as_ref().len());
+    Ok(if k == 2 { frontier_2d(points) } else { frontier_kd(points) })
+}
+
+/// Two-objective sort + scan. Sorting by (x ↑, y ↑) puts every possible
+/// dominator of a point before it, so one pass suffices: a point is
+/// dominated iff some strictly-smaller-x point has y ≤ its own, or an
+/// equal-x point has strictly smaller y (the head of its run).
+fn frontier_2d<P: AsRef<[f64]>>(points: &[P]) -> Vec<usize> {
+    // `+ 0.0` canonicalizes -0.0 to 0.0 so `total_cmp` order, run
+    // grouping, and IEEE dominance comparisons all agree.
+    let pts: Vec<[f64; 2]> = points
+        .iter()
+        .map(|p| {
+            let p = p.as_ref();
+            [p[0] + 0.0, p[1] + 0.0]
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..pts.len()).collect();
+    order.sort_by(|&i, &j| pts[i][0].total_cmp(&pts[j][0]).then(pts[i][1].total_cmp(&pts[j][1])));
+    let mut keep = Vec::new();
+    // Min y among points with strictly smaller x than the current run.
+    let mut best_prev = f64::INFINITY;
+    let mut i = 0;
+    while i < order.len() {
+        let x = pts[order[i]][0];
+        let run_min_y = pts[order[i]][1];
+        let mut j = i;
+        while j < order.len() && pts[order[j]][0] == x {
+            let y = pts[order[j]][1];
+            if best_prev > y && run_min_y >= y {
+                keep.push(order[j]);
+            }
+            j += 1;
+        }
+        best_prev = best_prev.min(run_min_y);
+        i = j;
+    }
+    keep.sort_unstable();
+    keep
+}
+
+/// General-k pairwise scan (validated input, so plain `<`/`<=` are total
+/// here). Quadratic, which is fine at campaign scale.
+fn frontier_kd<P: AsRef<[f64]>>(points: &[P]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|q| dominates(q.as_ref(), points[i].as_ref())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_requires_strict_improvement() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 3.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[1.0, 3.0]), "equal vectors never dominate");
+        assert!(!dominates(&[0.5, 4.0], &[1.0, 3.0]), "trade-offs are incomparable");
+        assert!(!dominates(&[1.0], &[1.0, 2.0]), "arity mismatch");
+        assert!(dominates(&[-0.0, 1.0], &[0.0, 2.0]), "-0.0 compares equal to 0.0");
+    }
+
+    #[test]
+    fn two_objective_frontier_matches_pairwise_reference() {
+        // A grid with ties, duplicates, and an inf: the fast path must
+        // agree with the brute-force definition exactly.
+        let pts: Vec<[f64; 2]> = vec![
+            [1.0, 5.0],
+            [2.0, 3.0],
+            [2.0, 3.0], // duplicate — both survive
+            [2.0, 4.0], // equal-x, worse y — dominated by the run head
+            [3.0, 3.0], // dominated by [2,3]
+            [4.0, 1.0],
+            [5.0, f64::INFINITY],
+            [0.0, 9.0],
+        ];
+        let got = pareto_indices(&pts).unwrap();
+        let want = frontier_kd(&pts);
+        assert_eq!(got, want);
+        assert_eq!(got, vec![0, 1, 2, 5, 7]);
+    }
+
+    #[test]
+    fn three_objective_frontier_keeps_trade_offs() {
+        let pts: Vec<[f64; 3]> = vec![
+            [1.0, 9.0, 9.0],
+            [9.0, 1.0, 9.0],
+            [9.0, 9.0, 1.0],
+            [2.0, 9.0, 9.0], // dominated by the first
+            [1.0, 9.0, 9.0], // duplicate of the first — kept
+        ];
+        assert_eq!(pareto_indices(&pts).unwrap(), vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty: Vec<[f64; 2]> = Vec::new();
+        assert!(pareto_indices(&empty).unwrap().is_empty());
+        assert_eq!(pareto_indices(&[[3.0]]).unwrap(), vec![0]);
+        assert_eq!(pareto_indices(&[[2.0], [1.0], [1.0]]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn nan_and_arity_mismatch_are_errors() {
+        assert!(pareto_indices(&[[1.0, f64::NAN]]).is_err());
+        assert!(pareto_indices(&[vec![1.0, 2.0], vec![1.0]]).is_err());
+        assert!(pareto_indices(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, f64::NAN]]).is_err());
+    }
+}

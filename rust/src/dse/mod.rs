@@ -1,12 +1,22 @@
 //! Design-space exploration of the 3D NAND plane size (paper §III-B,
 //! Fig. 6): sweep `N_row × N_col × N_stack`, evaluate latency / energy /
 //! density, and select the configuration that maximizes cell density under
-//! the PIM-latency budget.
+//! the PIM-latency budget. The [`codesign`] campaign closes the loop with
+//! the serving stack: candidates are Pareto-ranked ([`frontier`]) by the
+//! SLO frontier they sustain, the die area they cost, and their energy
+//! per token — not by the kernel-latency proxy alone.
 
+pub mod codesign;
+pub mod frontier;
 pub mod pareto;
 pub mod select;
 pub mod sweep;
 
+pub use codesign::{
+    codesign_metrics, render_codesign, run_codesign, run_codesign_seq, CodesignPoint,
+    CodesignReport, CodesignSpec,
+};
+pub use frontier::{dominates, pareto_indices};
 pub use pareto::pareto_frontier;
 pub use select::{select_plane, SelectionCriteria};
 pub use sweep::{fig6_sweeps, sweep_grid, DsePoint, SweepAxis};

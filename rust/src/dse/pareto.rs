@@ -1,22 +1,27 @@
 //! Pareto analysis of the latency/density trade-off (paper §III-A:
 //! "there is a trade-off between the PIM latency and the cell density").
+//!
+//! A thin wrapper over the generic k-objective frontier in
+//! [`super::frontier`]: latency minimizes directly, density maximizes by
+//! negation, and the 2-objective fast path (sort + scan) replaces the old
+//! quadratic pairwise check. Points whose latency or density is NaN are
+//! dropped up front — a NaN is never on the frontier and never dominates
+//! anything (the old code's `partial_cmp(..).unwrap()` panicked on it).
 
+use super::frontier::pareto_indices;
 use super::sweep::DsePoint;
 
-/// The (latency ↓, density ↑) Pareto frontier, sorted by latency.
-/// A point is dominated if another point has both lower-or-equal latency
-/// and higher-or-equal density (strictly better in at least one).
+/// The (latency ↓, density ↑) Pareto frontier, sorted by latency, with
+/// equal-plane duplicates collapsed. A point is dominated if another has
+/// both lower-or-equal latency and higher-or-equal density (strictly
+/// better in at least one). NaN-valued points are silently dropped.
 pub fn pareto_frontier(points: &[DsePoint]) -> Vec<DsePoint> {
-    let mut frontier: Vec<DsePoint> = Vec::new();
-    for p in points {
-        let dominated = points.iter().any(|q| {
-            (q.t_pim <= p.t_pim && q.density > p.density) || (q.t_pim < p.t_pim && q.density >= p.density)
-        });
-        if !dominated {
-            frontier.push(p.clone());
-        }
-    }
-    frontier.sort_by(|a, b| a.t_pim.partial_cmp(&b.t_pim).unwrap());
+    let finite: Vec<&DsePoint> =
+        points.iter().filter(|p| !p.t_pim.is_nan() && !p.density.is_nan()).collect();
+    let objectives: Vec<[f64; 2]> = finite.iter().map(|p| [p.t_pim, -p.density]).collect();
+    let keep = pareto_indices(&objectives).expect("NaN objectives filtered above");
+    let mut frontier: Vec<DsePoint> = keep.into_iter().map(|i| finite[i].clone()).collect();
+    frontier.sort_by(|a, b| a.t_pim.total_cmp(&b.t_pim));
     frontier.dedup_by(|a, b| a.plane == b.plane);
     frontier
 }
@@ -52,5 +57,23 @@ mod tests {
                 assert!(!strictly_dominates, "frontier point {:?} dominated by {:?}", p.plane, q.plane);
             }
         }
+    }
+
+    #[test]
+    fn nan_points_are_dropped_not_panicked() {
+        let tech = TechParams::default();
+        let mut grid = sweep_grid((64, 256), (256, 1024), (32, 128), &tech);
+        let clean = pareto_frontier(&grid);
+        // Poison one copy of every point: NaN latency on the first, NaN
+        // density on the second. The old implementation panicked here.
+        let mut a = grid[0].clone();
+        a.t_pim = f64::NAN;
+        let mut b = grid[1].clone();
+        b.density = f64::NAN;
+        grid.push(a);
+        grid.push(b);
+        let f = pareto_frontier(&grid);
+        assert!(f.iter().all(|p| !p.t_pim.is_nan() && !p.density.is_nan()));
+        assert_eq!(f.len(), clean.len(), "NaN points must not displace real ones");
     }
 }

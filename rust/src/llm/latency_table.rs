@@ -22,6 +22,12 @@
 //! One `Arc<LatencyTable>` is shared by every serving backend, sweep
 //! point, and pool worker; there is no per-thread cache to warm and no
 //! lock to take.
+//!
+//! Nothing here assumes the Table-I plane: the co-design campaign
+//! ([`crate::dse::codesign`]) builds one table per candidate geometry in
+//! its grid, and `tests/latency_table.rs` pins table-vs-exact-schedule
+//! agreement at the grid's corner geometries (smallest and largest), not
+//! just the default system.
 
 use super::model_config::ModelShape;
 use super::schedule::TokenSchedule;

@@ -5,9 +5,11 @@
 
 use flashpim::circuit::TechParams;
 use flashpim::config::presets::table1_system;
+use flashpim::config::{CellKind, PlaneConfig};
 use flashpim::coordinator::{
     policy_from_name, run_traffic, run_traffic_with_table, LenRange, TrafficConfig,
 };
+use flashpim::dse::codesign::derive_system;
 use flashpim::llm::model_config::OptModel;
 use flashpim::llm::{LatencyTable, TokenSchedule};
 use flashpim::util::testkit::check;
@@ -47,6 +49,38 @@ fn table_matches_exact_schedule_within_1pct() {
             Err(format!("l={l}: table {approx} vs exact {truth} ({:.3}% off)", err * 100.0))
         }
     });
+}
+
+#[test]
+fn table_matches_exact_schedule_on_extreme_grid_geometries() {
+    // The co-design campaign trusts `LatencyTable::build` for every
+    // geometry in the `SelectionCriteria` grid, not just Table I. Guard
+    // the corners: the smallest (256×256×32) and largest (2048×16384×128)
+    // in-grid planes must agree with the exact `TokenSchedule` pointwise,
+    // like the default system does.
+    let tech = TechParams::default();
+    let model = OptModel::Opt6_7b.shape();
+    for (r, c, s) in [(256, 256, 32), (2048, 16384, 128)] {
+        let sys = derive_system(PlaneConfig::new(r, c, s, CellKind::Qlc));
+        sys.validate().unwrap();
+        let table = LatencyTable::build(&sys, &tech, model.clone());
+        let mut exact = TokenSchedule::new(&sys, &tech, model.clone());
+        let max = table.max_context();
+        check(&format!("codesign geometry {r}x{c}x{s} table vs exact"), 32, |g| {
+            let l = g.usize_in(1, max + 1);
+            let approx = table.tpot(l);
+            let truth = exact.tpot(l);
+            if !(truth.is_finite() && truth > 0.0) {
+                return Err(format!("l={l}: exact schedule gave {truth}"));
+            }
+            let err = (approx - truth).abs() / truth;
+            if err < 0.01 {
+                Ok(())
+            } else {
+                Err(format!("l={l}: table {approx} vs exact {truth} ({:.3}% off)", err * 100.0))
+            }
+        });
+    }
 }
 
 #[test]
