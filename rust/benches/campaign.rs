@@ -44,9 +44,12 @@ fn main() {
         workloads: vec!["chat".into()],
         backends: Backend::ALL.to_vec(),
         rates: vec![8.0, 32.0],
+        fleets: Vec::new(),
         devices: 4,
         requests: env_usize("BENCH_CAMPAIGN_REQUESTS", 2000),
         seed: 7,
+        wear: None,
+        faults: None,
     };
     let n = slice.expand().expect("slice expands").len();
     let r = quick("campaign slice (2 policies x 2 rates x 2 backends)", || {

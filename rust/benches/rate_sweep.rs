@@ -41,6 +41,7 @@ fn main() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     quick("event run: 2k requests, 4 devices", || {
         run_traffic_events(

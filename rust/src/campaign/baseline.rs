@@ -34,6 +34,7 @@ pub fn direction_of(name: &str) -> Direction {
     if name.contains("/slo/")
         || name.ends_with("/accepted")
         || name.ends_with("/throughput_tok_s")
+        || name.ends_with("/faults_availability")
     {
         return Direction::HigherBetter;
     }
@@ -47,6 +48,9 @@ pub fn direction_of(name: &str) -> Direction {
         || name.ends_with("/wear_max_erases")
         || name.ends_with("/wear_total_erases")
         || name.ends_with("/wear_retirements")
+        || name.ends_with("/faults_failed")
+        || name.ends_with("/faults_shed")
+        || name.ends_with("/faults_degraded_s")
     {
         return Direction::LowerBetter;
     }
@@ -291,6 +295,15 @@ mod tests {
         assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_max_erases"), down);
         assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_total_erases"), down);
         assert_eq!(direction_of("campaign/chat/wear-aware/event/r8/wear_retirements"), down);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/faults_availability"), up);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/faults_failed"), down);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/faults_shed"), down);
+        assert_eq!(direction_of("campaign/chat/ll/event/r8/faults_degraded_s"), down);
+        assert_eq!(
+            direction_of("campaign/chat/ll/event/r8/faults_retries"),
+            Direction::Info,
+            "retry counts are informational, not gated"
+        );
         assert_eq!(direction_of("campaign_wall_s"), Direction::Info);
         assert_eq!(direction_of("sweep_frontier_wall_s"), Direction::Info);
         assert_eq!(direction_of("campaign_scenarios"), Direction::Info);

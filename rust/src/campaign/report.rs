@@ -49,8 +49,9 @@ pub fn scenario_key(s: &Scenario) -> String {
 /// [`scenario_key`]. Per-class SLO attainment lands as
 /// `<key>/slo/<class>`; fleet scenarios add `cost_per_mtok_usd` and
 /// `energy_per_mtok_j`; wear-enabled scenarios add `wear_max_erases`,
-/// `wear_total_erases`, and `wear_retirements` (absent — not zero — when
-/// wear accounting is off, so legacy documents stay byte-identical).
+/// `wear_total_erases`, and `wear_retirements`; fault-injected scenarios
+/// add the `faults_*` reliability keys. Each group is absent — not zero —
+/// when its accounting is off, so legacy documents stay byte-identical.
 pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     let key = scenario_key(&o.scenario);
     let p = &o.point;
@@ -75,6 +76,27 @@ pub fn emit_outcome(json: &mut JsonEmitter, o: &CampaignOutcome) {
     }
     if let Some(r) = p.wear_retirements {
         json.metric(&format!("{key}/wear_retirements"), r as f64, "devices");
+    }
+    if let Some(a) = p.faults_availability {
+        json.metric(&format!("{key}/faults_availability"), a, "fraction");
+    }
+    if let Some(n) = p.faults_failed {
+        json.metric(&format!("{key}/faults_failed"), n as f64, "requests");
+    }
+    if let Some(n) = p.faults_retries {
+        json.metric(&format!("{key}/faults_retries"), n as f64, "attempts");
+    }
+    if let Some(n) = p.faults_failovers {
+        json.metric(&format!("{key}/faults_failovers"), n as f64, "requests");
+    }
+    if let Some(n) = p.faults_shed {
+        json.metric(&format!("{key}/faults_shed"), n as f64, "requests");
+    }
+    if let Some(n) = p.faults_reprefill_tok {
+        json.metric(&format!("{key}/faults_reprefill_tok"), n as f64, "tokens");
+    }
+    if let Some(s) = p.faults_degraded_s {
+        json.metric(&format!("{key}/faults_degraded_s"), s, "s");
     }
     for c in &p.class_attainment {
         json.metric(&format!("{key}/slo/{}", c.class), c.attainment, "fraction");
@@ -105,6 +127,7 @@ pub fn campaign_metrics(outcomes: &[CampaignOutcome], wall_s: Option<f64>) -> Js
 pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
     let fleeted = outcomes.iter().any(|o| o.scenario.fleet.is_some());
     let weared = outcomes.iter().any(|o| o.point.wear_max_erases.is_some());
+    let faulted = outcomes.iter().any(|o| o.point.faults_availability.is_some());
     let mut headers: Vec<&str> = Vec::new();
     if fleeted {
         headers.push("fleet");
@@ -128,6 +151,11 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
     if weared {
         headers.push("max erases");
         headers.push("retired");
+    }
+    if faulted {
+        headers.push("avail");
+        headers.push("failed");
+        headers.push("shed");
     }
     headers.push("min SLO");
     let mut t = Table::new(&headers);
@@ -165,6 +193,20 @@ pub fn render_campaign(outcomes: &[CampaignOutcome]) -> String {
             });
             cells.push(match p.wear_retirements {
                 Some(r) => r.to_string(),
+                None => "-".to_string(),
+            });
+        }
+        if faulted {
+            cells.push(match p.faults_availability {
+                Some(a) => format!("{a:.4}"),
+                None => "-".to_string(),
+            });
+            cells.push(match p.faults_failed {
+                Some(n) => n.to_string(),
+                None => "-".to_string(),
+            });
+            cells.push(match p.faults_shed {
+                Some(n) => n.to_string(),
                 None => "-".to_string(),
             });
         }
@@ -214,6 +256,13 @@ mod tests {
                 wear_max_erases: None,
                 wear_total_erases: None,
                 wear_retirements: None,
+                faults_availability: None,
+                faults_failed: None,
+                faults_retries: None,
+                faults_failovers: None,
+                faults_shed: None,
+                faults_reprefill_tok: None,
+                faults_degraded_s: None,
                 class_attainment: vec![ClassAttainment {
                     class: "chat".into(),
                     attainment: 0.995,
@@ -292,6 +341,43 @@ mod tests {
         let doc = campaign_metrics(&[legacy.clone()], None).render();
         assert!(!doc.contains("wear_"), "{doc}");
         assert!(!render_campaign(&[legacy]).contains("max erases"));
+    }
+
+    #[test]
+    fn fault_outcomes_emit_gated_metrics_and_columns() {
+        let mut o = outcome("chat", "least-loaded", Backend::Event, 8.0);
+        o.point.faults_availability = Some(0.9375);
+        o.point.faults_failed = Some(2);
+        o.point.faults_retries = Some(5);
+        o.point.faults_failovers = Some(3);
+        o.point.faults_shed = Some(7);
+        o.point.faults_reprefill_tok = Some(640);
+        o.point.faults_degraded_s = Some(12.5);
+        let doc = campaign_metrics(&[o.clone()], None).render();
+        let metrics = parse_metrics(&doc).unwrap();
+        let avail = metrics
+            .iter()
+            .find(|m| m.name == "campaign/chat/least-loaded/event/r8/faults_availability")
+            .expect("availability metric emitted");
+        assert_eq!(avail.value, 0.9375);
+        assert_eq!(avail.unit, "fraction");
+        for suffix in [
+            "/faults_failed",
+            "/faults_retries",
+            "/faults_failovers",
+            "/faults_shed",
+            "/faults_reprefill_tok",
+            "/faults_degraded_s",
+        ] {
+            assert!(metrics.iter().any(|m| m.name.ends_with(suffix)), "missing {suffix}");
+        }
+        let s = render_campaign(&[o]);
+        assert!(s.contains("avail") && s.contains("0.9375") && s.contains("shed"), "{s}");
+        // Fault-free outcomes emit no fault keys and no fault columns.
+        let legacy = outcome("chat", "slo-aware", Backend::Event, 8.0);
+        let doc = campaign_metrics(&[legacy.clone()], None).render();
+        assert!(!doc.contains("faults_"), "{doc}");
+        assert!(!render_campaign(&[legacy]).contains("avail"));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::coordinator::loadgen::{run_traffic_with_table, TrafficConfig, WearCon
 use crate::coordinator::router::{policy_from_name, POLICY_NAMES, TIERED_POLICY_NAMES};
 use crate::coordinator::sweep::{fan_out_indexed, SweepPoint, validate_rates};
 use crate::coordinator::workload::WorkloadMix;
+use crate::fault::FaultConfig;
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
 use anyhow::{bail, Result};
@@ -131,6 +132,12 @@ pub struct CampaignSpec {
     /// writes against [`WearConfig::new`]-shaped meters and adds
     /// `wear_*` metric keys to the rendered document.
     pub wear: Option<u64>,
+    /// Deterministic fault injection. `None` (the default matrix) leaves
+    /// faults off and every scenario byte-identical to fault-unaware
+    /// builds; `Some(spec)` threads the same fault schedule (seeded from
+    /// the campaign seed) into every scenario and adds `faults_*` metric
+    /// keys to the rendered document.
+    pub faults: Option<FaultConfig>,
 }
 
 /// Default rate grid of the campaign matrix (requests/second).
@@ -152,6 +159,7 @@ impl Default for CampaignSpec {
             requests: 2000,
             seed: 7,
             wear: None,
+            faults: None,
         }
     }
 }
@@ -267,6 +275,7 @@ impl CampaignSpec {
         cfg.workload = Some(s.mix.clone());
         cfg.fleet = s.fleet.clone();
         cfg.wear = self.wear.map(WearConfig::new);
+        cfg.faults = self.faults.clone();
         cfg
     }
 }
@@ -325,6 +334,7 @@ mod tests {
             requests: 20,
             seed: 3,
             wear: None,
+            faults: None,
         }
     }
 
@@ -428,6 +438,27 @@ mod tests {
     }
 
     #[test]
+    fn faults_knob_threads_into_every_scenario() {
+        let spec = tiny_spec();
+        let scenarios = spec.expand().unwrap();
+        assert!(
+            spec.traffic(&scenarios[0]).faults.is_none(),
+            "default campaigns are fault-free"
+        );
+        let mut spec = tiny_spec();
+        let parsed = FaultConfig::parse("fail_at=0@20,retries=2,spares=1").unwrap();
+        spec.faults = parsed.clone().active();
+        for s in &scenarios {
+            let cfg = spec.traffic(s);
+            assert_eq!(cfg.faults.as_ref(), Some(&parsed), "same spec in every scenario");
+        }
+        // An inert spec normalizes away and leaves scenarios fault-free.
+        let mut spec = tiny_spec();
+        spec.faults = FaultConfig::parse("fail=0").unwrap().active();
+        assert!(spec.traffic(&scenarios[0]).faults.is_none());
+    }
+
+    #[test]
     fn expansion_rejects_bad_axes() {
         let mut spec = tiny_spec();
         spec.policies = vec!["fifo".into()];
@@ -465,6 +496,7 @@ mod tests {
             requests: 25,
             seed: 11,
             wear: None,
+            faults: None,
         };
         let a = run_campaign(&sys, &model, &table, &spec, None).unwrap();
         let b = run_campaign(&sys, &model, &table, &spec, None).unwrap();

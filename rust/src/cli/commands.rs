@@ -14,6 +14,7 @@ use crate::coordinator::{
     sweep_rates_threaded, TrafficConfig, WearConfig, Workload, WorkloadMix,
 };
 use crate::exp;
+use crate::fault::FaultConfig;
 use crate::gpu::rtx4090x4_vllm;
 use crate::kv::lifetime::{lifetime_years, lifetime_years_system};
 use crate::llm::LatencyTable;
@@ -99,7 +100,20 @@ tools:
                        bursty phase schedule over the Poisson rate
                        (e.g. 28800:0.4,43200:1.6,14400:0.7; a 1.0
                        multiplier reproduces the legacy stream
-                       byte-for-byte). Also --policy
+                       byte-for-byte). --faults SPEC enables seeded
+                       deterministic fault injection: read-retry
+                       storms dilating a device's service time,
+                       hard device loss mid-trace with spare
+                       activation, per-request retry with backoff,
+                       KV-loss failover (re-prefill on a survivor),
+                       and brownout shedding. SPEC is a comma list
+                       of storm=RATE:MULTxDUR, fail=RATE,
+                       fail_at=DEV@SECS, detect=S, retries=N,
+                       backoff=S, spares=N, brownout=FRAC (see
+                       docs/FAULTS.md); the report gains a
+                       reliability section, and an absent or inert
+                       spec keeps output byte-identical to
+                       fault-free runs. Also --policy
                        round-robin|least-loaded|slo-aware|tier-aware|
                        wear-aware, --queue-cap, --input-min/max,
                        --output-min/max,
@@ -138,7 +152,12 @@ tools:
                        adds wear_max_erases / wear_total_erases /
                        wear_retirements metric keys (absent, not zero,
                        in wear-blind runs, keeping legacy documents
-                       byte-identical).
+                       byte-identical). --faults SPEC (same grammar
+                       as serve-sim; docs/FAULTS.md) threads one
+                       deterministic fault schedule into every
+                       scenario and adds faults_availability /
+                       faults_failed / faults_shed and friends as
+                       gated metric keys — the chaos campaign gate.
                        Also --list (print the matrix, run nothing),
                        --out PATH (write the fresh metrics JSON),
                        --tol FRACTION (relative tolerance, default 0.02),
@@ -449,6 +468,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if let Some(spec) = args.flag("arrival") {
         cfg.arrival = Some(ArrivalProcess::parse(spec)?);
     }
+    if let Some(spec) = args.flag("faults") {
+        // An inert spec (e.g. `fail=0`) normalizes to None, so the run
+        // stays byte-identical to one without the flag.
+        cfg.faults = FaultConfig::parse(spec)?.active();
+    }
 
     // Validate sweep/policy flags before paying for the table build.
     let threaded = args.bool_flag("threaded");
@@ -506,7 +530,8 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let policy = policy.expect("non-sweep path parsed a policy above");
+    let policy =
+        policy.ok_or_else(|| anyhow!("internal error: non-sweep path is missing a policy"))?;
     let report = if threaded {
         run_traffic_with_table(&sys, &model.shape(), &table, policy, &cfg)
     } else {
@@ -582,6 +607,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             .parse()
             .map_err(|_| anyhow!("--wear expects a per-device P/E erase budget, got {pe:?}"))?;
         spec.wear = Some(pe);
+    }
+    if let Some(faults) = args.flag("faults") {
+        spec.faults = FaultConfig::parse(faults)?.active();
     }
     let tol = args.f64_flag("tol", 0.02)?;
     if !tol.is_finite() || tol < 0.0 {
@@ -1025,6 +1053,66 @@ mod tests {
             "--list".into(),
             "--fleets".into(),
             "9xtpu".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn serve_sim_faults_run_and_reject_bad_specs() {
+        run(vec![
+            "serve-sim".into(),
+            "--faults".into(),
+            "storm=0.1:4x1,fail_at=0@5,detect=0.5,retries=2,backoff=0.2,spares=1,brownout=0.5"
+                .into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "12".into(),
+            "--output-min".into(),
+            "4".into(),
+            "--output-max".into(),
+            "8".into(),
+        ])
+        .unwrap();
+        // An inert spec normalizes away and still runs.
+        run(vec![
+            "serve-sim".into(),
+            "--faults".into(),
+            "fail=0".into(),
+            "--devices".into(),
+            "2".into(),
+            "--rate".into(),
+            "40".into(),
+            "--requests".into(),
+            "8".into(),
+            "--output-min".into(),
+            "2".into(),
+            "--output-max".into(),
+            "4".into(),
+        ])
+        .unwrap();
+        assert!(run(vec!["serve-sim".into(), "--faults".into(), "storm=lots".into()]).is_err());
+        assert!(run(vec!["serve-sim".into(), "--faults".into(), "bogus=1".into()]).is_err());
+    }
+
+    #[test]
+    fn campaign_faults_flag_parses_and_rejects_garbage() {
+        run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--faults".into(),
+            "fail_at=0@20,retries=2,spares=1".into(),
+            "--filter".into(),
+            "backend(event)".into(),
+        ])
+        .unwrap();
+        assert!(run(vec![
+            "campaign".into(),
+            "--list".into(),
+            "--faults".into(),
+            "fail_at=0".into(),
         ])
         .is_err());
     }

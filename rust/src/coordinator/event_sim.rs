@@ -70,6 +70,7 @@ use super::sink::{CollectSink, OutcomeSink, StreamingSink};
 use super::sweep::SweepPoint;
 use super::workload::ArrivalSampler;
 use crate::config::SystemConfig;
+use crate::fault::{DownAction, FleetFaults};
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
 use crate::sim::{Engine, EventQueue, Model, SimTime};
@@ -107,6 +108,13 @@ pub enum ServingEvent {
     DecodeDone { device: usize, first: SimTime },
     /// Turn complete: record the outcome, free the device.
     Retire { device: usize },
+    /// A device's deadline timer fired: drop it from the pool, activate
+    /// a spare, lose its in-flight work and flash-resident KV
+    /// (fault-injection runs only; seeded before the trace starts).
+    DeviceDown { device: usize },
+    /// Retry attempt for a fault victim, after exponential backoff
+    /// (fault-injection runs only).
+    Retry { id: u64 },
 }
 
 /// An admitted request waiting in (or at the head of) a device queue.
@@ -122,6 +130,24 @@ struct Pending {
     /// Context length at the first decode step (resident KV + new prompt).
     ctx0: usize,
     followup: bool,
+    /// Fault-retry attempt this admission belongs to (0 = the original
+    /// arrival; only fault-injection runs ever re-admit).
+    attempt: u32,
+}
+
+/// A fault victim waiting out its retry backoff, keyed by request id.
+#[derive(Debug, Clone)]
+struct RetryJob {
+    session: u64,
+    class: usize,
+    arrival: SimTime,
+    /// Tokens the attempt must re-prefill: the victim's full context
+    /// (its flash-resident KV died with the device).
+    l_in: usize,
+    l_out: usize,
+    followup: bool,
+    /// Attempt number this retry will execute (1-based).
+    attempt: u32,
 }
 
 /// The request currently being served by a device.
@@ -182,6 +208,15 @@ pub struct ServingModel<'a, S: OutcomeSink = CollectSink> {
     /// enabled ([`TrafficConfig::wear`]); `None` leaves every serving
     /// path byte-identical to the wear-free simulator.
     wear: Option<FleetWear>,
+    /// Fleet fault state when fault injection is enabled
+    /// ([`TrafficConfig::faults`]); `None` leaves every serving path
+    /// byte-identical to the fault-free simulator.
+    faults: Option<FleetFaults>,
+    /// Completion events to swallow per slot: a downed device's
+    /// in-flight job already has its completion on the queue.
+    poisoned: Vec<u32>,
+    /// Victims waiting out retry backoff, keyed by request id.
+    retry_jobs: HashMap<u64, RetryJob>,
     /// Total decode energy (J) accumulated at retirement, in record
     /// order — the single source both report paths read.
     energy_j: f64,
@@ -236,6 +271,7 @@ impl<'a> ServingModel<'a, CollectSink> {
         let device_jobs = self.devices.iter().map(|d| d.jobs).collect();
         let fleet = self.fleet_summary();
         let wear = self.wear.as_ref().map(|w| w.summary());
+        let faults = self.faults.take().map(|mut f| f.summary(makespan));
         PoolReport {
             backend: "event",
             policy: self.router.policy_name().to_string(),
@@ -248,6 +284,7 @@ impl<'a> ServingModel<'a, CollectSink> {
             device_jobs,
             fleet,
             wear,
+            faults,
         }
     }
 }
@@ -255,11 +292,12 @@ impl<'a> ServingModel<'a, CollectSink> {
 impl ServingModel<'_, StreamingSink> {
     /// Reduce the finished simulation's streamed aggregates to one
     /// [`SweepPoint`].
-    pub fn into_point(self) -> SweepPoint {
+    pub fn into_point(mut self) -> SweepPoint {
         let policy = self.router.policy_name().to_string();
         let fleet = self.fleet_summary();
         let wear = self.wear.as_ref().map(|w| w.summary());
-        self.sink.finish(policy, self.cfg.rate, fleet, wear)
+        let faults = self.faults.take().map(|mut f| f.summary(self.sink.makespan()));
+        self.sink.finish(policy, self.cfg.rate, fleet, wear, faults)
     }
 }
 
@@ -294,8 +332,9 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
         };
         let mut models = models;
-        // Wear spares are flash slots (flash is the tier that wears out),
-        // provisioned up front and activated as devices retire.
+        // Spares are flash slots (flash is the tier that wears out and
+        // hard-fails), provisioned up front and activated as devices
+        // retire or fail. Wear spares and fault spares form one pool.
         for _ in cfg.devices..cfg.n_slots() {
             models.push(DeviceModel::flash(sys, model, table));
         }
@@ -304,6 +343,10 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             None => DeviceRouter::new(cfg.n_slots(), sys, model, policy),
         };
         let wear = cfg.wear.as_ref().map(|w| FleetWear::new(w, &models, cfg.devices));
+        let faults = cfg.faults.as_ref().map(|f| {
+            let flash: Vec<bool> = models.iter().map(|m| m.tier() == Tier::Flash).collect();
+            FleetFaults::new(f, cfg.seed, &flash, cfg.devices)
+        });
         let devices = (0..cfg.n_slots())
             .map(|_| Device {
                 queue: VecDeque::new(),
@@ -322,6 +365,9 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             devices,
             models,
             wear,
+            faults,
+            poisoned: vec![0; cfg.n_slots()],
+            retry_jobs: HashMap::new(),
             energy_j: 0.0,
             clock: 0.0,
             arrivals: 0,
@@ -364,12 +410,48 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         let (session, class, reuse) = (arr.session, arr.class, arr.followup);
         let (l_in, l_out) = (arr.input_tokens, arr.output_tokens);
 
+        // Brownout: while surviving capacity sits below the configured
+        // fraction of the nominal fleet, fresh arrivals of every class
+        // but the highest-priority one (class 0) are shed at the door.
+        // Retries bypass admission and are exempt.
+        if class > 0 {
+            if let Some(f) = self.faults.as_mut() {
+                if f.brownout_active() {
+                    f.shed_brownout += 1;
+                    if reuse {
+                        self.sampler.release(session, class);
+                    }
+                    self.sink.record(SimRequest {
+                        id,
+                        session,
+                        class,
+                        device: None,
+                        arrival: now,
+                        first_token: None,
+                        completed: now,
+                        input_tokens: l_in,
+                        output_tokens: 0,
+                        context: 0,
+                        rejected: true,
+                        failed: false,
+                        followup: reuse,
+                        energy_j: 0.0,
+                    });
+                    return;
+                }
+            }
+        }
+
         let status: Vec<DeviceStatus> = self
             .devices
             .iter()
             .enumerate()
             .filter(|(i, _)| match &self.wear {
                 Some(w) => w.eligible(*i),
+                None => true,
+            })
+            .filter(|(i, _)| match &self.faults {
+                Some(f) => f.schedulable(*i),
                 None => true,
             })
             .map(|(i, d)| DeviceStatus {
@@ -402,6 +484,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
                 output_tokens: 0,
                 context: 0,
                 rejected: true,
+                failed: false,
                 followup: reuse,
                 energy_j: 0.0,
             });
@@ -478,7 +561,10 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
                 && w.charge(dev, (l_in + l_out) as u64, needed, now)
             {
                 rehome_sessions(&mut self.router, dev);
-                w.retire(dev, now);
+                let activated = w.retire(dev, now);
+                if let Some(f) = self.faults.as_mut() {
+                    f.on_wear_retire(dev, activated);
+                }
             }
         }
 
@@ -488,8 +574,16 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
         // device's tier.
         let service =
             self.models[dev].prefill_cost(l_in) + self.models[dev].decode_time(ctx0, l_out);
+        let begin = self.devices[dev].free_at.max(now);
+        let end = match self.faults.as_mut() {
+            // Storm dilation is compositional, so dilating the whole
+            // service from `begin` lands on the same instant the event
+            // chain will: `free_at` stays an exact prediction.
+            Some(f) => f.dilate(dev, begin, service),
+            None => begin + service,
+        };
         let d = &mut self.devices[dev];
-        d.free_at = d.free_at.max(now) + service;
+        d.free_at = end;
 
         let was_idle = d.active.is_none();
         d.queue.push_back(Pending {
@@ -501,6 +595,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             l_out,
             ctx0,
             followup: reuse,
+            attempt: 0,
         });
         if was_idle {
             self.start_service(dev, now, queue);
@@ -537,6 +632,7 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             output_tokens: 0,
             context: 0,
             rejected: true,
+            failed: false,
             followup: reuse,
             energy_j: 0.0,
         });
@@ -570,22 +666,35 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
     /// bit-identity suite replays.
     fn start_service(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
         let m = &self.models[d];
-        let dev = &mut self.devices[d];
-        debug_assert!(dev.active.is_none(), "device {d} already serving");
-        let Some(req) = dev.queue.pop_front() else {
+        debug_assert!(self.devices[d].active.is_none(), "device {d} already serving");
+        let Some(req) = self.devices[d].queue.pop_front() else {
             return;
         };
-        let first = now + m.prefill_cost(req.l_in) + m.step_time(req.ctx0);
+        // Read-retry storms dilate service piecewise; dilation composes
+        // (`dilate(t, a + b) == dilate(dilate(t, a), b)`), so per-token
+        // and coalesced schedules still land on identical instants, and
+        // the admission-time `free_at` prediction stays exact.
+        let head = m.prefill_cost(req.l_in) + m.step_time(req.ctx0);
+        let rest = m.decode_time(req.ctx0 + 1, req.l_out - 1);
+        let first = match self.faults.as_mut() {
+            Some(f) => f.dilate(d, now, head),
+            None => now + head,
+        };
         match self.mode {
             DecodeMode::Coalesced => {
                 // Steps after the first: ctx0+1 .. ctx0+l_out-1 (l_out >= 1
                 // by LenRange's invariant).
-                let rest = m.decode_time(req.ctx0 + 1, req.l_out - 1);
-                dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
-                queue.schedule(first + rest, ServingEvent::DecodeDone { device: d, first });
+                let end = match self.faults.as_mut() {
+                    Some(f) => f.dilate(d, first, rest),
+                    None => first + rest,
+                };
+                self.devices[d].active =
+                    Some(Active { req, started: now, first_token: None, tokens_done: 0 });
+                queue.schedule(end, ServingEvent::DecodeDone { device: d, first });
             }
             DecodeMode::PerToken => {
-                dev.active = Some(Active { req, started: now, first_token: None, tokens_done: 0 });
+                self.devices[d].active =
+                    Some(Active { req, started: now, first_token: None, tokens_done: 0 });
                 queue.schedule(first, ServingEvent::PrefillDone { device: d });
             }
         }
@@ -599,7 +708,11 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             queue.schedule(now, ServingEvent::Retire { device: d });
         } else {
             let step = self.models[d].step_time(a.req.ctx0 + a.tokens_done);
-            queue.schedule(now + step, ServingEvent::TokenDone { device: d });
+            let at = match self.faults.as_mut() {
+                Some(f) => f.dilate(d, now, step),
+                None => now + step,
+            };
+            queue.schedule(at, ServingEvent::TokenDone { device: d });
         }
     }
 
@@ -637,10 +750,222 @@ impl<'a, S: OutcomeSink> ServingModel<'a, S> {
             output_tokens: r.l_out,
             context: r.ctx0,
             rejected: false,
+            failed: false,
             followup: r.followup,
             energy_j: energy,
         });
         self.start_service(d, now, queue);
+    }
+
+    /// A device's deadline timer fired: drop it from the roster, promote
+    /// a spare, and route every in-flight and queued victim into the
+    /// retry/fail path. The victims' flash-resident KV dies with the
+    /// device, so a later successful retry re-prefills the full context.
+    fn on_device_down(&mut self, d: usize, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let Some(f) = self.faults.as_mut() else {
+            return;
+        };
+        let DownAction::Fail { activated } = f.on_down(d, now) else {
+            return;
+        };
+        if let Some(w) = self.wear.as_mut() {
+            w.fault_retire(d, now);
+            if let Some(s) = activated {
+                w.activate(s);
+            }
+        }
+        // Evict every session homed on the dead device (their KV is gone).
+        rehome_sessions(&mut self.router, d);
+        let dev = &mut self.devices[d];
+        let mut victims: Vec<Pending> = Vec::new();
+        if let Some(a) = dev.active.take() {
+            // The in-flight job dies mid-service; its completion event is
+            // already on the queue and must be swallowed when it fires.
+            self.poisoned[d] += 1;
+            dev.busy += now - a.started;
+            victims.push(a.req);
+        }
+        victims.extend(dev.queue.drain(..));
+        for req in victims {
+            self.fail_or_retry(req, now, queue);
+        }
+    }
+
+    /// Burn one retry attempt for a fault victim: schedule re-admission
+    /// after exponential backoff, or fail the request permanently once
+    /// the budget is exhausted. Failed sessions die — they are never
+    /// released back to the follow-up pool.
+    fn fail_or_retry(&mut self, req: Pending, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let f = self.faults.as_mut().expect("fault recovery without fault state");
+        let next = req.attempt + 1;
+        if next > f.retry_budget() {
+            f.failed_requests += 1;
+            self.sink.record(SimRequest {
+                id: req.id,
+                session: req.session,
+                class: req.class,
+                device: None,
+                arrival: req.arrival,
+                first_token: None,
+                completed: now,
+                input_tokens: req.ctx0,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                failed: true,
+                followup: req.followup,
+                energy_j: 0.0,
+            });
+            return;
+        }
+        f.retries += 1;
+        let at = now + f.backoff(next);
+        self.retry_jobs.insert(
+            req.id,
+            RetryJob {
+                session: req.session,
+                class: req.class,
+                arrival: req.arrival,
+                l_in: req.ctx0,
+                l_out: req.l_out,
+                followup: req.followup,
+                attempt: next,
+            },
+        );
+        queue.schedule(at, ServingEvent::Retry { id: req.id });
+    }
+
+    /// Re-admit a fault victim on the surviving roster: same placement
+    /// flow as a fresh arrival (scheduler pick, bounded queue, KV
+    /// admission with idle eviction), but no sampling and no brownout —
+    /// the request was already admitted once. Placement failures burn
+    /// further retry attempts; success re-prefills the full context and
+    /// counts a failover.
+    fn on_retry(&mut self, id: u64, now: SimTime, queue: &mut EventQueue<ServingEvent>) {
+        let Some(job) = self.retry_jobs.remove(&id) else {
+            return;
+        };
+        let (session, l_in, l_out) = (job.session, job.l_in, job.l_out);
+        let as_pending = |j: &RetryJob| Pending {
+            id,
+            session: j.session,
+            class: j.class,
+            arrival: j.arrival,
+            l_in: j.l_in,
+            l_out: j.l_out,
+            ctx0: j.l_in,
+            followup: j.followup,
+            attempt: j.attempt,
+        };
+        let status: Vec<DeviceStatus> = self
+            .devices
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| match &self.wear {
+                Some(w) => w.eligible(*i),
+                None => true,
+            })
+            .filter(|(i, _)| self.faults.as_ref().is_some_and(|f| f.schedulable(*i)))
+            .map(|(i, d)| DeviceStatus {
+                device: i,
+                queue_depth: d.depth(),
+                est_wait: d.free_at.saturating_sub(now),
+                kv_used: self.router.kv(i).used(),
+                kv_capacity: self.router.kv(i).capacity,
+                tier: self.models[i].tier(),
+                wear_used: self.wear.as_ref().map_or(0, |w| w.devices[i].erases()),
+                wear_budget: self.wear.as_ref().map_or(0, |w| w.erase_capacity()),
+            })
+            .collect();
+        if status.is_empty() {
+            let p = as_pending(&job);
+            self.fail_or_retry(p, now, queue);
+            return;
+        }
+        let (est_flash, est_gpu) = tier_estimates(&self.models, l_in);
+        let info = JobInfo {
+            est_prefill: est_flash,
+            est_prefill_gpu: est_gpu,
+            prompt_tokens: l_in,
+            ttft_target: self.sampler.classes()[job.class].slo.ttft,
+        };
+        let dev = self.router.assign(session, &status, &info);
+        let depth = status.iter().find(|s| s.device == dev).map(|s| s.queue_depth);
+        let queue_full = match depth {
+            Some(d) => d >= self.cfg.queue_capacity,
+            None => true,
+        };
+        let per_token = self.router.kv(dev).per_token;
+        let needed = (l_in + l_out) as u64 * per_token;
+        if !queue_full && self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
+            let before = self.router.kv(dev).active_sequences();
+            self.evict_idle(dev, session, needed);
+            if let Some(w) = self.wear.as_mut() {
+                for _ in self.router.kv(dev).active_sequences()..before {
+                    w.devices[dev].note_eviction();
+                }
+            }
+        }
+        if queue_full || self.router.kv(dev).used() + needed > self.router.kv(dev).capacity {
+            if self.router.kv(dev).context_len(session).is_none() {
+                self.router.forget(session);
+            }
+            let p = as_pending(&job);
+            self.fail_or_retry(p, now, queue);
+            return;
+        }
+        let resident = self.router.kv(dev).context_len(session);
+        match resident {
+            None => {
+                self.router.kv_mut(dev).admit(session, l_in).expect("admission after space check");
+            }
+            Some(_) => {
+                self.router
+                    .kv_mut(dev)
+                    .append_n(session, l_in)
+                    .expect("append after space check");
+            }
+        }
+        let ctx0 = resident.unwrap_or(0) + l_in;
+        self.router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
+        self.completed_at.remove(&session);
+        if let Some(w) = self.wear.as_mut() {
+            if self.models[dev].tier() == Tier::Flash
+                && w.charge(dev, (l_in + l_out) as u64, needed, now)
+            {
+                rehome_sessions(&mut self.router, dev);
+                let activated = w.retire(dev, now);
+                if let Some(f) = self.faults.as_mut() {
+                    f.on_wear_retire(dev, activated);
+                }
+            }
+        }
+        let service =
+            self.models[dev].prefill_cost(l_in) + self.models[dev].decode_time(ctx0, l_out);
+        let begin = self.devices[dev].free_at.max(now);
+        let end = {
+            let f = self.faults.as_mut().expect("retry without fault state");
+            f.failovers += 1;
+            f.re_prefill_tokens += l_in as u64;
+            f.dilate(dev, begin, service)
+        };
+        let d = &mut self.devices[dev];
+        d.free_at = end;
+        let was_idle = d.active.is_none();
+        d.queue.push_back(Pending {
+            id,
+            session,
+            class: job.class,
+            arrival: job.arrival,
+            l_in,
+            l_out,
+            ctx0,
+            followup: job.followup,
+            attempt: job.attempt,
+        });
+        if was_idle {
+            self.start_service(dev, now, queue);
+        }
     }
 }
 
@@ -648,6 +973,20 @@ impl<S: OutcomeSink> Model for ServingModel<'_, S> {
     type Event = ServingEvent;
 
     fn handle(&mut self, now: SimTime, ev: ServingEvent, queue: &mut EventQueue<ServingEvent>) {
+        // A downed device's in-flight job already had its completion on
+        // the queue when the device dropped; swallow exactly that one
+        // event (the device takes no new work afterwards, so the next
+        // completion-flavored event for the slot is the stale one).
+        if let ServingEvent::PrefillDone { device }
+        | ServingEvent::TokenDone { device }
+        | ServingEvent::DecodeDone { device, .. }
+        | ServingEvent::Retire { device } = ev
+        {
+            if self.poisoned[device] > 0 {
+                self.poisoned[device] -= 1;
+                return;
+            }
+        }
         match ev {
             ServingEvent::Arrive => self.on_arrive(now, queue),
             ServingEvent::PrefillDone { device } => {
@@ -670,20 +1009,30 @@ impl<S: OutcomeSink> Model for ServingModel<'_, S> {
                 queue.schedule(now, ServingEvent::Retire { device });
             }
             ServingEvent::Retire { device } => self.on_retire(device, now, queue),
+            ServingEvent::DeviceDown { device } => self.on_device_down(device, now, queue),
+            ServingEvent::Retry { id } => self.on_retry(id, now, queue),
         }
     }
 }
 
 /// Engine event budget for one run: coalesced traces cost at most 3
 /// events per arrival (Arrive + DecodeDone + Retire); the per-token
-/// oracle pays one more per decoded token.
+/// oracle pays one more per decoded token. Fault injection adds up to
+/// one `DeviceDown` per slot, and each request may re-run its full
+/// service once per retry attempt (plus the `Retry` event itself).
 fn event_budget(cfg: &TrafficConfig, mode: DecodeMode) -> u64 {
-    match mode {
-        DecodeMode::Coalesced => (cfg.requests as u64).saturating_mul(3).saturating_add(16),
-        DecodeMode::PerToken => (cfg.requests as u64)
-            .saturating_mul(cfg.max_output_tokens() as u64 + 4)
-            .saturating_add(16),
-    }
+    let per_request = match mode {
+        DecodeMode::Coalesced => 3u64,
+        DecodeMode::PerToken => cfg.max_output_tokens() as u64 + 4,
+    };
+    let base = (cfg.requests as u64).saturating_mul(per_request);
+    let fault_overhead = match &cfg.faults {
+        Some(f) => (cfg.requests as u64)
+            .saturating_mul((per_request + 1).saturating_mul(f.retries as u64 + 1))
+            .saturating_add(cfg.n_slots() as u64),
+        None => 0,
+    };
+    base.saturating_add(fault_overhead).saturating_add(16)
 }
 
 /// Build, seed, and drain one serving run; returns the finished model and
@@ -703,6 +1052,16 @@ fn run_serving<'a, S: OutcomeSink>(
     // startup.
     let mut engine = Engine::with_capacity(serving, cfg.devices + 4);
     engine.max_events = event_budget(cfg, mode);
+    // Hard-failure instants are fixed before the first arrival is even
+    // drawn (per-slot streams, drawn at construction), so the whole
+    // fault schedule goes on the queue up front. Seeding them first
+    // gives them earlier sequence numbers: a DeviceDown that ties an
+    // arrival to the picosecond fires before it — the same order the
+    // direct backend's drain-then-arrive loop imposes.
+    let downs = engine.model.faults.as_ref().map(|f| f.down_events()).unwrap_or_default();
+    for (at, slot) in downs {
+        engine.seed(at, ServingEvent::DeviceDown { device: slot });
+    }
     if cfg.requests > 0 {
         let u = engine.model.rng.f64();
         let gap = arrival_gap(cfg, 0.0, u);
@@ -811,6 +1170,7 @@ mod tests {
             fleet: None,
             wear: None,
             arrival: None,
+            faults: None,
         }
     }
 

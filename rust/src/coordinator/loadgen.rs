@@ -35,6 +35,7 @@ use super::router::{DeviceRouter, DeviceStatus, JobInfo, Scheduler};
 use super::workload::{ArrivalSampler, SloTarget, WorkloadClass, WorkloadMix};
 use crate::circuit::TechParams;
 use crate::config::SystemConfig;
+use crate::fault::{DownAction, FaultConfig, FleetFaults};
 use crate::kv::wear::DeviceWear;
 use crate::llm::latency_table::LatencyTable;
 use crate::llm::model_config::ModelShape;
@@ -235,6 +236,12 @@ pub struct TrafficConfig {
     /// Open-loop diurnal/MMPP rate modulation. `None` (the default)
     /// keeps the stationary Poisson stream, byte-identically.
     pub arrival: Option<ArrivalProcess>,
+    /// Deterministic fault injection — read-retry storms, hard device
+    /// loss, and the retry/failover/brownout recovery policies
+    /// (`serve-sim --faults`, see `docs/FAULTS.md`). `None` (the
+    /// default) disables injection; fault-free runs stay byte-identical
+    /// to pre-fault versions.
+    pub faults: Option<FaultConfig>,
 }
 
 impl TrafficConfig {
@@ -257,13 +264,17 @@ impl TrafficConfig {
             fleet: None,
             wear: None,
             arrival: None,
+            faults: None,
         }
     }
 
     /// Pool slots the run actually provisions: the primary devices plus
-    /// any wear spares.
+    /// any wear or fault spares (one unified cold-spare pool — whichever
+    /// mechanism retires a device activates the lowest-index spare).
     pub fn n_slots(&self) -> usize {
-        self.devices + self.wear.as_ref().map_or(0, |w| w.spares)
+        self.devices
+            + self.wear.as_ref().map_or(0, |w| w.spares)
+            + self.faults.as_ref().map_or(0, |f| f.spares)
     }
 
     /// Largest output-length upper bound an arrival can draw — sizes the
@@ -295,6 +306,11 @@ pub struct SimRequest {
     /// on follow-up turns whose KV stayed resident).
     pub context: usize,
     pub rejected: bool,
+    /// Permanently failed by fault injection: the request was in flight
+    /// on a device that hard-failed and its retry budget ran out. A
+    /// subset of `rejected`, so `accepted + rejected == offered` holds
+    /// with and without faults.
+    pub failed: bool,
     pub followup: bool,
     /// Decode energy of the turn (J) — a pure function of the assigned
     /// device's tier and the turn's shape (zero for rejections), so it is
@@ -417,11 +433,27 @@ impl FleetWear {
     /// Retire `dev` and activate the next provisioned spare, if any.
     pub fn retire(&mut self, dev: usize, now: SimTime) -> Option<usize> {
         self.state[dev] = SlotState::Retired;
-        self.devices[dev].retired_at = Some(now);
+        self.devices[dev].retire(now);
         self.retirements += 1;
         let spare = self.state.iter().position(|s| *s == SlotState::Spare)?;
         self.state[spare] = SlotState::Active;
         Some(spare)
+    }
+
+    /// A hard fault dropped `dev`: take it out of the roster without
+    /// counting a wear retirement or consuming a spare — the fault path
+    /// activates its replacement explicitly via [`Self::activate`].
+    pub fn fault_retire(&mut self, dev: usize, now: SimTime) {
+        self.state[dev] = SlotState::Retired;
+        self.devices[dev].retire(now);
+    }
+
+    /// Promote a provisioned spare into the roster (fault-path spare
+    /// activation; a no-op unless the slot is still a dormant spare).
+    pub fn activate(&mut self, dev: usize) {
+        if self.state[dev] == SlotState::Spare {
+            self.state[dev] = SlotState::Active;
+        }
     }
 
     /// Fold the meters into the report-facing rollup.
@@ -509,8 +541,9 @@ pub fn run_traffic_with_table(
         None => (0..cfg.devices).map(|_| DeviceModel::flash(sys, model, table)).collect(),
     };
     let mut models = models;
-    // Wear spares are flash slots (flash is the tier that wears out),
-    // provisioned up front and activated as devices retire.
+    // Wear and fault spares are flash slots (flash is the tier that
+    // wears out and faults), provisioned up front and activated as
+    // devices retire or hard-fail.
     for _ in cfg.devices..cfg.n_slots() {
         models.push(DeviceModel::flash(sys, model, table));
     }
@@ -519,6 +552,22 @@ pub fn run_traffic_with_table(
         None => DeviceRouter::new(cfg.n_slots(), sys, model, policy),
     };
     let mut wear = cfg.wear.as_ref().map(|w| FleetWear::new(w, &models, cfg.devices));
+    let mut faults = cfg.faults.as_ref().map(|f| {
+        let flash: Vec<bool> = models.iter().map(|m| m.tier() == Tier::Flash).collect();
+        let fleet = FleetFaults::new(f, cfg.seed, &flash, cfg.devices);
+        let mut fs = DirectFaultState {
+            fleet,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            jobs: HashMap::new(),
+            attempts: HashMap::new(),
+            on_device: vec![Vec::new(); cfg.n_slots()],
+        };
+        for (at, slot) in fs.fleet.down_events() {
+            fs.push(at, EV_DOWN, slot as u64);
+        }
+        fs
+    });
     let mut rng = Rng::new(cfg.seed);
     let mut sampler = ArrivalSampler::new(cfg);
     let mut devices: Vec<DeviceState> = vec![DeviceState::default(); cfg.n_slots()];
@@ -538,12 +587,35 @@ pub fn run_traffic_with_table(
         let u = rng.f64();
         clock += arrival_gap(cfg, clock, u); // exponential gap
         let now = SimTime::from_secs(clock);
+        // Fault events (device loss, retries) that precede this arrival
+        // fire first — the event backend gets the same interleaving from
+        // its time-ordered engine queue.
+        if let Some(fs) = faults.as_mut() {
+            drain_fault_events(
+                Some(now),
+                fs,
+                cfg,
+                &models,
+                &sampler,
+                &mut router,
+                &mut devices,
+                &mut wear,
+                &mut completion,
+                &mut busy,
+                &mut outcomes,
+                &mut energy_total,
+            );
+        }
         while let Some(Reverse((done, s, c))) = busy.peek().copied() {
             if done > now {
                 break;
             }
             busy.pop();
-            sampler.release(s, c);
+            // Fault victims' completions are revoked: release the
+            // session only if its latest turn still matches this entry.
+            if completion.get(&s) == Some(&done) {
+                sampler.release(s, c);
+            }
         }
 
         // Follow-up turns reuse a finished session of the same class.
@@ -551,12 +623,49 @@ pub fn run_traffic_with_table(
         let (session, class, reuse) = (arr.session, arr.class, arr.followup);
         let (l_in, l_out) = (arr.input_tokens, arr.output_tokens);
 
+        // Brownout shedding: while surviving capacity sits below the
+        // configured fraction of the nominal roster, only the
+        // highest-priority class (class 0) is admitted. Retries are
+        // exempt — they re-enter via the fault event path above.
+        if let Some(fs) = faults.as_mut() {
+            if class > 0 && fs.fleet.brownout_active() {
+                fs.fleet.shed_brownout += 1;
+                if reuse {
+                    sampler.release(session, class);
+                }
+                outcomes.push(SimRequest {
+                    id,
+                    session,
+                    class,
+                    device: None,
+                    arrival: now,
+                    first_token: None,
+                    completed: now,
+                    input_tokens: l_in,
+                    output_tokens: 0,
+                    context: 0,
+                    rejected: true,
+                    failed: false,
+                    followup: reuse,
+                    energy_j: 0.0,
+                });
+                continue;
+            }
+        }
+
         let status: Vec<DeviceStatus> = devices
             .iter_mut()
             .enumerate()
-            .filter(|(i, _)| match &wear {
-                Some(w) => w.eligible(*i),
-                None => true,
+            .filter(|(i, _)| {
+                let wear_ok = match &wear {
+                    Some(w) => w.eligible(*i),
+                    None => true,
+                };
+                let fault_ok = match &faults {
+                    Some(f) => f.fleet.schedulable(*i),
+                    None => true,
+                };
+                wear_ok && fault_ok
             })
             .map(|(i, d)| DeviceStatus {
                 device: i,
@@ -588,6 +697,7 @@ pub fn run_traffic_with_table(
                 output_tokens: 0,
                 context: 0,
                 rejected: true,
+                failed: false,
                 followup: reuse,
                 energy_j: 0.0,
             });
@@ -627,6 +737,7 @@ pub fn run_traffic_with_table(
                 output_tokens: 0,
                 context: 0,
                 rejected: true,
+                failed: false,
                 followup: reuse,
                 energy_j: 0.0,
             });
@@ -695,11 +806,30 @@ pub fn run_traffic_with_table(
                 && w.charge(dev, (l_in + l_out) as u64, needed, now)
             {
                 rehome_sessions(&mut router, dev);
-                w.retire(dev, now);
+                let activated = w.retire(dev, now);
+                if let Some(fs) = faults.as_mut() {
+                    fs.fleet.on_wear_retire(dev, activated);
+                }
             }
         }
-        let start = devices[dev].res.acquire(now, service);
-        let completed = start + service;
+        let (first, completed) = match faults.as_mut() {
+            None => {
+                let start = devices[dev].res.acquire(now, service);
+                (start + first_offset, start + service)
+            }
+            Some(fs) => {
+                // Storm dilation: the wall-clock service stretches
+                // through the device's fault timeline from its predicted
+                // start instant. Dilation is compositional, so the first
+                // token and the completion price from the same start.
+                let begin = devices[dev].res.free_at().max(now);
+                let completed = fs.fleet.dilate(dev, begin, service);
+                let _started = devices[dev].res.acquire(now, completed - begin);
+                debug_assert_eq!(_started, begin);
+                fs.on_device[dev].push(outcomes.len());
+                (fs.fleet.dilate(dev, begin, first_offset), completed)
+            }
+        };
         devices[dev].inflight.push_back(completed);
         completion.insert(session, completed);
         busy.push(Reverse((completed, session, class)));
@@ -711,15 +841,35 @@ pub fn run_traffic_with_table(
             class,
             device: Some(dev),
             arrival: now,
-            first_token: Some(start + first_offset),
+            first_token: Some(first),
             completed,
             input_tokens: l_in,
             output_tokens: l_out,
             context: l_ctx0,
             rejected: false,
+            failed: false,
             followup: reuse,
             energy_j: energy,
         });
+    }
+    // Fault events past the last arrival (late scripted failures, tail
+    // retries) still fire so the two backends agree on the full fault
+    // timeline.
+    if let Some(fs) = faults.as_mut() {
+        drain_fault_events(
+            None,
+            fs,
+            cfg,
+            &models,
+            &sampler,
+            &mut router,
+            &mut devices,
+            &mut wear,
+            &mut completion,
+            &mut busy,
+            &mut outcomes,
+            &mut energy_total,
+        );
     }
 
     let makespan =
@@ -743,6 +893,7 @@ pub fn run_traffic_with_table(
         device_jobs,
         fleet,
         wear: wear.map(|w| w.summary()),
+        faults: faults.map(|mut fs| fs.fleet.summary(makespan)),
     }
 }
 
@@ -793,6 +944,323 @@ pub(super) fn evict_oldest_idle(
     }
 }
 
+/// Fault-event kinds on the direct backend's pending heap.
+const EV_DOWN: u8 = 0;
+const EV_RETRY: u8 = 1;
+
+/// One pending retry on the direct backend: which outcome record to
+/// overwrite and the re-admission shape of the attempt.
+#[derive(Debug, Clone)]
+struct DirectRetry {
+    /// Index of the victim's outcome record — overwritten in place so
+    /// the trace keeps exactly one record per offered request.
+    idx: usize,
+    session: u64,
+    class: usize,
+    arrival: SimTime,
+    /// Tokens the attempt must re-prefill: the victim's full context
+    /// (its flash-resident KV died with the device).
+    l_in: usize,
+    l_out: usize,
+    followup: bool,
+    /// Attempt number this retry will execute (1-based).
+    attempt: u32,
+}
+
+/// Direct-backend fault machinery: the fleet fault state plus a pending
+/// Down/Retry event heap drained against the arrival clock, so fault
+/// handling interleaves with arrivals in time order (the event backend
+/// gets the same interleaving from its engine queue).
+struct DirectFaultState {
+    fleet: FleetFaults,
+    /// Pending events ordered by (time, seq): [`EV_DOWN`] carries a
+    /// slot index, [`EV_RETRY`] a request id.
+    heap: BinaryHeap<Reverse<(SimTime, u64, u8, u64)>>,
+    seq: u64,
+    jobs: HashMap<u64, DirectRetry>,
+    /// Attempt number of the last successful failover per request id —
+    /// a second device loss resumes the budget, not restarts it.
+    attempts: HashMap<u64, u32>,
+    /// Accepted-outcome indices per slot (victim lookup on device loss).
+    on_device: Vec<Vec<usize>>,
+}
+
+impl DirectFaultState {
+    fn push(&mut self, at: SimTime, kind: u8, payload: u64) {
+        self.heap.push(Reverse((at, self.seq, kind, payload)));
+        self.seq += 1;
+    }
+
+    /// Attempt `job.attempt` just failed (0 = the original admission):
+    /// schedule the next attempt after exponential backoff, or exhaust
+    /// the budget and permanently fail the request, overwriting its
+    /// outcome record in place.
+    fn retry_or_fail(&mut self, id: u64, now: SimTime, mut job: DirectRetry, outcomes: &mut [SimRequest]) {
+        let next = job.attempt + 1;
+        if next > self.fleet.retry_budget() {
+            self.fleet.failed_requests += 1;
+            outcomes[job.idx] = SimRequest {
+                id,
+                session: job.session,
+                class: job.class,
+                device: None,
+                arrival: job.arrival,
+                first_token: None,
+                completed: now,
+                input_tokens: job.l_in,
+                output_tokens: 0,
+                context: 0,
+                rejected: true,
+                failed: true,
+                followup: job.followup,
+                energy_j: 0.0,
+            };
+        } else {
+            self.fleet.retries += 1;
+            let at = now + self.fleet.backoff(next);
+            job.attempt = next;
+            self.jobs.insert(id, job);
+            self.push(at, EV_RETRY, id);
+        }
+    }
+}
+
+/// Drain pending fault events with time `<= until` (all of them when
+/// `until` is `None`).
+#[allow(clippy::too_many_arguments)]
+fn drain_fault_events(
+    until: Option<SimTime>,
+    fs: &mut DirectFaultState,
+    cfg: &TrafficConfig,
+    models: &[DeviceModel],
+    sampler: &ArrivalSampler,
+    router: &mut DeviceRouter,
+    devices: &mut [DeviceState],
+    wear: &mut Option<FleetWear>,
+    completion: &mut HashMap<u64, SimTime>,
+    busy: &mut BinaryHeap<Reverse<(SimTime, u64, usize)>>,
+    outcomes: &mut Vec<SimRequest>,
+    energy_total: &mut f64,
+) {
+    while let Some(&Reverse((t, _, kind, payload))) = fs.heap.peek() {
+        if matches!(until, Some(limit) if t > limit) {
+            break;
+        }
+        fs.heap.pop();
+        if kind == EV_DOWN {
+            device_down(payload as usize, t, fs, router, wear, completion, outcomes, energy_total);
+        } else {
+            run_retry(
+                payload,
+                t,
+                fs,
+                cfg,
+                models,
+                sampler,
+                router,
+                devices,
+                wear,
+                completion,
+                busy,
+                outcomes,
+                energy_total,
+            );
+        }
+    }
+}
+
+/// A device's deadline timer fired at `t`: drop it from the pool,
+/// activate a spare (no drain window), lose its in-flight work and
+/// flash-resident KV, and route every victim into the retry/fail path.
+#[allow(clippy::too_many_arguments)]
+fn device_down(
+    slot: usize,
+    t: SimTime,
+    fs: &mut DirectFaultState,
+    router: &mut DeviceRouter,
+    wear: &mut Option<FleetWear>,
+    completion: &mut HashMap<u64, SimTime>,
+    outcomes: &mut Vec<SimRequest>,
+    energy_total: &mut f64,
+) {
+    let DownAction::Fail { activated } = fs.fleet.on_down(slot, t) else {
+        return;
+    };
+    if let Some(w) = wear.as_mut() {
+        w.fault_retire(slot, t);
+        if let Some(s) = activated {
+            w.activate(s);
+        }
+    }
+    // The device's flash-resident KV is gone: every session homed here
+    // re-enters the scheduler as a fresh session on the survivors.
+    rehome_sessions(router, slot);
+    // Victims: accepted requests still finishing after t. Their outcome
+    // records are overwritten by the retry/fail path. (The slot's
+    // Resource keeps the reserved time, so direct-backend utilization
+    // counts the work the failure wasted.)
+    let records = std::mem::take(&mut fs.on_device[slot]);
+    for idx in records {
+        let o = &outcomes[idx];
+        if o.rejected || o.completed <= t {
+            fs.on_device[slot].push(idx);
+            continue;
+        }
+        *energy_total -= o.energy_j;
+        if completion.get(&o.session) == Some(&o.completed) {
+            completion.remove(&o.session);
+        }
+        let attempt = fs.attempts.get(&o.id).copied().unwrap_or(0);
+        let job = DirectRetry {
+            idx,
+            session: o.session,
+            class: o.class,
+            arrival: o.arrival,
+            l_in: o.context,
+            l_out: o.output_tokens,
+            followup: o.followup,
+            attempt,
+        };
+        let id = o.id;
+        fs.retry_or_fail(id, t, job, outcomes);
+    }
+}
+
+/// Execute retry attempt `job.attempt` for request `id` at `t`: re-admit
+/// the session on the surviving roster, charging full re-prefill latency
+/// and wear (its KV was lost). Placement failure burns another attempt
+/// or exhausts the budget.
+#[allow(clippy::too_many_arguments)]
+fn run_retry(
+    id: u64,
+    t: SimTime,
+    fs: &mut DirectFaultState,
+    cfg: &TrafficConfig,
+    models: &[DeviceModel],
+    sampler: &ArrivalSampler,
+    router: &mut DeviceRouter,
+    devices: &mut [DeviceState],
+    wear: &mut Option<FleetWear>,
+    completion: &mut HashMap<u64, SimTime>,
+    busy: &mut BinaryHeap<Reverse<(SimTime, u64, usize)>>,
+    outcomes: &mut Vec<SimRequest>,
+    energy_total: &mut f64,
+) {
+    let Some(job) = fs.jobs.remove(&id) else {
+        return;
+    };
+    let (session, l_in, l_out) = (job.session, job.l_in, job.l_out);
+    let status: Vec<DeviceStatus> = devices
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| {
+            fs.fleet.schedulable(*i)
+                && match &wear {
+                    Some(w) => w.eligible(*i),
+                    None => true,
+                }
+        })
+        .map(|(i, d)| DeviceStatus {
+            device: i,
+            queue_depth: d.depth(t),
+            est_wait: d.res.free_at().saturating_sub(t),
+            kv_used: router.kv(i).used(),
+            kv_capacity: router.kv(i).capacity,
+            tier: models[i].tier(),
+            wear_used: wear.as_ref().map_or(0, |w| w.devices[i].erases()),
+            wear_budget: wear.as_ref().map_or(0, |w| w.erase_capacity()),
+        })
+        .collect();
+    if status.is_empty() {
+        fs.retry_or_fail(id, t, job, outcomes);
+        return;
+    }
+    let (est_flash, est_gpu) = tier_estimates_direct(models, l_in);
+    let info = JobInfo {
+        est_prefill: est_flash,
+        est_prefill_gpu: est_gpu,
+        prompt_tokens: l_in,
+        ttft_target: sampler.classes()[job.class].slo.ttft,
+    };
+    let dev = router.assign(session, &status, &info);
+    let depth = status.iter().find(|s| s.device == dev).map(|s| s.queue_depth);
+    let queue_full = match depth {
+        Some(d) => d >= cfg.queue_capacity,
+        None => true,
+    };
+    let per_token = router.kv(dev).per_token;
+    let needed = (l_in + l_out) as u64 * per_token;
+    if !queue_full && router.kv(dev).used() + needed > router.kv(dev).capacity {
+        let before = router.kv(dev).active_sequences();
+        evict_idle(router, dev, completion, t, session, needed);
+        if let Some(w) = wear.as_mut() {
+            for _ in router.kv(dev).active_sequences()..before {
+                w.devices[dev].note_eviction();
+            }
+        }
+    }
+    if queue_full || router.kv(dev).used() + needed > router.kv(dev).capacity {
+        if router.kv(dev).context_len(session).is_none() {
+            router.forget(session);
+        }
+        fs.retry_or_fail(id, t, job, outcomes);
+        return;
+    }
+    let resident = router.kv(dev).context_len(session);
+    match resident {
+        None => router.kv_mut(dev).admit(session, l_in).expect("admission after space check"),
+        Some(_) => router.kv_mut(dev).append_n(session, l_in).expect("append after space check"),
+    }
+    let ctx0 = resident.unwrap_or(0) + l_in;
+    let m = &models[dev];
+    let mut service = m.prefill_cost_direct(l_in);
+    let mut first_offset = SimTime::ZERO;
+    for step in 0..l_out {
+        service += m.step_time(ctx0 + step);
+        if step == 0 {
+            first_offset = service;
+        }
+    }
+    router.kv_mut(dev).append_n(session, l_out).expect("append after space check");
+    if let Some(w) = wear.as_mut() {
+        if models[dev].tier() == Tier::Flash && w.charge(dev, (l_in + l_out) as u64, needed, t) {
+            rehome_sessions(router, dev);
+            let activated = w.retire(dev, t);
+            fs.fleet.on_wear_retire(dev, activated);
+        }
+    }
+    let begin = devices[dev].res.free_at().max(t);
+    let completed = fs.fleet.dilate(dev, begin, service);
+    let _started = devices[dev].res.acquire(t, completed - begin);
+    debug_assert_eq!(_started, begin);
+    let first = fs.fleet.dilate(dev, begin, first_offset);
+    devices[dev].inflight.push_back(completed);
+    completion.insert(session, completed);
+    busy.push(Reverse((completed, session, job.class)));
+    let energy = m.decode_energy(ctx0, l_out);
+    *energy_total += energy;
+    fs.on_device[dev].push(job.idx);
+    fs.attempts.insert(id, job.attempt);
+    fs.fleet.failovers += 1;
+    fs.fleet.re_prefill_tokens += l_in as u64;
+    outcomes[job.idx] = SimRequest {
+        id,
+        session,
+        class: job.class,
+        device: Some(dev),
+        arrival: job.arrival,
+        first_token: Some(first),
+        completed,
+        input_tokens: l_in,
+        output_tokens: l_out,
+        context: ctx0,
+        rejected: false,
+        failed: false,
+        followup: job.followup,
+        energy_j: energy,
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -814,6 +1282,7 @@ mod tests {
             fleet: None,
             wear: None,
             arrival: None,
+            faults: None,
         }
     }
 

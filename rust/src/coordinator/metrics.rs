@@ -8,6 +8,7 @@ use super::device::{FleetSummary, Tier};
 use super::loadgen::SimRequest;
 use super::request::RequestOutcome;
 use super::workload::{SloTarget, WorkloadMix};
+use crate::fault::FaultSummary;
 use crate::sim::SimTime;
 use crate::util::stats::{Streaming, Summary};
 use crate::util::table::Table;
@@ -114,6 +115,11 @@ pub struct PoolReport {
     /// wear-disabled runs, which keeps their rendered reports
     /// byte-identical to pre-wear builds.
     pub wear: Option<WearSummary>,
+    /// Reliability accounting, when the run was launched with a
+    /// [`FaultConfig`][crate::fault::FaultConfig]. `None` for
+    /// fault-disabled runs, which keeps their rendered reports
+    /// byte-identical to pre-fault builds.
+    pub faults: Option<FaultSummary>,
 }
 
 /// One pool slot's wear meters (see
@@ -233,6 +239,13 @@ impl PoolReport {
     /// Arrivals shed by backpressure (bounded queues / KV region full).
     pub fn rejected(&self) -> usize {
         self.outcomes.iter().filter(|o| o.rejected).count()
+    }
+
+    /// Requests permanently failed by fault injection (a subset of
+    /// [`Self::rejected`]: they exhausted their retry budget after a
+    /// device loss). Zero for fault-free runs.
+    pub fn failed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.failed).count()
     }
 
     /// End-to-end latency summary over accepted requests (seconds).
@@ -429,6 +442,23 @@ impl PoolReport {
             }
             out.push_str(&t.render());
         }
+        if let Some(fa) = &self.faults {
+            out.push_str(&format!(
+                "\nfaults: availability {:.4}   {} device failure(s)   degraded {}\n",
+                fa.availability,
+                fa.device_failures,
+                fmt_time(fa.degraded_s),
+            ));
+            let mut t = Table::new(&["reliability metric", "value"]);
+            t.row(&["read-retry storms".to_string(), fa.storms.to_string()]);
+            t.row(&["storm device-seconds".to_string(), format!("{:.2}", fa.storm_s)]);
+            t.row(&["retries".to_string(), fa.retries.to_string()]);
+            t.row(&["failovers".to_string(), fa.failovers.to_string()]);
+            t.row(&["re-prefilled tokens".to_string(), fa.re_prefill_tokens.to_string()]);
+            t.row(&["failed requests".to_string(), fa.failed_requests.to_string()]);
+            t.row(&["brownout shed".to_string(), fa.shed_brownout.to_string()]);
+            out.push_str(&t.render());
+        }
         if let Some(mix) = &self.workload {
             out.push_str(&format!("\nworkload mix: {}\n", mix.name()));
             let mut c = Table::new(&[
@@ -509,6 +539,7 @@ mod tests {
             output_tokens: tokens,
             context: 64,
             rejected: device.is_none(),
+            failed: false,
             followup: false,
             energy_j: 0.0,
         }
@@ -532,6 +563,7 @@ mod tests {
             device_jobs: vec![1, 1],
             fleet: None,
             wear: None,
+            faults: None,
         };
         assert_eq!(r.accepted(), 2);
         assert_eq!(r.rejected(), 1);
@@ -596,6 +628,7 @@ mod tests {
             device_jobs: vec![2, 1],
             fleet: None,
             wear: None,
+            faults: None,
         };
         let classes = r.class_reports();
         assert_eq!(classes.len(), 2);
@@ -650,6 +683,7 @@ mod tests {
             device_jobs: vec![1, 0],
             fleet: None,
             wear: None,
+            faults: None,
         };
         let plain = r.render();
         assert!(!plain.contains("wear:"), "wear-disabled reports carry no wear section");

@@ -100,6 +100,7 @@
 //!     fleet: None,
 //!     wear: None,
 //!     arrival: None,
+//!     faults: None,
 //! };
 //! let policy = || policy_from_name("least-loaded").unwrap();
 //! let a = run_traffic_events(&sys, &model, &table, policy(), &cfg);

@@ -24,6 +24,7 @@
 use super::device::FleetSummary;
 use super::loadgen::SimRequest;
 use super::metrics::WearSummary;
+use crate::fault::FaultSummary;
 use super::sweep::{ClassAttainment, SweepPoint};
 use super::workload::SloTarget;
 use crate::sim::SimTime;
@@ -103,18 +104,26 @@ impl StreamingSink {
         }
     }
 
+    /// Latest accepted completion folded so far — the same horizon a
+    /// materialized report computes, exposed so the caller can clip
+    /// fault summaries to it before [`Self::finish`].
+    pub fn makespan(&self) -> SimTime {
+        self.makespan
+    }
+
     /// Reduce to a sweep point. Bit-identical to
     /// `SweepPoint::of(&report)` over the same run's materialized report
     /// — including the fleet-priced columns, which both paths derive
     /// from the same token total and makespan through the same
-    /// [`FleetSummary`] methods, and the wear columns, which both paths
-    /// fold from the same [`WearSummary`].
+    /// [`FleetSummary`] methods, and the wear and fault columns, which
+    /// both paths fold from the same [`WearSummary`] / [`FaultSummary`].
     pub fn finish(
         self,
         policy: String,
         rate: f64,
         fleet: Option<FleetSummary>,
         wear: Option<WearSummary>,
+        faults: Option<FaultSummary>,
     ) -> SweepPoint {
         let throughput = if self.makespan == SimTime::ZERO {
             0.0
@@ -141,6 +150,13 @@ impl StreamingSink {
             wear_max_erases: wear.as_ref().map(|w| w.max_erases()),
             wear_total_erases: wear.as_ref().map(|w| w.total_erases()),
             wear_retirements: wear.as_ref().map(|w| w.retirements as u64),
+            faults_availability: faults.as_ref().map(|f| f.availability),
+            faults_failed: faults.as_ref().map(|f| f.failed_requests),
+            faults_retries: faults.as_ref().map(|f| f.retries),
+            faults_failovers: faults.as_ref().map(|f| f.failovers),
+            faults_shed: faults.as_ref().map(|f| f.shed_brownout),
+            faults_reprefill_tok: faults.as_ref().map(|f| f.re_prefill_tokens),
+            faults_degraded_s: faults.as_ref().map(|f| f.degraded_s),
             class_attainment: self
                 .classes
                 .into_iter()
@@ -196,6 +212,7 @@ mod tests {
             output_tokens: tokens,
             context: 64,
             rejected: device.is_none(),
+            failed: false,
             followup: false,
             energy_j: 0.0,
         }
@@ -220,7 +237,7 @@ mod tests {
         sink.record(outcome(0, 0, Some(0), 10)); // loose, served: attains
         sink.record(outcome(1, 1, Some(1), 10)); // tight, served: misses
         sink.record(outcome(2, 0, None, 0)); // loose, rejected: misses
-        let p = sink.finish("rr".to_string(), 4.0, None, None);
+        let p = sink.finish("rr".to_string(), 4.0, None, None, None);
         assert_eq!((p.accepted, p.rejected), (2, 1));
         assert!(p.throughput > 0.0);
         assert!(p.ttft_p95 > 0.0 && p.latency_p95 > 0.0);
@@ -231,7 +248,7 @@ mod tests {
 
     #[test]
     fn streaming_sink_empty_run() {
-        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0, None, None);
+        let p = StreamingSink::new(Vec::new()).finish("ll".to_string(), 2.0, None, None, None);
         assert_eq!((p.accepted, p.rejected), (0, 0));
         assert_eq!(p.throughput, 0.0);
         assert!(p.class_attainment.is_empty());

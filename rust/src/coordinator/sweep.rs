@@ -129,6 +129,21 @@ pub struct SweepPoint {
     pub wear_total_erases: Option<u64>,
     /// Devices retired mid-trace; `None` without wear.
     pub wear_retirements: Option<u64>,
+    /// Fraction of nominal device-seconds actually serving; `None` when
+    /// fault injection is disabled (as are all `faults_*` columns).
+    pub faults_availability: Option<f64>,
+    /// Requests permanently failed after exhausting their retry budget.
+    pub faults_failed: Option<u64>,
+    /// Retry attempts scheduled after device losses.
+    pub faults_retries: Option<u64>,
+    /// Requests re-admitted on a survivor after losing their KV.
+    pub faults_failovers: Option<u64>,
+    /// Fresh arrivals shed by the brownout policy.
+    pub faults_shed: Option<u64>,
+    /// Tokens re-prefilled by failovers (lost KV, full context).
+    pub faults_reprefill_tok: Option<u64>,
+    /// Seconds the fleet ran with at least one serving device lost.
+    pub faults_degraded_s: Option<f64>,
     /// Per-class SLO attainment, in mix order; empty without a workload.
     pub class_attainment: Vec<ClassAttainment>,
 }
@@ -143,6 +158,7 @@ impl SweepPoint {
         let tokens: u64 = report.outcomes.iter().map(|o| o.output_tokens as u64).sum();
         let fleet = report.fleet.as_ref();
         let wear = report.wear.as_ref();
+        let faults = report.faults.as_ref();
         SweepPoint {
             policy: report.policy.clone(),
             rate: report.offered_rate,
@@ -158,6 +174,13 @@ impl SweepPoint {
             wear_max_erases: wear.map(|w| w.max_erases()),
             wear_total_erases: wear.map(|w| w.total_erases()),
             wear_retirements: wear.map(|w| w.retirements as u64),
+            faults_availability: faults.map(|f| f.availability),
+            faults_failed: faults.map(|f| f.failed_requests),
+            faults_retries: faults.map(|f| f.retries),
+            faults_failovers: faults.map(|f| f.failovers),
+            faults_shed: faults.map(|f| f.shed_brownout),
+            faults_reprefill_tok: faults.map(|f| f.re_prefill_tokens),
+            faults_degraded_s: faults.map(|f| f.degraded_s),
             class_attainment: report
                 .class_reports()
                 .into_iter()
@@ -294,12 +317,14 @@ pub fn sweep_rates_threaded(
 /// column is the worst per-class SLO attainment (`-` without a workload).
 /// Fleet-priced sweeps (any point carrying cost/energy) gain `$/Mtok`
 /// and `J/Mtok` columns, wear-enabled sweeps gain `max erases` and
-/// `retired`; flash-only wear-free sweeps render byte-identically to
+/// `retired`, fault-injected sweeps gain `avail`/`failed`/`shed`;
+/// flash-only wear-free fault-free sweeps render byte-identically to
 /// pre-fleet builds.
 pub fn render_sweep(points: &[SweepPoint]) -> String {
     let priced =
         points.iter().any(|p| p.cost_per_mtok.is_some() || p.energy_per_mtok.is_some());
     let weared = points.iter().any(|p| p.wear_max_erases.is_some());
+    let faulted = points.iter().any(|p| p.faults_availability.is_some());
     let mut headers = vec![
         "policy",
         "rate req/s",
@@ -318,6 +343,11 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
     if weared {
         headers.push("max erases");
         headers.push("retired");
+    }
+    if faulted {
+        headers.push("avail");
+        headers.push("failed");
+        headers.push("shed");
     }
     headers.push("min SLO");
     let mut t = Table::new(&headers);
@@ -350,6 +380,20 @@ pub fn render_sweep(points: &[SweepPoint]) -> String {
             });
             cells.push(match p.wear_retirements {
                 Some(r) => r.to_string(),
+                None => "-".to_string(),
+            });
+        }
+        if faulted {
+            cells.push(match p.faults_availability {
+                Some(a) => format!("{:.4}", a),
+                None => "-".to_string(),
+            });
+            cells.push(match p.faults_failed {
+                Some(f) => f.to_string(),
+                None => "-".to_string(),
+            });
+            cells.push(match p.faults_shed {
+                Some(s) => s.to_string(),
                 None => "-".to_string(),
             });
         }
@@ -451,6 +495,7 @@ mod tests {
             fleet: None,
             wear: None,
             arrival: None,
+            faults: None,
         }
     }
 
@@ -555,6 +600,13 @@ mod tests {
             wear_max_erases: None,
             wear_total_erases: None,
             wear_retirements: None,
+            faults_availability: None,
+            faults_failed: None,
+            faults_retries: None,
+            faults_failovers: None,
+            faults_shed: None,
+            faults_reprefill_tok: None,
+            faults_degraded_s: None,
             class_attainment: vec![
                 ClassAttainment { class: "chat".into(), attainment: chat },
                 ClassAttainment { class: "batch".into(), attainment: batch },

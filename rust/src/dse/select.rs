@@ -47,9 +47,10 @@ pub fn select_plane(criteria: &SelectionCriteria, tech: &TechParams) -> Option<(
     let winner = feasible
         .iter()
         .max_by(|a, b| {
-            (a.density, a.plane.capacity_bits(), -a.t_pim)
-                .partial_cmp(&(b.density, b.plane.capacity_bits(), -b.t_pim))
-                .unwrap()
+            a.density
+                .total_cmp(&b.density)
+                .then_with(|| a.plane.capacity_bits().cmp(&b.plane.capacity_bits()))
+                .then_with(|| b.t_pim.total_cmp(&a.t_pim))
         })?
         .clone();
     Some((winner, feasible))

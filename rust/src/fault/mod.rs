@@ -1,0 +1,28 @@
+//! Deterministic fault injection for the serving stack: read-retry
+//! storms, hard device loss, and the recovery policies (retry budgets,
+//! KV-loss failover, brownout shedding) that keep goodput defensible.
+//!
+//! # Determinism invariant
+//!
+//! Every fault draw comes from a per-slot RNG stream keyed by
+//! `(run seed, slot index)` — never from the arrival stream, and never
+//! in an order that depends on scheduling. Hard-failure instants are
+//! drawn eagerly at construction; storm intervals are drawn lazily but
+//! strictly in time order per slot. Consequently the complete fault
+//! schedule is a pure function of `(seed, fault spec, roster)`: the
+//! event backend and the direct-replay backend inject *bit-identical*
+//! faults for the same seed, and reruns are reproducible byte-for-byte.
+//!
+//! Everything is `Option`-gated: a run without `--faults` (or with an
+//! inert spec — see [`FaultConfig::active`]) carries `None` and takes
+//! exactly the fault-free code paths, byte-identical to builds that
+//! predate this module. See `docs/FAULTS.md` for the spec grammar and
+//! metrics glossary.
+
+pub mod roster;
+pub mod spec;
+pub mod timeline;
+
+pub use roster::{DownAction, FaultSummary, FleetFaults};
+pub use spec::FaultConfig;
+pub use timeline::FaultTimeline;

@@ -1,0 +1,359 @@
+//! Fleet-level fault state: per-slot health, spare activation on device
+//! loss, brownout tracking, and the reliability summary.
+//!
+//! `FleetFaults` owns one [`FaultTimeline`] per slot (primaries and
+//! spares alike) plus the recovery counters both serving backends feed.
+//! It deliberately knows nothing about scheduling: backends ask it
+//! whether a slot is schedulable, dilate service through it, and notify
+//! it of hard failures and wear retirements so the two retirement
+//! mechanisms share one dormant-spare pool.
+
+use super::spec::FaultConfig;
+use super::timeline::FaultTimeline;
+use crate::sim::SimTime;
+
+/// Lifecycle of one roster slot under fault injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Health {
+    /// In the schedulable pool.
+    Serving,
+    /// Provisioned cold spare, waiting for a failure or wear retirement.
+    Dormant,
+    /// Hard-failed and dropped; never returns.
+    Down,
+    /// Retired by the wear path (drained exit, not a fault).
+    Retired,
+}
+
+/// What a `DeviceDown` notification amounted to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownAction {
+    /// A serving device was lost; `activated` names the spare slot that
+    /// took its place in the pool, if any was left.
+    Fail { activated: Option<usize> },
+    /// The slot was already out of the pool (dormant spare, wear-retired,
+    /// or double failure) — nothing to do.
+    Ignore,
+}
+
+/// Reliability metrics for one run, rendered in reports and exported as
+/// sweep/campaign columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// Read-retry storms that began before the makespan, fleet-wide.
+    pub storms: u64,
+    /// Total device-seconds spent inside storms (clipped to makespan).
+    pub storm_s: f64,
+    /// Hard device failures that struck serving devices.
+    pub device_failures: usize,
+    /// Requests permanently failed after exhausting the retry budget.
+    pub failed_requests: u64,
+    /// Retry attempts scheduled (successful or not).
+    pub retries: u64,
+    /// Requests re-admitted on a surviving device after losing their KV.
+    pub failovers: u64,
+    /// Tokens re-prefilled by failovers (full context, KV was lost).
+    pub re_prefill_tokens: u64,
+    /// Fresh arrivals shed by the brownout policy.
+    pub shed_brownout: u64,
+    /// Fraction of nominal device-seconds that were actually serving:
+    /// `1 - lost_device_seconds / (nominal_devices * makespan)`.
+    pub availability: f64,
+    /// Seconds the fleet ran with at least one serving device lost
+    /// (makespan minus the earliest failure instant).
+    pub degraded_s: f64,
+}
+
+/// Per-fleet fault state threaded through a serving backend.
+#[derive(Debug, Clone)]
+pub struct FleetFaults {
+    cfg: FaultConfig,
+    timelines: Vec<FaultTimeline>,
+    health: Vec<Health>,
+    /// Primary roster size (denominator for availability/brownout).
+    nominal: usize,
+    /// Slots currently in the schedulable pool.
+    serving: usize,
+    /// Instants at which serving devices were lost.
+    down_times: Vec<SimTime>,
+    /// Hard failures that struck serving devices.
+    pub device_failures: usize,
+    /// Requests permanently failed after exhausting retries.
+    pub failed_requests: u64,
+    /// Retry attempts scheduled.
+    pub retries: u64,
+    /// Successful KV-loss failovers.
+    pub failovers: u64,
+    /// Tokens re-prefilled by failovers.
+    pub re_prefill_tokens: u64,
+    /// Fresh arrivals shed by brownout.
+    pub shed_brownout: u64,
+}
+
+impl FleetFaults {
+    /// Build the fleet's fault state. `flash[i]` says whether slot `i`
+    /// is flash-tier (only flash slots storm or hard-fail); `nominal` is
+    /// the primary roster size — slots at or past it start dormant.
+    /// Wear spares and fault spares form one pool: whichever mechanism
+    /// (hard failure or wear retirement) needs a replacement activates
+    /// the lowest-index dormant slot.
+    pub fn new(cfg: &FaultConfig, seed: u64, flash: &[bool], nominal: usize) -> FleetFaults {
+        let timelines: Vec<FaultTimeline> = flash
+            .iter()
+            .enumerate()
+            .map(|(slot, &fl)| FaultTimeline::new(cfg, seed, slot, fl))
+            .collect();
+        let health: Vec<Health> = (0..flash.len())
+            .map(|slot| if slot < nominal { Health::Serving } else { Health::Dormant })
+            .collect();
+        FleetFaults {
+            cfg: cfg.clone(),
+            timelines,
+            health,
+            nominal,
+            serving: nominal.min(flash.len()),
+            down_times: Vec::new(),
+            device_failures: 0,
+            failed_requests: 0,
+            retries: 0,
+            failovers: 0,
+            re_prefill_tokens: 0,
+            shed_brownout: 0,
+        }
+    }
+
+    /// Extra roster slots this config provisions as cold spares.
+    pub fn spares(cfg: &FaultConfig) -> usize {
+        cfg.spares
+    }
+
+    /// Retry budget per request.
+    pub fn retry_budget(&self) -> u32 {
+        self.cfg.retries
+    }
+
+    /// Delay before retry attempt `attempt` (1-based): exponential
+    /// backoff doubling from the configured base.
+    pub fn backoff(&self, attempt: u32) -> SimTime {
+        let factor = 2.0f64.powi(attempt.saturating_sub(1).min(32) as i32);
+        SimTime::from_secs(self.cfg.backoff_s * factor)
+    }
+
+    /// Whether slot `i` may take new work.
+    pub fn schedulable(&self, i: usize) -> bool {
+        self.health[i] == Health::Serving
+    }
+
+    /// All hard-failure drop instants, in slot order. Backends turn
+    /// these into `DeviceDown` events before the trace starts, so the
+    /// fault schedule is fixed before the first arrival is drawn.
+    pub fn down_events(&self) -> Vec<(SimTime, usize)> {
+        self.timelines
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, t)| t.down_at.map(|at| (at, slot)))
+            .collect()
+    }
+
+    /// Dilate `work` starting at `start` on slot `slot` through its
+    /// storm timeline (identity for non-flash or storm-free slots).
+    pub fn dilate(&mut self, slot: usize, start: SimTime, work: SimTime) -> SimTime {
+        self.timelines[slot].dilate(start, work)
+    }
+
+    /// Brownout: while fewer than `brownout * nominal` slots survive,
+    /// fresh arrivals of every class but class 0 are shed. Retries are
+    /// exempt — a session already admitted keeps its retry budget.
+    pub fn brownout_active(&self) -> bool {
+        self.cfg.brownout > 0.0
+            && (self.serving as f64) < self.cfg.brownout * self.nominal as f64
+    }
+
+    /// A slot's deadline timer fired: drop it from the pool and activate
+    /// the lowest-index dormant spare, if one remains.
+    pub fn on_down(&mut self, slot: usize, now: SimTime) -> DownAction {
+        match self.health[slot] {
+            Health::Serving => {
+                self.health[slot] = Health::Down;
+                self.serving -= 1;
+                self.down_times.push(now);
+                self.device_failures += 1;
+                let activated = self.activate_spare();
+                DownAction::Fail { activated }
+            }
+            Health::Dormant => {
+                // The spare died before it was ever activated: it simply
+                // leaves the dormant pool.
+                self.health[slot] = Health::Down;
+                DownAction::Ignore
+            }
+            Health::Down | Health::Retired => DownAction::Ignore,
+        }
+    }
+
+    /// The wear path retired `slot` (planned, drained exit) and, if
+    /// `activated` is set, promoted that spare — mirror both transitions
+    /// so the two mechanisms agree on which spares are left.
+    pub fn on_wear_retire(&mut self, slot: usize, activated: Option<usize>) {
+        if self.health[slot] == Health::Serving {
+            self.health[slot] = Health::Retired;
+            self.serving -= 1;
+        }
+        if let Some(s) = activated {
+            if self.health[s] == Health::Dormant {
+                self.health[s] = Health::Serving;
+                self.serving += 1;
+            }
+        }
+    }
+
+    fn activate_spare(&mut self) -> Option<usize> {
+        let slot = self.health.iter().position(|&h| h == Health::Dormant)?;
+        self.health[slot] = Health::Serving;
+        self.serving += 1;
+        Some(slot)
+    }
+
+    /// Fold the run into its reliability summary. `makespan` clips storm
+    /// statistics and down time.
+    pub fn summary(&mut self, makespan: SimTime) -> FaultSummary {
+        let mut storms = 0u64;
+        let mut storm_s = 0.0f64;
+        for t in &mut self.timelines {
+            let (n, s) = t.storms_within(makespan);
+            storms += n;
+            storm_s += s;
+        }
+        let horizon = makespan.secs();
+        let lost: f64 = self
+            .down_times
+            .iter()
+            .map(|&d| (horizon - d.secs()).max(0.0))
+            .sum();
+        let availability = if horizon > 0.0 && self.nominal > 0 {
+            (1.0 - lost / (self.nominal as f64 * horizon)).max(0.0)
+        } else {
+            1.0
+        };
+        let degraded_s = self
+            .down_times
+            .iter()
+            .map(|&d| (horizon - d.secs()).max(0.0))
+            .fold(0.0f64, f64::max);
+        FaultSummary {
+            storms,
+            storm_s,
+            device_failures: self.device_failures,
+            failed_requests: self.failed_requests,
+            retries: self.retries,
+            failovers: self.failovers,
+            re_prefill_tokens: self.re_prefill_tokens,
+            shed_brownout: self.shed_brownout,
+            availability,
+            degraded_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(spares: usize, brownout: f64) -> FaultConfig {
+        FaultConfig {
+            fail_at: vec![(0, 10.0)],
+            spares,
+            brownout,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn down_activates_lowest_dormant_spare_once() {
+        let cfg = cfg_with(1, 0.0);
+        // 2 primaries + 1 spare, all flash.
+        let mut f = FleetFaults::new(&cfg, 7, &[true, true, true], 2);
+        assert!(f.schedulable(0) && f.schedulable(1) && !f.schedulable(2));
+        let t = SimTime::from_secs(10.0);
+        assert_eq!(f.on_down(0, t), DownAction::Fail { activated: Some(2) });
+        assert!(!f.schedulable(0) && f.schedulable(2));
+        // Second notification for the same slot is a no-op.
+        assert_eq!(f.on_down(0, t), DownAction::Ignore);
+        // Next failure finds no spare left.
+        assert_eq!(f.on_down(1, t), DownAction::Fail { activated: None });
+        assert_eq!(f.device_failures, 2);
+    }
+
+    #[test]
+    fn wear_retirement_shares_the_spare_pool() {
+        let cfg = cfg_with(1, 0.0);
+        let mut f = FleetFaults::new(&cfg, 7, &[true, true, true], 2);
+        // Wear retires slot 1 and activates spare 2 on its side.
+        f.on_wear_retire(1, Some(2));
+        assert!(!f.schedulable(1) && f.schedulable(2));
+        // A later hard failure has no spare left to activate.
+        assert_eq!(f.on_down(0, SimTime::from_secs(10.0)), DownAction::Fail { activated: None });
+    }
+
+    #[test]
+    fn brownout_trips_below_threshold() {
+        let cfg = cfg_with(0, 0.75);
+        let mut f = FleetFaults::new(&cfg, 7, &[true, true, true, true], 4);
+        assert!(!f.brownout_active());
+        f.on_down(0, SimTime::from_secs(10.0));
+        // 3 of 4 serving = 0.75, not strictly below the threshold.
+        assert!(!f.brownout_active());
+        f.on_down(1, SimTime::from_secs(11.0));
+        assert!(f.brownout_active());
+    }
+
+    #[test]
+    fn summary_clips_availability_and_degraded_time() {
+        let cfg = FaultConfig {
+            fail_at: vec![(0, 10.0), (1, 15.0)],
+            ..FaultConfig::default()
+        };
+        let mut f = FleetFaults::new(&cfg, 7, &[true, true], 2);
+        f.on_down(0, SimTime::from_secs(10.0));
+        f.on_down(1, SimTime::from_secs(15.0));
+        let s = f.summary(SimTime::from_secs(20.0));
+        // Lost: (20-10) + (20-15) = 15 device-seconds of 40 nominal.
+        assert!((s.availability - (1.0 - 15.0 / 40.0)).abs() < 1e-12);
+        assert!((s.degraded_s - 10.0).abs() < 1e-12);
+        assert_eq!(s.device_failures, 2);
+        assert_eq!(s.storms, 0);
+        // Failure after makespan contributes nothing.
+        let mut g = FleetFaults::new(&cfg, 7, &[true, true], 2);
+        g.on_down(0, SimTime::from_secs(30.0));
+        let sg = g.summary(SimTime::from_secs(20.0));
+        assert_eq!(sg.availability, 1.0);
+        assert_eq!(sg.degraded_s, 0.0);
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        let cfg = FaultConfig { backoff_s: 0.5, fail_at: vec![(0, 1.0)], ..FaultConfig::default() };
+        let f = FleetFaults::new(&cfg, 7, &[true], 1);
+        assert_eq!(f.backoff(1), SimTime::from_secs(0.5));
+        assert_eq!(f.backoff(2), SimTime::from_secs(1.0));
+        assert_eq!(f.backoff(3), SimTime::from_secs(2.0));
+    }
+
+    #[test]
+    fn down_events_fix_the_schedule_up_front() {
+        let cfg = FaultConfig {
+            fail_at: vec![(1, 5.0), (0, 9.0)],
+            detect_s: 1.0,
+            ..FaultConfig::default()
+        };
+        let f = FleetFaults::new(&cfg, 7, &[true, true, false], 3);
+        let ev = f.down_events();
+        assert_eq!(
+            ev,
+            vec![
+                (SimTime::from_secs(10.0), 0),
+                (SimTime::from_secs(6.0), 1),
+            ]
+        );
+    }
+}

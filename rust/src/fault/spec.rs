@@ -1,0 +1,252 @@
+//! The `--faults` specification: grammar, parsing, and validation.
+//!
+//! A spec is a comma-separated list of `key=value` items:
+//!
+//! ```text
+//! storm=RATE:MULTxDUR   read-retry storms: Poisson rate per flash
+//!                       device (storms/s), service-time multiplier
+//!                       while a storm is in force, mean duration (s)
+//! fail=RATE             hard failures: Poisson rate per flash device
+//!                       (each device fails at most once)
+//! fail_at=DEV@SECS      scripted hard failure of one device
+//!                       (repeatable; out-of-range slots are ignored)
+//! detect=SECS           coordinator deadline-timer delay between a
+//!                       device hanging and the pool dropping it
+//! retries=N             per-request retry budget after device loss
+//! backoff=SECS          base retry backoff; attempt k waits 2^(k-1)x
+//! spares=N              cold spare slots provisioned for failover
+//! brownout=FRAC         shed all but the highest-priority class when
+//!                       fewer than FRAC x devices slots survive
+//! ```
+//!
+//! Example: `storm=0.05:4x2,fail=0.001,detect=0.5,retries=2,spares=1`.
+//! See `docs/FAULTS.md` for the full glossary.
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed fault-injection specification (see the module docs for the
+/// grammar). A config whose fault processes are all disabled is *inert*;
+/// [`FaultConfig::active`] normalizes inert configs to `None` so that
+/// `--faults` with rate 0 is byte-identical to no `--faults` at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Poisson read-retry-storm rate per flash device (storms/s).
+    pub storm_rate: f64,
+    /// Service-time multiplier while a storm is in force (>= 1).
+    pub storm_mult: u32,
+    /// Mean storm duration in seconds (durations draw exponentially).
+    pub storm_dur_s: f64,
+    /// Poisson hard-failure rate per flash device (failures/s); each
+    /// device fails at most once.
+    pub fail_rate: f64,
+    /// Scripted hard failures: (slot index, seconds). Slots past the
+    /// provisioned roster are ignored.
+    pub fail_at: Vec<(usize, f64)>,
+    /// Deadline-timer detection delay (s): a hung device is dropped from
+    /// the pool this long after it stops making progress.
+    pub detect_s: f64,
+    /// Per-request retry budget after losing a device mid-flight.
+    pub retries: u32,
+    /// Base retry backoff (s); attempt k is delayed `backoff * 2^(k-1)`.
+    pub backoff_s: f64,
+    /// Cold spare slots provisioned beyond the primary roster, activated
+    /// (no drain window) as devices hard-fail.
+    pub spares: usize,
+    /// Brownout threshold as a fraction of the nominal roster: while
+    /// fewer than `brownout * devices` slots survive, fresh arrivals of
+    /// every class but the highest-priority one (class 0) are shed.
+    /// `0.0` disables shedding.
+    pub brownout: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            storm_rate: 0.0,
+            storm_mult: 4,
+            storm_dur_s: 1.0,
+            fail_rate: 0.0,
+            fail_at: Vec::new(),
+            detect_s: 0.0,
+            retries: 0,
+            backoff_s: 0.5,
+            spares: 0,
+            brownout: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse a `--faults` spec (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut cfg = FaultConfig::default();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = item
+                .split_once('=')
+                .with_context(|| format!("fault spec item {item:?} is not key=value"))?;
+            match key {
+                "storm" => {
+                    let (rate, rest) = value.split_once(':').with_context(|| {
+                        format!("storm spec {value:?} is not RATE:MULTxDUR (e.g. 0.05:4x2)")
+                    })?;
+                    let (mult, dur) = rest.split_once('x').with_context(|| {
+                        format!("storm spec {value:?} is not RATE:MULTxDUR (e.g. 0.05:4x2)")
+                    })?;
+                    cfg.storm_rate = parse_f64("storm rate", rate)?;
+                    cfg.storm_mult = mult
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad storm multiplier {mult:?}"))?;
+                    cfg.storm_dur_s = parse_f64("storm duration", dur)?;
+                }
+                "fail" => cfg.fail_rate = parse_f64("failure rate", value)?,
+                "fail_at" => {
+                    let (dev, at) = value.split_once('@').with_context(|| {
+                        format!("fail_at spec {value:?} is not DEV@SECS (e.g. 0@30)")
+                    })?;
+                    let dev: usize = dev
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad fail_at device {dev:?}"))?;
+                    cfg.fail_at.push((dev, parse_f64("fail_at time", at)?));
+                }
+                "detect" => cfg.detect_s = parse_f64("detection delay", value)?,
+                "retries" => {
+                    cfg.retries = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad retry budget {value:?}"))?;
+                }
+                "backoff" => cfg.backoff_s = parse_f64("retry backoff", value)?,
+                "spares" => {
+                    cfg.spares = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad spare count {value:?}"))?;
+                }
+                "brownout" => cfg.brownout = parse_f64("brownout threshold", value)?,
+                _ => bail!(
+                    "unknown fault spec key {key:?}; use \
+                     storm|fail|fail_at|detect|retries|backoff|spares|brownout"
+                ),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.storm_rate < 0.0 || !self.storm_rate.is_finite() {
+            bail!("storm rate must be finite and >= 0, got {}", self.storm_rate);
+        }
+        if !(1..=1024).contains(&self.storm_mult) {
+            bail!("storm multiplier must be in 1..=1024, got {}", self.storm_mult);
+        }
+        if self.storm_dur_s <= 0.0 || !self.storm_dur_s.is_finite() {
+            bail!("storm duration must be finite and > 0, got {}", self.storm_dur_s);
+        }
+        if self.fail_rate < 0.0 || !self.fail_rate.is_finite() {
+            bail!("failure rate must be finite and >= 0, got {}", self.fail_rate);
+        }
+        for &(dev, at) in &self.fail_at {
+            if at < 0.0 || !at.is_finite() {
+                bail!("fail_at time for device {dev} must be finite and >= 0, got {at}");
+            }
+        }
+        if self.detect_s < 0.0 || !self.detect_s.is_finite() {
+            bail!("detection delay must be finite and >= 0, got {}", self.detect_s);
+        }
+        if self.backoff_s < 0.0 || !self.backoff_s.is_finite() {
+            bail!("retry backoff must be finite and >= 0, got {}", self.backoff_s);
+        }
+        if self.spares > 64 {
+            bail!("fault spares capped at 64, got {}", self.spares);
+        }
+        if !(0.0..=1.0).contains(&self.brownout) {
+            bail!("brownout threshold must be in [0, 1], got {}", self.brownout);
+        }
+        Ok(())
+    }
+
+    /// No fault process is enabled: no storms, no drawn failures, no
+    /// scripted failures. An inert config injects nothing, so callers
+    /// normalize it away via [`Self::active`].
+    pub fn is_inert(&self) -> bool {
+        self.storm_rate <= 0.0 && self.fail_rate <= 0.0 && self.fail_at.is_empty()
+    }
+
+    /// Normalize: `None` when inert, so a rate-0 `--faults` spec takes
+    /// exactly the fault-free code paths and stays byte-identical to an
+    /// absent flag.
+    pub fn active(self) -> Option<FaultConfig> {
+        if self.is_inert() { None } else { Some(self) }
+    }
+}
+
+fn parse_f64(what: &str, s: &str) -> Result<f64> {
+    s.trim().parse().with_context(|| format!("bad {what} {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let c =
+            FaultConfig::parse("storm=0.05:4x2, fail=0.001, fail_at=0@30, detect=0.5, retries=2, backoff=0.25, spares=1, brownout=0.5")
+                .unwrap();
+        assert_eq!(c.storm_rate, 0.05);
+        assert_eq!(c.storm_mult, 4);
+        assert_eq!(c.storm_dur_s, 2.0);
+        assert_eq!(c.fail_rate, 0.001);
+        assert_eq!(c.fail_at, vec![(0, 30.0)]);
+        assert_eq!(c.detect_s, 0.5);
+        assert_eq!(c.retries, 2);
+        assert_eq!(c.backoff_s, 0.25);
+        assert_eq!(c.spares, 1);
+        assert_eq!(c.brownout, 0.5);
+        assert!(!c.is_inert());
+    }
+
+    #[test]
+    fn empty_and_recovery_only_specs_are_inert() {
+        assert!(FaultConfig::parse("").unwrap().is_inert());
+        assert!(FaultConfig::parse("retries=3,spares=2,brownout=0.5").unwrap().is_inert());
+        assert!(FaultConfig::parse("storm=0:4x1").unwrap().is_inert());
+        assert_eq!(FaultConfig::parse("fail=0").unwrap().active(), None);
+        assert!(FaultConfig::parse("fail=0.01").unwrap().active().is_some());
+        assert!(FaultConfig::parse("fail_at=1@5").unwrap().active().is_some());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "storm=0.05",
+            "storm=0.05:4",
+            "storm=x:4x1",
+            "storm=0.05:0x1",
+            "storm=0.05:4x0",
+            "storm=0.05:2000x1",
+            "fail=-1",
+            "fail=nan",
+            "fail_at=0",
+            "fail_at=0@-5",
+            "detect=-1",
+            "retries=x",
+            "backoff=-0.1",
+            "spares=100",
+            "brownout=1.5",
+            "bogus=1",
+            "storm",
+        ] {
+            assert!(FaultConfig::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn scripted_failures_accumulate() {
+        let c = FaultConfig::parse("fail_at=0@10,fail_at=2@20").unwrap();
+        assert_eq!(c.fail_at, vec![(0, 10.0), (2, 20.0)]);
+    }
+}

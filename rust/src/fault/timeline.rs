@@ -1,0 +1,273 @@
+//! Per-slot fault timelines: the device's hard-failure instant and its
+//! lazily drawn read-retry-storm intervals.
+//!
+//! **Determinism invariant.** Each slot's timeline is drawn from its own
+//! SplitMix64 stream, seeded by mixing the run seed with the slot index
+//! (and a fault-stream tag) — *not* from the arrival RNG. The draw order
+//! within a stream is fixed: the hard-failure instant first, then storm
+//! (gap, duration) pairs strictly in time order, generated append-only on
+//! demand. A timeline is therefore a pure function of `(seed, slot)`:
+//! which backend runs, which requests land on the device, and in what
+//! order service times are queried cannot change a single draw. Both
+//! serving backends see bit-identical fault timelines for the same seed.
+
+use super::spec::FaultConfig;
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Tag mixed into per-slot fault streams so they never collide with the
+/// arrival stream (which seeds [`Rng`] with the run seed directly).
+const FAULT_STREAM_TAG: u64 = 0xFA01_7D1C_0DD5_EED5;
+
+/// Seed of slot `slot`'s fault stream: a SplitMix64-style finalizer over
+/// (run seed, slot, tag), so neighbouring slots land far apart.
+fn stream_seed(seed: u64, slot: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(slot.wrapping_add(1)))
+        ^ FAULT_STREAM_TAG;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Exponential draw with the given mean (seconds).
+fn exp_secs(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_s
+}
+
+/// One slot's fault timeline. Storms are disjoint `[start, end)`
+/// picosecond intervals in ascending order; `down_at` is the instant the
+/// coordinator drops the device (hang + detection delay), if the spec
+/// ever hard-fails it. Non-flash slots draw nothing (faults model flash
+/// phenomena).
+#[derive(Debug, Clone)]
+pub struct FaultTimeline {
+    rng: Rng,
+    mult: u64,
+    storm_rate: f64,
+    storm_dur_s: f64,
+    /// Drawn storms, `[start, end)` in ps, ascending and disjoint.
+    storms: Vec<(u64, u64)>,
+    /// Everything before this instant (ps) is drawn; the next storm's
+    /// gap starts here.
+    horizon: u64,
+    /// When the pool drops this slot, if its timeline hard-fails.
+    pub down_at: Option<SimTime>,
+}
+
+impl FaultTimeline {
+    /// Draw slot `slot`'s timeline head: the hard-failure instant (the
+    /// earlier of the drawn Poisson failure and any scripted `fail_at`
+    /// entry for this slot, plus the detection delay). Storms follow
+    /// lazily. `flash` gates everything — GPU slots never fault.
+    pub fn new(cfg: &FaultConfig, seed: u64, slot: usize, flash: bool) -> FaultTimeline {
+        let mut rng = Rng::new(stream_seed(seed, slot as u64));
+        // Fixed draw order: failure first, then storms — so lazy storm
+        // generation can never perturb the failure draw.
+        let drawn = if flash && cfg.fail_rate > 0.0 {
+            exp_secs(&mut rng, 1.0 / cfg.fail_rate)
+        } else {
+            f64::INFINITY
+        };
+        let scripted = cfg
+            .fail_at
+            .iter()
+            .filter(|&&(d, _)| d == slot)
+            .map(|&(_, t)| t)
+            .fold(f64::INFINITY, f64::min);
+        let fail_s = if flash { drawn.min(scripted) } else { f64::INFINITY };
+        let down_at =
+            fail_s.is_finite().then(|| SimTime::from_secs(fail_s + cfg.detect_s));
+        FaultTimeline {
+            rng,
+            mult: cfg.storm_mult as u64,
+            storm_rate: if flash { cfg.storm_rate } else { 0.0 },
+            storm_dur_s: cfg.storm_dur_s,
+            storms: Vec::new(),
+            horizon: 0,
+            down_at,
+        }
+    }
+
+    /// Append the next storm after the current horizon.
+    fn grow_one(&mut self) {
+        let gap = SimTime::from_secs(exp_secs(&mut self.rng, 1.0 / self.storm_rate)).0;
+        let dur = SimTime::from_secs(exp_secs(&mut self.rng, self.storm_dur_s)).0.max(1);
+        let start = self.horizon + gap;
+        self.storms.push((start, start + dur));
+        self.horizon = start + dur;
+    }
+
+    /// First storm with `end > t` (generating as needed): either the
+    /// storm covering `t` or the next one after it.
+    fn storm_after(&mut self, t: u64) -> (u64, u64) {
+        loop {
+            match self.storms.last() {
+                Some(&(_, e)) if e > t => break,
+                _ => self.grow_one(),
+            }
+        }
+        let i = self.storms.partition_point(|&(_, e)| e <= t);
+        self.storms[i]
+    }
+
+    /// Wall-clock instant at which `work` finishes when it starts at
+    /// `start`: progress runs 1:1 outside storms and `1/mult` inside
+    /// them. Identity for storm-free slots or a 1x multiplier.
+    ///
+    /// Compositional by construction —
+    /// `dilate(dilate(t, a), b) == dilate(t, a + b)` — because in-storm
+    /// progress is accounted in whole work units (the sub-unit sliver at
+    /// a storm's edge is absorbed into the storm): that is exactly the
+    /// property that lets the coalesced decode path price a request's
+    /// first token and completion from the same start instant.
+    pub fn dilate(&mut self, start: SimTime, work: SimTime) -> SimTime {
+        if self.storm_rate <= 0.0 || self.mult <= 1 {
+            return start + work;
+        }
+        let mut t = start.0;
+        let mut rem = work.0;
+        while rem > 0 {
+            let (s, e) = self.storm_after(t);
+            if t < s {
+                // Normal region [t, s): 1:1 progress.
+                let room = s - t;
+                if rem <= room {
+                    return SimTime(t + rem);
+                }
+                rem -= room;
+                t = s;
+            } else {
+                // Inside the storm [s, e): each work unit costs `mult`
+                // wall units; the storm affords `(e - t) / mult` units.
+                let afford = (e - t) / self.mult;
+                if rem <= afford {
+                    return SimTime(t + rem * self.mult);
+                }
+                rem -= afford;
+                t = e;
+            }
+        }
+        SimTime(t)
+    }
+
+    /// Storms beginning before `until` (count, total in-horizon seconds),
+    /// generating as needed — the fault summary's storm statistics.
+    pub fn storms_within(&mut self, until: SimTime) -> (u64, f64) {
+        if self.storm_rate <= 0.0 || until == SimTime::ZERO {
+            return (0, 0.0);
+        }
+        while self.horizon < until.0 {
+            self.grow_one();
+        }
+        let mut count = 0u64;
+        let mut total = 0u64;
+        for &(s, e) in &self.storms {
+            if s >= until.0 {
+                break;
+            }
+            count += 1;
+            total += e.min(until.0) - s;
+        }
+        (count, SimTime(total).secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stormy() -> FaultConfig {
+        FaultConfig {
+            storm_rate: 2.0,
+            storm_mult: 4,
+            storm_dur_s: 0.5,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn timeline_is_a_pure_function_of_seed_and_slot() {
+        let cfg = stormy();
+        let mut a = FaultTimeline::new(&cfg, 7, 0, true);
+        let mut b = FaultTimeline::new(&cfg, 7, 0, true);
+        // Query b in a different order than a: same answers.
+        let qa: Vec<SimTime> = (0..50)
+            .map(|i| a.dilate(SimTime::from_secs(i as f64 * 0.1), SimTime::from_us(500.0)))
+            .collect();
+        let qb_late = b.dilate(SimTime::from_secs(4.9), SimTime::from_us(500.0));
+        let qb: Vec<SimTime> = (0..50)
+            .map(|i| b.dilate(SimTime::from_secs(i as f64 * 0.1), SimTime::from_us(500.0)))
+            .collect();
+        assert_eq!(qa, qb);
+        assert_eq!(qb_late, qa[49]);
+        // Different slots draw different streams.
+        let mut c = FaultTimeline::new(&cfg, 7, 1, true);
+        let qc = c.dilate(SimTime::from_secs(1.0), SimTime::from_secs(1.0));
+        let qa1 = a.dilate(SimTime::from_secs(1.0), SimTime::from_secs(1.0));
+        assert_ne!(qa1, qc, "slots 0 and 1 must not share a storm timeline");
+    }
+
+    #[test]
+    fn dilation_is_compositional() {
+        let cfg = stormy();
+        let mut t = FaultTimeline::new(&cfg, 3, 0, true);
+        for (start, a, b) in [
+            (0.0, 0.2, 0.3),
+            (0.7, 1.0, 0.01),
+            (2.0, 0.0, 0.5),
+            (5.0, 0.33, 0.67),
+        ] {
+            let start = SimTime::from_secs(start);
+            let (a, b) = (SimTime::from_secs(a), SimTime::from_secs(b));
+            let whole = t.dilate(start, a + b);
+            let split = t.dilate(t.dilate(start, a), b);
+            assert_eq!(whole, split, "dilate must compose at start {start}");
+        }
+    }
+
+    #[test]
+    fn dilation_never_shrinks_and_is_identity_without_storms() {
+        let mut calm = FaultTimeline::new(&FaultConfig::default(), 1, 0, true);
+        let start = SimTime::from_secs(1.0);
+        let work = SimTime::from_secs(0.25);
+        assert_eq!(calm.dilate(start, work), start + work);
+        // GPU slots never storm even under a stormy spec.
+        let mut gpu = FaultTimeline::new(&stormy(), 1, 0, false);
+        assert_eq!(gpu.dilate(start, work), start + work);
+        assert_eq!(gpu.down_at, None);
+        let mut t = FaultTimeline::new(&stormy(), 1, 0, true);
+        for i in 0..20 {
+            let s = SimTime::from_secs(i as f64 * 0.3);
+            let end = t.dilate(s, work);
+            assert!(end >= s + work, "dilation can only stretch service");
+            assert!(end <= s + SimTime(work.0 * 4), "bounded by the 4x multiplier");
+        }
+    }
+
+    #[test]
+    fn scripted_failure_beats_drawn_failure_and_adds_detection() {
+        let cfg = FaultConfig {
+            fail_at: vec![(2, 10.0), (2, 30.0)],
+            detect_s: 0.5,
+            ..FaultConfig::default()
+        };
+        let t = FaultTimeline::new(&cfg, 9, 2, true);
+        assert_eq!(t.down_at, Some(SimTime::from_secs(10.5)), "earliest entry + detect");
+        assert_eq!(FaultTimeline::new(&cfg, 9, 0, true).down_at, None);
+        let drawn = FaultConfig { fail_rate: 0.5, ..FaultConfig::default() };
+        assert!(FaultTimeline::new(&drawn, 9, 0, true).down_at.is_some());
+    }
+
+    #[test]
+    fn storm_stats_clip_to_horizon() {
+        let cfg = stormy();
+        let mut t = FaultTimeline::new(&cfg, 11, 0, true);
+        let (n10, s10) = t.storms_within(SimTime::from_secs(10.0));
+        assert!(n10 > 0, "2 storms/s for 10 s must draw storms");
+        assert!(s10 > 0.0 && s10 <= 10.0);
+        let (n5, s5) = t.storms_within(SimTime::from_secs(5.0));
+        assert!(n5 <= n10 && s5 <= s10);
+        assert_eq!(t.storms_within(SimTime::ZERO), (0, 0.0));
+    }
+}

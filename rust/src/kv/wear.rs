@@ -170,6 +170,14 @@ impl DeviceWear {
         self.leveler.total_erases()
     }
 
+    /// Mark the device retired at `now` (first retirement wins — a
+    /// device leaves the pool once, whether by wear or by fault).
+    pub fn retire(&mut self, now: SimTime) {
+        if self.retired_at.is_none() {
+            self.retired_at = Some(now);
+        }
+    }
+
     pub fn exhausted(&self) -> bool {
         self.leveler.exhausted()
     }

@@ -20,6 +20,9 @@
 //! * [`llm`] — OPT-family model shapes and the decoder-block operation
 //!   schedule for token generation (Fig. 10).
 //! * [`kv`] — the SLC KV-cache manager, endurance, and lifetime analysis.
+//! * [`fault`] — deterministic fault injection for serving: read-retry
+//!   storms, hard device loss, and the retry/failover/brownout recovery
+//!   policies (`serve-sim --faults`, see `docs/FAULTS.md`).
 //! * [`gpu`] — the GPU baselines (4×RTX4090 + vLLM, 4×A100 + AttAcc).
 //! * [`area`] — the peri-under-array area model (Table II).
 //! * [`controller`] — SSD-controller ARM cores (LN/softmax) and PCIe.
@@ -53,6 +56,7 @@ pub mod controller;
 pub mod coordinator;
 pub mod dse;
 pub mod exp;
+pub mod fault;
 pub mod gpu;
 pub mod kv;
 pub mod llm;

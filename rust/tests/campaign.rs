@@ -19,9 +19,12 @@ fn tiny_spec() -> CampaignSpec {
         workloads: vec!["chat".into()],
         backends: vec![Backend::Event],
         rates: vec![8.0, 16.0],
+        fleets: Vec::new(),
         devices: 2,
         requests: 300,
         seed: 11,
+        wear: None,
+        faults: None,
     }
 }
 

@@ -95,6 +95,7 @@ fn traffic(devices: usize, rate: f64, requests: usize, seed: u64) -> TrafficConf
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     }
 }
 

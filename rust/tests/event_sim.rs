@@ -29,6 +29,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     }
 }
 
@@ -74,6 +75,7 @@ fn event_backend_matches_direct_backend_plus_pcie_upload() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
@@ -127,6 +129,7 @@ fn latency_percentiles_within_5pct_of_direct_backend_on_10k_trace() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
     let di = run_traffic_with_table(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
@@ -157,6 +160,7 @@ fn event_backend_completes_100k_requests_single_threaded() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let rep =
         run_traffic_events(&sys, &model, &table, policy_from_name("least-loaded").unwrap(), &cfg);
@@ -192,6 +196,7 @@ fn ttft_decomposes_into_upload_write_and_first_step() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     assert_eq!(rep.accepted(), 1);

@@ -1,0 +1,297 @@
+//! Deterministic fault injection, locked down end to end: inert specs
+//! must change nothing, seeded fault schedules must reproduce
+//! bit-identically per backend, both backends must agree on the scripted
+//! fault timeline, the per-token decode chain must stay the coalesced
+//! path's bit-identity oracle under storm dilation and device loss, the
+//! request books must close (accepted + rejected == offered, failed and
+//! shed subsets of rejected), and the recovery stack (retry + spare
+//! hot-swap + KV failover) must restore at least 90% of fault-free
+//! goodput after a mid-trace device loss.
+
+use flashpim::circuit::TechParams;
+use flashpim::config::presets::table1_system;
+use flashpim::config::SystemConfig;
+use flashpim::coordinator::{
+    DecodeMode, LenRange, policy_from_name, PoolReport, run_traffic_events,
+    run_traffic_events_mode, run_traffic_with_table, TrafficConfig, WorkloadMix,
+};
+use flashpim::fault::FaultConfig;
+use flashpim::llm::model_config::{ModelShape, OptModel};
+use flashpim::llm::LatencyTable;
+
+fn fixtures() -> (SystemConfig, ModelShape, LatencyTable) {
+    let sys = table1_system();
+    let model = OptModel::Opt6_7b.shape();
+    let table = LatencyTable::build(&sys, &TechParams::default(), model.clone());
+    (sys, model, table)
+}
+
+fn cfg(
+    devices: usize,
+    rate: f64,
+    requests: usize,
+    seed: u64,
+    faults: Option<FaultConfig>,
+) -> TrafficConfig {
+    TrafficConfig {
+        devices,
+        rate,
+        requests,
+        input_tokens: LenRange::new(64, 192),
+        output_tokens: LenRange::new(8, 24),
+        queue_capacity: 32,
+        followup: 0.3,
+        seed,
+        workload: None,
+        fleet: None,
+        wear: None,
+        arrival: None,
+        faults,
+    }
+}
+
+fn faults(spec: &str) -> FaultConfig {
+    FaultConfig::parse(spec).expect("valid fault spec").active().expect("active fault spec")
+}
+
+/// Every arrival must be accounted for exactly once, and the failure /
+/// brownout outcomes must be consistent subsets of the rejected books.
+fn assert_books_close(rep: &PoolReport, offered: usize) {
+    assert_eq!(rep.accepted() + rep.rejected(), offered, "{}: books must close", rep.backend);
+    let f = rep.faults.as_ref().expect("fault-enabled run must attach a summary");
+    assert_eq!(
+        rep.failed() as u64,
+        f.failed_requests,
+        "{}: failed outcomes vs summary counter",
+        rep.backend
+    );
+    assert!(
+        f.failed_requests + f.shed_brownout <= rep.rejected() as u64,
+        "{}: failed ({}) + shed ({}) must fit inside rejected ({})",
+        rep.backend,
+        f.failed_requests,
+        f.shed_brownout,
+        rep.rejected()
+    );
+    for o in rep.outcomes.iter().filter(|o| !o.rejected) {
+        assert!(o.device.is_some(), "request {}: accepted without a device", o.id);
+        assert!(!o.failed, "request {}: accepted requests cannot be failed", o.id);
+        assert!(o.completed >= o.arrival, "request {}: time runs forward", o.id);
+    }
+    for o in rep.outcomes.iter().filter(|o| o.failed) {
+        assert!(o.rejected, "request {}: failed implies rejected in the books", o.id);
+    }
+}
+
+/// The byte-identity gate: a `fail=0` spec normalizes to `None`, and a
+/// fault-free run must not betray that fault injection exists at all.
+#[test]
+fn inert_fault_specs_normalize_away_and_change_nothing() {
+    assert!(FaultConfig::parse("fail=0").unwrap().active().is_none());
+    assert!(FaultConfig::parse("storm=0:4x1").unwrap().active().is_none());
+    assert!(FaultConfig::parse("retries=3,spares=2,brownout=0.9").unwrap().active().is_none());
+
+    let (sys, model, table) = fixtures();
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let plain = cfg(2, 10.0, 200, 7, None);
+    let inert = cfg(2, 10.0, 200, 7, FaultConfig::parse("fail=0").unwrap().active());
+    let a = run_traffic_events(&sys, &model, &table, ll(), &plain);
+    let b = run_traffic_events(&sys, &model, &table, ll(), &inert);
+    assert_eq!(a, b, "an inert spec must not move a single byte");
+    assert!(a.faults.is_none());
+    assert_eq!(a.failed(), 0);
+    assert!(!a.render().contains("faults"), "fault-free render must not mention faults");
+    let da = run_traffic_with_table(&sys, &model, &table, ll(), &plain);
+    let db = run_traffic_with_table(&sys, &model, &table, ll(), &inert);
+    assert_eq!(da, db, "direct backend: same invariant");
+    assert!(da.faults.is_none());
+}
+
+/// Same seed, same spec => the whole report (trace, metrics, fault
+/// summary) reproduces bit-for-bit, on each backend independently.
+#[test]
+fn same_seed_fault_runs_are_bit_identical_per_backend() {
+    let (sys, model, table) = fixtures();
+    let spec = "storm=1.0:3x0.5,fail_at=0@8,detect=0.25,retries=2,backoff=0.2,spares=1";
+    let c = cfg(2, 8.0, 300, 11, Some(faults(spec)));
+    let ll = || policy_from_name("least-loaded").unwrap();
+
+    let ev_a = run_traffic_events(&sys, &model, &table, ll(), &c);
+    let ev_b = run_traffic_events(&sys, &model, &table, ll(), &c);
+    assert_eq!(ev_a, ev_b, "event backend: same seed must reproduce faults bit-for-bit");
+
+    let di_a = run_traffic_with_table(&sys, &model, &table, ll(), &c);
+    let di_b = run_traffic_with_table(&sys, &model, &table, ll(), &c);
+    assert_eq!(di_a, di_b, "direct backend: same seed must reproduce faults bit-for-bit");
+
+    let f = ev_a.faults.as_ref().expect("fault summary attached");
+    assert_eq!(f.device_failures, 1, "the scripted failure must land");
+    assert!(f.storms > 0, "storm process at 1/s over a ~40 s trace must fire");
+    assert!(f.storm_s > 0.0);
+    assert!(f.availability < 1.0, "a downed device must dent availability");
+    assert!(f.degraded_s > 0.0);
+    assert_books_close(&ev_a, c.requests);
+    assert_books_close(&di_a, c.requests);
+}
+
+/// The fault *timeline* is a pure function of (seed, slot, spec), so the
+/// two backends — which are not bit-identical to each other — must still
+/// agree on what went wrong: same scripted failure, storms drawn from
+/// the same per-device streams on both sides.
+#[test]
+fn backends_agree_on_the_fault_timeline() {
+    let (sys, model, table) = fixtures();
+    let spec = "storm=1.0:3x0.5,fail_at=0@8,detect=0.25,retries=2,backoff=0.2,spares=1";
+    let c = cfg(2, 8.0, 300, 11, Some(faults(spec)));
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let ev = run_traffic_events(&sys, &model, &table, ll(), &c);
+    let di = run_traffic_with_table(&sys, &model, &table, ll(), &c);
+    let (fe, fd) = (ev.faults.as_ref().unwrap(), di.faults.as_ref().unwrap());
+    assert_eq!(fe.device_failures, fd.device_failures, "same scripted downs on both backends");
+    assert!(fe.storms > 0 && fd.storms > 0, "both backends must draw the storm process");
+    assert!(fe.availability < 1.0 && fd.availability < 1.0);
+    // The spare (slot 2) must absorb post-failure traffic on both sides.
+    for rep in [&ev, &di] {
+        assert!(
+            rep.outcomes.iter().any(|o| !o.rejected && o.device == Some(2)),
+            "{}: activated spare must serve accepted requests",
+            rep.backend
+        );
+    }
+}
+
+/// Storm dilation and mid-trace device loss must preserve the coalesced
+/// decode path's bit-identity oracle: replaying the per-token event
+/// chain yields the exact same report.
+#[test]
+fn per_token_oracle_stays_bit_identical_under_faults() {
+    let (sys, model, table) = fixtures();
+    let spec = "storm=1.0:3x0.5,fail_at=0@8,detect=0.25,retries=2,backoff=0.2,spares=1";
+    let c = cfg(2, 8.0, 250, 13, Some(faults(spec)));
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let coalesced =
+        run_traffic_events_mode(&sys, &model, &table, ll(), &c, DecodeMode::Coalesced);
+    let per_token =
+        run_traffic_events_mode(&sys, &model, &table, ll(), &c, DecodeMode::PerToken);
+    assert_eq!(coalesced, per_token, "per-token chain is the oracle, faults included");
+    assert!(coalesced.faults.as_ref().unwrap().storms > 0);
+}
+
+/// A device loss with no recovery provisioned (no retries, no spares)
+/// and a brownout threshold: in-flight victims fail, the surviving
+/// capacity triggers shedding of lower-priority classes, and the books
+/// still close exactly.
+#[test]
+fn unrecovered_loss_fails_victims_and_brownout_sheds_lower_classes() {
+    let (sys, model, table) = fixtures();
+    let mut c = cfg(2, 8.0, 400, 17, Some(faults("fail_at=0@10,detect=0.25,brownout=0.9")));
+    c.workload = Some(WorkloadMix::preset("agentic-burst").expect("built-in preset"));
+    let rep =
+        run_traffic_events(&sys, &model, &table, policy_from_name("slo-aware").unwrap(), &c);
+    assert_books_close(&rep, c.requests);
+    let f = rep.faults.as_ref().unwrap();
+    assert_eq!(f.device_failures, 1);
+    assert!(
+        f.failed_requests > 0,
+        "a busy device lost with zero retry budget must strand its in-flight work"
+    );
+    assert!(
+        f.shed_brownout > 0,
+        "below 90% surviving capacity, non-priority arrivals must be shed"
+    );
+    assert_eq!(f.retries, 0, "no retry budget, no retry attempts");
+    assert!(rep.render().contains("faults:"), "report must surface the reliability section");
+
+    // The direct backend closes the same books under the same spec.
+    let di =
+        run_traffic_with_table(&sys, &model, &table, policy_from_name("slo-aware").unwrap(), &c);
+    assert_books_close(&di, c.requests);
+    assert!(di.faults.as_ref().unwrap().failed_requests > 0);
+}
+
+/// Acceptance: lose a primary mid-trace with the full recovery stack
+/// provisioned (deadline detection, retry budget, a cold spare, KV
+/// failover re-prefilling on survivors). No session may be permanently
+/// stranded, and goodput must recover to >= 90% of the fault-free run —
+/// and be no worse than the same fault with recovery disabled.
+#[test]
+fn recovery_restores_goodput_after_device_loss() {
+    let (sys, model, table) = fixtures();
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let free = cfg(3, 6.0, 300, 21, None);
+    let recovered = cfg(
+        3,
+        6.0,
+        300,
+        21,
+        Some(faults("fail_at=0@10,detect=0.25,retries=3,backoff=0.25,spares=1")),
+    );
+    let bare = cfg(3, 6.0, 300, 21, Some(faults("fail_at=0@10,detect=0.25")));
+
+    let free_rep = run_traffic_events(&sys, &model, &table, ll(), &free);
+    let rec_rep = run_traffic_events(&sys, &model, &table, ll(), &recovered);
+    let bare_rep = run_traffic_events(&sys, &model, &table, ll(), &bare);
+
+    assert_eq!(free_rep.accepted() + free_rep.rejected(), free.requests);
+    assert_books_close(&rec_rep, recovered.requests);
+    assert_books_close(&bare_rep, bare.requests);
+
+    let f = rec_rep.faults.as_ref().unwrap();
+    assert_eq!(f.device_failures, 1);
+    assert!(f.availability < 1.0 && f.degraded_s > 0.0);
+    assert!(
+        rec_rep.outcomes.iter().any(|o| !o.rejected && o.device == Some(3)),
+        "the cold spare (slot 3) must absorb post-failure traffic"
+    );
+
+    let goodput = |rep: &PoolReport| {
+        rep.outcomes
+            .iter()
+            .filter(|o| !o.rejected)
+            .map(|o| o.output_tokens as u64)
+            .sum::<u64>()
+    };
+    let (g_free, g_rec, g_bare) = (goodput(&free_rep), goodput(&rec_rep), goodput(&bare_rep));
+    assert!(g_free > 0);
+    assert!(
+        g_rec as f64 >= 0.9 * g_free as f64,
+        "recovery must restore >= 90% of fault-free goodput: {g_rec} vs {g_free} tokens"
+    );
+    assert!(
+        g_rec >= g_bare,
+        "the recovery stack must not lose tokens vs no recovery: {g_rec} vs {g_bare}"
+    );
+    assert!(
+        rec_rep.failed() <= bare_rep.failed(),
+        "retries + spare must not strand more requests than no recovery"
+    );
+}
+
+/// Fault sweeps surface through SweepPoint: the streamed point carries
+/// the reliability columns, and fault-free points keep them absent.
+#[test]
+fn sweep_points_carry_the_gated_fault_columns() {
+    use flashpim::coordinator::run_traffic_point;
+    let (sys, model, table) = fixtures();
+    let ll = || policy_from_name("least-loaded").unwrap();
+    let plain = cfg(2, 8.0, 150, 23, None);
+    let p = run_traffic_point(&sys, &model, &table, ll(), &plain);
+    assert!(p.faults_availability.is_none() && p.faults_failed.is_none());
+
+    let c = cfg(2, 8.0, 150, 23, Some(faults("fail_at=0@6,detect=0.25,retries=2,spares=1")));
+    let p = run_traffic_point(&sys, &model, &table, ll(), &c);
+    assert!(p.faults_availability.is_some());
+    assert!(p.faults_availability.unwrap() < 1.0);
+    assert!(p.faults_failed.is_some() && p.faults_degraded_s.is_some());
+
+    // Bit-equality with the materialized report's summary-derived point.
+    let rep = run_traffic_events(&sys, &model, &table, ll(), &c);
+    let f = rep.faults.as_ref().unwrap();
+    assert_eq!(p.faults_availability, Some(f.availability));
+    assert_eq!(p.faults_failed, Some(f.failed_requests));
+    assert_eq!(p.faults_retries, Some(f.retries));
+    assert_eq!(p.faults_failovers, Some(f.failovers));
+    assert_eq!(p.faults_shed, Some(f.shed_brownout));
+    assert_eq!(p.faults_reprefill_tok, Some(f.re_prefill_tokens));
+    assert_eq!(p.faults_degraded_s, Some(f.degraded_s));
+}

@@ -111,6 +111,7 @@ fn traffic(seed: u64) -> TrafficConfig {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     }
 }
 
@@ -147,6 +148,7 @@ fn serve_sim_completes_100k_requests() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let rep = run_traffic_with_table(
         &sys,

@@ -53,6 +53,7 @@ fn single_class_cfg(requests: usize, rate: f64, seed: u64) -> TrafficConfig {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     }
 }
 

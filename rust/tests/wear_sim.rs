@@ -69,6 +69,7 @@ fn erase_heavy_cfg(seed: u64) -> TrafficConfig {
         fleet: None,
         wear: Some(WearConfig::new(100_000)),
         arrival: None,
+        faults: None,
     }
 }
 
@@ -130,6 +131,7 @@ fn event_and_direct_backends_charge_identical_wear_below_kv_pressure() {
         fleet: None,
         wear: Some(WearConfig::new(1_000)),
         arrival: None,
+        faults: None,
     };
     let per_token = model.kv_bytes_per_token(1.0) as u64;
     let ev = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
@@ -162,6 +164,7 @@ fn worn_device_retires_drains_and_hands_over_to_spare() {
         // region once over; the spare sees less than that and survives.
         wear: Some(WearConfig { pe_budget: 1, blocks_per_device: 4, spares: 1 }),
         arrival: None,
+        faults: None,
     };
     let per_token = model.kv_bytes_per_token(1.0) as u64;
     let policy = || policy_from_name("least-loaded").unwrap();
@@ -225,6 +228,7 @@ fn per_class_accounting_stays_consistent_under_wear() {
         fleet: None,
         wear: Some(WearConfig::new(10_000)),
         arrival: None,
+        faults: None,
     };
     let per_token = model.kv_bytes_per_token(1.0) as u64;
     let rep =
@@ -256,6 +260,7 @@ fn diurnal_phases_shape_the_arrival_stream() {
         fleet: None,
         wear: None,
         arrival: Some(ArrivalProcess::parse("40:0.25,40:2.0").expect("valid schedule")),
+        faults: None,
     };
     let rep = run_traffic_events(&sys, &model, &table, policy_from_name("rr").unwrap(), &cfg);
     assert_eq!(rep.outcomes.len(), cfg.requests);
@@ -309,6 +314,7 @@ fn unit_multiplier_schedule_is_byte_identical_to_legacy_poisson() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let ll = || policy_from_name("least-loaded").unwrap();
     let legacy = run_traffic_events(&sys, &model, &table, ll(), &cfg);
@@ -343,6 +349,7 @@ fn wear_disabled_runs_report_exactly_as_before() {
         fleet: None,
         wear: None,
         arrival: None,
+        faults: None,
     };
     let ll = || policy_from_name("least-loaded").unwrap();
     let rep = run_traffic_events(&sys, &model, &table, ll(), &cfg);
@@ -387,6 +394,7 @@ fn wear_aware_extends_fleet_lifetime_on_a_diurnal_trace() {
         fleet: None,
         wear: Some(WearConfig::new(1_000_000)),
         arrival: Some(ArrivalProcess::parse("43200:0.5,43200:1.5").expect("valid schedule")),
+        faults: None,
     };
     let ll = run_traffic_events(&sys, &model, &table, policy_from_name("ll").unwrap(), &cfg);
     let wa =
